@@ -1,0 +1,99 @@
+"""Paper Figs. 17–20: tensor-allreduce design comparison.
+
+Measured: wall µs/call of each collective implementation (ring,
+multi-ring, tree/`reg`, native psum) over an emulated 8-way axis on CPU,
+at the paper's message sizes (4/16/64 MB), plus the fused-vs-per-leaf
+tensor (pytree) comparison and the grouped local reduction (Fig 10's
+IBMGpu kernel analogue).
+
+Derived: the α-β-γ model's projected times on the paper's testbed and on
+TPU v5e — the quantity the paper's figures plot.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.core import collectives as C
+from repro.core import cost_model
+
+P = 8
+SIZES_MB = [4, 16, 64]
+
+
+def _emulated(method, num_rings=2):
+    @jax.jit
+    def fn(x):
+        return C.emulate(C.allreduce, x, method=method, num_rings=num_rings)
+
+    return fn
+
+
+def run() -> None:
+    tb = cost_model.testbed()
+    v5e = cost_model.tpu_v5e()
+    for mb in SIZES_MB:
+        n = mb * 1024 * 1024 // 4
+        x = jax.random.normal(jax.random.key(0), (P, n))
+        for method in ("ring", "multi_ring", "tree", "psum"):
+            fn = _emulated(method)
+            us = timeit(fn, x, iters=3)
+            t_tb = cost_model.allreduce_time(mb * 2**20, P, tb, method) * 1e6
+            t_v5e = cost_model.allreduce_time(mb * 2**20, P, v5e, method) * 1e6
+            emit(f"allreduce/{method}/{mb}MB", us,
+                 f"model_testbed_us={t_tb:.0f};model_v5e_us={t_v5e:.0f}")
+
+    # Fig 20 analogue: IBMRing (tensor per socket: p=16 hops on host
+    # memory, 30 GB/s fused reduction) vs BaiduRing (every GPU in the
+    # ring: p=32, each step staged host<->GPU twice => ~2x per-step time,
+    # single-block reduction at ~12 GB/s). The paper measures 6x; the
+    # α-β-γ terms account for ~2x, the rest is implementation (no
+    # overlap, TCP transport in Baidu's harness).
+    for mb in (16,):
+        nbytes = mb * 2**20
+        t_ours = cost_model.multi_ring_allreduce_time(nbytes, 16, tb)
+        baidu_net = cost_model.NetParams(
+            alpha=tb.alpha, beta=2 * tb.beta, gamma=1 / 12e9)
+        t_baidu = cost_model.ring_allreduce_time(nbytes, 32, baidu_net)
+        emit(f"ring_design/ibm_p16_vs_baidu_p32/{mb}MB",
+             t_ours * 1e6,
+             f"baidu_ring_us={t_baidu*1e6:.0f};"
+             f"model_ratio={t_baidu/t_ours:.2f}x;paper_measured=6x")
+
+    # fused (tensor) vs per-leaf pytree allreduce — the tensor-collective claim
+    tree = {
+        f"layer{i}": jax.random.normal(jax.random.key(i), (P, 4096))
+        for i in range(32)
+    }
+
+    @jax.jit
+    def fused(t):
+        return C.emulate(C.tensor_allreduce, t, method="ring")
+
+    @jax.jit
+    def per_leaf(t):
+        return C.emulate(C.tensor_allreduce, t, method="per_leaf")
+
+    us_f = timeit(fused, tree, iters=3)
+    us_l = timeit(per_leaf, tree, iters=3)
+    n_leaf = 4096 * 4
+    t_fused = cost_model.ring_allreduce_time(n_leaf * 32, P, tb)
+    t_leaf = 32 * cost_model.ring_allreduce_time(n_leaf, P, tb)
+    emit("tensor_fused_vs_per_leaf", us_f,
+         f"per_leaf_us={us_l:.0f};model_speedup={t_leaf/t_fused:.2f}x")
+
+    # grouped local reduction (paper's 30 GB/s IBMGpu kernel, Fig 10):
+    # measured via the jnp oracle (the Pallas kernel targets TPU; interpret
+    # mode measures Python, not bandwidth)
+    from repro.kernels.tensor_reduce.ref import group_reduce_ref
+
+    x = jax.random.normal(jax.random.key(9), (2, 16 * 2**20 // 4))
+    fn = jax.jit(group_reduce_ref)
+    us = timeit(fn, x, iters=3)
+    gbs = (x.size * 4) / (us / 1e6) / 1e9
+    emit("group_reduce/2x16MB", us, f"cpu_gbs={gbs:.1f};paper_gpu_gbs=30")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,54 @@
+"""Paper Fig. 15/16: ResNet-50 weak/strong scaling with #servers=0
+(pure-MPI pushpull) — time per epoch as GPUs grow, optimized multi-ring
+vs the `reg` (reduce+allreduce+bcast) baseline; weak scaling does best.
+
+All derived from the α-β-γ model (no congested network in this container);
+the measured column times the simulated engine at small scale.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core import cost_model
+
+MODEL_BYTES = 100e6
+IMAGES = 1.28e6           # ImageNet epoch
+BATCH = 32                # per-GPU batch (weak scaling keeps it)
+STEP_COMPUTE = 0.12       # s per batch-32 on a P100-class GPU
+
+
+def run() -> None:
+    tb = cost_model.testbed()
+    for p in (4, 8, 16, 32, 64, 128):
+        # weak scaling: global batch grows with p; steps shrink
+        steps = IMAGES / (BATCH * p)
+        t_ring = steps * (STEP_COMPUTE +
+                          cost_model.multi_ring_allreduce_time(MODEL_BYTES, p, tb))
+        t_reg = steps * (STEP_COMPUTE +
+                         cost_model.tree_allreduce_time(MODEL_BYTES, p, tb))
+        emit(f"scaling/weak/p{p}", t_ring * 1e6,
+             f"ring_epoch_s={t_ring:.0f};reg_epoch_s={t_reg:.0f};"
+             f"speedup={t_reg/t_ring:.2f}x")
+
+    # strong scaling: global batch fixed at 32*4; per-GPU batch shrinks
+    for p in (4, 8, 16, 32):
+        per_gpu = BATCH * 4 / p
+        steps = IMAGES / (BATCH * 4)
+        compute = STEP_COMPUTE * per_gpu / BATCH
+        t_ring = steps * (compute +
+                          cost_model.multi_ring_allreduce_time(MODEL_BYTES, p, tb))
+        emit(f"scaling/strong/p{p}", t_ring * 1e6,
+             f"epoch_s={t_ring:.0f}")
+
+    # parallel efficiency of weak scaling at 128 vs 4 (paper: weak best)
+    def weak_epoch(p):
+        steps = IMAGES / (BATCH * p)
+        return steps * (STEP_COMPUTE +
+                        cost_model.multi_ring_allreduce_time(MODEL_BYTES, p, tb))
+
+    eff = (weak_epoch(4) / weak_epoch(128)) / (128 / 4)
+    emit("scaling/weak_efficiency_4_to_128", weak_epoch(128) * 1e6,
+         f"efficiency={eff:.2f}")
+
+
+if __name__ == "__main__":
+    run()

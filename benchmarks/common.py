@@ -1,0 +1,29 @@
+"""Shared benchmark plumbing: timing, CSV emission."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+ROWS: list[tuple[str, float, str]] = []
+
+
+def timeit(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall microseconds per call of a jitted function."""
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)

@@ -1,0 +1,83 @@
+"""Roofline table generator: reads launch/dryrun.py JSON outputs and
+renders the EXPERIMENTS.md §Roofline markdown table."""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+
+def load(path: str) -> list[dict]:
+    with open(path) as f:
+        return json.load(f)
+
+
+def fmt_row(r: dict) -> str:
+    if "skipped" in r:
+        return (f"| {r['arch']} | {r['shape']} | — | — | — | — | — | — | "
+                f"skipped: {r['skipped']} |")
+    if "error" in r:
+        return f"| {r['arch']} | {r['shape']} | ERROR {r['error'][:60]} |"
+    roof = r["roofline"]
+    mem = r.get("memory", {})
+    bpd = (mem.get("argument_size_in_bytes", 0)
+           + mem.get("temp_size_in_bytes", 0)) / 1e9
+    return (
+        f"| {r['arch']} | {r['shape']} | {roof['compute_s']*1e3:.1f} | "
+        f"{roof['memory_s']*1e3:.1f} | {roof['collective_s']*1e3:.1f} | "
+        f"**{roof['dominant']}** | {roof['useful_flops_ratio']:.2f} | "
+        f"{bpd:.1f} | |"
+    )
+
+
+HEADER = (
+    "| arch | shape | compute (ms) | memory (ms) | collective (ms) | "
+    "dominant | useful | GB/dev | note |\n"
+    "|---|---|---|---|---|---|---|---|---|"
+)
+
+
+def table(path: str) -> str:
+    rows = [HEADER]
+    for r in load(path):
+        rows.append(fmt_row(r))
+    return "\n".join(rows)
+
+
+def merged(base_path: str) -> list[dict]:
+    """Base sweep overlaid with later re-measurements (fix_*, v2_*): the
+    most recent result per (arch, shape) wins."""
+    import glob
+
+    rows = {(r["arch"].replace(".", "-"), r["shape"]): r
+            for r in load(base_path)}
+    for prefix in ("fix_", "v2_", "v3_"):
+        for p in sorted(glob.glob(os.path.join(RESULTS, prefix + "*.json"))):
+            for r in load(p):
+                if "arch" in r:
+                    rows[(r["arch"].replace(".", "-"), r["shape"])] = r
+    return list(rows.values())
+
+
+def merged_table(base_path: str) -> str:
+    rows = [HEADER]
+    for r in merged(base_path):
+        rows.append(fmt_row(r))
+    return "\n".join(rows)
+
+
+def main() -> None:
+    path = sys.argv[1] if len(sys.argv) > 1 else os.path.join(
+        RESULTS, "dryrun_pod.json")
+    if len(sys.argv) > 2 and sys.argv[2] == "--merged":
+        print(merged_table(path))
+    elif len(sys.argv) == 1:
+        print(merged_table(path))
+    else:
+        print(table(path))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Benchmark harness: one module per paper table/figure. Prints
+``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
+
+  bench_allreduce    Figs 17-20  tensor allreduce designs
+  bench_epoch_time   Fig 12      PS contention vs MPI epoch time
+  bench_convergence  Fig 11      dist/mpi x SGD/ASGD curves
+  bench_esgd         Figs 13/14  elastic averaging
+  bench_scaling      Figs 15/16  weak/strong scaling (#servers=0)
+
+The multi-pod dry-run / roofline table (EXPERIMENTS.md §Roofline) is
+produced separately by launch/dryrun.py + benchmarks/roofline.py since it
+needs its own process (512 placeholder devices).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_allreduce,
+        bench_convergence,
+        bench_epoch_time,
+        bench_esgd,
+        bench_scaling,
+    )
+
+    print("name,us_per_call,derived")
+    for mod in (bench_allreduce, bench_epoch_time, bench_convergence,
+                bench_esgd, bench_scaling):
+        t0 = time.time()
+        mod.run()
+        print(f"# {mod.__name__} done in {time.time()-t0:.1f}s",
+              file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""repro: MXNET-MPI (hierarchical PS+MPI data parallelism) on TPU, in JAX.
+
+Public API surface:
+
+    from repro import build_model, get_config, reduced        # models
+    from repro.core import KVStore, SyncConfig                # the paper
+    from repro.core.algorithms import AlgoConfig, run, MODES  # six SGD modes
+    from repro.launch.train import make_train_step, train_loop
+    from repro.launch.serve import BatchedServer
+    from repro.launch.mesh import make_production_mesh
+"""
+from repro.configs.base import (
+    ARCH_IDS,
+    INPUT_SHAPES,
+    ModelConfig,
+    get_config,
+    list_configs,
+    reduced,
+)
+from repro.models.model import Model, build_model
+
+__version__ = "0.1.0"
+__all__ = [
+    "ARCH_IDS",
+    "INPUT_SHAPES",
+    "Model",
+    "ModelConfig",
+    "build_model",
+    "get_config",
+    "list_configs",
+    "reduced",
+    "__version__",
+]

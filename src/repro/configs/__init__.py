@@ -1,0 +1,9 @@
+from repro.configs.base import (
+    ARCH_IDS,
+    INPUT_SHAPES,
+    InputShape,
+    ModelConfig,
+    get_config,
+    list_configs,
+    reduced,
+)

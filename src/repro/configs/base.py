@@ -1,0 +1,234 @@
+"""Config system: model architecture + input shapes + run settings.
+
+Every assigned architecture gets one ``configs/<id>.py`` exporting CONFIG.
+``get_config(name)`` resolves by module name; ``reduced(cfg)`` produces the
+CPU smoke-test variant of the same family (<=2 layers, d_model<=512,
+<=4 experts) required by the brief.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+VOCAB_PAD = 256  # pad vocab so 16-way model axis always divides embeddings
+
+
+def pad_vocab(v: int, multiple: int = VOCAB_PAD) -> int:
+    return ((v + multiple - 1) // multiple) * multiple
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture description. Frozen: derive variants with replace()."""
+
+    name: str
+    arch_type: str  # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // num_heads
+    # --- attention flavour ---
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    sliding_window: int = 0  # 0 = full attention
+    rope_theta: float = 10000.0
+    use_rope: bool = True
+    # --- MoE ---
+    num_experts: int = 0
+    num_shared_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0  # per-expert FFN width (d_ff is dense width if mixed)
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+    # --- SSM (mamba2 / SSD) ---
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 256
+    ssm_conv_width: int = 4
+    # --- hybrid (zamba2-style) ---
+    attn_period: int = 0  # shared attention block every N backbone layers
+    shared_lora_rank: int = 0
+    # --- encoder-decoder (whisper) ---
+    enc_layers: int = 0  # >0 => enc-dec; num_layers is decoder depth
+    enc_seq_len: int = 1500  # stub audio frame count
+    # --- VLM ---
+    num_image_tokens: int = 0  # stub patch-embedding count
+    # --- misc ---
+    norm_eps: float = 1e-6
+    dtype: str = "bfloat16"
+    tie_embeddings: bool = False
+    citation: str = ""
+    # --- lowering/perf knobs (not architecture) ---
+    unroll_layers: bool = False    # python-unroll layer stacks (dry-run: exact
+                                   # HLO op counts; XLA cost_analysis ignores
+                                   # while-loop trip counts)
+    seq_shard_activations: bool = False  # Megatron-style sequence parallelism:
+                                   # shard the residual stream's seq dim over
+                                   # 'model' between blocks (memory-term lever)
+    remat: bool = True
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // max(self.num_heads, 1))
+
+    @property
+    def padded_vocab(self) -> int:
+        return pad_vocab(self.vocab_size)
+
+    @property
+    def is_enc_dec(self) -> bool:
+        return self.enc_layers > 0
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.arch_type == "ssm"
+
+    @property
+    def supports_long_decode(self) -> bool:
+        """Sub-quadratic decode: SSM, hybrid, or sliding-window attention."""
+        return self.arch_type in ("ssm", "hybrid") or self.sliding_window > 0
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + blocks). Used for roofline
+        MODEL_FLOPS = 6*N*D; matches init to within tying/bias noise."""
+        d, v = self.d_model, self.padded_vocab
+        h = self.resolved_head_dim
+        n = v * d  # embed
+        if not self.tie_embeddings:
+            n += v * d
+        def attn_params() -> int:
+            q = d * self.num_heads * h
+            kv = 2 * d * self.num_kv_heads * h
+            o = self.num_heads * h * d
+            b = (self.num_heads + 2 * self.num_kv_heads) * h if self.qkv_bias else 0
+            return q + kv + o + b
+        def dense_ffn(width: int) -> int:
+            return 3 * d * width  # SwiGLU/GeGLU: gate+up+down
+        def moe_ffn() -> int:
+            routed = self.num_experts * 3 * d * self.moe_d_ff
+            shared = self.num_shared_experts * 3 * d * self.moe_d_ff
+            router = d * self.num_experts
+            return routed + shared + router
+        def mamba_params() -> int:
+            di = self.ssm_expand * d
+            heads = di // self.ssm_head_dim
+            in_proj = d * (2 * di + 2 * self.ssm_state + heads)
+            conv = self.ssm_conv_width * (di + 2 * self.ssm_state)
+            out = di * d
+            return in_proj + conv + out + 2 * heads + di
+        if self.arch_type == "ssm":
+            n += self.num_layers * (mamba_params() + d)
+        elif self.arch_type == "hybrid":
+            shared_blocks = 1
+            n += shared_blocks * (attn_params() + dense_ffn(self.d_ff) + 2 * d)
+            n += self.num_layers * (mamba_params() + d)
+            if self.attn_period:
+                n_inv = self.num_layers // self.attn_period
+                r = self.shared_lora_rank
+                if r:
+                    n += n_inv * 3 * (d * r + r * d)
+        elif self.arch_type == "moe":
+            per = attn_params() + moe_ffn() + 2 * d
+            n += self.num_layers * per
+        else:  # dense / vlm / audio backbones
+            per = attn_params() + dense_ffn(self.d_ff) + 2 * d
+            n += self.num_layers * per
+            if self.is_enc_dec:
+                # cross-attention + encoder stack (whisper MLP has no gate)
+                n -= self.num_layers * d * self.d_ff  # dec ffn: 2dw not 3dw
+                n += self.num_layers * attn_params()
+                n += self.enc_layers * (attn_params() + 2 * d * self.d_ff + 2 * d)
+        return n
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: shared + top_k routed)."""
+        if self.arch_type != "moe":
+            return self.param_count()
+        d = self.d_model
+        dense = self.param_count() - self.num_layers * (
+            (self.num_experts - 0) * 3 * d * self.moe_d_ff
+        )
+        active_routed = self.num_layers * self.top_k * 3 * d * self.moe_d_ff
+        return dense + active_routed
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+ARCH_IDS = [
+    "paligemma_3b",
+    "qwen3_4b",
+    "qwen2_moe_a2_7b",
+    "mamba2_130m",
+    "qwen2_0_5b",
+    "whisper_base",
+    "mixtral_8x7b",
+    "zamba2_1_2b",
+    "phi3_medium_14b",
+    "qwen2_5_3b",
+]
+
+# CLI ids with dashes map to module names with underscores.
+def _norm(name: str) -> str:
+    return name.replace("-", "_").replace(".", "_")
+
+
+def get_config(name: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_norm(name)}")
+    return mod.CONFIG
+
+
+def list_configs() -> list[str]:
+    return list(ARCH_IDS)
+
+
+def reduced(cfg: ModelConfig) -> ModelConfig:
+    """Smoke-test variant: same family, <=2 layers, d_model<=512, <=4 experts."""
+    d = min(cfg.d_model, 256)
+    heads = max(2, min(cfg.num_heads, 4))
+    kv = max(1, min(cfg.num_kv_heads, heads))
+    hd = max(16, d // heads)
+    upd = dict(
+        num_layers=2,
+        d_model=d,
+        num_heads=heads,
+        num_kv_heads=kv,
+        head_dim=hd,
+        d_ff=min(cfg.d_ff, 512) if cfg.d_ff else 0,
+        vocab_size=min(cfg.vocab_size, 1024),
+        dtype="float32",
+    )
+    if cfg.arch_type == "moe":
+        upd.update(num_experts=4, top_k=min(cfg.top_k, 2),
+                   num_shared_experts=min(cfg.num_shared_experts, 1),
+                   moe_d_ff=min(cfg.moe_d_ff, 128))
+    if cfg.arch_type in ("ssm", "hybrid"):
+        upd.update(ssm_state=min(cfg.ssm_state, 32), ssm_head_dim=32,
+                   ssm_chunk=64)
+    if cfg.arch_type == "hybrid":
+        upd.update(attn_period=2, num_layers=4, shared_lora_rank=min(cfg.shared_lora_rank, 8))
+    if cfg.is_enc_dec:
+        upd.update(enc_layers=2, enc_seq_len=64)
+    if cfg.num_image_tokens:
+        upd.update(num_image_tokens=16)
+    if cfg.sliding_window:
+        upd.update(sliding_window=64)
+    return dataclasses.replace(cfg, **upd)

@@ -1,0 +1,19 @@
+"""Mamba2-130m: pure SSM, SSD (state-space duality). [arXiv:2405.21060]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-130m",
+    arch_type="ssm",
+    num_layers=24,
+    d_model=768,
+    num_heads=0,
+    num_kv_heads=0,
+    d_ff=0,
+    vocab_size=50280,
+    use_rope=False,
+    ssm_state=128,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    tie_embeddings=True,
+    citation="arXiv:2405.21060",
+)

@@ -1,0 +1,22 @@
+"""Mixtral-8x7B: 8 experts top-2, sliding-window attention.
+[arXiv:2401.04088]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mixtral-8x7b",
+    arch_type="moe",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=0,
+    vocab_size=32000,
+    sliding_window=4096,
+    rope_theta=1000000.0,
+    num_experts=8,
+    num_shared_experts=0,
+    top_k=2,
+    moe_d_ff=14336,
+    citation="arXiv:2401.04088",
+)

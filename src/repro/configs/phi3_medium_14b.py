@@ -1,0 +1,15 @@
+"""Phi-3-medium-14B: RoPE + SwiGLU + GQA. [arXiv:2404.14219]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi3-medium-14b",
+    arch_type="dense",
+    num_layers=40,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=10,
+    head_dim=128,
+    d_ff=17920,
+    vocab_size=100352,
+    citation="arXiv:2404.14219",
+)

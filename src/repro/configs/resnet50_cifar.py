@@ -1,0 +1,17 @@
+"""Compact ResNet (paper's own model family, He et al. 2015) for the
+convergence experiments on CPU — the paper trains ResNet-50/ImageNet;
+we train a narrow ResNet on synthetic image data for Figs 11/13/14."""
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ResNetConfig:
+    name: str = "resnet-tiny"
+    stage_sizes: tuple = (1, 1, 1)
+    width: int = 16
+    num_classes: int = 10
+    image_size: int = 16
+    citation: str = "arXiv:1512.03385 (paper trains ResNet-50)"
+
+
+CONFIG = ResNetConfig()

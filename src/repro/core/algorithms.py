@@ -1,0 +1,329 @@
+"""The six parallel-SGD modes of the paper's evaluation (§7):
+
+  dist-SGD   pure PS, synchronous           (paper fig. 6, #clients=#workers)
+  mpi-SGD    MPI clients + PS, synchronous  (fig. 6)
+  dist-ASGD  pure PS, asynchronous          (fig. 7, #clients=#workers)
+  mpi-ASGD   sync inside client, async push (fig. 7)
+  dist-ESGD  elastic averaging per worker   (fig. 8, #clients=#workers)
+  mpi-ESGD   local sync-SGD inside client, elastic averaging at PS (fig. 8)
+
+Each mode drives the same KVStore API the paper's pseudo-code uses, with
+per-key push/pull, server-side optimizer (``set_optimizer``), and
+intra-client tensor allreduce. Wall time is *simulated* with the α-β-γ
+cost model (there is no congested network in this container); gradient
+math is real JAX on real synthetic data, so convergence curves are
+genuine.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cost_model
+from repro.core.client import group_workers
+from repro.core.collectives import tensor_allreduce, emulate
+from repro.core.elastic import elastic_client_update
+from repro.core.kvstore import KVStore
+from repro.core.scheduler import AsyncEngine, StalenessTracker, UnitTiming
+from repro.optim.sgd import Optimizer, sgd
+
+MODES = ("dist_sgd", "mpi_sgd", "dist_asgd", "mpi_asgd", "dist_esgd", "mpi_esgd")
+
+
+@dataclass(frozen=True)
+class AlgoConfig:
+    mode: str
+    num_workers: int = 12
+    num_clients: int = 2          # ignored for dist_* (== num_workers)
+    num_servers: int = 2
+    lr: float = 0.1
+    momentum: float = 0.9
+    esgd_alpha: float = 0.5
+    esgd_interval: int = 64       # the paper's INTERVAL
+    epochs: int = 4
+    steps_per_epoch: int = 40
+    compute_time: float = 0.5     # nominal s/batch (paper: resnet50 on K80s)
+    jitter: float = 0.15
+    model_bytes: float = 100e6    # resnet-50 ~ 25M params fp32
+    seed: int = 0
+    net: cost_model.NetParams = field(default_factory=cost_model.testbed)
+    allreduce_method: str = "multi_ring"
+    compress_push: bool = False  # beyond-paper: int8 PS pushes
+
+    @property
+    def effective_clients(self) -> int:
+        return self.num_workers if self.mode.startswith("dist") else self.num_clients
+
+    @property
+    def workers_per_client(self) -> int:
+        return self.num_workers // self.effective_clients
+
+
+@dataclass
+class History:
+    times: list[float] = field(default_factory=list)
+    epochs: list[int] = field(default_factory=list)
+    metrics: list[float] = field(default_factory=list)
+    losses: list[float] = field(default_factory=list)
+    mean_staleness: float = 0.0
+    epoch_time: float = 0.0
+
+
+GradFn = Callable[[Any, dict], tuple[jax.Array, Any]]
+EvalFn = Callable[[Any], float]
+
+
+def _client_grad(grad_fn: GradFn, params, batches: list[dict],
+                 method: str) -> tuple[float, Any]:
+    """Intra-client step: per-worker grads, tensor-allreduced (mean).
+
+    Numerically exercises the real ring/multi-ring collective via vmap
+    emulation when the client has >1 worker.
+    """
+    losses, grads = [], []
+    for b in batches:
+        l, g = grad_fn(params, b)
+        losses.append(float(l))
+        grads.append(g)
+    if len(grads) == 1:
+        return losses[0], grads[0]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *grads)
+    summed = emulate(tensor_allreduce, stacked, method=method)
+    mean = jax.tree.map(lambda s: s[0] / len(grads), summed)
+    return float(np.mean(losses)), mean
+
+
+def _comm_times(cfg: AlgoConfig) -> dict[str, float]:
+    per_client = cfg.workers_per_client
+    intra = cost_model.allreduce_time(
+        cfg.model_bytes, per_client, cfg.net, cfg.allreduce_method
+    )
+    ps = cost_model.ps_pushpull_time(
+        cfg.model_bytes, cfg.effective_clients, cfg.num_servers, cfg.net
+    )
+    return {"intra": intra, "ps": ps}
+
+
+def run(cfg: AlgoConfig, init_fn: Callable[[jax.Array], Any], grad_fn: GradFn,
+        eval_fn: EvalFn, make_pipeline: Callable[[int], Any]) -> History:
+    if cfg.mode not in MODES:
+        raise ValueError(f"mode must be one of {MODES}")
+    if cfg.num_workers % cfg.effective_clients:
+        raise ValueError("workers must divide into clients evenly")
+    runner = {
+        "dist_sgd": _run_sync, "mpi_sgd": _run_sync,
+        "dist_asgd": _run_async, "mpi_asgd": _run_async,
+        "dist_esgd": _run_esgd, "mpi_esgd": _run_esgd,
+    }[cfg.mode]
+    return runner(cfg, init_fn, grad_fn, eval_fn, make_pipeline)
+
+
+# ---------------------------------------------------------------------------
+# synchronous (fig. 6): Push(grads); Pull(grads); SGD.Update locally
+# ---------------------------------------------------------------------------
+
+def _run_sync(cfg, init_fn, grad_fn, eval_fn, make_pipeline) -> History:
+    C = cfg.effective_clients
+    idents = group_workers(cfg.num_workers, C)
+    pipelines = [make_pipeline(w) for w in range(cfg.num_workers)]
+    params = init_fn(jax.random.key(cfg.seed))
+    # fig. 6: Push(grads); Pull(grads) returns the global SUM (server rule
+    # "assign" after the sync barrier); SGD.Update runs on the worker with
+    # rescale = 1/mini_batch_size (here: 1/num_workers of worker-mean grads)
+    kv = KVStore.create("sync_mpi" if cfg.mode == "mpi_sgd" else "dist_sync",
+                        num_workers=cfg.num_workers, num_servers=cfg.num_servers,
+                        num_clients=C)
+    kv.init("grads", jax.tree.map(jnp.zeros_like, params))
+    opt = sgd(cfg.lr, cfg.momentum)
+    opt_state = opt.init(params)
+
+    comm = _comm_times(cfg)
+    rng = np.random.default_rng(cfg.seed)
+    now = 0.0
+    hist = History()
+    step_times = []
+    for epoch in range(cfg.epochs):
+        for step in range(cfg.steps_per_epoch):
+            client_grads, losses = [], []
+            for c in range(C):
+                members = [w for w in range(cfg.num_workers)
+                           if idents[w].mpi.client == c]
+                batches = [pipelines[w].batch_at(epoch, step) for w in members]
+                loss, g = _client_grad(grad_fn, params, batches,
+                                       cfg.allreduce_method)
+                client_grads.append(jax.tree.map(
+                    lambda x: x * len(members), g))  # client-sum
+                losses.append(loss)
+            for g in client_grads:
+                kv.push("grads", g)
+            total = kv.pull("grads")[0]
+            mean_g = jax.tree.map(lambda x: x / cfg.num_workers, total)
+            params, opt_state = opt.update(mean_g, opt_state, params)
+            # simulated wall time: slowest worker's compute + comms
+            compute = max(
+                cfg.compute_time * rng.lognormal(0, cfg.jitter)
+                for _ in range(cfg.num_workers)
+            )
+            dt = compute + comm["intra"] + comm["ps"]
+            now += dt
+            step_times.append(dt)
+            hist.losses.append(float(np.mean(losses)))
+        hist.times.append(now)
+        hist.epochs.append(epoch)
+        hist.metrics.append(eval_fn(params))
+    hist.epoch_time = float(np.mean(step_times)) * cfg.steps_per_epoch
+    return hist
+
+
+# ---------------------------------------------------------------------------
+# asynchronous (fig. 7): Push(grads); Pull(params) — server runs optimizer
+# ---------------------------------------------------------------------------
+
+def _run_async(cfg, init_fn, grad_fn, eval_fn, make_pipeline) -> History:
+    C = cfg.effective_clients
+    idents = group_workers(cfg.num_workers, C)
+    pipelines = [make_pipeline(w) for w in range(cfg.num_workers)]
+    params0 = init_fn(jax.random.key(cfg.seed))
+    kv = KVStore.create("async_mpi" if cfg.mode == "mpi_asgd" else "dist_async",
+                        num_workers=cfg.num_workers, num_servers=cfg.num_servers,
+                        num_clients=C)
+    kv.init("params", params0)
+    kv.set_optimizer(sgd(cfg.lr, cfg.momentum), rescale=1.0)
+
+    comm = _comm_times(cfg)
+    rng = np.random.default_rng(cfg.seed)
+    timing = [
+        UnitTiming(cfg.compute_time, cfg.jitter,
+                   np.random.default_rng((cfg.seed, u)))
+        for u in range(C)
+    ]
+    # contention: concurrent pushers share the server link — async pushes
+    # overlap, so charge the expected concurrency factor
+    iter_time = cfg.compute_time + comm["intra"]
+    solo_push = cost_model.ps_pushpull_time(
+        cfg.model_bytes, 1, cfg.num_servers, cfg.net)
+    concurrency = max(1.0, C * solo_push / max(iter_time + solo_push, 1e-9))
+    push_time = solo_push * concurrency
+
+    engine = AsyncEngine(C, timing)
+    tracker = StalenessTracker()
+    client_params = [params0] * C
+    client_iter = [0] * C
+    hist = History()
+    # an epoch = one pass over every worker's shard: each unit completion
+    # consumes workers_per_client batches, so steps_per_epoch * C
+    # completions cover steps_per_epoch * num_workers batches — the same
+    # data budget as one synchronous epoch.
+    per_epoch = cfg.steps_per_epoch * C
+    total = cfg.epochs * per_epoch
+    state = {"completions": 0, "losses": []}
+
+    def on_complete(unit: int, now: float) -> float:
+        it = client_iter[unit]
+        epoch = min(it // cfg.steps_per_epoch, cfg.epochs - 1)
+        step = it % cfg.steps_per_epoch
+        members = [w for w in range(cfg.num_workers)
+                   if idents[w].mpi.client == unit]
+        batches = [pipelines[w].batch_at(epoch, step) for w in members]
+        loss, g = _client_grad(grad_fn, client_params[unit], batches,
+                               cfg.allreduce_method)
+        state["losses"].append(loss)
+        tracker.on_apply(unit)
+        kv.push("params", g)
+        client_params[unit] = kv.pull("params")[0]
+        tracker.on_pull(unit)
+        client_iter[unit] += 1
+        state["completions"] += 1
+        if state["completions"] % per_epoch == 0:
+            ep = state["completions"] // per_epoch - 1
+            hist.times.append(now)
+            hist.epochs.append(ep)
+            hist.metrics.append(eval_fn(kv.value("params")))
+            hist.losses.append(float(np.mean(
+                state["losses"][-per_epoch:])))
+        return comm["intra"] + push_time
+
+    for u in range(C):
+        tracker.on_pull(u)
+    engine.start()
+    engine.run(total, on_complete)
+    hist.mean_staleness = tracker.mean_staleness()
+    hist.epoch_time = engine.now / cfg.epochs
+    return hist
+
+
+# ---------------------------------------------------------------------------
+# elastic (fig. 8): local SGD; every INTERVAL: Push(params) -> Elastic1 on
+# server; Pull(centers); Elastic2 locally
+# ---------------------------------------------------------------------------
+
+def _run_esgd(cfg, init_fn, grad_fn, eval_fn, make_pipeline) -> History:
+    C = cfg.effective_clients
+    idents = group_workers(cfg.num_workers, C)
+    pipelines = [make_pipeline(w) for w in range(cfg.num_workers)]
+    params0 = init_fn(jax.random.key(cfg.seed))
+    kv = KVStore.create("async_mpi" if cfg.mode == "mpi_esgd" else "dist_async",
+                        num_workers=cfg.num_workers, num_servers=cfg.num_servers,
+                        num_clients=C, compress_push=cfg.compress_push)
+    kv.init("centers", params0)
+    kv.set_elastic(cfg.esgd_alpha)
+
+    comm = _comm_times(cfg)
+    timing = [
+        UnitTiming(cfg.compute_time, cfg.jitter,
+                   np.random.default_rng((cfg.seed, u)))
+        for u in range(C)
+    ]
+    opt = sgd(cfg.lr, cfg.momentum)
+    client_params = [params0] * C
+    client_opt = [opt.init(params0) for _ in range(C)]
+    client_iter = [0] * C
+
+    engine = AsyncEngine(C, timing)
+    hist = History()
+    total = cfg.epochs * cfg.steps_per_epoch * C
+    state = {"completions": 0, "losses": []}
+    per_epoch = cfg.steps_per_epoch * C
+
+    def on_complete(unit: int, now: float) -> float:
+        it = client_iter[unit]
+        epoch = min(it // cfg.steps_per_epoch, cfg.epochs - 1)
+        step = it % cfg.steps_per_epoch
+        members = [w for w in range(cfg.num_workers)
+                   if idents[w].mpi.client == unit]
+        batches = [pipelines[w].batch_at(epoch, step) for w in members]
+        loss, g = _client_grad(grad_fn, client_params[unit], batches,
+                               cfg.allreduce_method)
+        state["losses"].append(loss)
+        comm_cost = comm["intra"]
+        if it % cfg.esgd_interval == 0:
+            old_center = kv.value("centers")
+            kv.push("centers", client_params[unit])      # Elastic1 on server
+            client_params[unit] = elastic_client_update(  # Elastic2 locally
+                client_params[unit], old_center, cfg.esgd_alpha
+            )
+            wire = cfg.model_bytes / (3.9 if cfg.compress_push else 1.0)
+            comm_cost += cost_model.ps_pushpull_time(
+                wire, 1, cfg.num_servers, cfg.net)
+        new_p, new_s = opt.update(g, client_opt[unit], client_params[unit])
+        client_params[unit] = new_p
+        client_opt[unit] = new_s
+        client_iter[unit] += 1
+        state["completions"] += 1
+        if state["completions"] % per_epoch == 0:
+            ep = state["completions"] // per_epoch - 1
+            hist.times.append(now)
+            hist.epochs.append(ep)
+            hist.metrics.append(eval_fn(kv.value("centers")))
+            hist.losses.append(float(np.mean(state["losses"][-per_epoch:])))
+        return comm_cost
+
+    engine.start()
+    engine.run(total, on_complete)
+    hist.epoch_time = engine.now / cfg.epochs
+    return hist

@@ -1,0 +1,113 @@
+"""α-β-γ communication cost model (paper §6.2 + Fig. 12/15 reproduction).
+
+Bucket allreduce cost (Patarasuk & Yuan):  (p−1)α + 2·(p−1)/p·nβ + (p−1)/p·nγ
+Multi-ring overlaps the γ (reduction) term with the β (transfer) term.
+PS push/pull: a server's ingress link is shared by every concurrent pusher
+(the network hot-spot of §2.3).
+
+Two hardware presets:
+  * ``testbed()`` — the paper's IB ConnectX-4 cluster (for Fig 12 numbers)
+  * ``tpu_v5e()`` — our target (ICI links), used by the roofline tooling
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class NetParams:
+    alpha: float   # per-step latency (s)
+    beta: float    # seconds per byte (link bandwidth⁻¹)
+    gamma: float   # seconds per byte of local reduction
+
+
+def testbed() -> NetParams:
+    # IB CX-4 ~ 12.5 GB/s; host reduction ~30 GB/s (paper's IBMGpu number)
+    return NetParams(alpha=5e-6, beta=1 / 12.5e9, gamma=1 / 30e9)
+
+
+def tpu_v5e() -> NetParams:
+    # ~50 GB/s/link ICI; on-chip reduction at HBM bw 819 GB/s
+    return NetParams(alpha=1e-6, beta=1 / 45e9, gamma=1 / 819e9)
+
+
+def ring_allreduce_time(nbytes: float, p: int, net: NetParams) -> float:
+    if p <= 1:
+        return 0.0
+    return (
+        (p - 1) * net.alpha
+        + 2 * (p - 1) / p * nbytes * net.beta
+        + (p - 1) / p * nbytes * net.gamma
+    )
+
+
+def multi_ring_allreduce_time(nbytes: float, p: int, net: NetParams,
+                              num_rings: int = 2) -> float:
+    """γ of ring i overlaps β of ring i+1 → pay max(β, γ) instead of β+γ
+    on the steady-state term (plus one non-overlapped γ pipeline fill)."""
+    if p <= 1:
+        return 0.0
+    beta_term = 2 * (p - 1) / p * nbytes * net.beta
+    gamma_term = (p - 1) / p * nbytes * net.gamma
+    fill = gamma_term / max(num_rings, 1)
+    return (p - 1) * net.alpha * num_rings + max(beta_term, gamma_term) + fill
+
+
+def tree_allreduce_time(nbytes: float, p: int, net: NetParams) -> float:
+    """Binomial reduce+bcast (`reg`): 2·log2(p) full-buffer hops."""
+    import math
+
+    if p <= 1:
+        return 0.0
+    steps = 2 * math.ceil(math.log2(p))
+    return steps * (net.alpha + nbytes * net.beta) + nbytes * net.gamma * math.log2(p)
+
+
+def ps_pushpull_time(nbytes: float, num_pushers: int, num_servers: int,
+                     net: NetParams) -> float:
+    """Server ingress shared by concurrent pushers + egress for pulls.
+    Each server holds 1/num_servers of the keys."""
+    per_server = nbytes / max(num_servers, 1)
+    ingress = per_server * num_pushers * net.beta  # serialized hot-spot
+    egress = per_server * num_pushers * net.beta
+    reduce_cost = per_server * num_pushers * net.gamma
+    return 2 * net.alpha + ingress + egress + reduce_cost
+
+
+def allreduce_time(nbytes: float, p: int, net: NetParams, method: str,
+                   num_rings: int = 2) -> float:
+    return {
+        "ring": lambda: ring_allreduce_time(nbytes, p, net),
+        "multi_ring": lambda: multi_ring_allreduce_time(nbytes, p, net, num_rings),
+        "tree": lambda: tree_allreduce_time(nbytes, p, net),
+        "psum": lambda: ring_allreduce_time(nbytes, p, net),  # XLA uses rings
+    }[method]()
+
+
+def epoch_time(
+    *,
+    model_bytes: float,
+    num_workers: int,
+    num_clients: int,
+    num_servers: int,
+    steps_per_epoch: int,
+    compute_time_per_step: float,
+    net: NetParams,
+    mode: str,  # "dist" (pure PS) or "mpi" (hierarchical)
+    sync_every: int = 1,  # ESGD INTERVAL communicates every k steps
+) -> float:
+    """Fig. 12's quantity: average epoch wall time for one worker."""
+    per_client = num_workers // num_clients
+    if mode == "dist":
+        comm = ps_pushpull_time(model_bytes, num_workers, num_servers, net)
+    elif mode == "mpi":
+        intra = ring_allreduce_time(model_bytes, per_client, net)
+        to_ps = (
+            ps_pushpull_time(model_bytes, num_clients, num_servers, net)
+            if num_servers > 0
+            else 0.0
+        )
+        comm = intra + to_ps
+    else:
+        raise ValueError(mode)
+    return steps_per_epoch * (compute_time_per_step + comm / sync_every)

@@ -1,0 +1,78 @@
+"""Elastic Averaging SGD (paper §2.2, eqs. (2)/(3); Zhang et al. 2015).
+
+The PS stores *center variables* w̃. Every INTERVAL iterations a client
+exchanges with the PS:
+
+    server (Elastic1):  w̃ ← w̃ + α (w − w̃)        eq. (2)
+    client (Elastic2):  w  ← w  − α (w − w̃_old)    eq. (3)
+
+Both use the *same* pre-update difference (w − w̃): the elastic force is
+symmetric — the pair conserves w + w̃ up to the α-weighted pull.
+
+At production scale (launch/train.py) the same math runs across the
+``pod`` axis of the mesh: each pod is a client holding its own replica in
+a leading client dim, the centers are a co-sharded pytree, and the lazy
+exchange is the only cross-pod communication — the paper's
+communication-avoiding path to cluster-wide scaling.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def elastic_server_update(center: Any, client_params: Any, alpha: float) -> Any:
+    """Eq. (2): move the center toward the client's params."""
+    return jax.tree.map(
+        lambda c, w: (
+            c.astype(jnp.float32)
+            + alpha * (w.astype(jnp.float32) - c.astype(jnp.float32))
+        ).astype(c.dtype),
+        center, client_params,
+    )
+
+
+def elastic_client_update(params: Any, center: Any, alpha: float) -> Any:
+    """Eq. (3): pull the client's params toward the (old) center."""
+    return jax.tree.map(
+        lambda w, c: (
+            w.astype(jnp.float32)
+            - alpha * (w.astype(jnp.float32) - c.astype(jnp.float32))
+        ).astype(w.dtype),
+        params, center,
+    )
+
+
+def elastic_exchange(params: Any, center: Any, alpha: float) -> tuple[Any, Any]:
+    """One full exchange: both updates computed from the same (w − w̃)."""
+    new_center = elastic_server_update(center, params, alpha)
+    new_params = elastic_client_update(params, center, alpha)
+    return new_params, new_center
+
+
+def elastic_exchange_multiclient(
+    client_params: Any, center: Any, alpha: float
+) -> tuple[Any, Any]:
+    """Vectorized exchange for params with a leading client dim C.
+
+    Server applies eq. (2) sequentially w.r.t. each client in expectation;
+    with simultaneous clients the standard EASGD generalization is
+    w̃ ← w̃ + α Σ_c (w_c − w̃). Each client applies eq. (3) with the shared
+    old center.
+    """
+    def server(c, w):
+        c32 = c.astype(jnp.float32)
+        diff = jnp.sum(w.astype(jnp.float32) - c32[None], axis=0)
+        return (c32 + alpha * diff).astype(c.dtype)
+
+    new_center = jax.tree.map(server, center, client_params)
+    new_params = jax.tree.map(
+        lambda w, c: (
+            w.astype(jnp.float32)
+            - alpha * (w.astype(jnp.float32) - c.astype(jnp.float32)[None])
+        ).astype(w.dtype),
+        client_params, center,
+    )
+    return new_params, new_center

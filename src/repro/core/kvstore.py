@@ -1,0 +1,206 @@
+"""KVStore-MPI (paper §3.2/§4.2): the distributed <key, value> store with
+``create / init / set_optimizer / push / pull / pushpull``.
+
+This is the *semantic* layer the paper adds to MXNET, reproduced over JAX
+arrays. The store simulates the PS tier in-process (values sharded over
+``num_servers`` for cost accounting); workers address it through the same
+API the paper's workers use:
+
+- ``push(key, tensor)``: ``tensor`` is the paper's group-of-vectors — a
+  list with one array per local device; it is locally reduced first
+  (tensor reduce — the Pallas ``tensor_group_reduce`` kernel's job), then
+  the store applies the server rule:
+    * sync types buffer pushes until all expected pushers arrive (barrier)
+    * async types apply each push immediately (staleness!)
+- ``pull(key)`` returns the current server value (copied into every entry
+  of the destination tensor list by the caller).
+- ``pushpull`` fuses both (the new MXNET API the paper added, §4.2.4).
+
+MPI types ("sync_mpi"/"async_mpi") only change WHO pushes: the client
+master, after an intra-client tensor allreduce — see core/algorithms.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.sgd import Optimizer
+
+VALID_TYPES = ("local", "dist_sync", "dist_async", "sync_mpi", "async_mpi")
+
+
+def _tree_add(a: Any, b: Any) -> Any:
+    return jax.tree.map(jnp.add, a, b)
+
+
+def local_reduce(tensor: list[Any]) -> Any:
+    """Reduce the group-of-vectors on a worker (one value per device).
+
+    Values may be arrays or whole pytrees (a fused "tensor"). Uses the
+    Pallas grouped-reduction kernel when available (the IBMGpu analogue),
+    falling back to jnp.
+    """
+    if len(tensor) == 1:
+        return tensor[0]
+
+    def reduce_leaf(*xs):
+        stacked = jnp.stack(xs)
+        try:
+            from repro.kernels.tensor_reduce.ops import group_reduce
+
+            return group_reduce(stacked)
+        except Exception:
+            return jnp.sum(stacked, axis=0)
+
+    return jax.tree.map(reduce_leaf, *tensor)
+
+
+@dataclass
+class _ServerRule:
+    """What the server does with an aggregated push (set via set_optimizer)."""
+
+    kind: str = "assign"  # assign | optimize | elastic
+    optimizer: Optional[Optimizer] = None
+    rescale: float = 1.0
+    alpha: float = 0.0  # elastic
+
+
+class KVStore:
+    """In-process PS tier + the worker-facing API."""
+
+    def __init__(self, kv_type: str, *, num_workers: int = 1,
+                 num_servers: int = 1, num_clients: Optional[int] = None,
+                 compress_push: bool = False):
+        if kv_type not in VALID_TYPES:
+            raise ValueError(f"kv_type must be one of {VALID_TYPES}")
+        self.kv_type = kv_type
+        self.num_workers = num_workers
+        self.num_servers = max(num_servers, 1)
+        self.num_clients = num_clients or num_workers
+        # beyond-paper: int8 block-quantize the PS leg (kernels/quant_bucket)
+        self.compress_push = compress_push
+        self.pushed_bytes = 0
+        self.pushed_bytes_uncompressed = 0
+        self.is_mpi = kv_type.endswith("_mpi")
+        self.is_sync = kv_type in ("dist_sync", "sync_mpi")
+        # number of pushers the sync barrier waits for
+        self.expected_pushers = self.num_clients if self.is_mpi else num_workers
+        self._values: dict[Any, jax.Array] = {}
+        self._opt_state: dict[Any, Any] = {}
+        self._pending: dict[Any, list[jax.Array]] = {}
+        self._rule = _ServerRule()
+        self.push_count: dict[Any, int] = {}
+
+    # -- setup --------------------------------------------------------------
+    @classmethod
+    def create(cls, kv_type: str, **kw) -> "KVStore":
+        return cls(kv_type, **kw)
+
+    def init(self, key: Any, value: jax.Array) -> None:
+        """Rank 0 initializes keys on the servers (paper §4.2.1)."""
+        if key in self._values:
+            raise KeyError(f"key {key!r} already initialized")
+        self._values[key] = value
+        self.push_count[key] = 0
+        if self._rule.kind == "optimize":
+            self._opt_state[key] = self._rule.optimizer.init(value)
+
+    def set_optimizer(self, optimizer: Optimizer, *, rescale: float = 1.0) -> None:
+        """Ship the update rule to the server (remote config, §3.2)."""
+        self._rule = _ServerRule("optimize", optimizer, rescale)
+        for key, value in self._values.items():
+            self._opt_state[key] = optimizer.init(value)
+
+    def set_elastic(self, alpha: float) -> None:
+        """Server-side Elastic1 (eq. 2): values become center variables."""
+        self._rule = _ServerRule("elastic", alpha=alpha)
+
+    # -- data plane ----------------------------------------------------------
+    def push(self, key: Any, tensor: list[jax.Array] | jax.Array) -> None:
+        if key not in self._values:
+            raise KeyError(f"push to uninitialized key {key!r}")
+        agg = local_reduce(tensor) if isinstance(tensor, list) else tensor
+        self.push_count[key] += 1
+        raw = sum(l.size * l.dtype.itemsize
+                  for l in jax.tree_util.tree_leaves(agg))
+        self.pushed_bytes_uncompressed += raw
+        if self.compress_push:
+            from repro.kernels.quant_bucket.ops import (
+                compress, compressed_bytes, decompress)
+
+            codes, scales = compress(agg)
+            self.pushed_bytes += compressed_bytes(agg)
+            agg = decompress(codes, scales, agg)  # what the server receives
+        else:
+            self.pushed_bytes += raw
+        if self.is_sync:
+            pend = self._pending.setdefault(key, [])
+            pend.append(agg)
+            if len(pend) >= self.expected_pushers:
+                total = pend[0]
+                for other in pend[1:]:
+                    total = _tree_add(total, other)
+                del self._pending[key]
+                self._apply(key, total)
+        else:
+            self._apply(key, agg)
+
+    def pull(self, key: Any, num_dst: int = 1) -> list[jax.Array]:
+        """Returns the server value broadcast to ``num_dst`` tensor slots."""
+        if key in self._pending:
+            raise RuntimeError(
+                f"pull of key {key!r} while sync barrier incomplete "
+                f"({len(self._pending[key])}/{self.expected_pushers} pushes)"
+            )
+        v = self._values[key]
+        return [v for _ in range(num_dst)]
+
+    def pushpull(self, key: Any, tensor: list[jax.Array] | jax.Array,
+                 num_dst: int = 1) -> list[jax.Array]:
+        """Fused push+pull (§4.2.4). With 0 servers this is pure tensor
+        allreduce; here it is push followed by an immediate pull."""
+        self.push(key, tensor)
+        return self.pull(key, num_dst)
+
+    # -- server rules ---------------------------------------------------------
+    def _apply(self, key: Any, pushed: Any) -> None:
+        rule = self._rule
+        if rule.kind == "assign":
+            self._values[key] = pushed
+        elif rule.kind == "optimize":
+            grad = jax.tree.map(lambda g: g * rule.rescale, pushed)
+            new_v, new_s = rule.optimizer.update(
+                grad, self._opt_state[key], self._values[key]
+            )
+            self._values[key] = new_v
+            self._opt_state[key] = new_s
+        elif rule.kind == "elastic":
+            from repro.core.elastic import elastic_server_update
+
+            self._values[key] = elastic_server_update(
+                self._values[key], pushed, rule.alpha
+            )
+
+    # -- introspection ---------------------------------------------------------
+    def value(self, key: Any) -> jax.Array:
+        return self._values[key]
+
+    def keys(self) -> list:
+        return list(self._values)
+
+    def server_of(self, key: Any) -> int:
+        """Key placement across the server shards (hash partitioning)."""
+        return hash(key) % self.num_servers
+
+    def bytes_per_server_per_sync(self, key: Any) -> int:
+        """Ingress bytes one server receives per global sync of this key —
+        the contention quantity of Fig. 12."""
+        nbytes = sum(
+            l.size * l.dtype.itemsize
+            for l in jax.tree_util.tree_leaves(self._values[key])
+        )
+        return nbytes * self.expected_pushers // self.num_servers

@@ -1,0 +1,34 @@
+"""Shared kernel plumbing: interpret-mode selection and tiling helpers."""
+from __future__ import annotations
+
+import os
+
+import jax
+
+# TPU is the target; everywhere else the kernels run in interpret mode
+# (Python evaluation of the kernel body — used for CI/correctness).
+def use_interpret() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+LANE = 128          # TPU lane width: last tile dim should be a multiple
+SUBLANE = 8         # f32 sublane count
+VMEM_BUDGET = 8 * 1024 * 1024  # conservative half-VMEM working set
+
+
+def pick_block(n: int, bytes_per_elem: int, rows: int = 1,
+               max_block: int = 512 * 1024) -> int:
+    """Largest lane-aligned block of a flat N-vector such that ``rows``
+    copies of it fit the VMEM budget (double-buffered)."""
+    budget = VMEM_BUDGET // (2 * rows * bytes_per_elem)
+    blk = min(n, budget, max_block)
+    if blk >= LANE:
+        blk -= blk % LANE
+    return max(blk, 1)
+
+
+def ceil_div(a: int, b: int) -> int:
+    return -(-a // b)

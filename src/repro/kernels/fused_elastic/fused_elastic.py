@@ -1,0 +1,56 @@
+"""Fused Elastic-SGD exchange kernel (paper eqs. (2)+(3)).
+
+Both updates read the same difference (w − w̃); unfused they cost four
+HBM passes (read w, read w̃ twice each, write both). The fused kernel
+streams one (block,) tile of each operand through VMEM and writes both
+outputs in a single pass — the memory-bound optimizer-update analogue of
+the paper's fused GPU reduction.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import pick_block
+
+
+def _elastic_kernel(alpha_ref, w_ref, c_ref, w_out_ref, c_out_ref):
+    w = w_ref[...].astype(jnp.float32)
+    c = c_ref[...].astype(jnp.float32)
+    alpha = alpha_ref[0]
+    diff = alpha * (w - c)
+    w_out_ref[...] = (w - diff).astype(w_out_ref.dtype)
+    c_out_ref[...] = (c + diff).astype(c_out_ref.dtype)
+
+
+def elastic_exchange_flat(w: jax.Array, c: jax.Array, alpha: jax.Array, *,
+                          block: int | None = None, interpret: bool = True):
+    """w, c: (N,) -> (new_w, new_c)."""
+    n = w.shape[0]
+    block = block or pick_block(n, 4, rows=4)
+    pad = (-n) % block
+    if pad:
+        w = jnp.pad(w, (0, pad))
+        c = jnp.pad(c, (0, pad))
+    np_ = n + pad
+    alpha = jnp.asarray(alpha, jnp.float32).reshape(1)
+    new_w, new_c = pl.pallas_call(
+        _elastic_kernel,
+        grid=(np_ // block,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),  # alpha, replicated per tile
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((np_,), w.dtype),
+            jax.ShapeDtypeStruct((np_,), c.dtype),
+        ],
+        interpret=interpret,
+    )(alpha, w, c)
+    return new_w[:n], new_c[:n]

@@ -1,0 +1,30 @@
+"""jit'd pytree-level wrapper for the fused elastic exchange."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import use_interpret
+from repro.kernels.fused_elastic.fused_elastic import elastic_exchange_flat
+
+
+@jax.jit
+def elastic_exchange_fused(params: Any, center: Any, alpha: jax.Array):
+    """Apply eqs. (2)+(3) leaf-wise with one fused pass per leaf."""
+    interpret = use_interpret()
+
+    def one(w, c):
+        nw, nc = elastic_exchange_flat(
+            w.reshape(-1), c.reshape(-1), alpha, interpret=interpret
+        )
+        return nw.reshape(w.shape), nc.reshape(c.shape)
+
+    pairs = jax.tree.map(one, params, center)
+    new_params = jax.tree.map(lambda p: p[0], pairs,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_center = jax.tree.map(lambda p: p[1], pairs,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, new_center

@@ -1,0 +1,8 @@
+"""Oracle: unfused eqs. (2)/(3) — mirrors core/elastic.py on flat arrays."""
+import jax.numpy as jnp
+
+
+def elastic_exchange_ref(w, c, alpha):
+    w32, c32 = w.astype(jnp.float32), c.astype(jnp.float32)
+    diff = alpha * (w32 - c32)
+    return (w32 - diff).astype(w.dtype), (c32 + diff).astype(c.dtype)

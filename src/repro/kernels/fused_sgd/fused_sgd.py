@@ -1,0 +1,56 @@
+"""Fused momentum-SGD update kernel.
+
+The paper's server runs momentum SGD on pushed gradients (KVStore
+``set_optimizer``, §3.2). Unfused, the update v' = µv + g; p' = p − ηv'
+is two HBM round-trips over the full model; the fused kernel streams
+(p, v, g) tiles through VMEM once, computing both outputs per tile.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import pick_block
+
+
+def _sgd_kernel(hp_ref, p_ref, v_ref, g_ref, p_out_ref, v_out_ref):
+    lr, mu = hp_ref[0], hp_ref[1]
+    v = v_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    p = p_ref[...].astype(jnp.float32)
+    v_new = mu * v + g
+    v_out_ref[...] = v_new.astype(v_out_ref.dtype)
+    p_out_ref[...] = (p - lr * v_new).astype(p_out_ref.dtype)
+
+
+def sgd_momentum_flat(p: jax.Array, v: jax.Array, g: jax.Array,
+                      lr: jax.Array, mu: jax.Array, *,
+                      block: int | None = None, interpret: bool = True):
+    n = p.shape[0]
+    block = block or pick_block(n, 4, rows=5)
+    pad = (-n) % block
+    if pad:
+        p, v, g = (jnp.pad(x, (0, pad)) for x in (p, v, g))
+    np_ = n + pad
+    hp = jnp.stack([jnp.asarray(lr, jnp.float32), jnp.asarray(mu, jnp.float32)])
+    new_p, new_v = pl.pallas_call(
+        _sgd_kernel,
+        grid=(np_ // block,),
+        in_specs=[
+            pl.BlockSpec((2,), lambda i: (0,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((np_,), p.dtype),
+            jax.ShapeDtypeStruct((np_,), v.dtype),
+        ],
+        interpret=interpret,
+    )(hp, p, v, g)
+    return new_p[:n], new_v[:n]

@@ -1,0 +1,30 @@
+"""jit'd pytree wrapper for the fused momentum-SGD kernel."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import use_interpret
+from repro.kernels.fused_sgd.fused_sgd import sgd_momentum_flat
+
+
+@jax.jit
+def sgd_momentum_fused(params: Any, velocity: Any, grads: Any,
+                       lr: jax.Array, mu: jax.Array):
+    interpret = use_interpret()
+
+    def one(p, v, g):
+        np_, nv = sgd_momentum_flat(
+            p.reshape(-1), v.reshape(-1), g.reshape(-1), lr, mu,
+            interpret=interpret,
+        )
+        return np_.reshape(p.shape), nv.reshape(v.shape)
+
+    pairs = jax.tree.map(one, params, velocity, grads)
+    new_p = jax.tree.map(lambda t: t[0], pairs,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[1], pairs,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, new_v

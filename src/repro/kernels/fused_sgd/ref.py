@@ -1,0 +1,8 @@
+"""Oracle for the fused momentum-SGD update."""
+import jax.numpy as jnp
+
+
+def sgd_momentum_ref(p, v, g, lr, mu):
+    v32 = mu * v.astype(jnp.float32) + g.astype(jnp.float32)
+    p32 = p.astype(jnp.float32) - lr * v32
+    return p32.astype(p.dtype), v32.astype(v.dtype)

@@ -1,0 +1,49 @@
+"""jit'd pytree wrapper: compress/decompress a pytree for a PS push."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import use_interpret
+from repro.kernels.quant_bucket.quant_bucket import dequantize_flat, quantize_flat
+
+
+@jax.jit
+def compress(tree: Any):
+    """pytree -> (codes int8 pytree, scales pytree). ~4x smaller (f32)."""
+    interpret = use_interpret()
+
+    def one(x):
+        return quantize_flat(x.reshape(-1).astype(jnp.float32),
+                             interpret=interpret)
+
+    pairs = jax.tree.map(one, tree)
+    codes = jax.tree.map(lambda p: p[0], pairs,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    scales = jax.tree.map(lambda p: p[1], pairs,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    return codes, scales
+
+
+def decompress(codes: Any, scales: Any, like: Any) -> Any:
+    interpret = use_interpret()
+
+    def one(c, s, ref):
+        flat = dequantize_flat(c, s, ref.size, jnp.float32,
+                               interpret=interpret)
+        return flat.reshape(ref.shape).astype(ref.dtype)
+
+    return jax.tree.map(one, codes, scales, like)
+
+
+def compressed_bytes(tree: Any) -> int:
+    """Wire bytes of the compressed form (codes + scales)."""
+    from repro.kernels.quant_bucket.quant_bucket import QBLOCK
+
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(tree):
+        total += leaf.size  # int8 codes
+        total += -(-leaf.size // QBLOCK) * 4  # f32 scales
+    return total

@@ -1,0 +1,78 @@
+"""Block-quantization kernel pair (beyond-paper): int8-compress gradient
+/ parameter pushes on the PS leg.
+
+The paper's hot-spot is the server ingress link (§2.3); its remedy is
+fewer pushers (MPI clients). An orthogonal, modern remedy is pushing
+*smaller* tensors: block-wise absmax int8 quantization cuts the PS-leg
+bytes 4x (f32) at <0.4% relative error per block. The kernels stream
+(block,) tiles through VMEM: quantize emits int8 codes + one f32 scale
+per block; dequantize reverses it. Grid-pipelined like the other
+kernels: DMA of tile i+1 overlaps VPU quantization of tile i.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+QBLOCK = 1024  # quantization granularity (one scale per QBLOCK values)
+
+
+def _quantize_kernel(x_ref, codes_ref, scale_ref):
+    x = x_ref[...].astype(jnp.float32)  # (1, QBLOCK)
+    absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127)
+    codes_ref[...] = q.astype(jnp.int8)
+    scale_ref[...] = scale.astype(jnp.float32)
+
+
+def _dequantize_kernel(codes_ref, scale_ref, x_ref):
+    x_ref[...] = (
+        codes_ref[...].astype(jnp.float32) * scale_ref[...].astype(jnp.float32)
+    ).astype(x_ref.dtype)
+
+
+def quantize_flat(x: jax.Array, *, interpret: bool = True):
+    """x: (N,) -> (codes (N,) int8, scales (N/QBLOCK,) f32). N padded."""
+    n = x.shape[0]
+    pad = (-n) % QBLOCK
+    if pad:
+        x = jnp.pad(x, (0, pad))
+    nb = (n + pad) // QBLOCK
+    xb = x.reshape(nb, QBLOCK)
+    codes, scales = pl.pallas_call(
+        _quantize_kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((1, QBLOCK), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((1, QBLOCK), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, QBLOCK), jnp.int8),
+            jax.ShapeDtypeStruct((nb, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xb)
+    return codes.reshape(-1)[:n], scales[:, 0]
+
+
+def dequantize_flat(codes: jax.Array, scales: jax.Array, n: int,
+                    dtype=jnp.float32, *, interpret: bool = True):
+    pad = (-n) % QBLOCK
+    if pad:
+        codes = jnp.pad(codes, (0, pad))
+    nb = (n + pad) // QBLOCK
+    out = pl.pallas_call(
+        _dequantize_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, QBLOCK), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, QBLOCK), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, QBLOCK), dtype),
+        interpret=interpret,
+    )(codes.reshape(nb, QBLOCK), scales.reshape(nb, 1))
+    return out.reshape(-1)[:n]

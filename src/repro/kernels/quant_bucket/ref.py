@@ -1,0 +1,20 @@
+"""Oracle: block absmax int8 quantization in plain jnp."""
+import jax.numpy as jnp
+
+from repro.kernels.quant_bucket.quant_bucket import QBLOCK
+
+
+def quantize_ref(x):
+    n = x.shape[0]
+    pad = (-n) % QBLOCK
+    xp = jnp.pad(x.astype(jnp.float32), (0, pad)).reshape(-1, QBLOCK)
+    scale = jnp.maximum(jnp.max(jnp.abs(xp), axis=-1, keepdims=True), 1e-12) / 127.0
+    codes = jnp.clip(jnp.round(xp / scale), -127, 127).astype(jnp.int8)
+    return codes.reshape(-1)[:n], scale[:, 0]
+
+
+def dequantize_ref(codes, scales, n, dtype=jnp.float32):
+    pad = (-n) % QBLOCK
+    cp = jnp.pad(codes, (0, pad)).reshape(-1, QBLOCK)
+    out = cp.astype(jnp.float32) * scales[:, None]
+    return out.reshape(-1)[:n].astype(dtype)

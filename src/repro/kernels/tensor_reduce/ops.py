@@ -1,0 +1,23 @@
+"""jit'd public wrapper for the grouped-vector reduction kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import use_interpret
+from repro.kernels.tensor_reduce.tensor_reduce import group_reduce_flat
+
+
+@partial(jax.jit, static_argnames=("block",))
+def group_reduce(x: jax.Array, *, block: int | None = None) -> jax.Array:
+    """Sum a stacked group of arrays over the leading (group) dim.
+
+    x: (G, ...) -> (...). Shape-agnostic: internally flattened to (G, N).
+    """
+    g = x.shape[0]
+    rest = x.shape[1:]
+    flat = x.reshape(g, -1)
+    out = group_reduce_flat(flat, block=block, interpret=use_interpret())
+    return out.reshape(rest)

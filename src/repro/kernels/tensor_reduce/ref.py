@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the grouped-vector reduction."""
+import jax
+import jax.numpy as jnp
+
+
+def group_reduce_ref(x: jax.Array) -> jax.Array:
+    """x: (G, ...) -> (...): f32-accumulated sum over the group dim."""
+    return jnp.sum(x.astype(jnp.float32), axis=0).astype(x.dtype)

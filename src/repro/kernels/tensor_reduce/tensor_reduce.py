@@ -1,0 +1,48 @@
+"""Grouped-vector reduction kernel — the TPU analogue of the paper's
+IBMGpu fused reduction (§7.3).
+
+The paper reduces the two per-GPU vectors of a node-tensor with CUDA
+kernels using all 112 SMs and overlapping the reduction with the ring's
+network transfer. On TPU the same insight maps to the Pallas grid
+pipeline: the (G, block) tile of group ``i+1`` is DMA'd HBM→VMEM while
+the VPU reduces tile ``i`` — double-buffered overlap of copy and compute,
+with the full vector never resident in VMEM.
+
+Layout: input is the stacked group (G, N); grid walks N in lane-aligned
+blocks; each kernel invocation reduces a (G, block) tile over G in f32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import ceil_div, pick_block
+
+
+def _group_reduce_kernel(x_ref, o_ref):
+    # x_ref: (G, block) VMEM tile; o_ref: (1, block)
+    acc = jnp.sum(x_ref[...].astype(jnp.float32), axis=0, keepdims=True)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def group_reduce_flat(x: jax.Array, *, block: int | None = None,
+                      interpret: bool = True) -> jax.Array:
+    """x: (G, N) -> (N,) summed over G."""
+    g, n = x.shape
+    block = block or pick_block(n, x.dtype.itemsize, rows=g + 1)
+    pad = (-n) % block
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+    np_ = n + pad
+    out = pl.pallas_call(
+        _group_reduce_kernel,
+        grid=(np_ // block,),
+        in_specs=[pl.BlockSpec((g, block), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((1, block), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, np_), x.dtype),
+        interpret=interpret,
+    )(x)
+    return out[0, :n]

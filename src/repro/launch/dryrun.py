@@ -1,0 +1,337 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("REPRO_EXTRA_XLA_FLAGS", "")
+)
+"""Multi-pod dry-run: lower + compile every (arch × input-shape × mesh)
+combination against the production mesh with ShapeDtypeStruct stand-ins
+(no allocation), and derive the roofline terms from the compiled
+artifacts. MUST run as its own process (the XLA flag above is set before
+any other import so the 512 placeholder devices exist).
+
+Roofline methodology: XLA's ``cost_analysis()`` ignores ``while``-loop
+trip counts, so a scan-over-layers module under-reports FLOPs/bytes and
+in-loop collectives. We therefore compile, per combo:
+
+  1. the PRODUCTION module (scan over layers, remat) — this is the
+     deliverable .lower().compile() artifact; memory analysis and the
+     collective schedule come from here;
+  2. two REDUCED-DEPTH fully-unrolled variants (L1 < L2 layers) whose
+     cost analysis is exact; FLOPs / bytes / collective wire bytes are
+     linear in depth for a homogeneous stack, so the two points give an
+     exact extrapolation to the full depth.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-4b \
+      --shape train_4k --mesh pod [--out out.json]
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh pod
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ARCH_IDS, INPUT_SHAPES, get_config
+from repro.core.hierarchy import SyncConfig
+from repro.launch import analysis
+from repro.launch.mesh import make_moe_mesh, make_production_mesh, mesh_num_chips
+from repro.launch.serve import cache_specs, make_serve_step, token_specs
+from repro.launch.train import (
+    batch_specs,
+    clientize_batch_specs,
+    make_train_state,
+    make_train_step,
+    state_specs,
+)
+from repro.models.model import build_model
+from repro.optim.sgd import sgd
+from repro.sharding.rules import batch_pspec, param_specs
+
+
+def _shardings(mesh: Mesh, specs):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def skip_reason(cfg, shape) -> str | None:
+    if shape.name == "long_500k" and not cfg.supports_long_decode:
+        return "full-attention arch: 500k dense KV decode is out of scope (DESIGN.md §4)"
+    return None
+
+
+def _reduced_depths(cfg) -> tuple:
+    """Two depths for the exact linear extrapolation, honoring each
+    family's repeating unit (hybrid repeats per attn_period group)."""
+    if cfg.arch_type == "hybrid":
+        p = cfg.attn_period
+        return (p, 2 * p)
+    return (2, 4)
+
+
+def _with_depth(cfg, L: int):
+    upd = dict(num_layers=L, unroll_layers=True)
+    if cfg.is_enc_dec:
+        upd["enc_layers"] = L
+    return dataclasses.replace(cfg, **upd)
+
+
+def lower_module(cfg, shape, mesh: Mesh, sync: SyncConfig, *,
+                 microbatch: int = 1):
+    fsdp = sync.fsdp
+    """Lower (not yet compiled) the right step for this input shape."""
+    model = build_model(cfg)
+    if shape.kind == "train":
+        optimizer = sgd(0.1, momentum=0.9)  # the paper's server optimizer
+        state = make_train_state(model, optimizer, sync, abstract=True)
+        sspecs = state_specs(state, mesh, sync)
+        in_batch = model.input_specs(shape)
+        if sync.num_clients > 1:
+            in_batch = clientize_batch_specs(in_batch, sync.num_clients)
+        bspecs = batch_specs(model, shape, mesh, sync)
+        step = make_train_step(model, optimizer, sync, mesh,
+                               microbatch=microbatch)
+        return jax.jit(
+            step,
+            in_shardings=(_shardings(mesh, sspecs), _shardings(mesh, bspecs)),
+            out_shardings=(_shardings(mesh, sspecs), None),
+        ).lower(state, in_batch)
+    if shape.kind == "prefill":
+        params = jax.eval_shape(model.init, jax.random.key(0))
+        pspecs = param_specs(params, mesh, fsdp=fsdp)
+        in_batch = model.input_specs(shape)
+        bspecs = {
+            k: batch_pspec(mesh, v.shape[0], extra_dims=len(v.shape) - 1)
+            for k, v in in_batch.items()
+        }
+        return jax.jit(
+            model.forward,
+            in_shardings=(_shardings(mesh, pspecs), _shardings(mesh, bspecs)),
+        ).lower(params, in_batch)
+    # decode
+    params = jax.eval_shape(model.init, jax.random.key(0))
+    pspecs = param_specs(params, mesh, fsdp=fsdp)
+    cache = jax.eval_shape(
+        lambda: build_model(cfg).init_cache(shape.global_batch, shape.seq_len))
+    cspecs = cache_specs(cache, mesh)
+    tok = model.input_specs(shape)["tokens"]
+    tspec = token_specs(tok.shape, mesh)
+    return jax.jit(
+        make_serve_step(model),
+        in_shardings=(
+            _shardings(mesh, pspecs),
+            _shardings(mesh, cspecs),
+            NamedSharding(mesh, tspec),
+        ),
+        out_shardings=(None, _shardings(mesh, cspecs)),
+    ).lower(params, cache, tok)
+
+
+def _compile_metrics(lowered, chips: int) -> dict:
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    coll = analysis.parse_collectives(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "wire": coll.wire_bytes,
+        "coll_counts": coll.counts,
+        "memory": analysis.memory_summary(compiled.memory_analysis()),
+    }
+
+
+def lower_one(arch: str, shape_name: str, mesh: Mesh, sync_mode: str,
+              *, esgd_interval: int = 64, verbose: bool = True,
+              seq_shard: bool = False, microbatch: int = 1,
+              remat: bool = True, extrapolate: bool = True,
+              fsdp: bool = False) -> dict:
+    cfg = get_config(arch)
+    cfg = dataclasses.replace(cfg, seq_shard_activations=seq_shard,
+                              remat=remat)
+    shape = INPUT_SHAPES[shape_name]
+    reason = skip_reason(cfg, shape)
+    if reason:
+        return {"arch": arch, "shape": shape_name, "mesh": dict(mesh.shape),
+                "skipped": reason}
+
+    chips = mesh_num_chips(mesh)
+    num_clients = mesh.shape.get("pod", 1) if sync_mode == "mpi_esgd" else 1
+    sync = SyncConfig(mode=sync_mode, num_clients=num_clients,
+                      esgd_interval=esgd_interval, fsdp=fsdp)
+    sync.validate(mesh)
+
+    # 1) production module: the deliverable compile + memory + schedule
+    # (lowered under the ambient mesh so in-model sharding constraints
+    # like shard_batch_dim/maybe_seq_shard resolve axis names)
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        lowered = lower_module(cfg, shape, mesh, sync, microbatch=microbatch)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    prod = _compile_metrics(lowered, chips)
+    t_compile = time.time() - t0
+
+    # 2) depth extrapolation for exact FLOPs/bytes/wire
+    extra = {}
+    if extrapolate:
+        L1, L2 = _reduced_depths(cfg)
+        pts = []
+        for L in (L1, L2):
+            cfg_l = _with_depth(cfg, L)
+            with jax.set_mesh(mesh):
+                low = lower_module(cfg_l, shape, mesh, sync,
+                                   microbatch=microbatch)
+            pts.append(_compile_metrics(low, chips))
+        Lfull = cfg.num_layers
+
+        def extrap(key):
+            m1, m2 = pts[0][key], pts[1][key]
+            slope = (m2 - m1) / (L2 - L1)
+            return m2 + slope * (Lfull - L2)
+
+        # the microbatch accumulation loop is itself a while loop whose
+        # trip count cost_analysis ignores; everything except the optimizer
+        # update (negligible) runs inside it, so scale by M
+        mscale = microbatch if (shape.kind == "train" and microbatch > 1) else 1
+        extra = {
+            "flops": extrap("flops") * mscale,
+            "bytes": extrap("bytes") * mscale,
+            "wire": extrap("wire") * mscale,
+            "depths": [L1, L2],
+            "microbatch_scale": mscale,
+        }
+
+    flops = extra.get("flops", prod["flops"])
+    bytes_ = extra.get("bytes", prod["bytes"])
+    wire = extra.get("wire", prod["wire"])
+
+    if shape.kind == "train":
+        if cfg.is_enc_dec:
+            model_flops = analysis.enc_dec_model_flops(
+                cfg, shape.global_batch, shape.seq_len, train=True)
+        else:
+            tokens = shape.global_batch * shape.seq_len
+            model_flops = analysis.train_model_flops(
+                cfg.param_count(), cfg.active_param_count(), tokens)
+    elif shape.kind == "prefill":
+        if cfg.is_enc_dec:
+            model_flops = analysis.enc_dec_model_flops(
+                cfg, shape.global_batch, shape.seq_len, train=False)
+        else:
+            tokens = shape.global_batch * shape.seq_len
+            model_flops = 2.0 * cfg.active_param_count() * tokens
+    else:
+        model_flops = analysis.decode_model_flops(
+            cfg.active_param_count(), shape.global_batch)
+
+    roof = analysis.Roofline(
+        chips=chips,
+        hlo_flops=flops * chips,
+        hlo_bytes=bytes_ * chips,
+        wire_bytes=wire * chips,
+        compute_s=flops / analysis.PEAK_FLOPS,
+        memory_s=bytes_ / analysis.HBM_BW,
+        collective_s=wire / analysis.ICI_BW,
+        model_flops=model_flops,
+    )
+
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": dict(mesh.shape),
+        "sync": sync_mode,
+        "chips": chips,
+        "opts": {"seq_shard": seq_shard, "microbatch": microbatch,
+                 "remat": remat, "fsdp": fsdp},
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": prod["memory"],
+        "collective_schedule": prod["coll_counts"],
+        "extrapolation": extra,
+        "roofline": roof.to_dict(),
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+    }
+    if verbose:
+        mem = prod["memory"]
+        bpd = mem.get("argument_size_in_bytes", 0) + mem.get("temp_size_in_bytes", 0)
+        print(
+            f"[dryrun] {arch} × {shape_name} × {chips}c ({sync_mode}"
+            f"{', mb=' + str(microbatch) if microbatch > 1 else ''}"
+            f"{', sp' if seq_shard else ''}): "
+            f"lower {t_lower:.0f}s compile {t_compile:.0f}s | "
+            f"bytes/dev {bpd/1e9:.2f}GB | dominant={roof.dominant} "
+            f"(c={roof.compute_s*1e3:.2f}ms m={roof.memory_s*1e3:.2f}ms "
+            f"x={roof.collective_s*1e3:.2f}ms) useful={roof.useful_flops_ratio:.2f}",
+            flush=True,
+        )
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["pod", "multipod"], default="pod")
+    ap.add_argument("--sync", default=None,
+                    help="mpi_sgd | mpi_esgd (default: sgd on pod, esgd on multipod)")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--seq-shard", action="store_true")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--no-extrapolate", action="store_true")
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--fsdp", action="store_true")
+    ap.add_argument("--moe-mesh", action="store_true",
+                    help="expert-parallel pod variant (data=16, expert=8, tp=2)")
+    args = ap.parse_args()
+
+    if args.moe_mesh:
+        mesh = make_moe_mesh(multi_pod=args.mesh == "multipod")
+    else:
+        mesh = make_production_mesh(multi_pod=args.mesh == "multipod")
+    sync = args.sync or ("mpi_esgd" if args.mesh == "multipod" else "mpi_sgd")
+
+    combos = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape in INPUT_SHAPES:
+                combos.append((arch.replace("_", "-"), shape))
+    else:
+        combos.append((args.arch, args.shape))
+
+    results = []
+    for arch, shape in combos:
+        try:
+            results.append(lower_one(
+                arch, shape, mesh, sync,
+                seq_shard=args.seq_shard, microbatch=args.microbatch,
+                remat=not args.no_remat,
+                extrapolate=not args.no_extrapolate, fsdp=args.fsdp,
+            ))
+        except Exception as e:  # a failure here is a bug in the system
+            import traceback
+
+            traceback.print_exc()
+            print(f"[dryrun] FAILED {arch} × {shape}: {type(e).__name__}: {e}",
+                  flush=True)
+            results.append({"arch": arch, "shape": shape,
+                            "mesh": dict(mesh.shape), "error": str(e)})
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=2)
+    failed = [r for r in results if "error" in r]
+    sys.exit(1 if failed else 0)
+
+
+if __name__ == "__main__":
+    main()

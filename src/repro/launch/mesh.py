@@ -1,0 +1,42 @@
+"""Production meshes. Functions only — importing this module never touches
+jax device state (device count is locked at first jax init)."""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """TPU v5e: 256 chips/pod as (16, 16); 2 pods add the 'pod' axis.
+
+    axes: 'data' carries the intra-client gradient ring (the MPI
+    communicator), 'model' carries tensor parallelism, 'pod' is the PS
+    tier (one client per pod; crossed only by the lazy elastic exchange).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_moe_mesh(*, multi_pod: bool = False) -> Mesh:
+    """Expert-parallel variant of the production pod: the 16-way model
+    axis splits into ('expert', 'tp') = (8, 2). Same 256 chips/pod;
+    expert weights shard over 'expert' (dispatch becomes all-to-all
+    token routing), inner ff dims over 'tp'. Used by the MoE perf
+    iterations (EXPERIMENTS.md §Perf Pair A / roofline notes)."""
+    shape = (2, 16, 8, 2) if multi_pod else (16, 8, 2)
+    axes = (("pod",) if multi_pod else ()) + ("data", "expert", "tp")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(data: int = 1, model: int = 1) -> Mesh:
+    """Small mesh over however many (host) devices exist — tests/examples."""
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(AxisType.Auto, AxisType.Auto))
+
+
+def mesh_num_chips(mesh: Mesh) -> int:
+    n = 1
+    for v in mesh.shape.values():
+        n *= v
+    return n

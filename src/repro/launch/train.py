@@ -1,0 +1,240 @@
+"""Production train step + training-loop driver.
+
+``make_train_step`` builds the jittable step for both lowerable sync
+modes (core/hierarchy.py):
+
+  mpi_sgd   C=1: one communicator; grads allreduced over every data axis
+            per step (pure-MPI pushpull == tensor allreduce, #servers=0)
+  mpi_esgd  C>1: params carry a leading client dim sharded over 'pod';
+            vmap gives each client an independent replica whose gradient
+            sync happens only over 'data' (intra-client); every INTERVAL
+            steps the elastic exchange (eqs. 2/3) crosses 'pod' — the
+            only cross-pod traffic.
+
+The optimizer is momentum SGD by default (what the paper ships to the PS);
+state lives in a TrainState pytree so checkpointing is one call.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.elastic import elastic_exchange_multiclient
+from repro.core.hierarchy import SyncConfig, clientize, clientize_specs
+from repro.models.model import Model
+from repro.optim.sgd import Optimizer
+from repro.sharding.rules import batch_pspec, param_specs
+
+
+def make_train_state(model: Model, optimizer: Optimizer, sync: SyncConfig,
+                     rng: jax.Array | None = None, *, abstract: bool = False):
+    """Concrete (or eval_shape'd) initial state."""
+    rng = jax.random.key(0) if rng is None else rng
+
+    def build(rng):
+        params = model.init(rng)
+        state = {
+            "params": clientize(params, sync.num_clients),
+            "opt": clientize(optimizer.init(params), sync.num_clients),
+            "step": jnp.zeros((), jnp.int32),
+        }
+        if sync.mode == "mpi_esgd":
+            state["center"] = params  # center variables w̃ (eq. 2)
+        return state
+
+    if abstract:
+        return jax.eval_shape(build, rng)
+    return build(rng)
+
+
+def state_specs(state: Any, mesh: Mesh, sync: SyncConfig) -> Any:
+    """PartitionSpecs for a TrainState (params rules + client dim)."""
+    C = sync.num_clients
+    base_params = state["params"]
+    if C > 1:
+        base_params = jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct(l.shape[1:], l.dtype), base_params
+        )
+    pspecs = param_specs(base_params, mesh, fsdp=sync.fsdp)
+    out = {
+        "params": clientize_specs(pspecs, C),
+        "opt": clientize_specs(param_specs_like(state["opt"], base_params, pspecs, C), C)
+        if _opt_matches(state["opt"], base_params)
+        else jax.tree.map(lambda _: P(), state["opt"]),
+        "step": P(),
+    }
+    if "center" in state:
+        out["center"] = pspecs
+    return out
+
+
+def _opt_matches(opt_state: Any, params: Any) -> bool:
+    try:
+        jax.tree.map(lambda a, b: None, opt_state, params)
+        return True
+    except ValueError:
+        return False
+
+
+def param_specs_like(opt_state, base_params, pspecs, C):
+    """Optimizer state mirrors param tree (momentum) -> same specs."""
+    if C > 1:
+        opt_state = jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct(l.shape[1:], l.dtype), opt_state
+        )
+    return jax.tree.map(lambda s: s, pspecs)
+
+
+def make_train_step(model: Model, optimizer: Optimizer, sync: SyncConfig,
+                    mesh: Mesh, *, microbatch: int = 1) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    ``microbatch`` > 1 splits the per-step batch into M accumulation steps
+    — the paper's distinction between the *batch* (MXNET's scheduling
+    unit) and the algorithmic *mini_batch_size* (§5), and the standard
+    memory-term lever (only 1/M of the activations live at once).
+    """
+    C = sync.num_clients
+
+    # the gradient accumulator is a while-loop carry: without an explicit
+    # constraint GSPMD replicates it (measured: +32 GB/dev on qwen3-4b),
+    # so pin it to the params' sharding when a mesh is known
+    acc_shardings = None
+    if mesh is not None and C <= 1 and microbatch > 1:
+        abstract = jax.eval_shape(model.init, jax.random.key(0))
+        acc_shardings = jax.tree.map(
+            lambda s: NamedSharding(mesh, s),
+            param_specs(abstract, mesh, fsdp=sync.fsdp),
+        )
+
+    def _pin(grads):
+        if acc_shardings is None:
+            return grads
+        return jax.tree.map(
+            jax.lax.with_sharding_constraint, grads, acc_shardings
+        )
+
+    def single_grad(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(model.loss_fn, has_aux=True)(
+            params, batch
+        )
+        return loss, metrics, grads
+
+    def one_client_grad(params, batch):
+        if microbatch <= 1:
+            return single_grad(params, batch)
+        M = microbatch
+        mb = jax.tree.map(
+            lambda a: a.reshape((M, a.shape[0] // M) + a.shape[1:]), batch
+        )
+        g0 = _pin(jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        ))
+        m0 = jax.eval_shape(lambda b: single_grad(params, b)[1],
+                            jax.tree.map(lambda a: a[0], mb))
+        m0 = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), m0)
+
+        def body(carry, mbatch):
+            loss_acc, met_acc, g_acc = carry
+            loss, metrics, grads = single_grad(params, mbatch)
+            g_acc = _pin(jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32), g_acc, grads
+            ))
+            met_acc = jax.tree.map(jnp.add, met_acc, metrics)
+            return (loss_acc + loss, met_acc, g_acc), None
+
+        (loss, metrics, grads), _ = jax.lax.scan(
+            body, (jnp.zeros((), jnp.float32), m0, g0), mb
+        )
+        grads = jax.tree.map(
+            lambda g, p: (g / M).astype(p.dtype), grads, params
+        )
+        metrics = jax.tree.map(lambda m: m / M, metrics)
+        return loss / M, metrics, grads
+
+    def step_c1(state, batch):
+        loss, metrics, grads = one_client_grad(state["params"], batch)
+        new_p, new_o = optimizer.update(grads, state["opt"], state["params"])
+        return (
+            {"params": new_p, "opt": new_o, "step": state["step"] + 1},
+            {"loss": loss, **metrics},
+        )
+
+    def step_multiclient(state, batch):
+        # batch leaves have a leading client dim C (sharded over 'pod')
+        loss, metrics, grads = jax.vmap(one_client_grad)(state["params"], batch)
+        new_p, new_o = jax.vmap(optimizer.update)(
+            grads, state["opt"], state["params"]
+        )
+        new_state = dict(state, params=new_p, opt=new_o, step=state["step"] + 1)
+
+        if sync.mode == "mpi_esgd":
+            def exchange(s):
+                p2, c2 = elastic_exchange_multiclient(
+                    s["params"], s["center"], sync.esgd_alpha / C
+                )
+                return dict(s, params=p2, center=c2)
+
+            new_state = jax.lax.cond(
+                (state["step"] % sync.esgd_interval) == 0,
+                exchange, lambda s: s, new_state,
+            )
+        return new_state, {"loss": jnp.mean(loss),
+                           **jax.tree.map(jnp.mean, metrics)}
+
+    return step_c1 if C <= 1 else step_multiclient
+
+
+def batch_specs(model: Model, shape, mesh: Mesh, sync: SyncConfig) -> Any:
+    """PartitionSpecs for the input batch (client dim first when C>1)."""
+    specs = model.input_specs(shape)
+    C = sync.num_clients
+
+    def one(name, leaf):
+        extra = len(leaf.shape) - 1
+        bp = batch_pspec(mesh, leaf.shape[0], extra_dims=extra)
+        return bp
+
+    base = {k: one(k, v) for k, v in specs.items()}
+    if C > 1:
+        # (C, B/C, ...): client dim on 'pod', batch dim on 'data'
+        def reclient(name, leaf, spec):
+            dims = [None] * len(leaf.shape)
+            return P("pod", "data", *dims[2:])
+
+        return {
+            k: reclient(k, v, base[k]) for k, v in clientize_batch_specs(specs, C).items()
+        }
+    return base
+
+
+def clientize_batch_specs(specs: Any, C: int) -> Any:
+    return {
+        k: jax.ShapeDtypeStruct((C, v.shape[0] // C) + v.shape[1:], v.dtype)
+        for k, v in specs.items()
+    }
+
+
+def train_loop(model: Model, optimizer: Optimizer, sync: SyncConfig,
+               mesh: Mesh, batches, *, rng=None, log_every: int = 10,
+               callback: Optional[Callable] = None):
+    """Concrete training driver (examples / smoke scale)."""
+    state = make_train_state(model, optimizer, sync, rng)
+    step_fn = jax.jit(make_train_step(model, optimizer, sync, mesh))
+    history = []
+    for i, batch in enumerate(batches):
+        state, metrics = step_fn(state, batch)
+        if i % log_every == 0:
+            entry = {k: float(v) for k, v in metrics.items()}
+            entry["step"] = i
+            history.append(entry)
+            if callback:
+                callback(entry)
+    return state, history

@@ -1,0 +1,90 @@
+"""Compact ResNet (He et al. 2015) — the paper's model family (it trains
+ResNet-50 on ImageNet 1K). Used by the convergence benchmarks (Figs 11/13/14)
+at laptop scale on synthetic image data.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.resnet50_cifar import ResNetConfig
+
+
+def _conv_init(key, shape):
+    fan_in = shape[0] * shape[1] * shape[2]
+    return jax.random.normal(key, shape, jnp.float32) * jnp.sqrt(2.0 / fan_in)
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def _gn(x, scale, bias, groups=8):
+    """GroupNorm: batch-independent (async workers see different batches)."""
+    B, H, W, C = x.shape
+    g = min(groups, C)
+    xg = x.reshape(B, H, W, g, C // g).astype(jnp.float32)
+    mu = jnp.mean(xg, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(xg, axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mu) * jax.lax.rsqrt(var + 1e-5)
+    return (xg.reshape(B, H, W, C) * scale + bias).astype(x.dtype)
+
+
+def _block_plan(cfg: ResNetConfig):
+    """Static (stride, c_in, c_out) per block — kept out of the param tree."""
+    plan, c_in = [], cfg.width
+    for stage, n in enumerate(cfg.stage_sizes):
+        c_out = cfg.width * (2 ** stage)
+        for b in range(n):
+            stride = 2 if (b == 0 and stage > 0) else 1
+            plan.append((stride, c_in, c_out))
+            c_in = c_out
+    return plan, c_in
+
+
+def init_resnet(key, cfg: ResNetConfig) -> dict:
+    keys = iter(jax.random.split(key, 64))
+    w = cfg.width
+    p = {"stem": _conv_init(next(keys), (3, 3, 3, w)),
+         "stem_s": jnp.ones((w,)), "stem_b": jnp.zeros((w,))}
+    plan, c_final = _block_plan(cfg)
+    blocks = []
+    for stride, c_in, c_out in plan:
+        blk = {
+            "c1": _conv_init(next(keys), (3, 3, c_in, c_out)),
+            "s1": jnp.ones((c_out,)), "b1": jnp.zeros((c_out,)),
+            "c2": _conv_init(next(keys), (3, 3, c_out, c_out)),
+            "s2": jnp.ones((c_out,)), "b2": jnp.zeros((c_out,)),
+        }
+        if stride != 1 or c_in != c_out:
+            blk["proj"] = _conv_init(next(keys), (1, 1, c_in, c_out))
+        blocks.append(blk)
+    p["blocks"] = blocks
+    p["head"] = jax.random.normal(next(keys), (c_final, cfg.num_classes)) * 0.01
+    p["head_b"] = jnp.zeros((cfg.num_classes,))
+    return p
+
+
+def resnet_apply(p: dict, images: jax.Array, cfg: ResNetConfig) -> jax.Array:
+    x = jax.nn.relu(_gn(_conv(images, p["stem"]), p["stem_s"], p["stem_b"]))
+    plan, _ = _block_plan(cfg)
+    for blk, (stride, _, _) in zip(p["blocks"], plan):
+        h = jax.nn.relu(_gn(_conv(x, blk["c1"], stride), blk["s1"], blk["b1"]))
+        h = _gn(_conv(h, blk["c2"]), blk["s2"], blk["b2"])
+        sc = _conv(x, blk["proj"], stride) if "proj" in blk else x
+        x = jax.nn.relu(h + sc)
+    x = jnp.mean(x, axis=(1, 2))
+    return x @ p["head"] + p["head_b"]
+
+
+def resnet_loss(p: dict, batch: dict, cfg: ResNetConfig) -> tuple[jax.Array, dict]:
+    logits = resnet_apply(p, batch["images"], cfg)
+    labels = batch["labels"]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    loss = jnp.mean(lse - gold)
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return loss, {"acc": acc}

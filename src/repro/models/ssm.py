@@ -1,0 +1,236 @@
+"""Mamba2 / SSD (state-space duality) blocks. [arXiv:2405.21060]
+
+Train/prefill uses the chunked SSD algorithm (quadratic inside chunks of
+``ssm_chunk`` tokens, linear recurrence across chunk states); decode is the
+O(1)-per-token recurrent update. ``ssd_recurrent_ref`` is the sequential
+oracle used by tests.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rms_norm
+
+
+def _segsum(dA: jax.Array) -> jax.Array:
+    """dA: (..., Q, H) -> (..., H, Q, Q) lower-tri pairwise sums
+    S[i,j] = sum_{j < s <= i} dA[s]."""
+    q = dA.shape[-2]
+    cs = jnp.cumsum(dA, axis=-2)  # (..., Q, H)
+    cs = jnp.moveaxis(cs, -1, -2)  # (..., H, Q)
+    s = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, s, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array,      # (B, L, H, P)
+    dt: jax.Array,     # (B, L, H)  already softplus'ed
+    A: jax.Array,      # (H,) negative
+    Bm: jax.Array,     # (B, L, N)
+    Cm: jax.Array,     # (B, L, N)
+    chunk: int,
+    h0: Optional[jax.Array] = None,  # (B, H, P, N)
+):
+    """Returns (y (B,L,H,P), h_final (B,H,P,N))."""
+    Bsz, L, H, P = x.shape
+    N = Bm.shape[-1]
+    pad = (-L) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    Lp = L + pad
+    nc = Lp // chunk
+    f32 = jnp.float32
+    xc = x.reshape(Bsz, nc, chunk, H, P).astype(f32)
+    dtc = dt.reshape(Bsz, nc, chunk, H).astype(f32)
+    Bc = Bm.reshape(Bsz, nc, chunk, N).astype(f32)
+    Cc = Cm.reshape(Bsz, nc, chunk, N).astype(f32)
+
+    dA = dtc * A.astype(f32)  # (b,c,q,h)
+    dAcs = jnp.cumsum(dA, axis=2)  # inclusive cumsum within chunk
+
+    # 1) diagonal (intra-chunk) blocks
+    Ltri = jnp.exp(_segsum(dA))  # (b,c,h,q,s)
+    xdt = xc * dtc[..., None]  # (b,c,s,h,p)
+    y_diag = jnp.einsum("bcqn,bcsn,bchqs,bcshp->bcqhp", Cc, Bc, Ltri, xdt)
+
+    # 2) per-chunk output states
+    decay = jnp.exp(dAcs[:, :, -1:, :] - dAcs)  # (b,c,q,h)
+    states = jnp.einsum("bcsn,bcsh,bcshp->bchpn", Bc, decay * dtc, xc)
+
+    # 3) inter-chunk recurrence (sequential scan over chunks)
+    chunk_decay = jnp.exp(dAcs[:, :, -1, :])  # (b,c,h)
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, P, N), f32)
+    else:
+        h0 = h0.astype(f32)
+
+    def body(h, inp):
+        st, dec = inp  # (b,h,p,n), (b,h)
+        prev = h
+        h = h * dec[..., None, None] + st
+        return h, prev
+
+    h_final, prev_states = jax.lax.scan(
+        body, h0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # (b,c,h,p,n)
+
+    # 4) state -> output contribution
+    y_off = jnp.einsum(
+        "bcqn,bcqh,bchpn->bcqhp", Cc, jnp.exp(dAcs), prev_states
+    )
+    y = (y_diag + y_off).reshape(Bsz, Lp, H, P)[:, :L]
+    return y.astype(x.dtype), h_final
+
+
+def ssd_recurrent_ref(x, dt, A, Bm, Cm, h0=None):
+    """Sequential oracle: one recurrent step per token."""
+    Bsz, L, H, P = x.shape
+    N = Bm.shape[-1]
+    f32 = jnp.float32
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, P, N), f32)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp  # (b,h,p), (b,h), (b,n), (b,n)
+        dec = jnp.exp(dtt * A.astype(f32))  # (b,h)
+        h = h * dec[..., None, None] + jnp.einsum(
+            "bh,bhp,bn->bhpn", dtt, xt.astype(f32), bt.astype(f32)
+        )
+        y = jnp.einsum("bhpn,bn->bhp", h, ct.astype(f32))
+        return h, y
+
+    xs = (
+        jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+        jnp.moveaxis(Bm, 1, 0), jnp.moveaxis(Cm, 1, 0),
+    )
+    h, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), h
+
+
+def ssd_decode_step(h, x, dt, A, Bm, Cm):
+    """One token: x (B,H,P), dt (B,H), Bm/Cm (B,N), h (B,H,P,N)."""
+    f32 = jnp.float32
+    dec = jnp.exp(dt.astype(f32) * A.astype(f32))
+    h = h * dec[..., None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt.astype(f32), x.astype(f32), Bm.astype(f32)
+    )
+    y = jnp.einsum("bhpn,bn->bhp", h, Cm.astype(f32))
+    return y.astype(x.dtype), h
+
+
+# --------------------------------------------------------------------------
+# Full Mamba2 block (in_proj -> causal conv -> SSD -> gated norm -> out_proj)
+# --------------------------------------------------------------------------
+
+def mamba_dims(d_model: int, expand: int, head_dim: int, state: int):
+    d_inner = expand * d_model
+    nheads = d_inner // head_dim
+    conv_dim = d_inner + 2 * state
+    return d_inner, nheads, conv_dim
+
+
+def init_mamba(key, d_model: int, *, expand: int, head_dim: int, state: int,
+               conv_width: int, dtype) -> dict:
+    d_inner, nheads, conv_dim = mamba_dims(d_model, expand, head_dim, state)
+    k1, k2, k3 = jax.random.split(key, 3)
+    proj_out = 2 * d_inner + 2 * state + nheads  # z, x, B, C, dt
+    return {
+        "in_proj": dense_init(k1, d_model, (d_model, proj_out), dtype),
+        "conv_w": dense_init(k2, conv_width, (conv_width, conv_dim), dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.zeros((nheads,), jnp.float32),
+        "D": jnp.ones((nheads,), jnp.float32),
+        "dt_bias": jnp.zeros((nheads,), jnp.float32),
+        "ssm_norm": jnp.zeros((d_inner,), dtype),
+        "out_proj": dense_init(k3, d_inner, (d_inner, d_model), dtype),
+    }
+
+
+def _split_proj(proj, d_inner, state, nheads):
+    z = proj[..., :d_inner]
+    xbc = proj[..., d_inner : 2 * d_inner + 2 * state]
+    dt = proj[..., 2 * d_inner + 2 * state :]
+    return z, xbc, dt
+
+
+def causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """xbc: (B, L, C); depthwise causal conv, width K."""
+    K = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + xbc.shape[1]] * w[i] for i in range(K))
+    return jax.nn.silu(out + b)
+
+
+def mamba_block(params: dict, x: jax.Array, *, expand: int, head_dim: int,
+                state: int, chunk: int, h0=None, conv0=None):
+    """x: (B, L, d). Returns (out, (h_final, conv_state))."""
+    B, L, d = x.shape
+    d_inner, nheads, conv_dim = mamba_dims(d, expand, head_dim, state)
+    proj = jnp.einsum("bld,dp->blp", x, params["in_proj"])
+    z, xbc, dt = _split_proj(proj, d_inner, state, nheads)
+    if conv0 is not None:
+        xbc_in = jnp.concatenate([conv0, xbc], axis=1)
+        conv_out = causal_conv(xbc_in, params["conv_w"], params["conv_b"])
+        conv_out = conv_out[:, conv0.shape[1] :]
+    else:
+        conv_out = causal_conv(xbc, params["conv_w"], params["conv_b"])
+    K = params["conv_w"].shape[0]
+    conv_state = (
+        jnp.concatenate([conv0, xbc], axis=1)[:, -(K - 1) :]
+        if conv0 is not None
+        else jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))[:, -(K - 1) :]
+    )
+    xs = conv_out[..., :d_inner].reshape(B, L, nheads, head_dim)
+    Bm = conv_out[..., d_inner : d_inner + state]
+    Cm = conv_out[..., d_inner + state :]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    y, h = ssd_chunked(xs, dt, A, Bm, Cm, chunk, h0=h0)
+    y = y + params["D"].astype(y.dtype)[None, None, :, None] * xs
+    y = y.reshape(B, L, d_inner)
+    y = rms_norm(y * jax.nn.silu(z), params["ssm_norm"])
+    out = jnp.einsum("bli,id->bld", y, params["out_proj"])
+    return out, (h, conv_state)
+
+
+def mamba_decode(params: dict, x: jax.Array, ssm_state, conv_state, *,
+                 expand: int, head_dim: int, state: int):
+    """x: (B, 1, d). conv_state: (B, K-1, conv_dim). Returns (out, states)."""
+    B, _, d = x.shape
+    d_inner, nheads, conv_dim = mamba_dims(d, expand, head_dim, state)
+    proj = jnp.einsum("bld,dp->blp", x, params["in_proj"])
+    z, xbc, dt = _split_proj(proj, d_inner, state, nheads)
+    window = jnp.concatenate([conv_state, xbc], axis=1)  # (B, K, conv)
+    w = params["conv_w"]
+    conv_out = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", window, w) + params["conv_b"]
+    )[:, None]
+    new_conv_state = window[:, 1:]
+    xs = conv_out[..., :d_inner].reshape(B, nheads, head_dim)
+    Bm = conv_out[:, 0, d_inner : d_inner + state]
+    Cm = conv_out[:, 0, d_inner + state :]
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    y, h = ssd_decode_step(ssm_state, xs, dt, A, Bm, Cm)
+    y = y + params["D"].astype(y.dtype)[None, :, None] * xs
+    y = y.reshape(B, 1, d_inner)
+    y = rms_norm(y * jax.nn.silu(z), params["ssm_norm"])
+    out = jnp.einsum("bli,id->bld", y, params["out_proj"])
+    return out, (h, new_conv_state)
+
+
+def init_mamba_state(batch: int, d_model: int, *, expand: int, head_dim: int,
+                     state: int, conv_width: int, dtype):
+    d_inner, nheads, conv_dim = mamba_dims(d_model, expand, head_dim, state)
+    h = jnp.zeros((batch, nheads, head_dim, state), jnp.float32)
+    conv = jnp.zeros((batch, conv_width - 1, conv_dim), dtype)
+    return h, conv

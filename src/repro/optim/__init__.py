@@ -1,0 +1,1 @@
+from repro.optim.sgd import Optimizer, adagrad, adamw, get_optimizer, sgd

@@ -1,0 +1,100 @@
+"""Optimizers, pure-pytree (init/update), mirroring what the paper ships to
+the PS via ``KVStore.set_optimizer``: SGD (+momentum), AdaGrad, AdamW, and
+the Elastic server/client updates (eqs. 2/3) live in core/elastic.py.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple[Any, Any]]  # (g, state, p) -> (new_p, state)
+
+
+def sgd(lr: float, momentum: float = 0.0, weight_decay: float = 0.0,
+        state_dtype=None) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return jax.tree.map(
+            lambda p: jnp.zeros(p.shape, state_dtype or p.dtype), params
+        )
+
+    def update(grads, state, params):
+        if weight_decay:
+            grads = jax.tree.map(lambda g, p: g + weight_decay * p, grads, params)
+        if momentum == 0.0:
+            new_p = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+            return new_p, ()
+        new_v = jax.tree.map(lambda v, g: momentum * v + g, state, grads)
+        new_p = jax.tree.map(
+            lambda p, v: (p.astype(jnp.float32) - lr * v.astype(jnp.float32)).astype(p.dtype),
+            params, new_v,
+        )
+        return new_p, new_v
+
+    return Optimizer(init, update)
+
+
+def adagrad(lr: float, eps: float = 1e-10) -> Optimizer:
+    def init(params):
+        return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+    def update(grads, state, params):
+        new_s = jax.tree.map(
+            lambda s, g: s + jnp.square(g.astype(jnp.float32)), state, grads
+        )
+        new_p = jax.tree.map(
+            lambda p, g, s: (
+                p.astype(jnp.float32)
+                - lr * g.astype(jnp.float32) / (jnp.sqrt(s) + eps)
+            ).astype(p.dtype),
+            params, grads, new_s,
+        )
+        return new_p, new_s
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "t": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        t = state["t"] + 1
+        m = jax.tree.map(
+            lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+            state["m"], grads,
+        )
+        v = jax.tree.map(
+            lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["v"], grads,
+        )
+        c1 = 1 - b1 ** t.astype(jnp.float32)
+        c2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def step(p, m_, v_):
+            upd = (m_ / c1) / (jnp.sqrt(v_ / c2) + eps)
+            if weight_decay:
+                upd = upd + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+
+        new_p = jax.tree.map(step, params, m, v)
+        return new_p, {"m": m, "v": v, "t": t}
+
+    return Optimizer(init, update)
+
+
+def get_optimizer(name: str, lr: float, **kw) -> Optimizer:
+    return {"sgd": sgd, "adagrad": adagrad, "adamw": adamw}[name](lr, **kw)

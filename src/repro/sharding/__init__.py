@@ -1,0 +1,6 @@
+from repro.sharding.rules import (
+    batch_pspec,
+    data_axis_names,
+    param_shardings,
+    param_specs,
+)

@@ -1,0 +1,10 @@
+import os
+
+# NOTE: no xla_force_host_platform_device_count here — smoke tests and
+# benches must see the real single CPU device; only launch/dryrun.py (its
+# own process) creates the 512 placeholder devices.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

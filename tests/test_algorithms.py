@@ -1,0 +1,115 @@
+"""The six parallel-SGD modes: convergence, staleness, and timing-model
+behaviour on a small real model (logistic regression on synthetic images)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.algorithms import MODES, AlgoConfig, run
+from repro.data.pipeline import DataConfig, ImagePipeline
+
+D, NCLS = 8 * 8 * 3, 10
+
+
+def init_fn(key):
+    return {"w": jax.random.normal(key, (D, NCLS)) * 0.01,
+            "b": jnp.zeros((NCLS,))}
+
+
+def _loss(params, batch):
+    x = batch["images"].reshape(batch["images"].shape[0], -1)
+    logits = x @ params["w"] + params["b"]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, batch["labels"][:, None], 1)[:, 0]
+    return jnp.mean(lse - gold)
+
+
+grad_fn = jax.jit(jax.value_and_grad(_loss))
+
+_test_pipe = ImagePipeline(
+    DataConfig(seed=0, batch_size=256, steps_per_epoch=1, shard=12345),
+    image_size=8)
+_test_batch = _test_pipe.batch_at(999, 0)
+
+
+def eval_fn(params):
+    x = _test_batch["images"].reshape(256, -1)
+    logits = x @ params["w"] + params["b"]
+    return float(jnp.mean(
+        (jnp.argmax(logits, -1) == _test_batch["labels"]).astype(jnp.float32)))
+
+
+def make_pipeline(w):
+    return ImagePipeline(
+        DataConfig(seed=0, batch_size=16, steps_per_epoch=10, shard=w),
+        image_size=8)
+
+
+def _cfg(mode, **kw):
+    base = dict(mode=mode, num_workers=4, num_clients=2, num_servers=1,
+                lr=0.05, epochs=2, steps_per_epoch=10, esgd_interval=4,
+                compute_time=0.2, jitter=0.1, model_bytes=1e7, seed=0)
+    base.update(kw)
+    return AlgoConfig(**base)
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_mode_learns(mode):
+    h = run(_cfg(mode), init_fn, grad_fn, eval_fn, make_pipeline)
+    assert h.metrics[-1] > 0.5, (mode, h.metrics)
+    assert len(h.metrics) == 2
+
+
+def test_sync_dist_and_mpi_numerically_identical():
+    """Grouping workers into clients changes the comm pattern, not the
+    math: dist-SGD and mpi-SGD produce identical curves (paper fig. 11
+    shows them reaching the same accuracy; time differs)."""
+    h_dist = run(_cfg("dist_sgd"), init_fn, grad_fn, eval_fn, make_pipeline)
+    h_mpi = run(_cfg("mpi_sgd"), init_fn, grad_fn, eval_fn, make_pipeline)
+    np.testing.assert_allclose(h_dist.losses, h_mpi.losses, rtol=1e-4)
+
+
+def test_mpi_reduces_staleness_vs_dist():
+    """Fewer async units => lower staleness (paper §2.3)."""
+    h_dist = run(_cfg("dist_asgd", num_workers=8, jitter=0.3),
+                 init_fn, grad_fn, eval_fn, make_pipeline)
+    h_mpi = run(_cfg("mpi_asgd", num_workers=8, num_clients=2, jitter=0.3),
+                init_fn, grad_fn, eval_fn, make_pipeline)
+    assert h_mpi.mean_staleness < h_dist.mean_staleness
+
+
+def test_contention_makes_dist_epochs_slower():
+    """With a big model, PS ingress contention dominates: dist epochs are
+    slower than mpi epochs (fig. 12)."""
+    big = dict(model_bytes=5e8, compute_time=0.3)
+    h_dist = run(_cfg("dist_sgd", num_workers=8, **big),
+                 init_fn, grad_fn, eval_fn, make_pipeline)
+    h_mpi = run(_cfg("mpi_sgd", num_workers=8, num_clients=2, **big),
+                init_fn, grad_fn, eval_fn, make_pipeline)
+    assert h_mpi.epoch_time < h_dist.epoch_time
+
+
+def test_esgd_interval_reduces_comm_time():
+    h_often = run(_cfg("mpi_esgd", esgd_interval=1, model_bytes=5e8),
+                  init_fn, grad_fn, eval_fn, make_pipeline)
+    h_lazy = run(_cfg("mpi_esgd", esgd_interval=8, model_bytes=5e8),
+                 init_fn, grad_fn, eval_fn, make_pipeline)
+    assert h_lazy.epoch_time < h_often.epoch_time
+
+
+def test_determinism():
+    h1 = run(_cfg("mpi_asgd"), init_fn, grad_fn, eval_fn, make_pipeline)
+    h2 = run(_cfg("mpi_asgd"), init_fn, grad_fn, eval_fn, make_pipeline)
+    np.testing.assert_allclose(h1.losses, h2.losses)
+    assert h1.times == h2.times
+
+
+def test_invalid_mode_rejected():
+    with pytest.raises(ValueError):
+        run(_cfg("hogwild"), init_fn, grad_fn, eval_fn, make_pipeline)
+
+
+def test_uneven_clients_rejected():
+    with pytest.raises(ValueError):
+        run(_cfg("mpi_sgd", num_workers=5, num_clients=2),
+            init_fn, grad_fn, eval_fn, make_pipeline)

@@ -1,0 +1,100 @@
+"""Tensor-collective correctness: every algorithm == the mathematical
+allreduce, via single-device vmap emulation of the named axis."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import collectives as C
+
+METHODS = ["ring", "multi_ring", "tree", "psum"]
+
+
+@pytest.mark.parametrize("p", [2, 4, 8])
+@pytest.mark.parametrize("method", METHODS)
+def test_allreduce_equals_sum(p, method):
+    x = jax.random.normal(jax.random.key(0), (p, 731))
+    got = C.emulate(C.allreduce, x, method=method)
+    want = jnp.broadcast_to(jnp.sum(x, axis=0), got.shape)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("p", [3, 5])
+def test_ring_works_on_non_power_of_two(p):
+    x = jax.random.normal(jax.random.key(1), (p, 40))
+    got = C.emulate(C.allreduce, x, method="ring")
+    np.testing.assert_allclose(
+        got, jnp.broadcast_to(jnp.sum(x, 0), got.shape), rtol=2e-5)
+
+
+def test_tree_requires_power_of_two():
+    x = jnp.ones((3, 8))
+    with pytest.raises(AssertionError):
+        C.emulate(C.allreduce, x, method="tree")
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    p=st.sampled_from([2, 4, 8]),
+    n=st.integers(1, 300),
+    rings=st.integers(1, 4),
+    seed=st.integers(0, 2**30),
+)
+def test_multi_ring_property(p, n, rings, seed):
+    x = jax.random.normal(jax.random.key(seed), (p, n))
+    got = C.emulate(C.ring_allreduce, x, num_rings=rings)
+    np.testing.assert_allclose(
+        got, jnp.broadcast_to(jnp.sum(x, 0), got.shape), rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("p", [2, 4])
+@pytest.mark.parametrize("n", [12, 97])
+def test_reduce_scatter_allgather_roundtrip(p, n):
+    x = jax.random.normal(jax.random.key(2), (p, n))
+    rs = C.emulate(C.ring_reduce_scatter, x)
+    chunk = -(-n // p)
+    want = jnp.pad(jnp.sum(x, 0), (0, chunk * p - n)).reshape(p, chunk)
+    np.testing.assert_allclose(rs, want, rtol=2e-5, atol=2e-5)
+    ag = C.emulate(C.ring_allgather, rs)
+    for d in range(p):
+        np.testing.assert_allclose(ag[d][:n], jnp.sum(x, 0), rtol=2e-5,
+                                   atol=2e-5)
+
+
+def test_tensor_allreduce_fused_equals_per_leaf():
+    p = 4
+    tree = {
+        "a": jax.random.normal(jax.random.key(3), (p, 6, 5)),
+        "b": {"c": jax.random.normal(jax.random.key(4), (p, 13))},
+    }
+    fused = C.emulate(C.tensor_allreduce, tree, method="multi_ring")
+    leafwise = C.emulate(C.tensor_allreduce, tree, method="per_leaf")
+    jax.tree.map(
+        lambda f, l: np.testing.assert_allclose(f, l, rtol=2e-5, atol=2e-5),
+        fused, leafwise)
+
+
+def test_pushpull_fused_equals_unfused():
+    p = 4
+    tree = {"g": jax.random.normal(jax.random.key(5), (p, 50))}
+    fused = C.emulate(C.tensor_pushpull, tree, fused=True)
+    unfused = C.emulate(C.tensor_pushpull, tree, fused=False)
+    np.testing.assert_allclose(fused["g"], unfused["g"], rtol=2e-5, atol=2e-5)
+    want = jnp.broadcast_to(jnp.mean(tree["g"], 0), (p, 50))
+    np.testing.assert_allclose(fused["g"], want, rtol=2e-5, atol=2e-5)
+
+
+def test_allreduce_preserves_dtype_and_shape():
+    p = 2
+    x = jax.random.normal(jax.random.key(6), (p, 3, 4, 5)).astype(jnp.bfloat16)
+    got = C.emulate(C.allreduce, x, method="ring")
+    assert got.dtype == jnp.bfloat16
+    assert got.shape == x.shape
+
+
+def test_single_device_axis_is_identity():
+    x = jax.random.normal(jax.random.key(7), (1, 64))
+    for method in METHODS:
+        got = C.emulate(C.allreduce, x, method=method)
+        np.testing.assert_allclose(got, x, rtol=1e-6)

@@ -1,0 +1,93 @@
+"""Elastic averaging invariants (eqs. 2/3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.elastic import (
+    elastic_client_update,
+    elastic_exchange,
+    elastic_exchange_multiclient,
+    elastic_server_update,
+)
+
+
+def _rand_tree(seed, scale=1.0):
+    k = jax.random.key(seed)
+    return {
+        "a": scale * jax.random.normal(k, (7, 3)),
+        "b": {"c": scale * jax.random.normal(jax.random.fold_in(k, 1), (11,))},
+    }
+
+
+def test_exchange_conserves_sum():
+    w, c = _rand_tree(0), _rand_tree(1)
+    nw, nc = elastic_exchange(w, c, 0.37)
+    jax.tree.map(
+        lambda a, b, x, y: np.testing.assert_allclose(a + b, x + y, rtol=1e-5),
+        nw, nc, w, c)
+
+
+def test_fixed_point_when_equal():
+    w = _rand_tree(2)
+    nw, nc = elastic_exchange(w, w, 0.9)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(a, b, rtol=1e-6), nw, w)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(a, b, rtol=1e-6), nc, w)
+
+
+@settings(max_examples=20, deadline=None)
+@given(alpha=st.floats(0.01, 0.49), seed=st.integers(0, 1000))
+def test_contraction_property(alpha, seed):
+    """|w' − c'| = (1 − 2α)|w − c| elementwise: the elastic force contracts."""
+    w, c = _rand_tree(seed), _rand_tree(seed + 1)
+    nw, nc = elastic_exchange(w, c, alpha)
+    jax.tree.map(
+        lambda a, b, x, y: np.testing.assert_allclose(
+            a - b, (1 - 2 * alpha) * (x - y), rtol=1e-4, atol=1e-5),
+        nw, nc, w, c)
+
+
+def test_server_then_client_order_matches_paper():
+    """Both sides use the PRE-update difference (the paper pushes w, the
+    server applies eq. 2 on it, the client applies eq. 3 with the old w̃)."""
+    w, c = _rand_tree(3), _rand_tree(4)
+    alpha = 0.2
+    nc = elastic_server_update(c, w, alpha)
+    nw = elastic_client_update(w, c, alpha)
+    ew, ec = elastic_exchange(w, c, alpha)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(a, b), nw, ew)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(a, b), nc, ec)
+
+
+def test_multiclient_reduces_to_single():
+    w = _rand_tree(5)
+    c = _rand_tree(6)
+    stacked = jax.tree.map(lambda x: x[None], w)
+    nw_m, nc_m = elastic_exchange_multiclient(stacked, c, 0.3)
+    nw_s, nc_s = elastic_exchange(w, c, 0.3)
+    jax.tree.map(
+        lambda a, b: np.testing.assert_allclose(a[0], b, rtol=1e-5), nw_m, nw_s)
+    jax.tree.map(
+        lambda a, b: np.testing.assert_allclose(a, b, rtol=1e-5), nc_m, nc_s)
+
+
+def test_multiclient_center_moves_toward_client_mean():
+    C = 4
+    key = jax.random.key(7)
+    clients = {"w": jax.random.normal(key, (C, 9))}
+    center = {"w": jnp.zeros((9,))}
+    _, nc = elastic_exchange_multiclient(clients, center, alpha=0.1)
+    want = 0.1 * jnp.sum(clients["w"], axis=0)
+    np.testing.assert_allclose(nc["w"], want, rtol=1e-5)
+
+
+def test_consensus_convergence():
+    """Iterating the exchange drives every client to the center (the ESGD
+    consensus property that makes lazy cross-pod sync sound)."""
+    C = 3
+    clients = {"w": jnp.asarray([[1.0], [5.0], [9.0]])}
+    center = {"w": jnp.asarray([0.0])}
+    for _ in range(200):
+        clients, center = elastic_exchange_multiclient(clients, center, 0.1)
+    spread = float(jnp.max(jnp.abs(clients["w"] - center["w"])))
+    assert spread < 1e-3

@@ -1,0 +1,103 @@
+"""KVStore-MPI API semantics (paper §3.2/§4.2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.kvstore import KVStore, local_reduce
+from repro.optim.sgd import sgd
+
+
+def test_init_and_pull_broadcast():
+    kv = KVStore.create("dist_sync", num_workers=3)
+    kv.init("w", jnp.arange(4.0))
+    vals = kv.pull("w", num_dst=2)
+    assert len(vals) == 2
+    np.testing.assert_allclose(vals[0], jnp.arange(4.0))
+
+
+def test_double_init_raises():
+    kv = KVStore.create("local")
+    kv.init("w", jnp.zeros(2))
+    with pytest.raises(KeyError):
+        kv.init("w", jnp.zeros(2))
+
+
+def test_push_uninitialized_raises():
+    kv = KVStore.create("local")
+    with pytest.raises(KeyError):
+        kv.push("nope", jnp.zeros(2))
+
+
+def test_sync_barrier_blocks_pull_until_all_push():
+    kv = KVStore.create("dist_sync", num_workers=2)
+    kv.init("g", jnp.zeros(3))
+    kv.push("g", jnp.ones(3))
+    with pytest.raises(RuntimeError):
+        kv.pull("g")
+    kv.push("g", 2 * jnp.ones(3))
+    np.testing.assert_allclose(kv.pull("g")[0], 3 * jnp.ones(3))
+
+
+def test_sync_mpi_expects_client_count_not_worker_count():
+    kv = KVStore.create("sync_mpi", num_workers=6, num_clients=2)
+    assert kv.expected_pushers == 2
+    kv.init("g", jnp.zeros(1))
+    kv.push("g", jnp.ones(1))
+    kv.push("g", jnp.ones(1))
+    np.testing.assert_allclose(kv.pull("g")[0], jnp.asarray([2.0]))
+
+
+def test_local_reduce_tensor_semantics():
+    """push(key, tensor_list): the group of per-device vectors is locally
+    reduced first (paper fig. 4 line 2)."""
+    tensor = [jnp.ones(5), 2 * jnp.ones(5), 3 * jnp.ones(5)]
+    np.testing.assert_allclose(local_reduce(tensor), 6 * jnp.ones(5))
+    # pytree-valued tensors also work
+    trees = [{"a": jnp.ones(2)}, {"a": jnp.ones(2)}]
+    np.testing.assert_allclose(local_reduce(trees)["a"], 2 * jnp.ones(2))
+
+
+def test_async_applies_immediately():
+    kv = KVStore.create("dist_async", num_workers=4)
+    kv.init("g", jnp.zeros(2))
+    kv.push("g", jnp.ones(2))
+    np.testing.assert_allclose(kv.pull("g")[0], jnp.ones(2))
+
+
+def test_server_optimizer_rule():
+    """set_optimizer ships the update rule to the server (fig. 7 line 2)."""
+    kv = KVStore.create("dist_async", num_workers=1)
+    kv.init("w", jnp.ones(3))
+    kv.set_optimizer(sgd(0.5), rescale=0.1)
+    kv.push("w", jnp.ones(3))  # grad
+    # w - lr * rescale * g = 1 - 0.5*0.1 = 0.95
+    np.testing.assert_allclose(kv.pull("w")[0], 0.95 * jnp.ones(3))
+
+
+def test_elastic_server_rule():
+    """Elastic1 (eq. 2) on the server: center += alpha (w - center)."""
+    kv = KVStore.create("dist_async", num_workers=1)
+    kv.init("c", jnp.zeros(2))
+    kv.set_elastic(0.5)
+    kv.push("c", jnp.ones(2) * 4.0)
+    np.testing.assert_allclose(kv.pull("c")[0], 2.0 * jnp.ones(2))
+
+
+def test_pushpull_fused():
+    kv = KVStore.create("dist_async", num_workers=1)
+    kv.init("w", jnp.zeros(2))
+    out = kv.pushpull("w", [jnp.ones(2), jnp.ones(2)], num_dst=3)
+    assert len(out) == 3
+    np.testing.assert_allclose(out[0], 2 * jnp.ones(2))
+
+
+def test_invalid_type_rejected():
+    with pytest.raises(ValueError):
+        KVStore.create("bogus")
+
+
+def test_bytes_per_server_contention_quantity():
+    kv = KVStore.create("dist_sync", num_workers=12, num_servers=2)
+    kv.init("w", jnp.zeros((1000,), jnp.float32))
+    assert kv.bytes_per_server_per_sync("w") == 4000 * 12 // 2

@@ -1,0 +1,120 @@
+"""Launcher (LSF analogue), serve driver, and dry-run analysis units."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.client import group_workers, masters
+from repro.launch import analysis
+from repro.launch.launcher import JobSpec, build_job, emit_scripts
+from repro.launch.serve import BatchedServer
+
+
+def test_group_workers_namespaces():
+    ids = group_workers(6, 2)
+    assert [w.mpi.client for w in ids] == [0, 0, 0, 1, 1, 1]
+    assert [w.mpi.rank for w in ids] == [0, 1, 2, 0, 1, 2]
+    assert [w.ps.rank for w in ids] == list(range(6))
+    assert len(masters(ids)) == 2
+
+
+def test_job_spec_validation():
+    with pytest.raises(ValueError):
+        build_job(JobSpec(5, 2, 2, "a", "s"))
+    with pytest.raises(ValueError):
+        build_job(JobSpec(4, 0, 2, "a", "s"))  # pure MPI needs 1 client
+
+
+def test_job_spec_pure_mpi_mode():
+    job = build_job(JobSpec(4, 0, 1, "qwen3-4b", "train_4k"))
+    assert job["mode"] == "pure_mpi"
+    assert job["servers"] == []
+
+
+def test_emit_scripts(tmp_path):
+    spec = JobSpec(8, 2, 2, "qwen3-4b", "train_4k", "multipod")
+    paths = emit_scripts(spec, str(tmp_path))
+    names = {os.path.basename(p) for p in paths}
+    assert {"job_spec.json", "client_0.sh", "client_1.sh",
+            "launch_all.sh"} <= names
+    job = json.load(open(tmp_path / "job_spec.json"))
+    assert job["total_chips"] == 8 * 16
+    assert "mpirun -np 4" in job["clients"][0]["launch_cmd"]
+    assert os.access(tmp_path / "launch_all.sh", os.X_OK)
+
+
+# --- HLO collective parsing ---------------------------------------------------
+
+HLO_SNIPPET = """
+ENTRY %main {
+  %ar = f32[1024,16]{1,0} all-reduce(%x), replica_groups={{0,1,2,3}}, to_apply=%add
+  %ag = bf16[2048]{0} all-gather(%y), replica_groups=[2,8]<=[16], dimensions={0}
+  %cp = f32[64]{0} collective-permute(%z), source_target_pairs={{0,1},{1,0}}
+  %rs = f32[128]{0} reduce-scatter(%w), replica_groups={{0,1}}, to_apply=%add
+}
+"""
+
+
+def test_parse_collectives_counts_and_bytes():
+    stats = analysis.parse_collectives(HLO_SNIPPET)
+    assert stats.counts == {"all-reduce": 1, "all-gather": 1,
+                            "collective-permute": 1, "reduce-scatter": 1}
+    ar_bytes = 1024 * 16 * 4
+    assert stats.operand_bytes["all-reduce"] == ar_bytes
+    # wire: all-reduce = 2*(g-1)/g*n with g=4
+    want = 2 * (3 / 4) * ar_bytes
+    want += (7 / 8) * 2048 * 2        # all-gather, iota groups g=8
+    want += 64 * 4                    # permute
+    want += (2 - 1) * 128 * 4         # reduce-scatter g=2
+    assert stats.wire_bytes == pytest.approx(want)
+
+
+def test_roofline_dominant_term():
+    r = analysis.Roofline(chips=4, hlo_flops=4e12, hlo_bytes=4e9,
+                          wire_bytes=4e9, compute_s=1e-3, memory_s=5e-3,
+                          collective_s=2e-3, model_flops=2e12)
+    assert r.dominant == "memory"
+    assert r.useful_flops_ratio == pytest.approx(0.5)
+
+
+def test_model_flops_helpers():
+    assert analysis.train_model_flops(10, 10, 100) == 6 * 10 * 100
+    assert analysis.decode_model_flops(10, 8) == 2 * 10 * 8
+
+
+# --- batched serving driver ----------------------------------------------------
+
+def test_batched_server_generates():
+    from repro.configs.base import get_config, reduced
+    from repro.models.model import build_model
+
+    model = build_model(reduced(get_config("qwen2-0.5b")))
+    params = model.init(jax.random.key(0))
+    srv = BatchedServer(model, params, batch=2, max_seq=32)
+    prompts = jnp.asarray([[1, 2, 3], [4, 5, 6]], jnp.int32)
+    out = srv.generate(prompts, steps=4)
+    assert out.shape == (2, 4)
+    assert int(jnp.max(out)) < model.cfg.padded_vocab
+
+
+def test_cache_specs_shardable_dims_only():
+    from jax.sharding import PartitionSpec as P
+    from repro.launch.serve import cache_specs
+
+    class M:
+        shape = {"data": 16, "model": 16}
+
+    cache = {
+        "k": jax.ShapeDtypeStruct((24, 128, 4096, 8, 64), jnp.bfloat16),
+        "v": jax.ShapeDtypeStruct((24, 128, 4096, 8, 64), jnp.bfloat16),
+        "index": jax.ShapeDtypeStruct((24,), jnp.int32),
+        "h": jax.ShapeDtypeStruct((24, 1, 24, 64, 128), jnp.float32),
+    }
+    specs = cache_specs(cache, M())
+    assert specs["k"][1] == "data"      # batch 128 % 16 == 0
+    assert specs["index"] == P()
+    # h: batch=1 not shardable; heads 24 not divisible; P=64 divisible
+    assert specs["h"][3] == "model"

@@ -1,0 +1,74 @@
+"""Multi-device paths that need their own process (device count is locked
+at first jax init, and conftest must NOT set it globally): run them in
+subprocesses with XLA_FLAGS set."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(ROOT, "src")
+
+
+def _run(cmd, env_extra, timeout=500):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.update(env_extra)
+    return subprocess.run(cmd, env=env, capture_output=True, text=True,
+                          timeout=timeout, cwd=ROOT)
+
+
+@pytest.mark.slow
+def test_collectives_on_real_shard_map_mesh():
+    """Ring/multi-ring/tree/psum over a REAL 8-device mesh via shard_map."""
+    r = _run(
+        [sys.executable, "-m", "repro.core.collectives", "8"],
+        {"XLA_FLAGS": "--xla_force_host_platform_device_count=8"},
+    )
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "shard_map on 8 devices" in r.stdout
+
+
+@pytest.mark.slow
+def test_dryrun_single_combo_pod():
+    """The deliverable path: lower+compile one (arch x shape) on the
+    256-chip production mesh with 512 placeholder devices."""
+    r = _run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "mamba2-130m",
+         "--shape", "decode_32k", "--mesh", "pod"],
+        {},
+        timeout=560,
+    )
+    assert r.returncode == 0, (r.stdout[-2000:], r.stderr[-2000:])
+    assert "dominant=" in r.stdout
+
+
+@pytest.mark.slow
+def test_dryrun_skip_rule():
+    r = _run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "qwen2-0.5b",
+         "--shape", "long_500k", "--mesh", "pod"],
+        {},
+        timeout=300,
+    )
+    assert r.returncode == 0
+    assert "dominant=" not in r.stdout  # skipped, not lowered
+
+
+@pytest.mark.slow
+def test_multidevice_esgd_executes():
+    """The production mpi-ESGD step EXECUTES (not just lowers) on a real
+    (pod=2, data=2, model=2) host mesh: loss descends and the elastic
+    exchange contracts replica spread."""
+    r = _run(
+        [sys.executable, "examples/multidevice_train.py"],
+        {"XLA_FLAGS": "--xla_force_host_platform_device_count=8"},
+        timeout=560,
+    )
+    assert r.returncode == 0, (r.stdout[-1500:], r.stderr[-1500:])
+    assert "consensus model" in r.stdout
+    lines = [l for l in r.stdout.splitlines() if l.startswith("step")]
+    first = float(lines[0].split()[3])
+    last = float(lines[-1].split()[3])
+    assert last < first  # learned

@@ -1,0 +1,128 @@
+"""Extra hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.moe import _dispatch_indices
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    tk=st.integers(1, 200),
+    e=st.integers(1, 16),
+    cap=st.integers(1, 32),
+    seed=st.integers(0, 2**29),
+)
+def test_dispatch_indices_invariants(tk, e, cap, seed):
+    """Kept entries: slot < capacity, unique (expert, slot) pairs, and
+    per-expert keep counts == min(count, capacity) (drops are overflow)."""
+    ids = jax.random.randint(jax.random.key(seed), (tk,), 0, e)
+    slot, keep = _dispatch_indices(ids, e, cap)
+    slot, keep, ids = map(np.asarray, (slot, keep, ids))
+    assert (slot[keep] < cap).all()
+    pairs = set()
+    for i in np.where(keep)[0]:
+        pair = (int(ids[i]), int(slot[i]))
+        assert pair not in pairs  # no slot collisions
+        pairs.add(pair)
+    for ex in range(e):
+        n_ex = int((ids == ex).sum())
+        n_kept = int(keep[ids == ex].sum())
+        assert n_kept == min(n_ex, cap)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**29), theta=st.floats(1e2, 1e7))
+def test_rope_preserves_norm_and_relativity(seed, theta):
+    """RoPE is a rotation (norm preserved) and relative: the q·k dot
+    depends only on position difference."""
+    from repro.models.layers import apply_rope
+
+    d = 32
+    key = jax.random.key(seed)
+    x = jax.random.normal(key, (1, 8, 1, d))
+    pos = jnp.arange(8)[None, :]
+    rot = apply_rope(x, pos, theta)
+    np.testing.assert_allclose(
+        jnp.linalg.norm(rot, axis=-1), jnp.linalg.norm(x, axis=-1),
+        rtol=1e-4)
+    # relativity: <rope(q,i), rope(k,j)> == <rope(q,i+s), rope(k,j+s)>
+    q = jax.random.normal(jax.random.fold_in(key, 1), (1, 1, 1, d))
+    k = jax.random.normal(jax.random.fold_in(key, 2), (1, 1, 1, d))
+    def dot_at(i, j):
+        qi = apply_rope(q, jnp.asarray([[i]]), theta)
+        kj = apply_rope(k, jnp.asarray([[j]]), theta)
+        return float(jnp.sum(qi * kj))
+    assert dot_at(3, 1) == pytest.approx(dot_at(10, 8), rel=1e-3, abs=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**28), b=st.integers(1, 3),
+       nc=st.integers(2, 4))
+def test_sequence_xent_matches_full(seed, b, nc):
+    """Chunked-vocab loss == full-logits loss for any chunking."""
+    import repro.models.model as M
+    from repro.configs.base import get_config, reduced
+
+    cfg = reduced(get_config("qwen2-0.5b"))
+    model = M.build_model(cfg)
+    p = model.init(jax.random.key(seed))
+    S = nc * M.XENT_CHUNK if M.XENT_CHUNK <= 64 else nc * 16
+    old = M.XENT_CHUNK
+    try:
+        M.XENT_CHUNK = 16
+        S = nc * 16
+        h = jax.random.normal(jax.random.key(seed + 1), (b, S, cfg.d_model))
+        labels = jax.random.randint(jax.random.key(seed + 2), (b, S), 0,
+                                    cfg.vocab_size)
+        chunked = M._sequence_xent(p, h, labels, cfg)
+        full = M._xent(M._logits(p, h, cfg), labels)
+        assert float(chunked) == pytest.approx(float(full), rel=1e-4)
+    finally:
+        M.XENT_CHUNK = old
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    epoch=st.integers(0, 5), step=st.integers(0, 20),
+    shard=st.integers(0, 8), seed=st.integers(0, 100),
+)
+def test_data_pipeline_pure_function_of_coords(epoch, step, shard, seed):
+    from repro.data.pipeline import DataConfig, TokenPipeline
+
+    cfg = DataConfig(seed=seed, vocab_size=64, seq_len=8, batch_size=2,
+                     shard=shard)
+    a = TokenPipeline(cfg).batch_at(epoch, step)
+    b = TokenPipeline(cfg).batch_at(epoch, step)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    if step < 20:
+        c = TokenPipeline(cfg).batch_at(epoch, step + 1)
+        assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_vocab_padding_multiples():
+    from repro.configs.base import ARCH_IDS, get_config
+
+    for a in ARCH_IDS:
+        cfg = get_config(a)
+        assert cfg.padded_vocab % 256 == 0
+        assert cfg.padded_vocab >= cfg.vocab_size
+        assert cfg.padded_vocab % 16 == 0  # model-axis divisibility
+
+
+def test_param_count_matches_init():
+    """Analytic param_count tracks the real init within 5% (excludes
+    stub frontends / pos embeddings by design)."""
+    import jax
+    from repro.configs.base import get_config, reduced
+    from repro.models.model import build_model
+
+    for arch in ("qwen2-0.5b", "mamba2-130m", "qwen2-moe-a2.7b"):
+        cfg = reduced(get_config(arch))
+        model = build_model(cfg)
+        shapes = jax.eval_shape(model.init, jax.random.key(0))
+        real = sum(l.size for l in jax.tree_util.tree_leaves(shapes))
+        analytic = cfg.param_count()
+        assert abs(real - analytic) / real < 0.05, (arch, real, analytic)

@@ -1,0 +1,112 @@
+"""Beyond-paper int8 push compression: kernel vs oracle, KVStore
+integration, and end-to-end ESGD convergence under compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.quant_bucket.ops import compress, compressed_bytes, decompress
+from repro.kernels.quant_bucket.quant_bucket import (
+    QBLOCK,
+    dequantize_flat,
+    quantize_flat,
+)
+from repro.kernels.quant_bucket.ref import dequantize_ref, quantize_ref
+
+
+@pytest.mark.parametrize("n", [8, QBLOCK, QBLOCK + 17, 5 * QBLOCK])
+def test_quantize_matches_ref(n):
+    x = jax.random.normal(jax.random.key(0), (n,)) * 2.5
+    c, s = quantize_flat(x)
+    rc, rs = quantize_ref(x)
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(rc))
+    np.testing.assert_allclose(s, rs, rtol=1e-6)
+    back = dequantize_flat(c, s, n)
+    rback = dequantize_ref(rc, rs, n)
+    np.testing.assert_allclose(back, rback, rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 3000), scale=st.floats(1e-3, 1e3),
+       seed=st.integers(0, 2**29))
+def test_quantization_error_bound(n, scale, seed):
+    """Per-block relative error is bounded by 1/127 of the block absmax."""
+    x = jax.random.normal(jax.random.key(seed), (n,)) * scale
+    c, s = quantize_flat(x)
+    back = dequantize_flat(c, s, n)
+    err = np.asarray(jnp.abs(back - x))
+    # error per element <= scale/2 of its block = absmax/254
+    pad = (-n) % QBLOCK
+    xp = np.asarray(jnp.pad(x, (0, pad))).reshape(-1, QBLOCK)
+    bound = np.abs(xp).max(axis=1) / 127.0  # one quantization step
+    errp = np.pad(err, (0, pad)).reshape(-1, QBLOCK)
+    assert (errp <= bound[:, None] * 0.51 + 1e-9).all()
+
+
+def test_compress_pytree_roundtrip_and_ratio():
+    tree = {"a": jax.random.normal(jax.random.key(1), (QBLOCK * 3,)),
+            "b": {"c": jax.random.normal(jax.random.key(2), (64, 9))}}
+    codes, scales = compress(tree)
+    rec = decompress(codes, scales, tree)
+    jax.tree.map(
+        lambda r, o: np.testing.assert_allclose(r, o, atol=0.06), rec, tree)
+    raw = sum(l.size * 4 for l in jax.tree_util.tree_leaves(tree))
+    assert raw / compressed_bytes(tree) > 3.5
+
+
+def test_kvstore_compressed_push_counts_bytes():
+    from repro.core.kvstore import KVStore
+
+    kv = KVStore.create("dist_async", num_workers=1, compress_push=True)
+    kv.init("w", jnp.zeros((QBLOCK * 4,), jnp.float32))
+    kv.set_elastic(0.5)
+    kv.push("w", jnp.ones((QBLOCK * 4,), jnp.float32))
+    assert kv.pushed_bytes < 0.3 * kv.pushed_bytes_uncompressed
+    # server applied the (de-quantized) elastic update
+    np.testing.assert_allclose(kv.value("w"), 0.5 * jnp.ones(QBLOCK * 4),
+                               atol=0.01)
+
+
+def test_esgd_converges_with_compressed_pushes():
+    """ESGD tolerates int8 PS pushes (the quantization noise is absorbed
+    by the elastic force) — the cheap-wire variant still learns."""
+    from repro.core.algorithms import AlgoConfig, run
+    from repro.data.pipeline import DataConfig, ImagePipeline
+
+    D, NCLS = 8 * 8 * 3, 10
+
+    def init_fn(key):
+        return {"w": jax.random.normal(key, (D, NCLS)) * 0.01,
+                "b": jnp.zeros((NCLS,))}
+
+    def loss(params, batch):
+        x = batch["images"].reshape(batch["images"].shape[0], -1)
+        logits = x @ params["w"] + params["b"]
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, batch["labels"][:, None], 1)[:, 0]
+        return jnp.mean(lse - gold)
+
+    grad_fn = jax.jit(jax.value_and_grad(loss))
+    test = ImagePipeline(DataConfig(seed=0, batch_size=256,
+                                    steps_per_epoch=1, shard=321),
+                         image_size=8)
+    tb = test.batch_at(50, 0)
+
+    def eval_fn(p):
+        x = tb["images"].reshape(256, -1)
+        logits = x @ p["w"] + p["b"]
+        return float(jnp.mean(
+            (jnp.argmax(logits, -1) == tb["labels"]).astype(jnp.float32)))
+
+    def make_pipe(w):
+        return ImagePipeline(DataConfig(seed=0, batch_size=16,
+                                        steps_per_epoch=10, shard=w),
+                             image_size=8)
+
+    cfg = AlgoConfig(mode="mpi_esgd", num_workers=4, num_clients=2,
+                     num_servers=1, lr=0.05, epochs=2, steps_per_epoch=10,
+                     esgd_interval=4, compute_time=0.1, model_bytes=1e6,
+                     compress_push=True)
+    h = run(cfg, init_fn, grad_fn, eval_fn, make_pipe)
+    assert h.metrics[-1] > 0.5

@@ -1,0 +1,180 @@
+"""Production train-step: microbatch equivalence, multi-client ESGD step,
+hierarchy transforms, checkpoint/resume integration."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config, reduced
+from repro.core.hierarchy import (
+    SyncConfig,
+    clientize,
+    clientize_specs,
+    declientize,
+    grad_sync_axes,
+)
+from repro.launch.train import (
+    clientize_batch_specs,
+    make_train_state,
+    make_train_step,
+    train_loop,
+)
+from repro.models.model import build_model
+from repro.optim.sgd import sgd
+
+
+def _model():
+    return build_model(reduced(get_config("qwen2-0.5b")))
+
+
+def _batch(B=4, S=32, seed=0):
+    k = jax.random.key(seed)
+    toks = jax.random.randint(k, (B, S), 0, 1024)
+    return {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1)}
+
+
+def test_microbatch_equals_full_batch():
+    """grad accumulation over M microbatches == one big batch (momentum
+    SGD is linear in the gradient)."""
+    model = _model()
+    opt = sgd(0.1, momentum=0.9)
+    sync = SyncConfig(mode="mpi_sgd", num_clients=1)
+    s0 = make_train_state(model, opt, sync, jax.random.key(0))
+    batch = _batch(B=8)
+    step1 = jax.jit(make_train_step(model, opt, sync, None, microbatch=1))
+    step4 = jax.jit(make_train_step(model, opt, sync, None, microbatch=4))
+    s1, m1 = step1(s0, batch)
+    s4, m4 = step4(s0, batch)
+    assert float(m1["loss"]) == pytest.approx(float(m4["loss"]), rel=1e-4)
+    jax.tree.map(
+        lambda a, b: np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            rtol=2e-2, atol=2e-4),
+        s1["params"], s4["params"])
+
+
+def test_esgd_multiclient_step_runs_and_syncs():
+    model = _model()
+    opt = sgd(0.1, momentum=0.9)
+    C = 2
+    sync = SyncConfig(mode="mpi_esgd", num_clients=C, esgd_interval=2,
+                      esgd_alpha=0.5)
+    state = make_train_state(model, opt, sync, jax.random.key(0))
+    # leading client dim everywhere
+    lead = jax.tree_util.tree_leaves(state["params"])[0].shape[0]
+    assert lead == C
+    step = jax.jit(make_train_step(model, opt, sync, None))
+    batch = _batch(B=4)
+    cbatch = jax.tree.map(
+        lambda a: a.reshape((C, a.shape[0] // C) + a.shape[1:]), batch)
+    # different data per client -> replicas diverge
+    s1, m1 = step(state, cbatch)
+    diverged = jax.tree_util.tree_leaves(jax.tree.map(
+        lambda p: float(jnp.max(jnp.abs(p[0] - p[1]))), s1["params"]))
+    assert max(diverged) > 0
+    # run until an elastic exchange fires (step % interval == 0)
+    s2, _ = step(s1, cbatch)
+    s3, _ = step(s2, cbatch)
+    # center must have moved away from init after the exchange
+    moved = jax.tree_util.tree_leaves(jax.tree.map(
+        lambda c0, c1: float(jnp.max(jnp.abs(c0 - c1))),
+        state["center"], s3["center"]))
+    assert max(moved) > 0
+
+
+def test_esgd_pulls_replicas_together():
+    """With elastic sync every step and alpha near .5, replicas contract."""
+    model = _model()
+    opt = sgd(0.0)  # freeze SGD: isolate the elastic force
+    C = 2
+    sync = SyncConfig(mode="mpi_esgd", num_clients=C, esgd_interval=1,
+                      esgd_alpha=0.8)
+    state = make_train_state(model, opt, sync, jax.random.key(0))
+    # artificially separate the replicas
+    state["params"] = jax.tree.map(
+        lambda p: p.at[0].add(1.0), state["params"])
+    spread0 = max(jax.tree_util.tree_leaves(jax.tree.map(
+        lambda p: float(jnp.max(jnp.abs(p[0] - p[1]))), state["params"])))
+    step = jax.jit(make_train_step(model, opt, sync, None))
+    batch = _batch(B=4)
+    cbatch = jax.tree.map(
+        lambda a: a.reshape((C, a.shape[0] // C) + a.shape[1:]), batch)
+    for _ in range(6):
+        state, _ = step(state, cbatch)
+    spread1 = max(jax.tree_util.tree_leaves(jax.tree.map(
+        lambda p: float(jnp.max(jnp.abs(p[0] - p[1]))), state["params"])))
+    assert spread1 < 0.25 * spread0
+
+
+def test_train_loop_reduces_loss():
+    from repro.data.pipeline import DataConfig, TokenPipeline
+
+    model = _model()
+    cfg = model.cfg
+    pipe = TokenPipeline(DataConfig(seed=0, vocab_size=256, seq_len=64,
+                                    batch_size=8, steps_per_epoch=30))
+    batches = list(pipe.epoch(0))
+    opt = sgd(0.1, momentum=0.9)
+    sync = SyncConfig(mode="mpi_sgd", num_clients=1)
+    state, hist = train_loop(model, opt, sync, None, batches, log_every=1)
+    assert hist[-1]["loss"] < hist[0]["loss"] - 0.2
+
+
+def test_clientize_roundtrip():
+    p = {"w": jnp.arange(6.0).reshape(2, 3)}
+    c = clientize(p, 4)
+    assert c["w"].shape == (4, 2, 3)
+    back = declientize(c, 4)
+    np.testing.assert_allclose(back["w"], p["w"])
+
+
+def test_clientize_specs_prepends_pod():
+    from jax.sharding import PartitionSpec as P
+
+    specs = {"w": P(None, "model")}
+    out = clientize_specs(specs, 2)
+    assert out["w"] == P("pod", None, "model")
+
+
+def test_grad_sync_axes():
+    class M:
+        shape = {"pod": 2, "data": 16, "model": 16}
+
+    assert grad_sync_axes(M(), 1) == ("pod", "data")
+    assert grad_sync_axes(M(), 2) == ("data",)
+
+
+def test_sync_config_validation():
+    class M:
+        shape = {"data": 16, "model": 16}
+
+    with pytest.raises(ValueError):
+        SyncConfig(mode="dist_asgd").validate(M())
+    with pytest.raises(ValueError):
+        SyncConfig(mode="mpi_esgd", num_clients=2).validate(M())
+
+
+def test_checkpoint_resume_training(tmp_path):
+    from repro.checkpoint.checkpoint import restore_checkpoint, save_checkpoint
+
+    model = _model()
+    opt = sgd(0.1, momentum=0.9)
+    sync = SyncConfig(mode="mpi_sgd", num_clients=1)
+    state = make_train_state(model, opt, sync, jax.random.key(0))
+    step = jax.jit(make_train_step(model, opt, sync, None))
+    batch = _batch(B=4)
+    for _ in range(3):
+        state, _ = step(state, batch)
+    path = str(tmp_path / "ckpt.npz")
+    save_checkpoint(path, state, step=3)
+    like = jax.tree.map(jnp.zeros_like, state)
+    restored, meta = restore_checkpoint(path, like)
+    assert meta["step"] == 3
+    s_a, _ = step(state, batch)
+    s_b, _ = step(restored, batch)
+    jax.tree.map(
+        lambda a, b: np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32), atol=1e-6),
+        s_a["params"], s_b["params"])
