@@ -1,0 +1,199 @@
+"""Sharded fused-step comparison: the PR's perf claim, measured.
+
+Three sync+update paths for one momentum-SGD step over an emulated
+p-way axis, same math (tests/test_fused_step.py proves equivalence):
+
+  per_leaf              one ring allreduce PER PARAMETER + per-leaf
+                        tree.map update (the paper's `reg` baseline shape)
+  fused_allreduce       ONE flat-buffer ring allreduce + per-leaf update
+                        (the paper's tensor collective, §6)
+  scatter_update_gather reduce-scatter -> fused Pallas momentum-SGD on the
+                        local 1/p shard (sharded momentum) -> allgather of
+                        updated params (this PR)
+
+Measured: wall µs/step (vmap emulation on CPU) and — the quantity the
+acceptance criterion names — *bytes moved*, counted exactly by walking
+the jaxpr for ``ppermute`` operands (per device, per step). The gradient
+leg (everything the update has to wait on) is (p-1)/p·n for the sharded
+path vs 2·(p-1)/p·n for any allreduce: a 50% cut, which the α-β-γ model
+turns into the projected step-time win printed alongside.
+
+Writes the machine-readable baseline to BENCH_fused_step.json.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.core import collectives as C
+from repro.core import cost_model
+from repro.core import flatbuf as F
+from repro.optim.sgd import scatter_update_gather, sgd
+
+P = 8
+NUM_LEAVES = 24
+LEAF = 16384          # ~1.5 MB of f32 gradient across 24 leaves
+AXIS = "ring"
+
+
+def ppermute_bytes(fn, *args) -> int:
+    """Exact per-device wire bytes: trace the PER-DEVICE function under an
+    abstract p-way axis (vmap's batching rule would rewrite ppermute into
+    local shuffles) and sum ppermute operand sizes, recursing into
+    sub-jaxprs."""
+    closed = jax.make_jaxpr(fn, axis_env=[(AXIS, P)])(*args)
+
+    def walk(jaxpr) -> int:
+        total = 0
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "ppermute":
+                total += sum(v.aval.size * v.aval.dtype.itemsize
+                             for v in eqn.invars)
+            for val in eqn.params.values():
+                for sub in _subjaxprs(val):
+                    total += walk(sub)
+        return total
+
+    def _subjaxprs(val):
+        if hasattr(val, "jaxpr"):      # ClosedJaxpr
+            yield val.jaxpr
+        elif hasattr(val, "eqns"):     # Jaxpr
+            yield val
+        elif isinstance(val, (list, tuple)):
+            for v in val:
+                yield from _subjaxprs(v)
+
+    return walk(closed.jaxpr)
+
+
+def _grad_tree(p: int):
+    return {
+        f"layer{i}": jax.random.normal(jax.random.key(i), (p, LEAF))
+        for i in range(NUM_LEAVES)
+    }
+
+
+def run() -> None:
+    grads = _grad_tree(P)
+    params = jax.tree.map(lambda g: g[0] * 0.01, grads)
+    spec = F.spec_for(params)
+    n_bytes = spec.payload * 4
+    opt = sgd(0.05, momentum=0.9)
+    opt_state = opt.init(params)
+    lr, mu = jnp.float32(0.05), jnp.float32(0.9)
+
+    stacked_params = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (P,) + x.shape), params)
+    stacked_opt = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (P,) + x.shape), opt_state)
+    mom_shard = jnp.zeros((P, F.shard_size(spec, P)))
+
+    # -- path 1: per-leaf allreduce + per-leaf update -----------------------
+    @jax.jit
+    def per_leaf(g, p_, s):
+        synced = C.emulate(C.tensor_allreduce, g, method="per_leaf",
+                           mean=True)
+        return jax.vmap(opt.update)(synced, s, p_)
+
+    # -- path 2: fused flat-buffer allreduce + per-leaf update --------------
+    @jax.jit
+    def fused_allreduce(g, p_, s):
+        synced = C.emulate(C.tensor_allreduce, g, method="multi_ring",
+                           mean=True, spec=spec)
+        return jax.vmap(opt.update)(synced, s, p_)
+
+    # -- path 3: reduce-scatter -> fused shard update -> allgather ----------
+    @jax.jit
+    def sug(g, p_, m):
+        def dev(gd, pd, md):
+            return scatter_update_gather(spec, gd, pd, md, lr, mu,
+                                         axis_name=AXIS)
+        return jax.vmap(dev, axis_name=AXIS)(g, p_, m)
+
+    us_leaf = timeit(per_leaf, grads, stacked_params, stacked_opt, iters=3)
+    us_fused = timeit(fused_allreduce, grads, stacked_params, stacked_opt,
+                      iters=3)
+    us_sug = timeit(sug, grads, stacked_params, mom_shard, iters=3)
+
+    # -- exact wire-byte accounting (per device, per step): trace the
+    # per-device program under an abstract p-way axis ------------------------
+    g1 = jax.tree.map(lambda x: x[0], grads)
+    m1 = mom_shard[0]
+
+    def dev_per_leaf(g, p_, s):
+        synced = C.tensor_allreduce(g, AXIS, method="per_leaf", mean=True)
+        return opt.update(synced, s, p_)
+
+    def dev_fused(g, p_, s):
+        synced = C.tensor_allreduce(g, AXIS, method="multi_ring", mean=True,
+                                    spec=spec)
+        return opt.update(synced, s, p_)
+
+    def dev_sug(g, p_, m):
+        return scatter_update_gather(spec, g, p_, m, lr, mu, axis_name=AXIS)
+
+    by_leaf = ppermute_bytes(dev_per_leaf, g1, params, opt_state)
+    by_fused = ppermute_bytes(dev_fused, g1, params, opt_state)
+    by_sug = ppermute_bytes(dev_sug, g1, params, m1)
+    # the gradient leg = bytes the UPDATE has to wait on
+    gbuf = spec.pack(g1)
+    gleg_base = ppermute_bytes(lambda b: C.ring_allreduce(b, AXIS), gbuf)
+    gleg_sug = ppermute_bytes(lambda b: C.ring_reduce_scatter(b, AXIS), gbuf)
+
+    # α-β-γ projection on the target fabric: update hidden behind the
+    # scatter/gather halves vs serial allreduce-then-update
+    v5e = cost_model.tpu_v5e()
+    t_ar = cost_model.ring_allreduce_time(n_bytes, P, v5e)
+    t_half = t_ar / 2  # each half moves (p-1)/p·n
+
+    emit("fused_step/per_leaf", us_leaf,
+         f"wire_bytes_per_dev={by_leaf}")
+    emit("fused_step/fused_allreduce", us_fused,
+         f"wire_bytes_per_dev={by_fused}")
+    emit("fused_step/scatter_update_gather", us_sug,
+         f"wire_bytes_per_dev={by_sug};"
+         f"grad_leg_bytes={gleg_sug};grad_leg_baseline={gleg_base};"
+         f"grad_leg_ratio={gleg_sug/gleg_base:.3f};"
+         f"model_v5e_grad_leg_us={t_half*1e6:.0f}_vs_{t_ar*1e6:.0f}")
+
+    result = {
+        "p": P,
+        "num_leaves": NUM_LEAVES,
+        "payload_bytes": n_bytes,
+        "us_per_step": {
+            "per_leaf": us_leaf,
+            "fused_allreduce": us_fused,
+            "scatter_update_gather": us_sug,
+        },
+        "wire_bytes_per_dev": {
+            "per_leaf": by_leaf,
+            "fused_allreduce": by_fused,
+            "scatter_update_gather": by_sug,
+        },
+        "grad_leg_bytes_per_dev": {
+            "allreduce_baseline": gleg_base,
+            "reduce_scatter": gleg_sug,
+            "ratio": gleg_sug / gleg_base,
+        },
+        "momentum_state_per_dev": {
+            "sharded": int(F.shard_size(spec, P) * 4),
+            "replicated_baseline": int(spec.payload * 4),
+        },
+        "model_v5e_us": {
+            "grad_leg_allreduce": t_ar * 1e6,
+            "grad_leg_reduce_scatter": t_half * 1e6,
+        },
+    }
+    out = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_fused_step.json")
+    with open(out, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"# wrote {out}")
+
+
+if __name__ == "__main__":
+    run()

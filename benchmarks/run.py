@@ -2,6 +2,9 @@
 ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
 
   bench_allreduce    Figs 17-20  tensor allreduce designs
+  bench_fused_step   (this repo) per-leaf vs fused-allreduce vs the sharded
+                                 scatter_update_gather step, wire bytes
+                                 counted from the jaxpr (BENCH_fused_step.json)
   bench_epoch_time   Fig 12      PS contention vs MPI epoch time
   bench_convergence  Fig 11      dist/mpi x SGD/ASGD curves
   bench_esgd         Figs 13/14  elastic averaging
@@ -23,12 +26,13 @@ def main() -> None:
         bench_convergence,
         bench_epoch_time,
         bench_esgd,
+        bench_fused_step,
         bench_scaling,
     )
 
     print("name,us_per_call,derived")
-    for mod in (bench_allreduce, bench_epoch_time, bench_convergence,
-                bench_esgd, bench_scaling):
+    for mod in (bench_allreduce, bench_fused_step, bench_epoch_time,
+                bench_convergence, bench_esgd, bench_scaling):
         t0 = time.time()
         mod.run()
         print(f"# {mod.__name__} done in {time.time()-t0:.1f}s",

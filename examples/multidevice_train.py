@@ -16,9 +16,10 @@ if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", "")
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import get_config, reduced
+from repro.core.compat import make_mesh, set_mesh
 from repro.core.hierarchy import SyncConfig, declientize
 from repro.data import DataConfig, TokenPipeline
 from repro.launch.train import (
@@ -34,8 +35,7 @@ from repro.sharding.rules import param_specs
 
 def main() -> None:
     assert len(jax.devices()) >= 8, "needs 8 host devices (set XLA_FLAGS)"
-    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                         axis_types=(AxisType.Auto,) * 3)
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
     print(f"mesh: {dict(mesh.shape)} over {len(jax.devices())} devices")
 
     cfg = reduced(get_config("qwen2-0.5b"))
@@ -57,7 +57,7 @@ def main() -> None:
                                       batch_size=4, shard=c))
              for c in range(2)]
     bspec = NamedSharding(mesh, P(("pod",), ("data",), None))
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         for i in range(12):
             batches = [p.batch_at(0, i) for p in pipes]
             batch = jax.tree.map(

@@ -4,6 +4,13 @@ Every assigned architecture gets one ``configs/<id>.py`` exporting CONFIG.
 ``get_config(name)`` resolves by module name; ``reduced(cfg)`` produces the
 CPU smoke-test variant of the same family (<=2 layers, d_model<=512,
 <=4 experts) required by the brief.
+
+``TrainSettings`` is the run-settings half: optimizer hyperparams + the
+gradient-sync knobs (fused_update / bucket_bytes / num_rings), lowered to
+a ``core.hierarchy.SyncConfig`` + ``optim.sgd`` optimizer pair. The
+worker entry point (``repro.launch.train`` main — what the launcher's
+emitted ``mpirun`` commands run) builds its sync/optimizer through it, so
+the JobSpec flags and the in-process config cannot drift.
 """
 from __future__ import annotations
 
@@ -164,6 +171,44 @@ class InputShape:
     seq_len: int
     global_batch: int
     kind: str  # "train" | "prefill" | "decode"
+
+
+@dataclass(frozen=True)
+class TrainSettings:
+    """Run settings: what a job spec ships alongside the architecture."""
+
+    lr: float = 0.1
+    momentum: float = 0.9
+    weight_decay: float = 0.0
+    sync_mode: str = "mpi_sgd"      # "mpi_sgd" | "mpi_esgd"
+    num_clients: int = 1
+    esgd_alpha: float = 0.5
+    esgd_interval: int = 64
+    allreduce_method: str = "psum"
+    num_rings: int = 2
+    # sharded fused step: reduce-scatter -> shard-local fused momentum-SGD
+    # Pallas kernel (sharded momentum) -> allgather (launch/train.py)
+    fused_update: bool = True
+    bucket_bytes: Optional[int] = None
+    fsdp: bool = False
+    microbatch: int = 1
+
+    def sync_config(self):
+        from repro.core.hierarchy import SyncConfig
+
+        return SyncConfig(
+            mode=self.sync_mode, num_clients=self.num_clients,
+            esgd_alpha=self.esgd_alpha, esgd_interval=self.esgd_interval,
+            allreduce_method=self.allreduce_method, num_rings=self.num_rings,
+            fused_update=self.fused_update, bucket_bytes=self.bucket_bytes,
+            fsdp=self.fsdp,
+        )
+
+    def optimizer(self):
+        from repro.optim.sgd import sgd
+
+        return sgd(self.lr, momentum=self.momentum,
+                   weight_decay=self.weight_decay)
 
 
 INPUT_SHAPES = {

@@ -24,13 +24,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import cost_model
+from functools import partial
+
+from repro.core import cost_model, flatbuf
 from repro.core.client import group_workers
 from repro.core.collectives import tensor_allreduce, emulate
 from repro.core.elastic import elastic_client_update
 from repro.core.kvstore import KVStore
 from repro.core.scheduler import AsyncEngine, StalenessTracker, UnitTiming
-from repro.optim.sgd import Optimizer, sgd
+from repro.optim.sgd import Optimizer, flat_sgd, sgd
 
 MODES = ("dist_sgd", "mpi_sgd", "dist_asgd", "mpi_asgd", "dist_esgd", "mpi_esgd")
 
@@ -54,6 +56,10 @@ class AlgoConfig:
     net: cost_model.NetParams = field(default_factory=cost_model.testbed)
     allreduce_method: str = "multi_ring"
     compress_push: bool = False  # beyond-paper: int8 PS pushes
+    # fused flat-buffer optimizer step (optim.sgd.flat_sgd): one Pallas
+    # grid over the packed gradient instead of per-leaf tree.map updates
+    fused_update: bool = True
+    bucket_bytes: Optional[int] = None
 
     @property
     def effective_clients(self) -> int:
@@ -78,6 +84,14 @@ GradFn = Callable[[Any, dict], tuple[jax.Array, Any]]
 EvalFn = Callable[[Any], float]
 
 
+@partial(jax.jit, static_argnames=("method",))
+def _emulated_sync(stacked: Any, method: str) -> Any:
+    """Jitted vmap-emulated tensor allreduce. The jit cache makes the
+    FlatBuffer pack trace ONCE per (structure, shapes, method) — eager
+    drivers stop paying a re-flatten + retrace every step."""
+    return emulate(tensor_allreduce, stacked, method=method)
+
+
 def _client_grad(grad_fn: GradFn, params, batches: list[dict],
                  method: str) -> tuple[float, Any]:
     """Intra-client step: per-worker grads, tensor-allreduced (mean).
@@ -93,9 +107,21 @@ def _client_grad(grad_fn: GradFn, params, batches: list[dict],
     if len(grads) == 1:
         return losses[0], grads[0]
     stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *grads)
-    summed = emulate(tensor_allreduce, stacked, method=method)
+    summed = _emulated_sync(stacked, method)
     mean = jax.tree.map(lambda s: s[0] / len(grads), summed)
     return float(np.mean(losses)), mean
+
+
+def _make_opt(cfg: AlgoConfig, params) -> Optimizer:
+    """The worker/server update rule: the fused flat-buffer momentum-SGD
+    (one Pallas grid over the packed gradient, spec built once) when
+    enabled, else the per-leaf reference."""
+    if cfg.fused_update and cfg.momentum > 0.0:
+        # momentum == 0 would still pay a full-model momentum buffer for
+        # v' = 0*v + g; plain sgd carries no state there
+        return flat_sgd(cfg.lr, cfg.momentum, flatbuf.spec_for(params),
+                        bucket_bytes=cfg.bucket_bytes)
+    return sgd(cfg.lr, cfg.momentum)
 
 
 def _comm_times(cfg: AlgoConfig) -> dict[str, float]:
@@ -139,7 +165,7 @@ def _run_sync(cfg, init_fn, grad_fn, eval_fn, make_pipeline) -> History:
                         num_workers=cfg.num_workers, num_servers=cfg.num_servers,
                         num_clients=C)
     kv.init("grads", jax.tree.map(jnp.zeros_like, params))
-    opt = sgd(cfg.lr, cfg.momentum)
+    opt = _make_opt(cfg, params)
     opt_state = opt.init(params)
 
     comm = _comm_times(cfg)
@@ -279,7 +305,7 @@ def _run_esgd(cfg, init_fn, grad_fn, eval_fn, make_pipeline) -> History:
                    np.random.default_rng((cfg.seed, u)))
         for u in range(C)
     ]
-    opt = sgd(cfg.lr, cfg.momentum)
+    opt = _make_opt(cfg, params0)
     client_params = [params0] * C
     client_opt = [opt.init(params0) for _ in range(C)]
     client_iter = [0] * C

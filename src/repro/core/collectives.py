@@ -2,20 +2,33 @@
 
 The paper's "tensor" is a *group of vectors treated as one object* so that
 single-vector ring algorithms apply to the whole group at once. The TPU
-adaptation: the gradient pytree is flattened into ONE fused buffer and a
-single bucket (ring) algorithm runs over it — gradient-bucket fusion —
-instead of one collective per parameter (`method="per_leaf"` is that
-baseline). Variants:
+adaptation: the gradient pytree is packed ONCE into a persistent
+``FlatBuffer`` (core/flatbuf.py — static lane-aligned offsets computed a
+single time per model, no per-step concatenate) and a single bucket (ring)
+algorithm runs over it — gradient-bucket fusion — instead of one
+collective per parameter (``method="per_leaf"`` is that baseline).
+Variants:
 
-  ring        bucket algorithm: ring reduce-scatter + ring allgather
-              (bandwidth-optimal: (p-1)a + 2*(p-1)/p*n*b + (p-1)/p*n*g)
-  multi_ring  the paper's overlap: buffer split across R independent ring
-              schedules whose compute/transfer steps interleave (XLA is
-              the dependency engine that overlaps them, like the paper's
-              Engine.push lambdas)
-  tree        binomial reduce-to-0 + broadcast — the `reg` baseline and
-              the PS push/pull communication pattern
-  psum        XLA's native fused all-reduce (beyond-paper reference)
+  ring            bucket algorithm: ring reduce-scatter + ring allgather
+                  (bandwidth-optimal: (p-1)a + 2*(p-1)/p*n*b + (p-1)/p*n*g)
+  multi_ring      the paper's overlap: buffer split across R independent
+                  ring schedules whose compute/transfer steps interleave
+                  (XLA is the dependency engine that overlaps them, like
+                  the paper's Engine.push lambdas)
+  tree            binomial reduce-to-0 + broadcast — the `reg` baseline
+                  and the PS push/pull communication pattern
+  psum            XLA's native fused all-reduce (beyond-paper reference)
+  scatter_gather  explicit reduce-scatter + allgather halves: the substrate
+                  of the sharded fused-optimizer path (optim/sgd.py
+                  ``scatter_update_gather`` runs the update between the
+                  halves, so the gradient leg is (p-1)/p*n instead of
+                  2*(p-1)/p*n and momentum lives sharded 1/p per device)
+
+``ring_reduce_scatter``/``ring_allgather``/``shard_select`` all take a
+``num_rings`` knob: the buffer splits into R independent ring schedules
+(bucket chunking — ``SyncConfig.bucket_bytes`` maps onto it via
+``flatbuf.effective_rings``), emitted interleaved so the scheduler
+overlaps ring r's reduction with ring r+1's transfer.
 
 All algorithms are written against ``lax.ppermute``/named axes, so the
 same code runs inside ``shard_map`` on a real mesh *and* under
@@ -30,12 +43,11 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core import flatbuf
+from repro.core.compat import axis_size as _axis_size
+
 Method = str
-_METHODS = ("ring", "multi_ring", "tree", "psum", "per_leaf")
-
-
-def _axis_size(axis_name) -> int:
-    return lax.axis_size(axis_name)
+_METHODS = ("ring", "multi_ring", "tree", "psum", "per_leaf", "scatter_gather")
 
 
 def ring_allreduce(x: jax.Array, axis_name: str, *, num_rings: int = 1) -> jax.Array:
@@ -79,44 +91,84 @@ def ring_allreduce(x: jax.Array, axis_name: str, *, num_rings: int = 1) -> jax.A
     return flat_out.reshape(shape)
 
 
-def ring_reduce_scatter(x: jax.Array, axis_name: str) -> jax.Array:
-    """Each device ends with its own fully-reduced 1/p slice (chunk idx)."""
+def ring_reduce_scatter(x: jax.Array, axis_name: str, *,
+                        num_rings: int = 1) -> jax.Array:
+    """Each device ends with its own fully-reduced 1/p slice.
+
+    With ``num_rings = R > 1`` the buffer splits into R independent ring
+    schedules (layout ``(R, p, chunk)``, emitted interleaved for overlap)
+    and the local shard is the R per-ring chunks raveled to
+    ``(R*chunk,)`` — the same strided selection ``shard_select`` makes,
+    and what ``ring_allgather(num_rings=R)`` inverts.
+    """
     p = _axis_size(axis_name)
     n = x.size
-    chunk = -(-n // p)
+    nr = max(1, num_rings)
+    chunk = -(-n // (p * nr))
+    flat = jnp.pad(x.reshape(-1), (0, chunk * p * nr - n))
     if p == 1:
-        return x.reshape(-1)[:chunk] if n >= chunk else jnp.pad(x.reshape(-1), (0, chunk - n))
+        return flat
     idx = lax.axis_index(axis_name)
-    flat = jnp.pad(x.reshape(-1), (0, chunk * p - n))
-    buf = flat.reshape(p, chunk)
+    bufs = flat.reshape(nr, p, chunk)
     fwd = [(i, (i + 1) % p) for i in range(p)]
-    acc = None
-    # shifted schedule so device i ends owning chunk i
+    acc = [None] * nr
+    # shifted schedule so device i ends owning chunk i of every ring
     for s in range(p - 1):
-        send = jnp.take(buf, (idx - s - 1) % p, axis=0) if s == 0 else acc
-        recv = lax.ppermute(send, axis_name, fwd)
-        acc = jnp.take(buf, (idx - s - 2) % p, axis=0) + recv
-    return acc  # fully-reduced chunk idx
+        for r in range(nr):
+            send = jnp.take(bufs[r], (idx - s - 1) % p, axis=0) if s == 0 else acc[r]
+            recv = lax.ppermute(send, axis_name, fwd)
+            acc[r] = jnp.take(bufs[r], (idx - s - 2) % p, axis=0) + recv
+    if nr == 1:
+        return acc[0]  # fully-reduced chunk idx
+    return jnp.stack(acc).reshape(-1)
 
 
-def ring_allgather(x: jax.Array, axis_name: str) -> jax.Array:
-    """Inverse of reduce-scatter: gather per-device chunks into (p*chunk,)."""
+def ring_allgather(x: jax.Array, axis_name: str, *,
+                   num_rings: int = 1) -> jax.Array:
+    """Inverse of reduce-scatter: gather per-device shards to the full
+    ``(nr*p*chunk,)`` buffer (ring-major layout, matching
+    ``ring_reduce_scatter(num_rings=nr)``)."""
     p = _axis_size(axis_name)
+    nr = max(1, num_rings)
     if p == 1:
         return x.reshape(-1)
     idx = lax.axis_index(axis_name)
-    chunk = x.size
-    out = jnp.zeros((p, chunk), x.dtype)
-    out = lax.dynamic_update_slice_in_dim(out, x.reshape(1, -1), idx, axis=0)
+    chunk = x.size // nr
+    shards = x.reshape(nr, chunk)
     fwd = [(i, (i + 1) % p) for i in range(p)]
-    cur = x.reshape(-1)
+    outs, cur = [], []
+    for r in range(nr):
+        out = jnp.zeros((p, chunk), x.dtype)
+        out = lax.dynamic_update_slice_in_dim(out, shards[r][None], idx, axis=0)
+        outs.append(out)
+        cur.append(shards[r])
     for s in range(p - 1):
-        nxt = lax.ppermute(cur, axis_name, fwd)
-        out = lax.dynamic_update_slice_in_dim(
-            out, nxt[None], (idx - s - 1) % p, axis=0
-        )
-        cur = nxt
-    return out.reshape(-1)
+        for r in range(nr):
+            nxt = lax.ppermute(cur[r], axis_name, fwd)
+            outs[r] = lax.dynamic_update_slice_in_dim(
+                outs[r], nxt[None], (idx - s - 1) % p, axis=0
+            )
+            cur[r] = nxt
+    if nr == 1:
+        return outs[0].reshape(-1)
+    return jnp.stack(outs).reshape(-1)
+
+
+def shard_select(flat: jax.Array, axis_name: str, *,
+                 num_rings: int = 1) -> jax.Array:
+    """This device's shard of a *replicated* flat buffer — exactly the
+    slice ``ring_reduce_scatter`` with the same geometry would leave here
+    (used to pair the replicated params with the reduce-scattered grads).
+    ``flat.size`` must divide by ``p * num_rings`` (pad via
+    ``flatbuf.shard_geometry`` first)."""
+    p = _axis_size(axis_name)
+    nr = max(1, num_rings)
+    if p == 1:
+        return flat.reshape(-1)
+    idx = lax.axis_index(axis_name)
+    chunk = flat.size // (p * nr)
+    sel = jnp.take(flat.reshape(nr, p, chunk), idx, axis=1)
+    return sel.reshape(-1)
 
 
 def _complete_perm(perm: list[tuple[int, int]], p: int) -> list[tuple[int, int]]:
@@ -159,6 +211,24 @@ def tree_allreduce(x: jax.Array, axis_name: str) -> jax.Array:
     return x
 
 
+def scatter_gather_allreduce(x: jax.Array, axis_name: str, *,
+                             num_rings: int = 1) -> jax.Array:
+    """Allreduce as its two explicit halves (reduce-scatter + allgather).
+
+    Same wire bytes as ``ring`` — the point is that the halves are
+    *separable*: the sharded fused-step path runs the optimizer between
+    them, so the second half carries updated params instead of gradients.
+    """
+    p = _axis_size(axis_name)
+    if p == 1:
+        return x
+    shape, n = x.shape, x.size
+    nr = max(1, num_rings)
+    shard = ring_reduce_scatter(x, axis_name, num_rings=nr)
+    full = ring_allgather(shard, axis_name, num_rings=nr)
+    return full[:n].reshape(shape)
+
+
 def allreduce(x: jax.Array, axis_name: str, method: Method = "ring",
               *, num_rings: int = 2) -> jax.Array:
     if method == "psum":
@@ -169,6 +239,8 @@ def allreduce(x: jax.Array, axis_name: str, method: Method = "ring",
         return ring_allreduce(x, axis_name, num_rings=num_rings)
     if method == "tree":
         return tree_allreduce(x, axis_name)
+    if method == "scatter_gather":
+        return scatter_gather_allreduce(x, axis_name, num_rings=num_rings)
     raise ValueError(f"unknown allreduce method {method!r}")
 
 
@@ -176,27 +248,15 @@ def allreduce(x: jax.Array, axis_name: str, method: Method = "ring",
 # Tensor (fused-pytree) collectives — the paper's group-of-vectors object
 # --------------------------------------------------------------------------
 
-def _flatten_group(tree: Any):
-    leaves, treedef = jax.tree_util.tree_flatten(tree)
-    sizes = [l.size for l in leaves]
-    shapes = [l.shape for l in leaves]
-    dtypes = [l.dtype for l in leaves]
-    buf = jnp.concatenate([l.astype(jnp.float32).reshape(-1) for l in leaves])
-    return buf, (treedef, sizes, shapes, dtypes)
-
-
-def _unflatten_group(buf: jax.Array, spec) -> Any:
-    treedef, sizes, shapes, dtypes = spec
-    leaves, off = [], 0
-    for size, shape, dt in zip(sizes, shapes, dtypes):
-        leaves.append(buf[off : off + size].reshape(shape).astype(dt))
-        off += size
-    return jax.tree_util.tree_unflatten(treedef, leaves)
-
-
 def tensor_allreduce(tree: Any, axis_name: str, method: Method = "ring",
-                     *, num_rings: int = 2, mean: bool = False) -> Any:
-    """Allreduce a whole pytree as ONE fused buffer (tensor collective)."""
+                     *, num_rings: int = 2, mean: bool = False,
+                     spec: flatbuf.FlatBuffer | None = None) -> Any:
+    """Allreduce a whole pytree as ONE fused buffer (tensor collective).
+
+    The flat-buffer spec is memoized per tree structure (``spec_for``) or
+    passed in by callers that built it once at setup time — either way
+    there is no per-step re-flatten/concatenate.
+    """
     p = _axis_size(axis_name)
     if method == "per_leaf":  # single-vector-at-a-time baseline
         out = jax.tree.map(
@@ -204,25 +264,35 @@ def tensor_allreduce(tree: Any, axis_name: str, method: Method = "ring",
             tree,
         )
         return jax.tree.map(lambda l: l / p, out) if mean else out
-    buf, spec = _flatten_group(tree)
+    spec = spec or flatbuf.spec_for(tree)
+    buf = spec.pack(tree)
     buf = allreduce(buf, axis_name, method, num_rings=num_rings)
     if mean:
         buf = buf / p
-    return _unflatten_group(buf, spec)
+    return spec.unpack(buf)
 
 
 def tensor_pushpull(tree: Any, axis_name: str, *, fused: bool = True,
-                    method: Method = "ring", num_rings: int = 2) -> Any:
+                    method: Method | None = None, num_rings: int = 2,
+                    spec: flatbuf.FlatBuffer | None = None) -> Any:
     """KVStore.pushpull comm pattern. ``fused=True`` is the paper's new API
-    (one tensor allreduce); ``fused=False`` is push (reduce-to-master) +
-    pull (broadcast) — two tree phases, like ZPush + ZPull."""
+    (one tensor allreduce, with ``method`` selecting the bucket algorithm,
+    default ring); ``fused=False`` is push (reduce-to-master) + pull
+    (broadcast) — two binomial-tree phases like ZPush + ZPull, which IS
+    the communication pattern, so ``method`` must be left unset (or
+    "tree") there."""
     if fused:
-        return tensor_allreduce(tree, axis_name, method, num_rings=num_rings,
-                                mean=True)
+        return tensor_allreduce(tree, axis_name, method or "ring",
+                                num_rings=num_rings, mean=True, spec=spec)
+    if method not in (None, "tree"):
+        raise ValueError(
+            f"method={method!r} is only meaningful for fused=True; the "
+            "unfused path is defined as tree push + tree pull")
     p = _axis_size(axis_name)
-    buf, spec = _flatten_group(tree)
+    spec = spec or flatbuf.spec_for(tree)
+    buf = spec.pack(tree)
     buf = tree_allreduce(buf, axis_name) / p
-    return _unflatten_group(buf, spec)
+    return spec.unpack(buf)
 
 
 # --------------------------------------------------------------------------
@@ -240,7 +310,8 @@ def _selftest(p: int = 8) -> None:  # pragma: no cover (subprocess helper)
     key = jax.random.key(0)
     x = jax.random.normal(key, (p, 1000))
     want = jnp.sum(x, axis=0)
-    for method in ("ring", "multi_ring", "tree", "psum"):
+    methods = ("ring", "multi_ring", "tree", "psum", "scatter_gather")
+    for method in methods:
         got = emulate(allreduce, x, method=method)
         np.testing.assert_allclose(got, jnp.broadcast_to(want, got.shape),
                                    rtol=2e-5, atol=2e-5)
@@ -248,12 +319,12 @@ def _selftest(p: int = 8) -> None:  # pragma: no cover (subprocess helper)
 
     # real shard_map path when the process has >= p devices
     if len(jax.devices()) >= p:
-        from jax.sharding import AxisType, Mesh, PartitionSpec as P
+        from jax.sharding import PartitionSpec as P
 
-        shard_map = jax.shard_map
-        mesh = jax.make_mesh((p,), ("ring",),
-                             axis_types=(AxisType.Auto,))
-        for method in ("ring", "multi_ring", "tree", "psum"):
+        from repro.core.compat import make_mesh, shard_map
+
+        mesh = make_mesh((p,), ("ring",))
+        for method in methods:
             fn = shard_map(
                 lambda v: allreduce(v, "ring", method=method),
                 mesh=mesh, in_specs=P("ring", None), out_specs=P("ring", None),

@@ -1,0 +1,68 @@
+"""Version-gated jax API shims.
+
+The repo targets the modern jax surface (``lax.axis_size``,
+``jax.shard_map``, ``jax.sharding.AxisType``, ``jax.set_mesh``) but must
+also run on the pinned 0.4.x toolchain in CI containers, where those
+names either live elsewhere or do not exist. Everything that is
+version-sensitive goes through here so the rest of the codebase imports
+one stable spelling.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any
+
+import jax
+from jax import lax
+
+
+def axis_size(axis_name: Any) -> int:
+    """Static size of a named mesh/vmap axis.
+
+    ``lax.axis_size`` where available; otherwise ``psum(1, axis)`` — with
+    a Python-int operand the sum is evaluated statically, so this returns
+    a concrete int under both shard_map and vmap emulation.
+    """
+    if hasattr(lax, "axis_size"):
+        return lax.axis_size(axis_name)
+    return lax.psum(1, axis_name)
+
+
+def shard_map(*args, **kwargs):
+    """``jax.shard_map`` (new) or ``jax.experimental.shard_map`` (0.4.x).
+
+    The 0.4.x version spells ``check_vma`` as ``check_rep``; translate.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(*args, **kwargs)
+    from jax.experimental.shard_map import shard_map as _sm
+
+    if "check_vma" in kwargs:
+        kwargs["check_rep"] = kwargs.pop("check_vma")
+    return _sm(*args, **kwargs)
+
+
+def make_mesh(shape, axis_names, *, auto: bool = True):
+    """``jax.make_mesh`` with ``AxisType.Auto`` when the installed jax has
+    typed mesh axes, plain ``jax.make_mesh`` otherwise (0.4.x meshes are
+    implicitly auto)."""
+    try:
+        from jax.sharding import AxisType  # jax >= 0.5
+
+        types = (AxisType.Auto if auto else AxisType.Explicit,) * len(axis_names)
+        return jax.make_mesh(shape, axis_names, axis_types=types)
+    except ImportError:
+        return jax.make_mesh(shape, axis_names)
+
+
+def set_mesh(mesh):
+    """Context manager installing ``mesh`` as the ambient mesh.
+
+    ``jax.set_mesh`` on new jax; on 0.4.x the ``Mesh`` object itself is
+    the context manager.
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if hasattr(mesh, "__enter__"):
+        return mesh
+    return contextlib.nullcontext(mesh)

@@ -1,0 +1,166 @@
+"""Persistent flat-buffer substrate for fused ("tensor") collectives.
+
+The paper's core object is the *group of vectors treated as one*: the
+whole gradient pytree rides a single bucket algorithm. The seed code
+rebuilt that object every step with ``jnp.concatenate`` (a fresh flatten
++ f32 upcast per call). This module replaces that with a ``FlatBuffer``
+spec computed ONCE per model: static per-leaf offsets, shapes and dtypes,
+with every leaf padded to a lane-aligned boundary so
+
+  * any bucket boundary is a valid Pallas block start, and
+  * the total length divides cleanly into ring chunks,
+
+and ``pack``/``unpack`` are pure static-slice scatter/gathers (no
+concatenate, no per-step spec recomputation — XLA fuses the copies).
+
+``spec_for`` memoizes specs by tree structure + leaf avals, so eager
+drivers (core/algorithms.py, the KVStore barrier) pay the spec cost once
+per model, and jitted steps build it at trace time only.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+# the single source of truth for tile geometry lives with the kernels:
+# pick_block rounds Pallas blocks to the same LANE these offsets align to,
+# so shard/bucket boundaries stay valid block starts by construction
+from repro.kernels.common import LANE, SUBLANE
+
+
+def _align(n: int, a: int) -> int:
+    return -(-n // a) * a
+
+
+@dataclass(frozen=True)
+class FlatBuffer:
+    """Static packing spec for one pytree: the fused tensor object."""
+
+    treedef: Any
+    shapes: tuple
+    dtypes: tuple
+    sizes: tuple      # true element count per leaf
+    offsets: tuple    # lane-aligned start of each leaf in the buffer
+    size: int         # padded total length (multiple of LANE*SUBLANE)
+    dtype: Any = jnp.float32
+
+    @property
+    def num_leaves(self) -> int:
+        return len(self.sizes)
+
+    @property
+    def nbytes(self) -> int:
+        return self.size * jnp.dtype(self.dtype).itemsize
+
+    @property
+    def payload(self) -> int:
+        """True (unpadded) element count across leaves."""
+        return sum(self.sizes)
+
+    def pack(self, tree: Any) -> jax.Array:
+        """Pytree -> one ``(size,)`` buffer. Static slices only."""
+        leaves = self.treedef.flatten_up_to(tree)
+        buf = jnp.zeros((self.size,), self.dtype)
+        for off, n, leaf in zip(self.offsets, self.sizes, leaves):
+            buf = buf.at[off:off + n].set(
+                leaf.reshape(-1).astype(self.dtype))
+        return buf
+
+    def unpack(self, buf: jax.Array) -> Any:
+        """Inverse of ``pack``: restore leaf shapes and dtypes."""
+        leaves = [
+            buf[off:off + n].reshape(shape).astype(dt)
+            for off, n, shape, dt in zip(
+                self.offsets, self.sizes, self.shapes, self.dtypes)
+        ]
+        return jax.tree_util.tree_unflatten(self.treedef, leaves)
+
+    def leaf_view(self, buf: jax.Array, index: int) -> jax.Array:
+        """Leaf ``index`` of a packed buffer, reshaped (buffer dtype —
+        no cast, so it stays a cheap view under XLA)."""
+        off, n = self.offsets[index], self.sizes[index]
+        return buf[off:off + n].reshape(self.shapes[index])
+
+    def zeros(self) -> jax.Array:
+        return jnp.zeros((self.size,), self.dtype)
+
+
+def make_flatbuf(tree: Any, dtype=jnp.float32, *, align: int = LANE) -> FlatBuffer:
+    """Build the spec from a concrete or abstract (eval_shape'd) pytree."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    shapes = tuple(tuple(l.shape) for l in leaves)
+    dtypes = tuple(jnp.dtype(l.dtype) for l in leaves)
+    sizes = tuple(math.prod(s) if s else 1 for s in shapes)
+    offsets, off = [], 0
+    for n in sizes:
+        offsets.append(off)
+        off += _align(max(n, 1), align)
+    total = _align(max(off, align), LANE * SUBLANE)
+    return FlatBuffer(treedef, shapes, dtypes, sizes, tuple(offsets), total,
+                      jnp.dtype(dtype))
+
+
+_SPEC_CACHE: dict = {}
+
+
+def spec_for(tree: Any, dtype=jnp.float32) -> FlatBuffer:
+    """Memoized ``make_flatbuf``: one spec per (structure, leaf avals).
+
+    Safe under tracing (keys off static shape/dtype metadata only), and
+    the reason eager drivers stop paying a re-flatten every step.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    key = (treedef, tuple((tuple(l.shape), str(l.dtype)) for l in leaves),
+           str(jnp.dtype(dtype)))
+    spec = _SPEC_CACHE.get(key)
+    if spec is None:
+        spec = _SPEC_CACHE[key] = make_flatbuf(tree, dtype)
+    return spec
+
+
+# --------------------------------------------------------------------------
+# Shard geometry: how a flat buffer splits across p devices × R rings
+# --------------------------------------------------------------------------
+
+def shard_geometry(n: int, p: int, num_rings: int = 1,
+                   *, align: int = LANE) -> tuple[int, int]:
+    """(per-ring chunk, padded total) for a length-``n`` buffer split over
+    ``p`` devices × ``num_rings`` independent ring schedules. The chunk is
+    lane-aligned so every shard boundary is a valid Pallas block start."""
+    r = max(num_rings, 1)
+    chunk = _align(-(-n // (p * r * align)) * align if n else align, align)
+    chunk = max(chunk, align)
+    return chunk, p * r * chunk
+
+
+def effective_rings(nbytes: int, num_rings: int = 1,
+                    bucket_bytes: int | None = None, *,
+                    max_rings: int = 32) -> int:
+    """Compose the two overlap knobs: explicit ring count and byte-sized
+    bucketing. ``bucket_bytes`` asks for ceil(nbytes/bucket_bytes)
+    independent schedules; the larger of the two wins (each ring is one
+    bucket chain XLA can overlap with its neighbours).
+
+    The result is capped at ``max_rings`` (default 32): each ring is a
+    fully unrolled ppermute chain, so very large buffers with tiny
+    ``bucket_bytes`` would otherwise explode trace size — past ~32
+    in-flight chains the scheduler has nothing left to overlap anyway.
+    Callers asking for more get buckets of ~nbytes/max_rings instead of
+    the requested size.
+    """
+    r = max(num_rings, 1)
+    if bucket_bytes:
+        r = max(r, -(-int(nbytes) // int(bucket_bytes)))
+    return min(r, max_rings)
+
+
+def shard_size(spec: FlatBuffer, p: int = 1, num_rings: int = 1,
+               bucket_bytes: int | None = None) -> int:
+    """Per-device shard length (= momentum-state length) for a spec."""
+    r = effective_rings(spec.nbytes, num_rings, bucket_bytes)
+    chunk, total = shard_geometry(spec.size, p, r)
+    return total // p

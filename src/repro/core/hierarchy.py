@@ -34,10 +34,20 @@ class SyncConfig:
     esgd_alpha: float = 0.5
     esgd_interval: int = 64
     # which collective implements the intra-client tensor allreduce:
-    # "psum" (XLA-native) or "ring"/"multi_ring"/"tree" (paper-faithful)
+    # "psum" (XLA-native), "ring"/"multi_ring"/"tree" (paper-faithful), or
+    # "scatter_gather" (the separable halves the fused step runs between)
     allreduce_method: str = "psum"
     num_rings: int = 2
-    fsdp: bool = False  # ZeRO-3: params/opt-state also sharded over 'data' 
+    # sharded fused step (default for mpi_sgd): pack grads into the
+    # persistent FlatBuffer, ring reduce-scatter, fused momentum-SGD Pallas
+    # kernel on the local 1/p shard (momentum stays sharded), allgather the
+    # updated params. Collective-explicit drivers only — the GSPMD path
+    # (make_train_step with a mesh) keeps per-leaf updates.
+    fused_update: bool = True
+    # split the flat buffer into ceil(bytes/bucket_bytes) independent ring
+    # schedules (composes with num_rings; see flatbuf.effective_rings)
+    bucket_bytes: Optional[int] = None
+    fsdp: bool = False  # ZeRO-3: params/opt-state also sharded over 'data'
 
     def validate(self, mesh: Mesh) -> None:
         if self.mode not in ("mpi_sgd", "mpi_esgd"):

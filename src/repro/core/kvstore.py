@@ -18,6 +18,12 @@ API the paper's workers use:
 
 MPI types ("sync_mpi"/"async_mpi") only change WHO pushes: the client
 master, after an intra-client tensor allreduce — see core/algorithms.py.
+
+Pushed pytrees are treated as ONE fused object end-to-end: the sync
+barrier accumulates them as packed ``FlatBuffer``s (core/flatbuf.py —
+spec memoized per structure, so there is no per-push re-flatten) and
+unpacks once when the barrier releases, instead of a per-leaf tree_add
+per pusher.
 """
 from __future__ import annotations
 
@@ -28,6 +34,7 @@ from typing import Any, Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import flatbuf
 from repro.optim.sgd import Optimizer
 
 VALID_TYPES = ("local", "dist_sync", "dist_async", "sync_mpi", "async_mpi")
@@ -35,6 +42,15 @@ VALID_TYPES = ("local", "dist_sync", "dist_async", "sync_mpi", "async_mpi")
 
 def _tree_add(a: Any, b: Any) -> Any:
     return jax.tree.map(jnp.add, a, b)
+
+
+@jax.jit
+def _packed_sum(pushes: tuple) -> Any:
+    spec = flatbuf.spec_for(pushes[0])
+    buf = spec.pack(pushes[0])
+    for other in pushes[1:]:
+        buf = buf + spec.pack(other)
+    return spec.unpack(buf)
 
 
 def local_reduce(tensor: list[Any]) -> Any:
@@ -141,13 +157,29 @@ class KVStore:
             pend = self._pending.setdefault(key, [])
             pend.append(agg)
             if len(pend) >= self.expected_pushers:
-                total = pend[0]
-                for other in pend[1:]:
-                    total = _tree_add(total, other)
+                total = self._barrier_sum(pend)
                 del self._pending[key]
                 self._apply(key, total)
         else:
             self._apply(key, agg)
+
+    @staticmethod
+    def _barrier_sum(pend: list) -> Any:
+        """Sum the barrier's pushes as ONE fused flat buffer (single add
+        per pusher instead of per-leaf tree_adds), unpacking once at
+        release. Runs under jit (cached per tree structure / pusher
+        count) so the static-slice packs fuse instead of copying the
+        whole buffer eagerly per leaf. Falls back to tree_add for
+        non-float leaves, which the f32 buffer would not carry exactly."""
+        leaves = jax.tree_util.tree_leaves(pend[0])
+        if len(leaves) > 1 and all(
+            jnp.issubdtype(l.dtype, jnp.floating) for l in leaves
+        ):
+            return _packed_sum(tuple(pend))
+        total = pend[0]
+        for other in pend[1:]:
+            total = _tree_add(total, other)
+        return total
 
     def pull(self, key: Any, num_dst: int = 1) -> list[jax.Array]:
         """Returns the server value broadcast to ``num_dst`` tensor slots."""

@@ -28,7 +28,10 @@ def sgd_momentum_flat(p: jax.Array, v: jax.Array, g: jax.Array,
                       lr: jax.Array, mu: jax.Array, *,
                       block: int | None = None, interpret: bool = True):
     n = p.shape[0]
-    block = block or pick_block(n, 4, rows=5)
+    # VMEM working set: p, v, g in + p, v out + the hp scalar vector, sized
+    # by the widest stream so bf16 params with f32 momentum still fit.
+    widest = max(p.dtype.itemsize, v.dtype.itemsize, g.dtype.itemsize)
+    block = block or pick_block(n, widest, rows=6)
     pad = (-n) % block
     if pad:
         p, v, g = (jnp.pad(x, (0, pad)) for x in (p, v, g))

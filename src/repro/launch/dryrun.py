@@ -37,6 +37,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ARCH_IDS, INPUT_SHAPES, get_config
+from repro.core.compat import set_mesh
 from repro.core.hierarchy import SyncConfig
 from repro.launch import analysis
 from repro.launch.mesh import make_moe_mesh, make_production_mesh, mesh_num_chips
@@ -89,7 +90,8 @@ def lower_module(cfg, shape, mesh: Mesh, sync: SyncConfig, *,
     model = build_model(cfg)
     if shape.kind == "train":
         optimizer = sgd(0.1, momentum=0.9)  # the paper's server optimizer
-        state = make_train_state(model, optimizer, sync, abstract=True)
+        state = make_train_state(model, optimizer, sync, abstract=True,
+                                 mesh=mesh)
         sspecs = state_specs(state, mesh, sync)
         in_batch = model.input_specs(shape)
         if sync.num_clients > 1:
@@ -172,7 +174,7 @@ def lower_one(arch: str, shape_name: str, mesh: Mesh, sync_mode: str,
     # (lowered under the ambient mesh so in-model sharding constraints
     # like shard_batch_dim/maybe_seq_shard resolve axis names)
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         lowered = lower_module(cfg, shape, mesh, sync, microbatch=microbatch)
     t_lower = time.time() - t0
     t0 = time.time()
@@ -186,7 +188,7 @@ def lower_one(arch: str, shape_name: str, mesh: Mesh, sync_mode: str,
         pts = []
         for L in (L1, L2):
             cfg_l = _with_depth(cfg, L)
-            with jax.set_mesh(mesh):
+            with set_mesh(mesh):
                 low = lower_module(cfg_l, shape, mesh, sync,
                                    microbatch=microbatch)
             pts.append(_compile_metrics(low, chips))

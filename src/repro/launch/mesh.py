@@ -3,7 +3,9 @@ jax device state (device count is locked at first jax init)."""
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+from repro.core.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
@@ -15,7 +17,7 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_moe_mesh(*, multi_pod: bool = False) -> Mesh:
@@ -26,13 +28,12 @@ def make_moe_mesh(*, multi_pod: bool = False) -> Mesh:
     iterations (EXPERIMENTS.md §Perf Pair A / roofline notes)."""
     shape = (2, 16, 8, 2) if multi_pod else (16, 8, 2)
     axes = (("pod",) if multi_pod else ()) + ("data", "expert", "tp")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 1, model: int = 1) -> Mesh:
     """Small mesh over however many (host) devices exist — tests/examples."""
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return make_mesh((data, model), ("data", "model"))
 
 
 def mesh_num_chips(mesh: Mesh) -> int:

@@ -3,13 +3,27 @@
 ``make_train_step`` builds the jittable step for both lowerable sync
 modes (core/hierarchy.py):
 
-  mpi_sgd   C=1: one communicator; grads allreduced over every data axis
-            per step (pure-MPI pushpull == tensor allreduce, #servers=0)
+  mpi_sgd   C=1: one communicator; grads synced over every data axis per
+            step (pure-MPI pushpull == tensor allreduce, #servers=0)
   mpi_esgd  C>1: params carry a leading client dim sharded over 'pod';
             vmap gives each client an independent replica whose gradient
             sync happens only over 'data' (intra-client); every INTERVAL
             steps the elastic exchange (eqs. 2/3) crosses 'pod' — the
             only cross-pod traffic.
+
+For ``mpi_sgd`` the DEFAULT sync path (``SyncConfig.fused_update``) is the
+**sharded fused step**: the gradient pytree is packed into a persistent
+``FlatBuffer`` (spec built ONCE here, at ``make_train_state`` time — no
+per-step concatenate), ring reduce-scattered so each device owns a
+fully-reduced 1/p shard, updated by the fused momentum-SGD Pallas kernel
+with momentum state stored sharded (p× optimizer-memory reduction), and
+the updated params ring-allgathered back — the gradient leg waits on
+(p-1)/p·n bytes instead of a full allreduce's 2·(p-1)/p·n. The path is
+collective-explicit: it engages when no mesh is given (single-process
+drivers, shard_map worker programs, vmap emulation — ``axis_name`` names
+the device axis); with a mesh, GSPMD keeps inserting the gradient
+collectives and the per-leaf update is kept so parameter sharding is
+undisturbed.
 
 The optimizer is momentum SGD by default (what the paper ships to the PS);
 state lives in a TrainState pytree so checkpointing is one call.
@@ -26,23 +40,66 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core import flatbuf
 from repro.core.elastic import elastic_exchange_multiclient
 from repro.core.hierarchy import SyncConfig, clientize, clientize_specs
 from repro.models.model import Model
-from repro.optim.sgd import Optimizer
+from repro.optim.sgd import (
+    Optimizer,
+    momentum_shard_init,
+    scatter_update_gather,
+)
 from repro.sharding.rules import batch_pspec, param_specs
 
 
+def fused_path_active(optimizer: Optimizer, sync: SyncConfig,
+                      mesh: Mesh | None = None) -> bool:
+    """Whether the sharded fused step replaces the per-leaf update.
+
+    Requires mpi_sgd (C=1) with a momentum-SGD optimizer whose momentum
+    dtype is the buffer's f32 (an explicit low-precision ``state_dtype``
+    keeps the per-leaf path that honors it), and no ambient mesh: with a
+    mesh, GSPMD owns the gradient collectives and per-leaf updates keep
+    parameter sharding undisturbed. make_train_state and make_train_step
+    must agree, so both call this with the same mesh.
+    """
+    hyper = optimizer.hyper
+    return (sync.fused_update and sync.mode == "mpi_sgd"
+            and sync.num_clients <= 1 and mesh is None
+            and hyper.get("name") == "sgd"
+            and hyper.get("momentum", 0.0) > 0.0
+            and hyper.get("state_dtype") in (None, jnp.float32))
+
+
+def grad_spec(model: Model) -> flatbuf.FlatBuffer:
+    """The persistent FlatBuffer spec for this model's gradient pytree —
+    built once (static lane-aligned offsets) and reused every step."""
+    abstract = jax.eval_shape(model.init, jax.random.key(0))
+    return flatbuf.spec_for(abstract)
+
+
 def make_train_state(model: Model, optimizer: Optimizer, sync: SyncConfig,
-                     rng: jax.Array | None = None, *, abstract: bool = False):
-    """Concrete (or eval_shape'd) initial state."""
+                     rng: jax.Array | None = None, *, abstract: bool = False,
+                     mesh: Mesh | None = None):
+    """Concrete (or eval_shape'd) initial state.
+
+    On the fused path the optimizer state is the flat momentum buffer in
+    local (p=1) geometry; device-sharded drivers (shard_map / vmap
+    emulation) re-init it per device with ``optim.sgd.momentum_shard_init``.
+    """
     rng = jax.random.key(0) if rng is None else rng
+    fused = fused_path_active(optimizer, sync, mesh)
+    spec = grad_spec(model) if fused else None
+    nr = (flatbuf.effective_rings(spec.nbytes, sync.num_rings,
+                                  sync.bucket_bytes) if fused else 1)
 
     def build(rng):
         params = model.init(rng)
+        opt0 = (momentum_shard_init(spec, 1, nr) if fused
+                else optimizer.init(params))
         state = {
             "params": clientize(params, sync.num_clients),
-            "opt": clientize(optimizer.init(params), sync.num_clients),
+            "opt": clientize(opt0, sync.num_clients),
             "step": jnp.zeros((), jnp.int32),
         }
         if sync.mode == "mpi_esgd":
@@ -93,15 +150,23 @@ def param_specs_like(opt_state, base_params, pspecs, C):
 
 
 def make_train_step(model: Model, optimizer: Optimizer, sync: SyncConfig,
-                    mesh: Mesh, *, microbatch: int = 1) -> Callable:
+                    mesh: Mesh, *, microbatch: int = 1,
+                    axis_name: str | None = None) -> Callable:
     """Returns train_step(state, batch) -> (state, metrics).
 
     ``microbatch`` > 1 splits the per-step batch into M accumulation steps
     — the paper's distinction between the *batch* (MXNET's scheduling
     unit) and the algorithmic *mini_batch_size* (§5), and the standard
     memory-term lever (only 1/M of the activations live at once).
+
+    ``axis_name`` names the device axis for the fused sync path when the
+    step runs inside shard_map (real mesh) or vmap (emulation); ``None``
+    means single-process — the fused update still runs (one Pallas grid
+    over the whole flat buffer) with no collective.
     """
     C = sync.num_clients
+    fused = fused_path_active(optimizer, sync, mesh)
+    spec = grad_spec(model) if fused else None
 
     # the gradient accumulator is a while-loop carry: without an explicit
     # constraint GSPMD replicates it (measured: +32 GB/dev on qwen3-4b),
@@ -159,9 +224,54 @@ def make_train_step(model: Model, optimizer: Optimizer, sync: SyncConfig,
         metrics = jax.tree.map(lambda m: m / M, metrics)
         return loss / M, metrics, grads
 
+    def _require_opt_layout(opt):
+        # loud trace-time guard for the one invariant the two factories
+        # share: make_train_state and make_train_step must get the SAME
+        # mesh, or the opt-state layout (flat fused buffer vs per-leaf
+        # pytree) silently disagrees and dies deep inside tree.map.
+        is_flat = isinstance(opt, jax.Array)
+        if fused and not is_flat:
+            raise ValueError(
+                "fused sync path expects the flat momentum buffer, but the "
+                "train state carries a per-leaf opt state — pass the same "
+                "mesh to make_train_state(..., mesh=...) and "
+                "make_train_step(..., mesh)")
+        if fused and is_flat:
+            from repro.core.compat import axis_size
+
+            p = 1 if axis_name is None else axis_size(axis_name)
+            want = flatbuf.shard_size(spec, p, sync.num_rings,
+                                      sync.bucket_bytes)
+            if opt.size != want:
+                raise ValueError(
+                    f"fused momentum shard has {opt.size} elements but the "
+                    f"{p}-way axis geometry needs {want} — per-device state "
+                    "for sharded drivers comes from "
+                    "optim.sgd.momentum_shard_init(spec, p, ...), not from "
+                    "make_train_state's local (p=1) buffer")
+        if not fused and is_flat:
+            raise ValueError(
+                "per-leaf update got a flat fused momentum buffer — pass "
+                "the same mesh to make_train_state(..., mesh=...) and "
+                "make_train_step(..., mesh), or set "
+                "SyncConfig.fused_update=False for both")
+
     def step_c1(state, batch):
+        _require_opt_layout(state["opt"])
         loss, metrics, grads = one_client_grad(state["params"], batch)
-        new_p, new_o = optimizer.update(grads, state["opt"], state["params"])
+        if fused:
+            # reduce-scatter -> fused momentum-SGD Pallas kernel on the
+            # local 1/p shard (sharded momentum) -> allgather new params
+            new_p, new_o = scatter_update_gather(
+                spec, grads, state["params"], state["opt"],
+                jnp.float32(optimizer.hyper["lr"]),
+                jnp.float32(optimizer.hyper["momentum"]),
+                axis_name=axis_name, num_rings=sync.num_rings,
+                bucket_bytes=sync.bucket_bytes,
+                weight_decay=optimizer.hyper.get("weight_decay", 0.0),
+            )
+        else:
+            new_p, new_o = optimizer.update(grads, state["opt"], state["params"])
         return (
             {"params": new_p, "opt": new_o, "step": state["step"] + 1},
             {"loss": loss, **metrics},
@@ -226,7 +336,7 @@ def train_loop(model: Model, optimizer: Optimizer, sync: SyncConfig,
                mesh: Mesh, batches, *, rng=None, log_every: int = 10,
                callback: Optional[Callable] = None):
     """Concrete training driver (examples / smoke scale)."""
-    state = make_train_state(model, optimizer, sync, rng)
+    state = make_train_state(model, optimizer, sync, rng, mesh=mesh)
     step_fn = jax.jit(make_train_step(model, optimizer, sync, mesh))
     history = []
     for i, batch in enumerate(batches):
@@ -238,3 +348,69 @@ def train_loop(model: Model, optimizer: Optimizer, sync: SyncConfig,
             if callback:
                 callback(entry)
     return state, history
+
+
+def main() -> None:  # pragma: no cover (CLI driver; see tests/test_launch.py)
+    """The per-client worker entry point the launcher's emitted
+    ``mpirun ... python -m repro.launch.train`` commands invoke.
+
+    One process == one MPI client (C=1 inside the process; the PS tier
+    glues clients together, so --client/--num-clients/--scheduler are
+    recorded for the job spec but the in-process sync mode is mpi_sgd).
+    Sync knobs arrive as the flags launcher.JobSpec threads through
+    (--fused-update / --no-fused-update / --bucket-bytes) and are lowered
+    via configs.base.TrainSettings.
+    """
+    import argparse
+
+    from repro.configs.base import TrainSettings, get_config, reduced
+    from repro.data.pipeline import DataConfig, TokenPipeline
+    from repro.models.model import build_model
+
+    ap = argparse.ArgumentParser(description="per-client training worker")
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--shape", default="train_4k",
+                    help="job-spec input shape id (recorded)")
+    ap.add_argument("--client", type=int, default=0)
+    ap.add_argument("--num-clients", type=int, default=1)
+    ap.add_argument("--scheduler", default=None,
+                    help="scheduler host:port from the job spec (recorded; "
+                         "the single-process reproduction runs standalone)")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--lr", type=float, default=0.1)
+    ap.add_argument("--momentum", type=float, default=0.9)
+    ap.add_argument("--fused-update", dest="fused_update",
+                    action="store_true", default=True)
+    ap.add_argument("--no-fused-update", dest="fused_update",
+                    action="store_false")
+    ap.add_argument("--bucket-bytes", type=int, default=0)
+    ap.add_argument("--full-size", action="store_true",
+                    help="full architecture (default: reduced smoke config)")
+    args = ap.parse_args()
+
+    settings = TrainSettings(lr=args.lr, momentum=args.momentum,
+                             fused_update=args.fused_update,
+                             bucket_bytes=args.bucket_bytes or None)
+    cfg = get_config(args.arch)
+    if not args.full_size:
+        cfg = reduced(cfg)
+    model = build_model(cfg)
+    sync = settings.sync_config()
+    optimizer = settings.optimizer()
+    pipe = TokenPipeline(DataConfig(
+        seed=0, vocab_size=min(cfg.padded_vocab, 256), seq_len=64,
+        batch_size=8, steps_per_epoch=args.steps, shard=args.client))
+    print(f"[train] client {args.client}/{args.num_clients} arch={cfg.name} "
+          f"shape={args.shape} scheduler={args.scheduler} "
+          f"fused_update={settings.fused_update} "
+          f"bucket_bytes={settings.bucket_bytes}", flush=True)
+    _, hist = train_loop(model, optimizer, sync, None, pipe.epoch(0),
+                         log_every=max(args.steps // 10, 1))
+    for entry in hist:
+        print(f"step {entry['step']:4d} loss {entry['loss']:.4f}", flush=True)
+    print(f"[train] done: {len(hist)} log points, "
+          f"final loss {hist[-1]['loss']:.4f}", flush=True)
+
+
+if __name__ == "__main__":  # pragma: no cover
+    main()

@@ -1,19 +1,42 @@
 """Optimizers, pure-pytree (init/update), mirroring what the paper ships to
 the PS via ``KVStore.set_optimizer``: SGD (+momentum), AdaGrad, AdamW, and
 the Elastic server/client updates (eqs. 2/3) live in core/elastic.py.
+
+Beyond the per-leaf tree.map optimizers, this module owns the **sharded
+fused step** (``scatter_update_gather``): ring reduce-scatter the packed
+flat gradient, run the fused momentum-SGD Pallas kernel on the local 1/p
+shard (momentum state lives sharded — a p× optimizer-memory reduction),
+then ring-allgather the updated params. The gradient leg waits on
+(p-1)/p·n bytes instead of the full allreduce's 2·(p-1)/p·n, and the
+whole update is ONE Pallas grid instead of O(num_leaves) kernels.
 """
 from __future__ import annotations
 
+import types
 from dataclasses import dataclass
-from typing import Any, Callable, NamedTuple
+from functools import partial
+from typing import Any, Callable, Mapping, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro.core import flatbuf
+from repro.core.collectives import (
+    ring_allgather,
+    ring_reduce_scatter,
+    shard_select,
+)
+from repro.core.compat import axis_size
 
 
 class Optimizer(NamedTuple):
     init: Callable[[Any], Any]
     update: Callable[[Any, Any, Any], tuple[Any, Any]]  # (g, state, p) -> (new_p, state)
+    # static metadata (name + hyperparams) so drivers can lower an
+    # optimizer onto its fused-kernel equivalent; empty for custom rules
+    # (read-only default so default-constructed Optimizers can't alias a
+    # shared mutable dict)
+    hyper: Mapping = types.MappingProxyType({})
 
 
 def sgd(lr: float, momentum: float = 0.0, weight_decay: float = 0.0,
@@ -38,7 +61,10 @@ def sgd(lr: float, momentum: float = 0.0, weight_decay: float = 0.0,
         )
         return new_p, new_v
 
-    return Optimizer(init, update)
+    return Optimizer(init, update,
+                     {"name": "sgd", "lr": lr, "momentum": momentum,
+                      "weight_decay": weight_decay,
+                      "state_dtype": state_dtype})
 
 
 def adagrad(lr: float, eps: float = 1e-10) -> Optimizer:
@@ -58,7 +84,7 @@ def adagrad(lr: float, eps: float = 1e-10) -> Optimizer:
         )
         return new_p, new_s
 
-    return Optimizer(init, update)
+    return Optimizer(init, update, {"name": "adagrad", "lr": lr, "eps": eps})
 
 
 def adamw(lr: float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
@@ -93,8 +119,105 @@ def adamw(lr: float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
         new_p = jax.tree.map(step, params, m, v)
         return new_p, {"m": m, "v": v, "t": t}
 
-    return Optimizer(init, update)
+    return Optimizer(init, update, {"name": "adamw", "lr": lr})
 
 
 def get_optimizer(name: str, lr: float, **kw) -> Optimizer:
     return {"sgd": sgd, "adagrad": adagrad, "adamw": adamw}[name](lr, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Sharded fused step: reduce-scatter -> Pallas fused SGD on 1/p -> allgather
+# ---------------------------------------------------------------------------
+
+def momentum_shard_init(spec: flatbuf.FlatBuffer, p: int = 1,
+                        num_rings: int = 1,
+                        bucket_bytes: int | None = None,
+                        dtype=jnp.float32) -> jax.Array:
+    """Zero momentum for one device's shard of the flat buffer (call under
+    vmap/shard_map per device, or with p=1 for the local path)."""
+    return jnp.zeros((flatbuf.shard_size(spec, p, num_rings, bucket_bytes)),
+                     dtype)
+
+
+def scatter_update_gather(spec: flatbuf.FlatBuffer, grads: Any, params: Any,
+                          mom_shard: jax.Array, lr, momentum, *,
+                          axis_name: Optional[str] = None,
+                          num_rings: int = 1,
+                          bucket_bytes: int | None = None,
+                          weight_decay: float = 0.0,
+                          mean: bool = True,
+                          interpret: bool | None = None) -> tuple[Any, jax.Array]:
+    """One fused sync+update step on this device (the paper-faithful MPI
+    worker program; run under shard_map on a mesh or vmap emulation):
+
+      1. pack grads into the persistent flat buffer (static offsets)
+      2. ring reduce-scatter -> this device owns a fully-reduced 1/p shard
+         ((p-1)/p·n gradient-leg bytes — half the full allreduce)
+      3. fused momentum-SGD Pallas kernel on (param shard, momentum shard,
+         grad shard): one grid, momentum stays sharded (p× memory saving)
+      4. ring allgather of the UPDATED param shards -> full new params
+
+    ``axis_name=None`` (or axis of size 1) degenerates to the local fused
+    update: no collective, one Pallas grid over the whole buffer — still a
+    win over O(num_leaves) per-leaf updates.
+
+    Returns ``(new_params_tree, new_momentum_shard)``.
+    """
+    from repro.kernels.common import use_interpret
+    from repro.kernels.fused_sgd.fused_sgd import sgd_momentum_flat
+
+    p = 1 if axis_name is None else axis_size(axis_name)
+    nr = flatbuf.effective_rings(spec.nbytes, num_rings, bucket_bytes)
+    chunk, total = flatbuf.shard_geometry(spec.size, p, nr)
+
+    gbuf = spec.pack(grads)
+    pbuf = spec.pack(params)
+    pad = total - spec.size
+    if pad:
+        gbuf = jnp.pad(gbuf, (0, pad))
+        pbuf = jnp.pad(pbuf, (0, pad))
+
+    if p == 1:
+        g_shard, p_shard = gbuf, pbuf
+    else:
+        g_shard = ring_reduce_scatter(gbuf, axis_name, num_rings=nr)
+        p_shard = shard_select(pbuf, axis_name, num_rings=nr)
+    if mean:
+        g_shard = g_shard / p
+    if weight_decay:
+        g_shard = g_shard + weight_decay * p_shard
+
+    if interpret is None:
+        interpret = use_interpret()
+    new_p_shard, new_mom = sgd_momentum_flat(
+        p_shard, mom_shard, g_shard, lr, momentum, interpret=interpret)
+
+    if p == 1:
+        new_pbuf = new_p_shard
+    else:
+        new_pbuf = ring_allgather(new_p_shard, axis_name, num_rings=nr)
+    return spec.unpack(new_pbuf[:spec.size]), new_mom
+
+
+def flat_sgd(lr: float, momentum: float, spec: flatbuf.FlatBuffer, *,
+             weight_decay: float = 0.0, num_rings: int = 1,
+             bucket_bytes: int | None = None) -> Optimizer:
+    """Drop-in ``Optimizer`` whose update is the fused flat-buffer kernel
+    (local p=1 geometry — the single-process drivers' default mpi_sgd
+    update). State is ONE flat f32 momentum buffer instead of a pytree."""
+    nr = flatbuf.effective_rings(spec.nbytes, num_rings, bucket_bytes)
+
+    def init(params):
+        return momentum_shard_init(spec, 1, nr)
+
+    @jax.jit
+    def update(grads, state, params):
+        return scatter_update_gather(
+            spec, grads, params, state, jnp.float32(lr), jnp.float32(momentum),
+            axis_name=None, num_rings=nr, weight_decay=weight_decay,
+            mean=False)
+
+    return Optimizer(init, update,
+                     {"name": "flat_sgd", "lr": lr, "momentum": momentum,
+                      "weight_decay": weight_decay})

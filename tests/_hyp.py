@@ -1,0 +1,48 @@
+"""Optional-hypothesis shim.
+
+Test modules import ``given``/``settings``/``st`` from here instead of
+from hypothesis directly. When hypothesis is installed the real names
+pass through; when it is not (the CI container has no network), the
+property tests degrade to clean skips while the plain tests in the same
+module still collect and run — instead of the whole module erroring at
+import time and killing collection.
+"""
+from __future__ import annotations
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised in hypothesis-less CI
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Stand-in for ``hypothesis.strategies``: every strategy factory
+        returns None (never drawn from — the test body is skipped)."""
+
+        def __getattr__(self, name):
+            def factory(*args, **kwargs):
+                return None
+
+            return factory
+
+    st = _AnyStrategy()
+
+    def settings(*args, **kwargs):
+        def deco(fn):
+            return fn
+
+        return deco
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            def stub():
+                pytest.skip("hypothesis not installed")
+
+            stub.__name__ = fn.__name__
+            stub.__doc__ = fn.__doc__
+            return stub
+
+        return deco

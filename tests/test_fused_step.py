@@ -1,0 +1,282 @@
+"""Sharded fused-step path: FlatBuffer pack/unpack round-trips, and
+numerical equivalence of ``scatter_update_gather`` (reduce-scatter ->
+Pallas fused momentum-SGD on the local 1/p shard -> allgather) against
+the per-leaf allreduce+SGD baseline under vmap emulation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+from repro.core import collectives as C
+from repro.core import flatbuf as F
+from repro.optim.sgd import momentum_shard_init, scatter_update_gather, sgd
+
+AXIS = "ring"
+
+
+def _tree(seed=0, dtype=jnp.float32):
+    """Odd, lane-unfriendly leaf sizes on purpose."""
+    k = jax.random.key(seed)
+    ks = jax.random.split(k, 4)
+    return {
+        "w": jax.random.normal(ks[0], (13, 7), jnp.float32).astype(dtype),
+        "b": jax.random.normal(ks[1], (5,), jnp.float32).astype(dtype),
+        "deep": {"u": jax.random.normal(ks[2], (3, 11, 2), jnp.float32).astype(dtype),
+                 "s": jax.random.normal(ks[3], (), jnp.float32).astype(dtype)},
+    }
+
+
+# --------------------------------------------------------------------------
+# FlatBuffer substrate
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flatbuf_roundtrip(dtype):
+    t = _tree(dtype=dtype)
+    spec = F.spec_for(t)
+    buf = spec.pack(t)
+    assert buf.shape == (spec.size,) and buf.dtype == jnp.float32
+    assert spec.size % (F.LANE * F.SUBLANE) == 0
+    back = spec.unpack(buf)
+    jax.tree.map(
+        lambda a, b: np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32)),
+        back, t)
+    assert jax.tree.map(lambda l: l.dtype, back) == \
+        jax.tree.map(lambda l: l.dtype, t)
+
+
+def test_flatbuf_spec_is_memoized_and_lane_aligned():
+    t = _tree()
+    spec = F.spec_for(t)
+    assert spec is F.spec_for(jax.tree.map(lambda x: x + 1, t))
+    assert all(off % F.LANE == 0 for off in spec.offsets)
+
+
+def test_flatbuf_leaf_view():
+    t = _tree()
+    spec = F.spec_for(t)
+    buf = spec.pack(t)
+    leaves = jax.tree_util.tree_leaves(t)
+    for i, leaf in enumerate(leaves):
+        np.testing.assert_allclose(
+            np.asarray(spec.leaf_view(buf, i)),
+            np.asarray(leaf, np.float32), rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    sizes=st.lists(st.integers(1, 400), min_size=1, max_size=6),
+    seed=st.integers(0, 2**30),
+)
+def test_flatbuf_roundtrip_property(sizes, seed):
+    k = jax.random.key(seed)
+    tree = {f"l{i}": jax.random.normal(jax.random.fold_in(k, i), (n,))
+            for i, n in enumerate(sizes)}
+    spec = F.make_flatbuf(tree)
+    back = spec.unpack(spec.pack(tree))
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(a, b, rtol=1e-6),
+                 back, tree)
+
+
+@pytest.mark.parametrize("p,nr", [(1, 1), (2, 3), (8, 2)])
+def test_shard_geometry_lane_aligned(p, nr):
+    chunk, total = F.shard_geometry(1024, p, nr)
+    assert chunk % F.LANE == 0
+    assert total == p * nr * chunk
+    assert total >= 1024
+
+
+def test_effective_rings_composes_bucket_bytes():
+    # 4 MB buffer, 1 MB buckets -> 4 rings even if num_rings=2 asked less
+    assert F.effective_rings(4 << 20, 2, 1 << 20) == 4
+    assert F.effective_rings(4 << 20, 8, 1 << 20) == 8
+    assert F.effective_rings(4 << 20, 3, None) == 3
+
+
+# --------------------------------------------------------------------------
+# scatter_update_gather ≡ per-leaf allreduce + momentum SGD
+# --------------------------------------------------------------------------
+
+def _baseline_steps(params, grads_per_dev, lr, mu, steps, p,
+                    state_dtype=None):
+    """Per-leaf reference: mean-allreduce grads, tree.map momentum SGD."""
+    opt = sgd(lr, momentum=mu, state_dtype=state_dtype)
+    st_ = opt.init(params)
+    for s in range(steps):
+        mean_g = jax.tree.map(lambda x: jnp.mean(x[s], 0), grads_per_dev)
+        params, st_ = opt.update(mean_g, st_, params)
+    return params
+
+
+def _fused_steps(spec, params, grads_per_dev, lr, mu, steps, p, *,
+                 num_rings=1, bucket_bytes=None):
+    """vmap-emulated sharded fused step, momentum sharded 1/p."""
+    nr = F.effective_rings(spec.nbytes, num_rings, bucket_bytes)
+    mom = jnp.zeros((p, F.shard_size(spec, p, nr)))
+    stacked_p = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (p,) + x.shape), params)
+
+    def dev_step(g, pp, m):
+        return scatter_update_gather(
+            spec, g, pp, m, jnp.float32(lr), jnp.float32(mu),
+            axis_name=AXIS, num_rings=num_rings, bucket_bytes=bucket_bytes)
+
+    step = jax.vmap(dev_step, axis_name=AXIS)
+    for s in range(steps):
+        g = jax.tree.map(lambda x: x[s], grads_per_dev)
+        stacked_p, mom = step(g, stacked_p, mom)
+    return stacked_p, mom
+
+
+@pytest.mark.parametrize("p", [1, 2, 8])
+def test_scatter_update_gather_equals_per_leaf(p):
+    params = _tree(0)
+    spec = F.spec_for(params)
+    steps = 3
+    k = jax.random.key(42)
+    grads = jax.tree.map(
+        lambda x: jax.random.normal(
+            jax.random.fold_in(k, x.size), (steps, p) + x.shape),
+        params)
+    want = _baseline_steps(params, grads, 0.05, 0.9, steps, p)
+    got, mom = _fused_steps(spec, params, grads, 0.05, 0.9, steps, p)
+    # momentum state stays sharded: 1/p of the padded buffer per device
+    assert mom.shape[1] * p >= spec.size
+    assert mom.shape[1] == F.shard_size(spec, p)
+    for d in range(p):
+        jax.tree.map(
+            lambda g_, w: np.testing.assert_allclose(
+                g_[d], w, rtol=2e-5, atol=2e-6),
+            got, want)
+
+
+@pytest.mark.parametrize("p,num_rings,bucket_bytes",
+                         [(2, 3, None), (8, 1, 512), (4, 2, 1024)])
+def test_scatter_update_gather_ring_and_bucket_variants(p, num_rings,
+                                                        bucket_bytes):
+    params = _tree(1)
+    spec = F.spec_for(params)
+    steps = 2
+    k = jax.random.key(7)
+    grads = jax.tree.map(
+        lambda x: jax.random.normal(
+            jax.random.fold_in(k, x.size), (steps, p) + x.shape),
+        params)
+    want = _baseline_steps(params, grads, 0.1, 0.8, steps, p)
+    got, _ = _fused_steps(spec, params, grads, 0.1, 0.8, steps, p,
+                          num_rings=num_rings, bucket_bytes=bucket_bytes)
+    for d in range(p):
+        jax.tree.map(
+            lambda g_, w: np.testing.assert_allclose(
+                g_[d], w, rtol=2e-5, atol=2e-6),
+            got, want)
+
+
+@pytest.mark.parametrize("p", [2, 8])
+def test_scatter_update_gather_bf16_params_f32_momentum(p):
+    params = _tree(2, dtype=jnp.bfloat16)
+    spec = F.spec_for(params)
+    steps = 2
+    k = jax.random.key(9)
+    grads = jax.tree.map(
+        lambda x: jax.random.normal(
+            jax.random.fold_in(k, x.size), (steps, p) + x.shape,
+            jnp.float32).astype(jnp.bfloat16),
+        params)
+    # baseline keeps f32 momentum, like the flat buffer does
+    want = _baseline_steps(params, grads, 0.05, 0.9, steps, p,
+                           state_dtype=jnp.float32)
+    got, mom = _fused_steps(spec, params, grads, 0.05, 0.9, steps, p)
+    assert mom.dtype == jnp.float32
+    assert jax.tree_util.tree_leaves(got)[0].dtype == jnp.bfloat16
+    for d in range(p):
+        jax.tree.map(
+            lambda g_, w: np.testing.assert_allclose(
+                np.asarray(g_[d], np.float32), np.asarray(w, np.float32),
+                rtol=2e-2, atol=2e-2),
+            got, want)
+
+
+def test_scatter_gather_allreduce_method():
+    p = 8
+    x = jax.random.normal(jax.random.key(3), (p, 731))
+    got = C.emulate(C.allreduce, x, method="scatter_gather", num_rings=2)
+    np.testing.assert_allclose(
+        got, jnp.broadcast_to(jnp.sum(x, 0), got.shape), rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("p,nr", [(2, 2), (8, 3), (5, 2)])
+def test_multi_ring_reduce_scatter_allgather_roundtrip(p, nr):
+    n = 999  # n % p != 0 and n % LANE != 0
+    x = jax.random.normal(jax.random.key(4), (p, n))
+    rs = C.emulate(C.ring_reduce_scatter, x, num_rings=nr)
+    ag = C.emulate(C.ring_allgather, rs, num_rings=nr)
+    for d in range(p):
+        np.testing.assert_allclose(ag[d][:n], jnp.sum(x, 0),
+                                   rtol=3e-5, atol=3e-5)
+    # shard_select picks exactly the slice reduce-scatter left here
+    sel = C.emulate(C.shard_select, ag, num_rings=nr)
+    np.testing.assert_allclose(sel, rs, rtol=1e-6)
+
+
+def test_pushpull_unfused_rejects_ring_method():
+    tree = {"g": jax.random.normal(jax.random.key(5), (4, 50))}
+    with pytest.raises(ValueError):
+        C.emulate(C.tensor_pushpull, tree, fused=False, method="multi_ring")
+    # tree (the actual unfused pattern) and None are accepted
+    out = C.emulate(C.tensor_pushpull, tree, fused=False, method="tree")
+    want = jnp.broadcast_to(jnp.mean(tree["g"], 0), (4, 50))
+    np.testing.assert_allclose(out["g"], want, rtol=2e-5, atol=2e-5)
+
+
+# --------------------------------------------------------------------------
+# The production train step takes the fused path and matches per-leaf
+# --------------------------------------------------------------------------
+
+def test_train_step_fused_matches_per_leaf():
+    import dataclasses
+
+    from repro.configs.base import get_config, reduced
+    from repro.core.hierarchy import SyncConfig
+    from repro.launch.train import (
+        fused_path_active,
+        make_train_state,
+        make_train_step,
+    )
+    from repro.models.model import build_model
+
+    model = build_model(reduced(get_config("qwen2-0.5b")))
+    opt = sgd(0.1, momentum=0.9)
+    k = jax.random.key(0)
+    toks = jax.random.randint(k, (4, 32), 0, 1024)
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1)}
+
+    sync_f = SyncConfig(mode="mpi_sgd", num_clients=1, fused_update=True)
+    sync_l = dataclasses.replace(sync_f, fused_update=False)
+    assert fused_path_active(opt, sync_f, None)
+    assert not fused_path_active(opt, sync_l, None)
+
+    s_f = make_train_state(model, opt, sync_f, jax.random.key(1))
+    s_l = make_train_state(model, opt, sync_l, jax.random.key(1))
+    # fused: ONE flat momentum buffer; per-leaf: a momentum pytree
+    assert isinstance(s_f["opt"], jax.Array) and s_f["opt"].ndim == 1
+
+    # mismatched mesh between the two factories fails loudly, not deep
+    # inside tree.map: per-leaf step fed the fused (flat) opt state
+    bad_step = make_train_step(model, opt, sync_l, None)
+    with pytest.raises(ValueError, match="same mesh"):
+        bad_step(s_f, batch)
+
+    step_f = jax.jit(make_train_step(model, opt, sync_f, None))
+    step_l = jax.jit(make_train_step(model, opt, sync_l, None))
+    for _ in range(3):
+        s_f, m_f = step_f(s_f, batch)
+        s_l, m_l = step_l(s_l, batch)
+    assert float(m_f["loss"]) == pytest.approx(float(m_l["loss"]), rel=1e-4)
+    jax.tree.map(
+        lambda a, b: np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            rtol=2e-5, atol=1e-5),
+        s_f["params"], s_l["params"])

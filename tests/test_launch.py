@@ -46,6 +46,30 @@ def test_emit_scripts(tmp_path):
     assert os.access(tmp_path / "launch_all.sh", os.X_OK)
 
 
+@pytest.mark.slow
+def test_worker_entry_point_runs_launcher_cmd():
+    """The command shape build_job emits (python -m repro.launch.train
+    --arch ... --fused-update --bucket-bytes N) is a real worker: it
+    parses the flags, trains, and reports."""
+    import subprocess
+    import sys
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train",
+         "--arch", "qwen2-0.5b", "--shape", "train_4k",
+         "--client", "0", "--num-clients", "2",
+         "--scheduler", "frontend-0:9091",
+         "--fused-update", "--bucket-bytes", "1048576", "--steps", "4"],
+        env=env, capture_output=True, text=True, timeout=500, cwd=root)
+    assert r.returncode == 0, (r.stdout[-2000:], r.stderr[-2000:])
+    assert "fused_update=True" in r.stdout
+    assert "bucket_bytes=1048576" in r.stdout
+    assert "[train] done" in r.stdout
+
+
 # --- HLO collective parsing ---------------------------------------------------
 
 HLO_SNIPPET = """

@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.checkpoint.checkpoint import restore_checkpoint, save_checkpoint
 from repro.core import cost_model
