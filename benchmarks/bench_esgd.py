@@ -6,13 +6,20 @@ Claims to reproduce:
   * dist-ESGD (12 independent elastic workers) is the worst of the ESGD
     family despite similar epoch times (fig. 13's dist-ESGD curve):
     per-worker mini-batches are small and every worker drifts
+
+Plus the flat-substrate accounting (BENCH_esgd_flat.json): exchange wire
+bytes and kernel-launch counts for the per-leaf vs packed FlatBuffer
+elastic exchange — the quantities the SyncEngine refactor changes.
 """
 from __future__ import annotations
+
+import json
+import os
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit
+from benchmarks.common import emit, jaxpr_primitives, ppermute_bytes, timeit
 from repro.core import cost_model
 from benchmarks.bench_convergence import (
     MPI_IB,
@@ -89,6 +96,119 @@ def run() -> None:
     emit("esgd/int8_compressed_push", hq.epoch_time * 1e6,
          f"final_acc={hq.metrics[-1]:.3f};uncompressed_acc={h1.metrics[-1]:.3f};"
          f"ps_wire=0.26x")
+
+    run_flat_accounting()
+
+
+def run_flat_accounting(p: int = 8, num_leaves: int = 24,
+                        leaf: int = 16384) -> None:
+    """The SyncEngine refactor's claim, measured: the mpi-ESGD exchange
+    as per-leaf tree.maps vs ONE packed FlatBuffer + fused Pallas kernel.
+
+      * kernel launches / program size: jaxpr primitive counts of the
+        C-client exchange (the per-leaf path runs O(num_leaves) update
+        chains; the flat path runs ONE pallas_call)
+      * exchange wire bytes (per device, per exchange): ppermute operand
+        bytes of the cross-pod leg — per-leaf allreduce of every leaf's
+        difference vs the sharded flat leg's reduce-scatter of the packed
+        differences + allgather of the updated center shards; the DIFF
+        leg (what eq. (2) waits on) drops (p−1)/p·n vs 2·(p−1)/p·n
+      * wall µs per exchange (vmap emulation on CPU)
+
+    Writes BENCH_esgd_flat.json next to BENCH_fused_step.json.
+    """
+    from repro.core import flatbuf as F
+    from repro.core.collectives import ring_allreduce
+    from repro.core.elastic import (
+        elastic_exchange_multiclient,
+        elastic_exchange_multiclient_flat,
+        elastic_exchange_sharded,
+    )
+
+    C = 4  # clients for the stacked (single-process) exchange
+    tree = {f"layer{i}": jax.random.normal(jax.random.key(i), (leaf,))
+            for i in range(num_leaves)}
+    stacked = jax.tree.map(
+        lambda l: jnp.broadcast_to(l[None], (C,) + l.shape) * 1.01, tree)
+    spec = F.spec_for(tree)
+    n_bytes = spec.payload * 4
+    alpha = 0.5 / C
+
+    # -- kernel-launch / program-size counts (stacked exchange) -------------
+    leaf_fn = lambda w, c: elastic_exchange_multiclient(w, c, alpha)
+    flat_fn = lambda w, c: elastic_exchange_multiclient_flat(w, c, alpha)
+    counts = {}
+    for name, fn in (("per_leaf", leaf_fn), ("flat", flat_fn)):
+        prims = [n for n, _ in jaxpr_primitives(fn, stacked, tree)]
+        counts[name] = {
+            "pallas_calls": prims.count("pallas_call"),
+            "total_eqns": len(prims),
+            "update_arith_eqns": sum(prims.count(op)
+                                     for op in ("sub", "mul", "add")),
+        }
+
+    # -- wall time (jitted, vmap emulation is not needed: stacked) ----------
+    us_leaf = timeit(jax.jit(leaf_fn), stacked, tree, iters=3)
+    us_flat = timeit(jax.jit(flat_fn), stacked, tree, iters=3)
+
+    # -- cross-pod wire bytes (per device, per exchange) --------------------
+    AXIS = "pod"
+
+    def dev_per_leaf(w, c):
+        # per-leaf cross-pod leg: allreduce every leaf's difference, then
+        # apply eqs. (2)/(3) per leaf — 2·(p−1)/p·n on the diff leg
+        diffs = jax.tree.map(lambda a, b: a - b, w, c)
+        summed = jax.tree.map(lambda d: ring_allreduce(d, AXIS), diffs)
+        new_c = jax.tree.map(lambda cc, d: cc + alpha * d, c, summed)
+        new_w = jax.tree.map(lambda ww, d: ww - alpha * d, w, diffs)
+        return new_w, new_c
+
+    def dev_flat(w, c):
+        return elastic_exchange_sharded(spec, w, c, alpha, axis_name=AXIS)
+
+    by_leaf = ppermute_bytes(dev_per_leaf, tree, tree, axis=AXIS, p=p)
+    by_flat = ppermute_bytes(dev_flat, tree, tree, axis=AXIS, p=p)
+    # the diff leg = bytes eq. (2) has to wait on
+    buf = spec.pack(tree)
+    from repro.core.collectives import ring_reduce_scatter
+
+    diff_base = ppermute_bytes(lambda b: ring_allreduce(b, AXIS), buf,
+                               axis=AXIS, p=p)
+    diff_flat = ppermute_bytes(lambda b: ring_reduce_scatter(b, AXIS), buf,
+                               axis=AXIS, p=p)
+
+    emit("esgd_flat/per_leaf_exchange", us_leaf,
+         f"pallas_calls={counts['per_leaf']['pallas_calls']};"
+         f"eqns={counts['per_leaf']['total_eqns']};"
+         f"wire_bytes_per_dev={by_leaf}")
+    emit("esgd_flat/flat_exchange", us_flat,
+         f"pallas_calls={counts['flat']['pallas_calls']};"
+         f"eqns={counts['flat']['total_eqns']};"
+         f"wire_bytes_per_dev={by_flat};"
+         f"diff_leg_ratio={diff_flat/diff_base:.3f}")
+
+    result = {
+        "p": p,
+        "clients_stacked": C,
+        "num_leaves": num_leaves,
+        "payload_bytes": n_bytes,
+        "us_per_exchange": {"per_leaf": us_leaf, "flat": us_flat},
+        "kernel_launches": counts,
+        "exchange_wire_bytes_per_dev": {
+            "per_leaf_allreduce": by_leaf,
+            "flat_sharded": by_flat,
+        },
+        "diff_leg_bytes_per_dev": {
+            "allreduce_baseline": diff_base,
+            "reduce_scatter": diff_flat,
+            "ratio": diff_flat / diff_base,
+        },
+    }
+    out = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_esgd_flat.json")
+    with open(out, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"# wrote {out}")
 
 
 if __name__ == "__main__":

@@ -28,7 +28,7 @@ import os
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, timeit
+from benchmarks.common import emit, ppermute_bytes as _ppermute_bytes, timeit
 from repro.core import collectives as C
 from repro.core import cost_model
 from repro.core import flatbuf as F
@@ -41,33 +41,10 @@ AXIS = "ring"
 
 
 def ppermute_bytes(fn, *args) -> int:
-    """Exact per-device wire bytes: trace the PER-DEVICE function under an
-    abstract p-way axis (vmap's batching rule would rewrite ppermute into
-    local shuffles) and sum ppermute operand sizes, recursing into
-    sub-jaxprs."""
-    closed = jax.make_jaxpr(fn, axis_env=[(AXIS, P)])(*args)
-
-    def walk(jaxpr) -> int:
-        total = 0
-        for eqn in jaxpr.eqns:
-            if eqn.primitive.name == "ppermute":
-                total += sum(v.aval.size * v.aval.dtype.itemsize
-                             for v in eqn.invars)
-            for val in eqn.params.values():
-                for sub in _subjaxprs(val):
-                    total += walk(sub)
-        return total
-
-    def _subjaxprs(val):
-        if hasattr(val, "jaxpr"):      # ClosedJaxpr
-            yield val.jaxpr
-        elif hasattr(val, "eqns"):     # Jaxpr
-            yield val
-        elif isinstance(val, (list, tuple)):
-            for v in val:
-                yield from _subjaxprs(v)
-
-    return walk(closed.jaxpr)
+    """Exact per-device wire bytes under this bench's p-way axis (trace
+    the PER-DEVICE function — vmap's batching rule would rewrite
+    ppermute into local shuffles)."""
+    return _ppermute_bytes(fn, *args, axis=AXIS, p=P)
 
 
 def _grad_tree(p: int):

@@ -27,3 +27,44 @@ def timeit(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     ROWS.append((name, us_per_call, derived))
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def jaxpr_primitives(fn: Callable, *args, axis: str | None = None,
+                     p: int = 1) -> list:
+    """Flat list of (primitive_name, eqn) across the jaxpr and every
+    sub-jaxpr of ``fn(*args)``, optionally traced under an abstract
+    ``p``-way named axis (so per-device collective programs keep their
+    ``ppermute``s instead of vmap rewriting them into local shuffles)."""
+    env = [(axis, p)] if axis else []
+    closed = jax.make_jaxpr(fn, axis_env=env)(*args)
+
+    def _subjaxprs(val):
+        if hasattr(val, "jaxpr"):      # ClosedJaxpr
+            yield val.jaxpr
+        elif hasattr(val, "eqns"):     # Jaxpr
+            yield val
+        elif isinstance(val, (list, tuple)):
+            for v in val:
+                yield from _subjaxprs(v)
+
+    def walk(jaxpr):
+        out = []
+        for eqn in jaxpr.eqns:
+            out.append((eqn.primitive.name, eqn))
+            for val in eqn.params.values():
+                for sub in _subjaxprs(val):
+                    out += walk(sub)
+        return out
+
+    return walk(closed.jaxpr)
+
+
+def ppermute_bytes(fn: Callable, *args, axis: str = "ring",
+                   p: int = 8) -> int:
+    """Exact per-device wire bytes of a per-device collective program:
+    sum of ppermute operand sizes under an abstract p-way axis."""
+    return sum(
+        sum(v.aval.size * v.aval.dtype.itemsize for v in eqn.invars)
+        for name, eqn in jaxpr_primitives(fn, *args, axis=axis, p=p)
+        if name == "ppermute"
+    )

@@ -3,7 +3,13 @@ layout, pods emulated via the leading client dim) doing local sync-SGD
 with lazy elastic exchange — the paper's path to cluster-wide scaling —
 vs fully-synchronous mpi-SGD at the same token budget.
 
+Both the single-process multiclient step (vmap over the client dim) and
+the shard_map production driver (``--driver shard``: grads inside the
+mapped per-device step, explicit ring collectives, device == client) run
+the same flat-substrate math — losses match to float tolerance.
+
   PYTHONPATH=src python examples/esgd_multipod.py [--steps 80]
+  PYTHONPATH=src python examples/esgd_multipod.py --driver shard
 """
 import argparse
 
@@ -13,16 +19,23 @@ import jax.numpy as jnp
 from repro.configs.base import get_config, reduced
 from repro.core.hierarchy import SyncConfig, declientize
 from repro.data import DataConfig, TokenPipeline
+from repro.launch import shard_driver
 from repro.launch.train import make_train_state, make_train_step
 from repro.models import build_model
 from repro.optim import sgd
 
 
-def run_mode(model, sync, pipes, steps, lr):
+def run_mode(model, sync, pipes, steps, lr, driver="vmap"):
     optimizer = sgd(lr, momentum=0.9)
-    state = make_train_state(model, optimizer, sync, jax.random.key(0))
-    step = jax.jit(make_train_step(model, optimizer, sync, None))
     C = sync.num_clients
+    if driver == "shard" and C > 1:
+        state = shard_driver.make_driver_state(model, optimizer, sync, C,
+                                               jax.random.key(0))
+        step = jax.jit(shard_driver.make_emulated_step(
+            model, optimizer, sync, C))
+    else:
+        state = make_train_state(model, optimizer, sync, jax.random.key(0))
+        step = jax.jit(make_train_step(model, optimizer, sync, None))
     losses = []
     for i in range(steps):
         batches = [p.batch_at(0, i) for p in pipes]
@@ -41,6 +54,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=80)
     ap.add_argument("--interval", type=int, default=8)
+    ap.add_argument("--driver", choices=("vmap", "shard"), default="vmap",
+                    help="'shard': the shard_map production driver "
+                         "(launch/shard_driver.py, emulated axis)")
     args = ap.parse_args()
 
     cfg = reduced(get_config("qwen2-0.5b"))
@@ -57,12 +73,12 @@ def main() -> None:
         model, SyncConfig(mode="mpi_sgd", num_clients=1), pipes,
         args.steps, lr=0.1)
     print("== mpi-ESGD (2 clients, elastic exchange every "
-          f"{args.interval} steps) ==")
+          f"{args.interval} steps, driver={args.driver}) ==")
     esgd_losses, _ = run_mode(
         model,
         SyncConfig(mode="mpi_esgd", num_clients=2, esgd_alpha=0.5,
                    esgd_interval=args.interval),
-        pipes, args.steps, lr=0.1)
+        pipes, args.steps, lr=0.1, driver=args.driver)
 
     print(f"\n{'step':>5s} {'mpi_sgd':>8s} {'mpi_esgd':>9s}")
     for i in range(0, args.steps, 10):

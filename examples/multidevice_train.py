@@ -45,7 +45,9 @@ def main() -> None:
                       esgd_interval=4)
     sync.validate(mesh)
 
-    state = make_train_state(model, optimizer, sync, jax.random.key(0))
+    # same mesh for both factories: the GSPMD path keeps per-leaf layouts
+    state = make_train_state(model, optimizer, sync, jax.random.key(0),
+                             mesh=mesh)
     sspecs = state_specs(state, mesh, sync)
     sh = lambda specs: jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
                                     is_leaf=lambda x: isinstance(x, P))

@@ -189,6 +189,9 @@ class TrainSettings:
     # sharded fused step: reduce-scatter -> shard-local fused momentum-SGD
     # Pallas kernel (sharded momentum) -> allgather (launch/train.py)
     fused_update: bool = True
+    # flat elastic leg: the ESGD exchange packed through the FlatBuffer
+    # + ONE fused Pallas kernel instead of per-leaf tree.maps
+    flat_exchange: bool = True
     bucket_bytes: Optional[int] = None
     fsdp: bool = False
     microbatch: int = 1
@@ -200,7 +203,8 @@ class TrainSettings:
             mode=self.sync_mode, num_clients=self.num_clients,
             esgd_alpha=self.esgd_alpha, esgd_interval=self.esgd_interval,
             allreduce_method=self.allreduce_method, num_rings=self.num_rings,
-            fused_update=self.fused_update, bucket_bytes=self.bucket_bytes,
+            fused_update=self.fused_update, flat_exchange=self.flat_exchange,
+            bucket_bytes=self.bucket_bytes,
             fsdp=self.fsdp,
         )
 

@@ -29,7 +29,7 @@ from functools import partial
 from repro.core import cost_model, flatbuf
 from repro.core.client import group_workers
 from repro.core.collectives import tensor_allreduce, emulate
-from repro.core.elastic import elastic_client_update
+from repro.core.elastic import elastic_client_packed, elastic_client_update
 from repro.core.kvstore import KVStore
 from repro.core.scheduler import AsyncEngine, StalenessTracker, UnitTiming
 from repro.optim.sgd import Optimizer, flat_sgd, sgd
@@ -59,6 +59,10 @@ class AlgoConfig:
     # fused flat-buffer optimizer step (optim.sgd.flat_sgd): one Pallas
     # grid over the packed gradient instead of per-leaf tree.map updates
     fused_update: bool = True
+    # flat elastic leg: eqs. (2)/(3) on the packed FlatBuffer through the
+    # fused exchange kernel (both the KVStore server rule and the local
+    # client update) instead of per-leaf tree.maps
+    flat_exchange: bool = True
     bucket_bytes: Optional[int] = None
 
     @property
@@ -295,7 +299,8 @@ def _run_esgd(cfg, init_fn, grad_fn, eval_fn, make_pipeline) -> History:
     params0 = init_fn(jax.random.key(cfg.seed))
     kv = KVStore.create("async_mpi" if cfg.mode == "mpi_esgd" else "dist_async",
                         num_workers=cfg.num_workers, num_servers=cfg.num_servers,
-                        num_clients=C, compress_push=cfg.compress_push)
+                        num_clients=C, compress_push=cfg.compress_push,
+                        flat_exchange=cfg.flat_exchange)
     kv.init("centers", params0)
     kv.set_elastic(cfg.esgd_alpha)
 
@@ -330,9 +335,15 @@ def _run_esgd(cfg, init_fn, grad_fn, eval_fn, make_pipeline) -> History:
         if it % cfg.esgd_interval == 0:
             old_center = kv.value("centers")
             kv.push("centers", client_params[unit])      # Elastic1 on server
-            client_params[unit] = elastic_client_update(  # Elastic2 locally
-                client_params[unit], old_center, cfg.esgd_alpha
-            )
+            if cfg.flat_exchange:
+                # Elastic2 on the packed FlatBuffer: one fused launch
+                client_params[unit] = elastic_client_packed(
+                    client_params[unit], old_center, cfg.esgd_alpha
+                )
+            else:
+                client_params[unit] = elastic_client_update(  # per-leaf ref
+                    client_params[unit], old_center, cfg.esgd_alpha
+                )
             wire = cfg.model_bytes / (3.9 if cfg.compress_push else 1.0)
             comm_cost += cost_model.ps_pushpull_time(
                 wire, 1, cfg.num_servers, cfg.net)

@@ -14,13 +14,28 @@ At production scale (launch/train.py) the same math runs across the
 a leading client dim, the centers are a co-sharded pytree, and the lazy
 exchange is the only cross-pod communication — the paper's
 communication-avoiding path to cluster-wide scaling.
+
+Two substrates implement the exchange:
+
+  per-leaf  ``jax.tree.map`` of the f32 update over every leaf — the
+            readable reference (this file's top half)
+  flat      the whole pytree packed ONCE through ``core.flatbuf`` and a
+            single fused Pallas kernel applying eqs. (2)+(3) in one HBM
+            pass (``elastic_exchange_packed`` / ``_multiclient_flat``),
+            plus the sharded cross-pod leg (``elastic_exchange_sharded``)
+            that ring reduce-scatters the packed differences so the
+            exchange waits on (p−1)/p·n bytes instead of an allreduce's
+            2·(p−1)/p·n — the default since the SyncEngine refactor
 """
 from __future__ import annotations
 
-from typing import Any
+from functools import partial
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro.core import flatbuf
 
 
 def elastic_server_update(center: Any, client_params: Any, alpha: float) -> Any:
@@ -76,3 +91,157 @@ def elastic_exchange_multiclient(
         client_params, center,
     )
     return new_params, new_center
+
+
+# ---------------------------------------------------------------------------
+# Flat substrate: the exchange as ONE packed buffer + ONE fused kernel
+# ---------------------------------------------------------------------------
+
+def _quant_roundtrip(buf: jax.Array) -> jax.Array:
+    """The int8 wire model on ONE packed buffer (kernels/quant_bucket):
+    quantize + dequantize = what the receiving end of a compressed push
+    sees. The single place the packed wire form is defined."""
+    from repro.kernels.common import use_interpret
+    from repro.kernels.quant_bucket.quant_bucket import (
+        dequantize_flat, quantize_flat)
+
+    interpret = use_interpret()
+    codes, scales = quantize_flat(buf, interpret=interpret)
+    return dequantize_flat(codes, scales, buf.shape[0], interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("compress",))
+def elastic_exchange_packed(params: Any, center: Any, alpha,
+                            *, compress: bool = False) -> tuple[Any, Any]:
+    """Eqs. (2)+(3) on the WHOLE pytree as one packed FlatBuffer.
+
+    Pack w and w̃ (static lane-aligned offsets, spec memoized per tree
+    structure), run the fused Pallas kernel once — one HBM pass, one
+    launch — and unpack. Zero per-leaf tree.map updates; the per-leaf
+    reference is ``elastic_exchange``.
+
+    ``compress=True`` int8 block-quantizes the packed w buffer first
+    (kernels/quant_bucket) — the PS-push wire form — so the exchange
+    sees exactly what a compressed push delivers.
+    """
+    from repro.kernels.fused_elastic.fused_elastic import elastic_exchange_flat
+
+    spec_w = flatbuf.spec_for(params)
+    spec_c = flatbuf.spec_for(center)
+    w = spec_w.pack(params)
+    c = spec_c.pack(center)
+    if compress:
+        w = _quant_roundtrip(w)
+    new_w, new_c = elastic_exchange_flat(w, c, jnp.asarray(alpha, jnp.float32))
+    return spec_w.unpack(new_w), spec_c.unpack(new_c)
+
+
+@jax.jit
+def elastic_client_packed(params: Any, center: Any, alpha) -> Any:
+    """Eq. (3) only, on the packed FlatBuffer: the client's local half of
+    the exchange (the server half runs remotely — e.g. the KVStore's
+    elastic rule), one fused pass, nothing extra written."""
+    from repro.kernels.fused_elastic.fused_elastic import elastic_client_flat
+
+    spec_w = flatbuf.spec_for(params)
+    spec_c = flatbuf.spec_for(center)
+    new_w = elastic_client_flat(
+        spec_w.pack(params), spec_c.pack(center),
+        jnp.asarray(alpha, jnp.float32))
+    return spec_w.unpack(new_w)
+
+
+@jax.jit
+def elastic_server_packed(pushed: Any, center: Any, alpha) -> Any:
+    """Eq. (2) only, on the packed FlatBuffer: the server rule applied to
+    a pushed w — one fused pass, only the new center written."""
+    from repro.kernels.fused_elastic.fused_elastic import elastic_server_flat
+
+    spec_w = flatbuf.spec_for(pushed)
+    spec_c = flatbuf.spec_for(center)
+    new_c = elastic_server_flat(
+        spec_w.pack(pushed), spec_c.pack(center),
+        jnp.asarray(alpha, jnp.float32))
+    return spec_c.unpack(new_c)
+
+
+@jax.jit
+def quantize_packed(tree: Any) -> Any:
+    """int8 wire roundtrip of the packed FlatBuffer: what a compressed PS
+    push delivers to the server (kernels/quant_bucket on the ONE packed
+    buffer instead of per-leaf codes)."""
+    spec = flatbuf.spec_for(tree)
+    return spec.unpack(_quant_roundtrip(spec.pack(tree)))
+
+
+@jax.jit
+def elastic_exchange_multiclient_flat(
+    client_params: Any, center: Any, alpha
+) -> tuple[Any, Any]:
+    """Flat-substrate ``elastic_exchange_multiclient``: vmap-pack the C
+    client replicas into one (C, size) buffer, run ONE fused Pallas
+    kernel for every client's eq. (3) and the summed eq. (2) center
+    move, vmap-unpack. Matches the per-leaf version leaf-for-leaf (both
+    compute in f32)."""
+    from repro.kernels.fused_elastic.fused_elastic import elastic_exchange_flat_mc
+
+    one = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape[1:], l.dtype), client_params
+    )
+    spec_w = flatbuf.spec_for(one)
+    spec_c = flatbuf.spec_for(center)
+    stacked = jax.vmap(spec_w.pack)(client_params)
+    cbuf = spec_c.pack(center)
+    new_w, new_c = elastic_exchange_flat_mc(
+        stacked, cbuf, jnp.asarray(alpha, jnp.float32)
+    )
+    return jax.vmap(spec_w.unpack)(new_w), spec_c.unpack(new_c)
+
+
+def elastic_exchange_sharded(spec: flatbuf.FlatBuffer, params: Any,
+                             center: Any, alpha, *,
+                             axis_name: Optional[str],
+                             num_rings: int = 1,
+                             bucket_bytes: Optional[int] = None,
+                             interpret: Optional[bool] = None
+                             ) -> tuple[Any, Any]:
+    """Per-device cross-pod exchange (run inside shard_map over the pod
+    axis, or vmap emulation): this device IS one client, the center is
+    replicated.
+
+      1. pack w and w̃; ONE Pallas pass computes eq. (3)'s new w AND the
+         f32 difference (w − w̃)
+      2. ring reduce-scatter the differences over the pod axis — the
+         exchange leg waits on (p−1)/p·n bytes instead of an allreduce's
+         2·(p−1)/p·n, the same cut the gradient path took in PR 1
+      3. fused eq. (2) kernel on this device's 1/p shard of the center
+      4. ring allgather of the updated center shards
+
+    ``axis_name=None`` (or axis of size 1) degenerates to the local
+    exchange: both kernels over the whole buffer, no collective.
+    Returns ``(new_params, new_center)``, both full trees.
+    """
+    from repro.core.collectives import (
+        ring_allgather, ring_reduce_scatter, shard_select)
+    from repro.core.compat import axis_size
+    from repro.kernels.fused_elastic.fused_elastic import (
+        elastic_center_flat, elastic_client_diff_flat)
+
+    p = 1 if axis_name is None else axis_size(axis_name)
+    nr = flatbuf.effective_rings(spec.nbytes, num_rings, bucket_bytes)
+    _, total = flatbuf.shard_geometry(spec.size, p, nr)
+    w = flatbuf.pack_padded(spec, params, total)
+    c = flatbuf.pack_padded(spec, center, total)
+    alpha = jnp.asarray(alpha, jnp.float32)
+
+    new_w, diff = elastic_client_diff_flat(w, c, alpha, interpret=interpret)
+    if p == 1:
+        diff_sum, c_shard = diff, c
+    else:
+        diff_sum = ring_reduce_scatter(diff, axis_name, num_rings=nr)
+        c_shard = shard_select(c, axis_name, num_rings=nr)
+    new_c_shard = elastic_center_flat(c_shard, diff_sum, alpha,
+                                      interpret=interpret)
+    new_c = (new_c_shard if p == 1
+             else ring_allgather(new_c_shard, axis_name, num_rings=nr))
+    return spec.unpack(new_w[:spec.size]), spec.unpack(new_c[:spec.size])

@@ -158,6 +158,15 @@ def effective_rings(nbytes: int, num_rings: int = 1,
     return min(r, max_rings)
 
 
+def pack_padded(spec: FlatBuffer, tree: Any, total: int) -> jax.Array:
+    """``spec.pack`` zero-extended to a ring geometry's ``total`` length
+    (the shared prologue of every sharded flat-buffer leg)."""
+    buf = spec.pack(tree)
+    if total > spec.size:
+        buf = jnp.pad(buf, (0, total - spec.size))
+    return buf
+
+
 def shard_size(spec: FlatBuffer, p: int = 1, num_rings: int = 1,
                bucket_bytes: int | None = None) -> int:
     """Per-device shard length (= momentum-state length) for a spec."""

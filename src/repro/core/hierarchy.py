@@ -44,6 +44,13 @@ class SyncConfig:
     # updated params. Collective-explicit drivers only — the GSPMD path
     # (make_train_step with a mesh) keeps per-leaf updates.
     fused_update: bool = True
+    # flat elastic leg (default for mpi_esgd): the exchange packs params
+    # and centers through the FlatBuffer and runs ONE fused Pallas kernel
+    # (eqs. 2+3 in one HBM pass) instead of O(num_leaves) tree.maps; the
+    # shard_map driver additionally ring reduce-scatters the packed
+    # differences over the pod axis. False = per-leaf reference. Like
+    # fused_update, collective-explicit (no-mesh) drivers only.
+    flat_exchange: bool = True
     # split the flat buffer into ceil(bytes/bucket_bytes) independent ring
     # schedules (composes with num_rings; see flatbuf.effective_rings)
     bucket_bytes: Optional[int] = None

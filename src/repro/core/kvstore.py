@@ -23,7 +23,10 @@ Pushed pytrees are treated as ONE fused object end-to-end: the sync
 barrier accumulates them as packed ``FlatBuffer``s (core/flatbuf.py —
 spec memoized per structure, so there is no per-push re-flatten) and
 unpacks once when the barrier releases, instead of a per-leaf tree_add
-per pusher.
+per pusher. The elastic server rule (``set_elastic``) rides the same
+substrate: eq. (2) runs as one packed buffer through the fused Pallas
+exchange kernel (``flat_exchange=True``, the default), and compressed
+pushes quantize that single packed buffer instead of per-leaf codes.
 """
 from __future__ import annotations
 
@@ -90,7 +93,7 @@ class KVStore:
 
     def __init__(self, kv_type: str, *, num_workers: int = 1,
                  num_servers: int = 1, num_clients: Optional[int] = None,
-                 compress_push: bool = False):
+                 compress_push: bool = False, flat_exchange: bool = True):
         if kv_type not in VALID_TYPES:
             raise ValueError(f"kv_type must be one of {VALID_TYPES}")
         self.kv_type = kv_type
@@ -99,6 +102,10 @@ class KVStore:
         self.num_clients = num_clients or num_workers
         # beyond-paper: int8 block-quantize the PS leg (kernels/quant_bucket)
         self.compress_push = compress_push
+        # elastic server rule as ONE packed buffer + ONE fused Pallas
+        # kernel (core.elastic.elastic_exchange_packed) instead of
+        # per-leaf tree.maps; False = per-leaf reference
+        self.flat_exchange = flat_exchange
         self.pushed_bytes = 0
         self.pushed_bytes_uncompressed = 0
         self.is_mpi = kv_type.endswith("_mpi")
@@ -145,12 +152,23 @@ class KVStore:
                   for l in jax.tree_util.tree_leaves(agg))
         self.pushed_bytes_uncompressed += raw
         if self.compress_push:
-            from repro.kernels.quant_bucket.ops import (
-                compress, compressed_bytes, decompress)
+            if self._flat_elastic_ok(agg):
+                # the wire form is ONE packed int8 buffer + per-block
+                # scales, quantized per push (so the sync barrier sums
+                # exactly what crossed the wire, like the per-leaf path)
+                from repro.core.elastic import quantize_packed
+                from repro.kernels.quant_bucket.quant_bucket import QBLOCK
 
-            codes, scales = compress(agg)
-            self.pushed_bytes += compressed_bytes(agg)
-            agg = decompress(codes, scales, agg)  # what the server receives
+                payload = flatbuf.spec_for(agg).payload
+                self.pushed_bytes += payload + -(-payload // QBLOCK) * 4
+                agg = quantize_packed(agg)  # what the server receives
+            else:
+                from repro.kernels.quant_bucket.ops import (
+                    compress, compressed_bytes, decompress)
+
+                codes, scales = compress(agg)
+                self.pushed_bytes += compressed_bytes(agg)
+                agg = decompress(codes, scales, agg)  # what the server sees
         else:
             self.pushed_bytes += raw
         if self.is_sync:
@@ -211,11 +229,31 @@ class KVStore:
             self._values[key] = new_v
             self._opt_state[key] = new_s
         elif rule.kind == "elastic":
-            from repro.core.elastic import elastic_server_update
+            if self._flat_elastic_ok(pushed):
+                # Elastic1 on the packed FlatBuffer: one fused Pallas
+                # launch for the whole tree, only the center written
+                # (compressed pushes were already quantized, per push,
+                # in the packed domain by push())
+                from repro.core.elastic import elastic_server_packed
 
-            self._values[key] = elastic_server_update(
-                self._values[key], pushed, rule.alpha
-            )
+                self._values[key] = elastic_server_packed(
+                    pushed, self._values[key], rule.alpha
+                )
+            else:
+                from repro.core.elastic import elastic_server_update
+
+                self._values[key] = elastic_server_update(
+                    self._values[key], pushed, rule.alpha
+                )
+
+    def _flat_elastic_ok(self, tree: Any) -> bool:
+        """Whether the packed fused exchange can serve this push: elastic
+        rule, flat path enabled, and every leaf a float the f32 buffer
+        carries."""
+        if not (self.flat_exchange and self._rule.kind == "elastic"):
+            return False
+        return all(jnp.issubdtype(l.dtype, jnp.floating)
+                   for l in jax.tree_util.tree_leaves(tree))
 
     # -- introspection ---------------------------------------------------------
     def value(self, key: Any) -> jax.Array:

@@ -1,0 +1,177 @@
+"""SyncEngine: the strategy layer behind every lowerable sync mode.
+
+``launch/train.py`` and ``launch/shard_driver.py`` used to branch inline
+on HOW a step syncs and updates (``fused_path_active`` / ``step_c1`` /
+``step_multiclient``). That choice is now made ONCE, here, and the step
+builders drive a single interface:
+
+  init_opt             optimizer-state layout (flat momentum buffer vs
+                       per-leaf pytree)
+  update               the sync+update leg (packed reduce-scatter ->
+                       fused Pallas kernel -> allgather, vs per-leaf
+                       ``Optimizer.update``)
+  exchange_multiclient the elastic leg for C stacked replicas (packed
+                       single-launch kernel vs per-leaf tree.maps)
+  check_opt_layout     loud trace-time guard that the state factory and
+                       the step factory agreed on the layout
+
+Selection (``make_sync_engine``):
+
+  flat update    ``fused_update`` and momentum-SGD with f32 state and NO
+                 ambient mesh — both ``mpi_sgd`` (C=1, collectives over
+                 ``axis_name``) and ``mpi_esgd`` (per-client local
+                 geometry; the step vmaps ``update`` over the client dim)
+  flat exchange  ``flat_exchange`` and no mesh — independent of the
+                 update substrate, so e.g. an AdamW run still gets the
+                 packed elastic leg
+
+With an ambient mesh GSPMD owns the collectives: both legs stay per-leaf
+so parameter sharding is undisturbed.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import flatbuf
+from repro.core.elastic import (
+    elastic_exchange_multiclient,
+    elastic_exchange_multiclient_flat,
+)
+from repro.core.hierarchy import SyncConfig
+from repro.optim.sgd import (
+    Optimizer,
+    momentum_shard_init,
+    scatter_update_gather,
+)
+
+
+def flat_update_supported(optimizer: Optimizer, sync: SyncConfig,
+                          mesh=None) -> bool:
+    """Whether the packed fused-kernel update can replace per-leaf.
+
+    Requires a momentum-SGD optimizer whose momentum dtype is the
+    buffer's f32 (an explicit low-precision ``state_dtype`` keeps the
+    per-leaf path that honors it), and no ambient mesh: with a mesh,
+    GSPMD owns the gradient collectives and per-leaf updates keep
+    parameter sharding undisturbed.
+    """
+    hyper = optimizer.hyper
+    return (sync.fused_update and sync.mode in ("mpi_sgd", "mpi_esgd")
+            and mesh is None
+            and hyper.get("name") == "sgd"
+            and hyper.get("momentum", 0.0) > 0.0
+            and hyper.get("state_dtype") in (None, jnp.float32))
+
+
+def flat_exchange_active(sync: SyncConfig, mesh=None) -> bool:
+    """Whether the elastic leg runs packed (FlatBuffer + fused kernel)."""
+    return sync.mode == "mpi_esgd" and sync.flat_exchange and mesh is None
+
+
+@dataclass(frozen=True)
+class SyncEngine:
+    """Per-leaf strategy (the GSPMD / custom-optimizer path)."""
+
+    optimizer: Optimizer
+    sync: SyncConfig
+    axis_name: Optional[str] = None
+    flat_exchange: bool = False
+    spec: Optional[flatbuf.FlatBuffer] = None
+
+    fused = False  # class attr, not a field: FlatEngine overrides
+
+    # -- update leg ---------------------------------------------------------
+    def init_opt(self, params: Any) -> Any:
+        return self.optimizer.init(params)
+
+    def update(self, grads: Any, opt_state: Any, params: Any):
+        return self.optimizer.update(grads, opt_state, params)
+
+    def check_opt_layout(self, opt_state: Any, num_clients: int = 1) -> None:
+        if isinstance(opt_state, jax.Array):
+            raise ValueError(
+                "per-leaf update got a flat fused momentum buffer — pass "
+                "the same mesh to make_train_state(..., mesh=...) and "
+                "make_train_step(..., mesh), or set "
+                "SyncConfig.fused_update=False for both")
+
+    # -- elastic leg --------------------------------------------------------
+    def exchange_multiclient(self, client_params: Any, center: Any, alpha):
+        """One elastic exchange over C stacked replicas (eqs. 2+3)."""
+        if self.flat_exchange:
+            return elastic_exchange_multiclient_flat(client_params, center,
+                                                     alpha)
+        return elastic_exchange_multiclient(client_params, center, alpha)
+
+
+@dataclass(frozen=True)
+class FlatEngine(SyncEngine):
+    """Flat-buffer strategy: the whole gradient pytree rides one packed
+    buffer through ring collectives and ONE fused Pallas kernel, with
+    momentum stored as the flat (sharded) buffer."""
+
+    fused = True
+
+    def _num_rings(self) -> int:
+        return flatbuf.effective_rings(self.spec.nbytes, self.sync.num_rings,
+                                       self.sync.bucket_bytes)
+
+    def init_opt(self, params: Any) -> jax.Array:
+        # local (p=1) geometry; device-sharded drivers re-init per device
+        # with momentum_shard_init(spec, p, ...)
+        return momentum_shard_init(self.spec, 1, self._num_rings())
+
+    def update(self, grads: Any, opt_state: jax.Array, params: Any):
+        hyper = self.optimizer.hyper
+        return scatter_update_gather(
+            self.spec, grads, params, opt_state,
+            jnp.float32(hyper["lr"]), jnp.float32(hyper["momentum"]),
+            axis_name=self.axis_name, num_rings=self.sync.num_rings,
+            bucket_bytes=self.sync.bucket_bytes,
+            weight_decay=hyper.get("weight_decay", 0.0) or 0.0,
+        )
+
+    def check_opt_layout(self, opt_state: Any, num_clients: int = 1) -> None:
+        from repro.core.compat import axis_size
+
+        if not isinstance(opt_state, jax.Array):
+            raise ValueError(
+                "fused sync path expects the flat momentum buffer, but the "
+                "train state carries a per-leaf opt state — pass the same "
+                "mesh to make_train_state(..., mesh=...) and "
+                "make_train_step(..., mesh)")
+        # C>1 vmaps the update per client, so each client is p=1 geometry
+        p = (1 if (self.axis_name is None or num_clients > 1)
+             else axis_size(self.axis_name))
+        want = flatbuf.shard_size(self.spec, p, self.sync.num_rings,
+                                  self.sync.bucket_bytes)
+        per_client = opt_state.size // max(num_clients, 1)
+        if per_client != want:
+            raise ValueError(
+                f"fused momentum shard has {per_client} elements but the "
+                f"{p}-way axis geometry needs {want} — per-device state "
+                "for sharded drivers comes from "
+                "optim.sgd.momentum_shard_init(spec, p, ...), not from "
+                "make_train_state's local (p=1) buffer")
+
+
+def make_sync_engine(optimizer: Optimizer, sync: SyncConfig, mesh=None, *,
+                     axis_name: Optional[str] = None,
+                     spec: Optional[flatbuf.FlatBuffer] = None) -> SyncEngine:
+    """Resolve the strategy for (optimizer, sync, mesh) once.
+
+    ``spec`` (the param-tree FlatBuffer) is required whenever a flat leg
+    engages; callers that might need it build it with
+    ``launch.train.grad_spec``.
+    """
+    fused = flat_update_supported(optimizer, sync, mesh)
+    flat_ex = flat_exchange_active(sync, mesh)
+    if fused and spec is None:
+        raise ValueError("flat-update engine needs the FlatBuffer spec")
+    cls = FlatEngine if fused else SyncEngine
+    return cls(optimizer, sync, axis_name=axis_name, flat_exchange=flat_ex,
+               spec=spec)

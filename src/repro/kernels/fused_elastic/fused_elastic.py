@@ -1,10 +1,26 @@
-"""Fused Elastic-SGD exchange kernel (paper eqs. (2)+(3)).
+"""Fused Elastic-SGD exchange kernels (paper eqs. (2)+(3)).
 
 Both updates read the same difference (w − w̃); unfused they cost four
-HBM passes (read w, read w̃ twice each, write both). The fused kernel
-streams one (block,) tile of each operand through VMEM and writes both
-outputs in a single pass — the memory-bound optimizer-update analogue of
-the paper's fused GPU reduction.
+HBM passes (read w, read w̃ twice each, write both). Each kernel here
+streams one tile of every operand through VMEM and writes exactly the
+outputs its caller needs in a single pass — the memory-bound
+optimizer-update analogue of the paper's fused GPU reduction. Variants:
+
+  elastic_exchange_flat     one (w, c) pair -> (new_w, new_c)
+  elastic_client_flat       eq. (3) only -> new_w (the client's local
+                            half when the server half runs remotely)
+  elastic_server_flat       eq. (2) only -> new_c (the KVStore rule)
+  elastic_client_diff_flat  eq. (3) + the raw f32 difference (w − w̃):
+                            the difference is what the sharded cross-pod
+                            leg ring reduce-scatters
+  elastic_center_flat       eq. (2) on a device's 1/p center shard with
+                            the reduce-scattered difference sum
+  elastic_exchange_flat_mc  C stacked client replicas against one shared
+                            center: the multi-client EASGD generalization
+                            w̃ += α Σ_c (w_c − w̃), w_c −= α (w_c − w̃)
+
+``interpret`` defaults to ``kernels.common.use_interpret()`` (compiled
+on TPU, interpreted elsewhere) like every other kernel in the tree.
 """
 from __future__ import annotations
 
@@ -12,45 +28,161 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.common import pick_block
+from repro.kernels.common import pick_block, use_interpret
+
+
+def _flat_call(kernel, inputs, out_dtypes, alpha, *, block=None,
+               interpret=None, rows=4):
+    """Shared 1D launcher: pad (N,) operands to a block multiple, grid
+    the kernel over tiles with the replicated alpha scalar first."""
+    if interpret is None:
+        interpret = use_interpret()
+    n = inputs[0].shape[0]
+    block = block or pick_block(n, 4, rows=rows)
+    pad = (-n) % block
+    if pad:
+        inputs = [jnp.pad(x, (0, pad)) for x in inputs]
+    np_ = n + pad
+    alpha = jnp.asarray(alpha, jnp.float32).reshape(1)
+    outs = pl.pallas_call(
+        kernel,
+        grid=(np_ // block,),
+        in_specs=[pl.BlockSpec((1,), lambda i: (0,))]
+        + [pl.BlockSpec((block,), lambda i: (i,))] * len(inputs),
+        out_specs=[pl.BlockSpec((block,), lambda i: (i,))] * len(out_dtypes),
+        out_shape=[jax.ShapeDtypeStruct((np_,), dt) for dt in out_dtypes],
+        interpret=interpret,
+    )(alpha, *inputs)
+    if len(out_dtypes) == 1:
+        return outs[0][:n]
+    return tuple(o[:n] for o in outs)
 
 
 def _elastic_kernel(alpha_ref, w_ref, c_ref, w_out_ref, c_out_ref):
     w = w_ref[...].astype(jnp.float32)
     c = c_ref[...].astype(jnp.float32)
-    alpha = alpha_ref[0]
-    diff = alpha * (w - c)
+    diff = alpha_ref[0] * (w - c)
     w_out_ref[...] = (w - diff).astype(w_out_ref.dtype)
     c_out_ref[...] = (c + diff).astype(c_out_ref.dtype)
 
 
 def elastic_exchange_flat(w: jax.Array, c: jax.Array, alpha: jax.Array, *,
-                          block: int | None = None, interpret: bool = True):
+                          block: int | None = None,
+                          interpret: bool | None = None):
     """w, c: (N,) -> (new_w, new_c)."""
-    n = w.shape[0]
-    block = block or pick_block(n, 4, rows=4)
+    return _flat_call(_elastic_kernel, [w, c], [w.dtype, c.dtype], alpha,
+                      block=block, interpret=interpret, rows=4)
+
+
+def _elastic_client_kernel(alpha_ref, w_ref, c_ref, w_out_ref):
+    w = w_ref[...].astype(jnp.float32)
+    c = c_ref[...].astype(jnp.float32)
+    w_out_ref[...] = (w - alpha_ref[0] * (w - c)).astype(w_out_ref.dtype)
+
+
+def elastic_client_flat(w: jax.Array, c: jax.Array, alpha: jax.Array, *,
+                        block: int | None = None,
+                        interpret: bool | None = None):
+    """Eq. (3) only: -> new_w, nothing else written."""
+    return _flat_call(_elastic_client_kernel, [w, c], [w.dtype], alpha,
+                      block=block, interpret=interpret, rows=3)
+
+
+def _elastic_server_kernel(alpha_ref, w_ref, c_ref, c_out_ref):
+    w = w_ref[...].astype(jnp.float32)
+    c = c_ref[...].astype(jnp.float32)
+    c_out_ref[...] = (c + alpha_ref[0] * (w - c)).astype(c_out_ref.dtype)
+
+
+def elastic_server_flat(w: jax.Array, c: jax.Array, alpha: jax.Array, *,
+                        block: int | None = None,
+                        interpret: bool | None = None):
+    """Eq. (2) only: -> new_c, nothing else written."""
+    return _flat_call(_elastic_server_kernel, [w, c], [c.dtype], alpha,
+                      block=block, interpret=interpret, rows=3)
+
+
+def _elastic_client_diff_kernel(alpha_ref, w_ref, c_ref, w_out_ref,
+                                d_out_ref):
+    w = w_ref[...].astype(jnp.float32)
+    c = c_ref[...].astype(jnp.float32)
+    diff = w - c
+    w_out_ref[...] = (w - alpha_ref[0] * diff).astype(w_out_ref.dtype)
+    d_out_ref[...] = diff
+
+
+def elastic_client_diff_flat(w: jax.Array, c: jax.Array, alpha: jax.Array, *,
+                             block: int | None = None,
+                             interpret: bool | None = None):
+    """Eq. (3) plus the raw f32 difference in ONE pass: returns
+    (new_w, w − w̃). The difference is the sharded cross-pod leg's
+    payload (ring reduce-scattered over the pod axis)."""
+    return _flat_call(_elastic_client_diff_kernel, [w, c],
+                      [w.dtype, jnp.float32], alpha,
+                      block=block, interpret=interpret, rows=4)
+
+
+def _elastic_center_kernel(alpha_ref, c_ref, ds_ref, c_out_ref):
+    c = c_ref[...].astype(jnp.float32)
+    ds = ds_ref[...].astype(jnp.float32)
+    c_out_ref[...] = (c + alpha_ref[0] * ds).astype(c_out_ref.dtype)
+
+
+def elastic_center_flat(c: jax.Array, diff_sum: jax.Array, alpha: jax.Array,
+                        *, block: int | None = None,
+                        interpret: bool | None = None):
+    """Eq. (2) on this device's 1/p center shard, fed the ring
+    reduce-scattered Σ_c (w_c − w̃) shard."""
+    return _flat_call(_elastic_center_kernel, [c, diff_sum], [c.dtype],
+                      alpha, block=block, interpret=interpret, rows=3)
+
+
+def _elastic_mc_kernel(alpha_ref, w_ref, c_ref, w_out_ref, c_out_ref):
+    w = w_ref[...].astype(jnp.float32)   # (C, block)
+    c = c_ref[...].astype(jnp.float32)   # (1, block)
+    alpha = alpha_ref[0]
+    diff = w - c
+    w_out_ref[...] = (w - alpha * diff).astype(w_out_ref.dtype)
+    c_out_ref[...] = (
+        c + alpha * jnp.sum(diff, axis=0, keepdims=True)
+    ).astype(c_out_ref.dtype)
+
+
+def elastic_exchange_flat_mc(w: jax.Array, c: jax.Array, alpha: jax.Array, *,
+                             block: int | None = None,
+                             interpret: bool | None = None):
+    """w: (C, N) stacked client replicas, c: (N,) shared center.
+
+    One HBM pass for the whole multi-client exchange: every client's
+    eq. (3) update AND the summed eq. (2) center move, all from the same
+    pre-update differences. Returns (new_w (C, N), new_c (N,)).
+    """
+    if interpret is None:
+        interpret = use_interpret()
+    C, n = w.shape
+    block = block or pick_block(n, 4, rows=2 * C + 3)
     pad = (-n) % block
     if pad:
-        w = jnp.pad(w, (0, pad))
+        w = jnp.pad(w, ((0, 0), (0, pad)))
         c = jnp.pad(c, (0, pad))
     np_ = n + pad
     alpha = jnp.asarray(alpha, jnp.float32).reshape(1)
     new_w, new_c = pl.pallas_call(
-        _elastic_kernel,
+        _elastic_mc_kernel,
         grid=(np_ // block,),
         in_specs=[
-            pl.BlockSpec((1,), lambda i: (0,)),  # alpha, replicated per tile
-            pl.BlockSpec((block,), lambda i: (i,)),
-            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((C, block), lambda i: (0, i)),
+            pl.BlockSpec((1, block), lambda i: (0, i)),
         ],
         out_specs=[
-            pl.BlockSpec((block,), lambda i: (i,)),
-            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((C, block), lambda i: (0, i)),
+            pl.BlockSpec((1, block), lambda i: (0, i)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((np_,), w.dtype),
-            jax.ShapeDtypeStruct((np_,), c.dtype),
+            jax.ShapeDtypeStruct((C, np_), w.dtype),
+            jax.ShapeDtypeStruct((1, np_), c.dtype),
         ],
         interpret=interpret,
-    )(alpha, w, c)
-    return new_w[:n], new_c[:n]
+    )(alpha, w, c.reshape(1, np_))
+    return new_w[:, :n], new_c[0, :n]

@@ -1,4 +1,12 @@
-"""jit'd pytree-level wrapper for the fused elastic exchange."""
+"""jit'd pytree-level wrapper for the fused elastic exchange.
+
+This is the PER-LEAF kernel variant (one fused Pallas pass per leaf):
+each leaf still saves the unfused path's four HBM passes, but the
+exchange remains O(num_leaves) kernel launches. The packed single-launch
+variants — the default elastic path since the FlatBuffer refactor — live
+in ``core.elastic`` (``elastic_exchange_packed`` and friends), which
+pack the whole pytree through ``core.flatbuf`` first.
+"""
 from __future__ import annotations
 
 from functools import partial
@@ -7,19 +15,15 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.common import use_interpret
 from repro.kernels.fused_elastic.fused_elastic import elastic_exchange_flat
 
 
 @jax.jit
 def elastic_exchange_fused(params: Any, center: Any, alpha: jax.Array):
     """Apply eqs. (2)+(3) leaf-wise with one fused pass per leaf."""
-    interpret = use_interpret()
 
     def one(w, c):
-        nw, nc = elastic_exchange_flat(
-            w.reshape(-1), c.reshape(-1), alpha, interpret=interpret
-        )
+        nw, nc = elastic_exchange_flat(w.reshape(-1), c.reshape(-1), alpha)
         return nw.reshape(w.shape), nc.reshape(c.shape)
 
     pairs = jax.tree.map(one, params, center)

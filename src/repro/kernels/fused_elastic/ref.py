@@ -1,4 +1,4 @@
-"""Oracle: unfused eqs. (2)/(3) — mirrors core/elastic.py on flat arrays."""
+"""Oracles: unfused eqs. (2)/(3) — mirror core/elastic.py on flat arrays."""
 import jax.numpy as jnp
 
 
@@ -6,3 +6,12 @@ def elastic_exchange_ref(w, c, alpha):
     w32, c32 = w.astype(jnp.float32), c.astype(jnp.float32)
     diff = alpha * (w32 - c32)
     return (w32 - diff).astype(w.dtype), (c32 + diff).astype(c.dtype)
+
+
+def elastic_exchange_mc_ref(w, c, alpha):
+    """w: (C, N) replicas, c: (N,) center — the multi-client EASGD rule."""
+    w32, c32 = w.astype(jnp.float32), c.astype(jnp.float32)
+    diff = w32 - c32[None]
+    new_w = (w32 - alpha * diff).astype(w.dtype)
+    new_c = (c32 + alpha * jnp.sum(diff, axis=0)).astype(c.dtype)
+    return new_w, new_c

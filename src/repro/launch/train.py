@@ -11,18 +11,26 @@ modes (core/hierarchy.py):
             steps the elastic exchange (eqs. 2/3) crosses 'pod' — the
             only cross-pod traffic.
 
-For ``mpi_sgd`` the DEFAULT sync path (``SyncConfig.fused_update``) is the
-**sharded fused step**: the gradient pytree is packed into a persistent
-``FlatBuffer`` (spec built ONCE here, at ``make_train_state`` time — no
-per-step concatenate), ring reduce-scattered so each device owns a
-fully-reduced 1/p shard, updated by the fused momentum-SGD Pallas kernel
-with momentum state stored sharded (p× optimizer-memory reduction), and
-the updated params ring-allgathered back — the gradient leg waits on
-(p-1)/p·n bytes instead of a full allreduce's 2·(p-1)/p·n. The path is
-collective-explicit: it engages when no mesh is given (single-process
-drivers, shard_map worker programs, vmap emulation — ``axis_name`` names
-the device axis); with a mesh, GSPMD keeps inserting the gradient
-collectives and the per-leaf update is kept so parameter sharding is
+HOW each leg syncs is no longer decided here: ``core.sync_engine``
+resolves the strategy once (``make_sync_engine``) and the step drives
+its interface. On the default no-mesh path BOTH modes ride the
+flat-buffer substrate:
+
+  * the gradient/update leg packs into a persistent ``FlatBuffer`` (spec
+    built ONCE at trace time — no per-step concatenate), ring
+    reduce-scatters, runs the fused momentum-SGD Pallas kernel on the
+    local 1/p shard (momentum sharded: p× optimizer-memory reduction),
+    and ring-allgathers updated params — (p-1)/p·n gradient-leg bytes
+    instead of a full allreduce's 2·(p-1)/p·n;
+  * the elastic leg packs params and centers and runs ONE fused Pallas
+    kernel for eqs. (2)+(3) (one HBM pass, one launch) instead of
+    O(num_leaves) tree.maps.
+
+The paths are collective-explicit: they engage when no mesh is given
+(single-process drivers, shard_map worker programs — see
+launch/shard_driver.py — and vmap emulation; ``axis_name`` names the
+device axis). With a mesh, GSPMD keeps inserting the gradient
+collectives and the per-leaf legs are kept so parameter sharding is
 undisturbed.
 
 The optimizer is momentum SGD by default (what the paper ships to the PS);
@@ -30,10 +38,6 @@ state lives in a TrainState pytree so checkpointing is one call.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
-from dataclasses import dataclass
-from functools import partial
 from typing import Any, Callable, Optional
 
 import jax
@@ -41,34 +45,33 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import flatbuf
-from repro.core.elastic import elastic_exchange_multiclient
-from repro.core.hierarchy import SyncConfig, clientize, clientize_specs
-from repro.models.model import Model
-from repro.optim.sgd import (
-    Optimizer,
-    momentum_shard_init,
-    scatter_update_gather,
+from repro.core.hierarchy import (
+    SyncConfig,
+    clientize,
+    clientize_specs,
+    should_elastic_sync,
 )
+from repro.core.sync_engine import (
+    flat_exchange_active,
+    flat_update_supported,
+    make_sync_engine,
+)
+from repro.models.model import Model
+from repro.optim.sgd import Optimizer
 from repro.sharding.rules import batch_pspec, param_specs
 
 
 def fused_path_active(optimizer: Optimizer, sync: SyncConfig,
                       mesh: Mesh | None = None) -> bool:
-    """Whether the sharded fused step replaces the per-leaf update.
+    """Whether the flat fused update replaces the per-leaf update.
 
-    Requires mpi_sgd (C=1) with a momentum-SGD optimizer whose momentum
-    dtype is the buffer's f32 (an explicit low-precision ``state_dtype``
-    keeps the per-leaf path that honors it), and no ambient mesh: with a
-    mesh, GSPMD owns the gradient collectives and per-leaf updates keep
-    parameter sharding undisturbed. make_train_state and make_train_step
-    must agree, so both call this with the same mesh.
+    Back-compat shim over ``core.sync_engine.flat_update_supported`` —
+    since the SyncEngine refactor it covers mpi_esgd (C>1) too, where
+    each client's local update is the p=1 fused kernel.
+    make_train_state and make_train_step must agree, so both call this
+    with the same mesh.
     """
-    hyper = optimizer.hyper
-    return (sync.fused_update and sync.mode == "mpi_sgd"
-            and sync.num_clients <= 1 and mesh is None
-            and hyper.get("name") == "sgd"
-            and hyper.get("momentum", 0.0) > 0.0
-            and hyper.get("state_dtype") in (None, jnp.float32))
+    return flat_update_supported(optimizer, sync, mesh)
 
 
 def grad_spec(model: Model) -> flatbuf.FlatBuffer:
@@ -78,25 +81,32 @@ def grad_spec(model: Model) -> flatbuf.FlatBuffer:
     return flatbuf.spec_for(abstract)
 
 
+def _engine_spec(model: Model, optimizer: Optimizer, sync: SyncConfig,
+                 mesh: Mesh | None):
+    """The FlatBuffer spec, when any flat leg will engage (else None)."""
+    if (flat_update_supported(optimizer, sync, mesh)
+            or flat_exchange_active(sync, mesh)):
+        return grad_spec(model)
+    return None
+
+
 def make_train_state(model: Model, optimizer: Optimizer, sync: SyncConfig,
                      rng: jax.Array | None = None, *, abstract: bool = False,
                      mesh: Mesh | None = None):
     """Concrete (or eval_shape'd) initial state.
 
     On the fused path the optimizer state is the flat momentum buffer in
-    local (p=1) geometry; device-sharded drivers (shard_map / vmap
-    emulation) re-init it per device with ``optim.sgd.momentum_shard_init``.
+    local (p=1) geometry — one per client when C>1; device-sharded
+    drivers (shard_map / vmap emulation) re-init it per device with
+    ``optim.sgd.momentum_shard_init``.
     """
     rng = jax.random.key(0) if rng is None else rng
-    fused = fused_path_active(optimizer, sync, mesh)
-    spec = grad_spec(model) if fused else None
-    nr = (flatbuf.effective_rings(spec.nbytes, sync.num_rings,
-                                  sync.bucket_bytes) if fused else 1)
+    engine = make_sync_engine(optimizer, sync, mesh,
+                              spec=_engine_spec(model, optimizer, sync, mesh))
 
     def build(rng):
         params = model.init(rng)
-        opt0 = (momentum_shard_init(spec, 1, nr) if fused
-                else optimizer.init(params))
+        opt0 = engine.init_opt(params)
         state = {
             "params": clientize(params, sync.num_clients),
             "opt": clientize(opt0, sync.num_clients),
@@ -112,7 +122,12 @@ def make_train_state(model: Model, optimizer: Optimizer, sync: SyncConfig,
 
 
 def state_specs(state: Any, mesh: Mesh, sync: SyncConfig) -> Any:
-    """PartitionSpecs for a TrainState (params rules + client dim)."""
+    """PartitionSpecs for a TrainState (params rules + client dim).
+
+    Optimizer state that mirrors the param tree (per-leaf momentum)
+    shares the param specs; anything else (flat fused buffers, custom
+    states) is replicated.
+    """
     C = sync.num_clients
     base_params = state["params"]
     if C > 1:
@@ -122,7 +137,7 @@ def state_specs(state: Any, mesh: Mesh, sync: SyncConfig) -> Any:
     pspecs = param_specs(base_params, mesh, fsdp=sync.fsdp)
     out = {
         "params": clientize_specs(pspecs, C),
-        "opt": clientize_specs(param_specs_like(state["opt"], base_params, pspecs, C), C)
+        "opt": clientize_specs(pspecs, C)
         if _opt_matches(state["opt"], base_params)
         else jax.tree.map(lambda _: P(), state["opt"]),
         "step": P(),
@@ -140,66 +155,35 @@ def _opt_matches(opt_state: Any, params: Any) -> bool:
         return False
 
 
-def param_specs_like(opt_state, base_params, pspecs, C):
-    """Optimizer state mirrors param tree (momentum) -> same specs."""
-    if C > 1:
-        opt_state = jax.tree.map(
-            lambda l: jax.ShapeDtypeStruct(l.shape[1:], l.dtype), opt_state
-        )
-    return jax.tree.map(lambda s: s, pspecs)
+def make_grad_fn(model: Model, microbatch: int = 1,
+                 pin: Optional[Callable] = None) -> Callable:
+    """Build ``(params, batch) -> (loss, metrics, grads)`` for one client.
 
+    ``microbatch`` > 1 splits the per-step batch into M accumulation
+    steps — the paper's distinction between the *batch* (MXNET's
+    scheduling unit) and the algorithmic *mini_batch_size* (§5), and the
+    standard memory-term lever (only 1/M of the activations live at
+    once). ``pin`` optionally constrains the accumulator's sharding.
 
-def make_train_step(model: Model, optimizer: Optimizer, sync: SyncConfig,
-                    mesh: Mesh, *, microbatch: int = 1,
-                    axis_name: str | None = None) -> Callable:
-    """Returns train_step(state, batch) -> (state, metrics).
-
-    ``microbatch`` > 1 splits the per-step batch into M accumulation steps
-    — the paper's distinction between the *batch* (MXNET's scheduling
-    unit) and the algorithmic *mini_batch_size* (§5), and the standard
-    memory-term lever (only 1/M of the activations live at once).
-
-    ``axis_name`` names the device axis for the fused sync path when the
-    step runs inside shard_map (real mesh) or vmap (emulation); ``None``
-    means single-process — the fused update still runs (one Pallas grid
-    over the whole flat buffer) with no collective.
+    Shared by launch/train.py and launch/shard_driver.py so the mapped
+    per-device step computes grads with exactly the single-process math.
     """
-    C = sync.num_clients
-    fused = fused_path_active(optimizer, sync, mesh)
-    spec = grad_spec(model) if fused else None
-
-    # the gradient accumulator is a while-loop carry: without an explicit
-    # constraint GSPMD replicates it (measured: +32 GB/dev on qwen3-4b),
-    # so pin it to the params' sharding when a mesh is known
-    acc_shardings = None
-    if mesh is not None and C <= 1 and microbatch > 1:
-        abstract = jax.eval_shape(model.init, jax.random.key(0))
-        acc_shardings = jax.tree.map(
-            lambda s: NamedSharding(mesh, s),
-            param_specs(abstract, mesh, fsdp=sync.fsdp),
-        )
-
-    def _pin(grads):
-        if acc_shardings is None:
-            return grads
-        return jax.tree.map(
-            jax.lax.with_sharding_constraint, grads, acc_shardings
-        )
+    pin = pin or (lambda g: g)
 
     def single_grad(params, batch):
-        (loss, metrics), grads = jax.value_and_grad(model.loss_fn, has_aux=True)(
-            params, batch
-        )
+        (loss, metrics), grads = jax.value_and_grad(
+            model.loss_fn, has_aux=True)(params, batch)
         return loss, metrics, grads
 
-    def one_client_grad(params, batch):
-        if microbatch <= 1:
-            return single_grad(params, batch)
-        M = microbatch
+    if microbatch <= 1:
+        return single_grad
+    M = microbatch
+
+    def accum_grad(params, batch):
         mb = jax.tree.map(
             lambda a: a.reshape((M, a.shape[0] // M) + a.shape[1:]), batch
         )
-        g0 = _pin(jax.tree.map(
+        g0 = pin(jax.tree.map(
             lambda p: jnp.zeros(p.shape, jnp.float32), params
         ))
         m0 = jax.eval_shape(lambda b: single_grad(params, b)[1],
@@ -209,7 +193,7 @@ def make_train_step(model: Model, optimizer: Optimizer, sync: SyncConfig,
         def body(carry, mbatch):
             loss_acc, met_acc, g_acc = carry
             loss, metrics, grads = single_grad(params, mbatch)
-            g_acc = _pin(jax.tree.map(
+            g_acc = pin(jax.tree.map(
                 lambda a, g: a + g.astype(jnp.float32), g_acc, grads
             ))
             met_acc = jax.tree.map(jnp.add, met_acc, metrics)
@@ -224,54 +208,47 @@ def make_train_step(model: Model, optimizer: Optimizer, sync: SyncConfig,
         metrics = jax.tree.map(lambda m: m / M, metrics)
         return loss / M, metrics, grads
 
-    def _require_opt_layout(opt):
-        # loud trace-time guard for the one invariant the two factories
-        # share: make_train_state and make_train_step must get the SAME
-        # mesh, or the opt-state layout (flat fused buffer vs per-leaf
-        # pytree) silently disagrees and dies deep inside tree.map.
-        is_flat = isinstance(opt, jax.Array)
-        if fused and not is_flat:
-            raise ValueError(
-                "fused sync path expects the flat momentum buffer, but the "
-                "train state carries a per-leaf opt state — pass the same "
-                "mesh to make_train_state(..., mesh=...) and "
-                "make_train_step(..., mesh)")
-        if fused and is_flat:
-            from repro.core.compat import axis_size
+    return accum_grad
 
-            p = 1 if axis_name is None else axis_size(axis_name)
-            want = flatbuf.shard_size(spec, p, sync.num_rings,
-                                      sync.bucket_bytes)
-            if opt.size != want:
-                raise ValueError(
-                    f"fused momentum shard has {opt.size} elements but the "
-                    f"{p}-way axis geometry needs {want} — per-device state "
-                    "for sharded drivers comes from "
-                    "optim.sgd.momentum_shard_init(spec, p, ...), not from "
-                    "make_train_state's local (p=1) buffer")
-        if not fused and is_flat:
-            raise ValueError(
-                "per-leaf update got a flat fused momentum buffer — pass "
-                "the same mesh to make_train_state(..., mesh=...) and "
-                "make_train_step(..., mesh), or set "
-                "SyncConfig.fused_update=False for both")
+
+def make_train_step(model: Model, optimizer: Optimizer, sync: SyncConfig,
+                    mesh: Mesh, *, microbatch: int = 1,
+                    axis_name: str | None = None) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    ``axis_name`` names the device axis for the fused sync path when the
+    step runs inside shard_map (real mesh) or vmap (emulation); ``None``
+    means single-process — the fused update still runs (one Pallas grid
+    over the whole flat buffer) with no collective.
+    """
+    C = sync.num_clients
+    # C>1 vmaps the update over the client dim, so each client's sync
+    # geometry is local (no device axis inside the vmap)
+    engine = make_sync_engine(
+        optimizer, sync, mesh,
+        axis_name=axis_name if C <= 1 else None,
+        spec=_engine_spec(model, optimizer, sync, mesh))
+
+    # the gradient accumulator is a while-loop carry: without an explicit
+    # constraint GSPMD replicates it (measured: +32 GB/dev on qwen3-4b),
+    # so pin it to the params' sharding when a mesh is known
+    pin = None
+    if mesh is not None and C <= 1 and microbatch > 1:
+        abstract = jax.eval_shape(model.init, jax.random.key(0))
+        acc_shardings = jax.tree.map(
+            lambda s: NamedSharding(mesh, s),
+            param_specs(abstract, mesh, fsdp=sync.fsdp),
+        )
+        pin = lambda grads: jax.tree.map(
+            jax.lax.with_sharding_constraint, grads, acc_shardings
+        )
+
+    grad_fn = make_grad_fn(model, microbatch, pin)
 
     def step_c1(state, batch):
-        _require_opt_layout(state["opt"])
-        loss, metrics, grads = one_client_grad(state["params"], batch)
-        if fused:
-            # reduce-scatter -> fused momentum-SGD Pallas kernel on the
-            # local 1/p shard (sharded momentum) -> allgather new params
-            new_p, new_o = scatter_update_gather(
-                spec, grads, state["params"], state["opt"],
-                jnp.float32(optimizer.hyper["lr"]),
-                jnp.float32(optimizer.hyper["momentum"]),
-                axis_name=axis_name, num_rings=sync.num_rings,
-                bucket_bytes=sync.bucket_bytes,
-                weight_decay=optimizer.hyper.get("weight_decay", 0.0),
-            )
-        else:
-            new_p, new_o = optimizer.update(grads, state["opt"], state["params"])
+        engine.check_opt_layout(state["opt"])
+        loss, metrics, grads = grad_fn(state["params"], batch)
+        new_p, new_o = engine.update(grads, state["opt"], state["params"])
         return (
             {"params": new_p, "opt": new_o, "step": state["step"] + 1},
             {"loss": loss, **metrics},
@@ -279,21 +256,22 @@ def make_train_step(model: Model, optimizer: Optimizer, sync: SyncConfig,
 
     def step_multiclient(state, batch):
         # batch leaves have a leading client dim C (sharded over 'pod')
-        loss, metrics, grads = jax.vmap(one_client_grad)(state["params"], batch)
-        new_p, new_o = jax.vmap(optimizer.update)(
+        engine.check_opt_layout(state["opt"], C)
+        loss, metrics, grads = jax.vmap(grad_fn)(state["params"], batch)
+        new_p, new_o = jax.vmap(engine.update)(
             grads, state["opt"], state["params"]
         )
         new_state = dict(state, params=new_p, opt=new_o, step=state["step"] + 1)
 
         if sync.mode == "mpi_esgd":
             def exchange(s):
-                p2, c2 = elastic_exchange_multiclient(
+                p2, c2 = engine.exchange_multiclient(
                     s["params"], s["center"], sync.esgd_alpha / C
                 )
                 return dict(s, params=p2, center=c2)
 
             new_state = jax.lax.cond(
-                (state["step"] % sync.esgd_interval) == 0,
+                should_elastic_sync(state["step"], sync.esgd_interval),
                 exchange, lambda s: s, new_state,
             )
         return new_state, {"loss": jnp.mean(loss),
@@ -358,8 +336,9 @@ def main() -> None:  # pragma: no cover (CLI driver; see tests/test_launch.py)
     glues clients together, so --client/--num-clients/--scheduler are
     recorded for the job spec but the in-process sync mode is mpi_sgd).
     Sync knobs arrive as the flags launcher.JobSpec threads through
-    (--fused-update / --no-fused-update / --bucket-bytes) and are lowered
-    via configs.base.TrainSettings.
+    (--fused-update / --no-fused-update / --flat-exchange /
+    --no-flat-exchange / --bucket-bytes) and are lowered via
+    configs.base.TrainSettings.
     """
     import argparse
 
@@ -383,6 +362,10 @@ def main() -> None:  # pragma: no cover (CLI driver; see tests/test_launch.py)
                     action="store_true", default=True)
     ap.add_argument("--no-fused-update", dest="fused_update",
                     action="store_false")
+    ap.add_argument("--flat-exchange", dest="flat_exchange",
+                    action="store_true", default=True)
+    ap.add_argument("--no-flat-exchange", dest="flat_exchange",
+                    action="store_false")
     ap.add_argument("--bucket-bytes", type=int, default=0)
     ap.add_argument("--full-size", action="store_true",
                     help="full architecture (default: reduced smoke config)")
@@ -390,6 +373,7 @@ def main() -> None:  # pragma: no cover (CLI driver; see tests/test_launch.py)
 
     settings = TrainSettings(lr=args.lr, momentum=args.momentum,
                              fused_update=args.fused_update,
+                             flat_exchange=args.flat_exchange,
                              bucket_bytes=args.bucket_bytes or None)
     cfg = get_config(args.arch)
     if not args.full_size:

@@ -169,14 +169,10 @@ def scatter_update_gather(spec: flatbuf.FlatBuffer, grads: Any, params: Any,
 
     p = 1 if axis_name is None else axis_size(axis_name)
     nr = flatbuf.effective_rings(spec.nbytes, num_rings, bucket_bytes)
-    chunk, total = flatbuf.shard_geometry(spec.size, p, nr)
+    _, total = flatbuf.shard_geometry(spec.size, p, nr)
 
-    gbuf = spec.pack(grads)
-    pbuf = spec.pack(params)
-    pad = total - spec.size
-    if pad:
-        gbuf = jnp.pad(gbuf, (0, pad))
-        pbuf = jnp.pad(pbuf, (0, pad))
+    gbuf = flatbuf.pack_padded(spec, grads, total)
+    pbuf = flatbuf.pack_padded(spec, params, total)
 
     if p == 1:
         g_shard, p_shard = gbuf, pbuf

@@ -1,0 +1,298 @@
+"""Flat elastic exchange: the packed FlatBuffer + fused-Pallas-kernel
+substrate must match the per-leaf reference (eqs. 2/3) exactly — for the
+pair exchange, the C-client exchange, and the sharded cross-pod leg —
+and the default mpi_esgd path must run ZERO per-leaf tree.map updates
+(one Pallas launch for the whole tree)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import flatbuf as F
+from repro.core.elastic import (
+    elastic_exchange,
+    elastic_exchange_multiclient,
+    elastic_exchange_multiclient_flat,
+    elastic_exchange_packed,
+    elastic_exchange_sharded,
+)
+
+AXIS = "pod"
+
+
+def _tree(seed=0, C=None, dtype=jnp.float32):
+    """Odd, lane-unfriendly leaf sizes on purpose (incl. a scalar)."""
+    k = jax.random.key(seed)
+    ks = jax.random.split(k, 4)
+    lead = (C,) if C else ()
+    return {
+        "w": jax.random.normal(ks[0], lead + (13, 7), jnp.float32).astype(dtype),
+        "b": jax.random.normal(ks[1], lead + (5,), jnp.float32).astype(dtype),
+        "deep": {
+            "u": jax.random.normal(ks[2], lead + (3, 11, 2),
+                                   jnp.float32).astype(dtype),
+            "s": jax.random.normal(ks[3], lead + (), jnp.float32).astype(dtype),
+        },
+    }
+
+
+def _close(a, b, rtol=1e-5, atol=1e-6):
+    jax.tree.map(
+        lambda x, y: np.testing.assert_allclose(
+            np.asarray(x, np.float32), np.asarray(y, np.float32),
+            rtol=rtol, atol=atol),
+        a, b)
+
+
+# --------------------------------------------------------------------------
+# packed pair exchange ≡ per-leaf reference
+# --------------------------------------------------------------------------
+
+def test_packed_exchange_matches_per_leaf():
+    w, c = _tree(0), _tree(1)
+    got = elastic_exchange_packed(w, c, 0.37)
+    want = elastic_exchange(w, c, 0.37)
+    _close(got, want)
+    # dtypes restored on unpack
+    assert jax.tree.map(lambda l: l.dtype, got[0]) == \
+        jax.tree.map(lambda l: l.dtype, w)
+
+
+def test_packed_exchange_conserves_sum():
+    w, c = _tree(2), _tree(3)
+    nw, nc = elastic_exchange_packed(w, c, 0.4)
+    jax.tree.map(
+        lambda a, b, x, y: np.testing.assert_allclose(a + b, x + y, rtol=1e-5),
+        nw, nc, w, c)
+
+
+# --------------------------------------------------------------------------
+# multiclient flat exchange ≡ per-leaf, C ∈ {1, 2, 4}, bf16, odd sizes
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("C", [1, 2, 4])
+def test_multiclient_flat_matches_per_leaf(C):
+    W, c = _tree(4, C=C), _tree(5)
+    alpha = 0.5 / C
+    got = elastic_exchange_multiclient_flat(W, c, alpha)
+    want = elastic_exchange_multiclient(W, c, alpha)
+    _close(got, want)
+
+
+@pytest.mark.parametrize("C", [1, 2, 4])
+def test_multiclient_flat_bf16(C):
+    W, c = _tree(6, C=C, dtype=jnp.bfloat16), _tree(7, dtype=jnp.bfloat16)
+    got = elastic_exchange_multiclient_flat(W, c, 0.3)
+    want = elastic_exchange_multiclient(W, c, 0.3)
+    # both compute in f32 and cast back to bf16 — must agree to bf16 ulps
+    _close(got, want, rtol=2e-2, atol=2e-2)
+    assert jax.tree_util.tree_leaves(got[0])[0].dtype == jnp.bfloat16
+
+
+def test_multiclient_flat_odd_single_leaf_sizes():
+    for n in (1, 3, 127, 129, 1025):
+        W = {"x": jax.random.normal(jax.random.key(n), (3, n))}
+        c = {"x": jax.random.normal(jax.random.key(n + 1), (n,))}
+        got = elastic_exchange_multiclient_flat(W, c, 0.2)
+        want = elastic_exchange_multiclient(W, c, 0.2)
+        _close(got, want)
+
+
+# --------------------------------------------------------------------------
+# sharded cross-pod leg ≡ multiclient per-leaf (vmap emulation)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("p,num_rings,bucket_bytes",
+                         [(1, 1, None), (2, 1, None), (4, 2, None),
+                          (4, 1, 512), (8, 3, None)])
+def test_sharded_exchange_matches_multiclient(p, num_rings, bucket_bytes):
+    W, c = _tree(8, C=p), _tree(9)
+    spec = F.spec_for(c)
+    stacked_c = jax.tree.map(
+        lambda l: jnp.broadcast_to(l[None], (p,) + l.shape), c)
+    alpha = 0.5 / p
+
+    fn = jax.vmap(
+        lambda wp, cp: elastic_exchange_sharded(
+            spec, wp, cp, alpha, axis_name=AXIS,
+            num_rings=num_rings, bucket_bytes=bucket_bytes),
+        axis_name=AXIS)
+    new_W, new_C = fn(W, stacked_c)
+    want_W, want_c = elastic_exchange_multiclient(W, c, alpha)
+    _close(new_W, want_W)
+    for d in range(p):  # every device allgathers the SAME new center
+        jax.tree.map(
+            lambda a, b: np.testing.assert_allclose(
+                np.asarray(a[d]), np.asarray(b), rtol=1e-5, atol=1e-6),
+            new_C, want_c)
+
+
+def test_sharded_exchange_bf16(p=4):
+    W = _tree(10, C=p, dtype=jnp.bfloat16)
+    c = _tree(11, dtype=jnp.bfloat16)
+    spec = F.spec_for(c)
+    stacked_c = jax.tree.map(
+        lambda l: jnp.broadcast_to(l[None], (p,) + l.shape), c)
+    fn = jax.vmap(
+        lambda wp, cp: elastic_exchange_sharded(
+            spec, wp, cp, 0.1, axis_name=AXIS),
+        axis_name=AXIS)
+    new_W, new_C = fn(W, stacked_c)
+    want_W, want_c = elastic_exchange_multiclient(W, c, 0.1)
+    _close(new_W, want_W, rtol=2e-2, atol=2e-2)
+    for d in range(p):
+        _close(jax.tree.map(lambda l: l[d], new_C), want_c,
+               rtol=2e-2, atol=2e-2)
+
+
+# --------------------------------------------------------------------------
+# int8-compressed packed exchange: roundtrip tolerance
+# --------------------------------------------------------------------------
+
+def test_compressed_packed_exchange_tolerance():
+    """compress=True quantizes the packed w buffer (the PS-push wire
+    form): the exchange must stay within the per-block absmax/127 error
+    envelope of the exact exchange."""
+    w, c = _tree(12), _tree(13)
+    exact = elastic_exchange_packed(w, c, 0.5)
+    quant = elastic_exchange_packed(w, c, 0.5, compress=True)
+    # max quantization error per value is scale/2 <= absmax/254; alpha
+    # scales it into the outputs. Normal(0,1) leaves -> absmax ~< 4.
+    leaves = jax.tree_util.tree_leaves(w)
+    absmax = max(float(jnp.max(jnp.abs(l))) for l in leaves)
+    tol = 0.5 * absmax / 127.0  # alpha * full quant step, generous
+    jax.tree.map(
+        lambda a, b: np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), atol=tol),
+        quant, exact)
+    # and the compressed exchange is not exactly the uncompressed one
+    # (the quantization actually happened)
+    diffs = jax.tree_util.tree_leaves(jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b))), quant[1], exact[1]))
+    assert max(diffs) > 0
+
+
+def test_kvstore_flat_elastic_matches_per_leaf():
+    from repro.core.kvstore import KVStore
+
+    w, c0 = _tree(14), _tree(15)
+    out = {}
+    for flat in (True, False):
+        kv = KVStore.create("dist_async", num_workers=1, flat_exchange=flat)
+        kv.init("centers", c0)
+        kv.set_elastic(0.35)
+        kv.push("centers", w)
+        out[flat] = kv.value("centers")
+    _close(out[True], out[False])
+
+
+def test_kvstore_compressed_flat_push_quantizes_per_push():
+    """Sync barrier + compress: each push is quantized BEFORE the barrier
+    sums (the wire model), so flat matches per-leaf within the coarser
+    packed-block quantization tolerance — and the byte accounting uses
+    the true payload, never the lane-padded buffer size."""
+    from repro.core.kvstore import KVStore
+
+    c0 = _tree(18)
+    pushes = [_tree(19), _tree(20)]
+    out = {}
+    for flat in (True, False):
+        kv = KVStore.create("dist_sync", num_workers=2, compress_push=True,
+                            flat_exchange=flat)
+        kv.init("centers", c0)
+        kv.set_elastic(0.4)
+        for w in pushes:
+            kv.push("centers", w)
+        out[flat] = (kv.value("centers"), kv.pushed_bytes,
+                     kv.pushed_bytes_uncompressed)
+    _close(out[True][0], out[False][0], rtol=1e-2, atol=2e-2)
+    # compressed wire really is smaller than raw, for the packed form too
+    assert out[True][1] < out[True][2]
+    # tiny-tree regression: payload-based accounting, not padded size
+    kv = KVStore.create("dist_async", num_workers=1, compress_push=True)
+    kv.init("c", jnp.zeros(2))
+    kv.set_elastic(0.5)
+    kv.push("c", jnp.ones(2))
+    assert kv.pushed_bytes < kv.pushed_bytes_uncompressed
+
+
+# --------------------------------------------------------------------------
+# the default mpi_esgd path is structurally flat: ONE Pallas launch,
+# zero per-leaf update arithmetic
+# --------------------------------------------------------------------------
+
+def _primitive_counts(fn, *args):
+    closed = jax.make_jaxpr(fn)(*args)
+
+    def walk(jaxpr):
+        names = []
+        for eqn in jaxpr.eqns:
+            names.append(eqn.primitive.name)
+            for val in eqn.params.values():
+                vals = val if isinstance(val, (list, tuple)) else [val]
+                for v in vals:
+                    if hasattr(v, "jaxpr"):
+                        names += walk(v.jaxpr)
+        return names
+
+    return walk(closed.jaxpr)
+
+
+def test_flat_exchange_is_one_kernel_launch():
+    C = 4
+    W, c = _tree(16, C=C), _tree(17)
+    flat_names = _primitive_counts(
+        lambda w_, c_: elastic_exchange_multiclient_flat(w_, c_, 0.2), W, c)
+    leaf_names = _primitive_counts(
+        lambda w_, c_: elastic_exchange_multiclient(w_, c_, 0.2), W, c)
+    num_leaves = len(jax.tree_util.tree_leaves(c))
+    # flat: the whole exchange is ONE fused launch; the only other work
+    # is the static-slice pack/unpack (no per-leaf sub/mul updates)
+    assert flat_names.count("pallas_call") == 1
+    assert flat_names.count("sub") == 0
+    # per-leaf reference: zero kernel launches, O(num_leaves) updates
+    assert leaf_names.count("pallas_call") == 0
+    assert leaf_names.count("sub") >= num_leaves
+
+
+def test_train_step_default_esgd_exchange_is_flat():
+    """The production multiclient step's default exchange must ride the
+    packed kernel — and match the per-leaf flag numerically."""
+    from repro.configs.base import get_config, reduced
+    from repro.core.hierarchy import SyncConfig
+    from repro.launch.train import make_train_state, make_train_step
+    from repro.models.model import build_model
+    from repro.optim.sgd import sgd
+
+    model = build_model(reduced(get_config("qwen2-0.5b")))
+    opt = sgd(0.1, momentum=0.9)
+    C = 2
+    sync = SyncConfig(mode="mpi_esgd", num_clients=C, esgd_interval=1,
+                      esgd_alpha=0.5)
+    sync_leaf = dataclasses.replace(sync, flat_exchange=False)
+    k = jax.random.key(0)
+    toks = jax.random.randint(k, (4, 32), 0, 1024)
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1)}
+    cbatch = jax.tree.map(
+        lambda a: a.reshape((C, a.shape[0] // C) + a.shape[1:]), batch)
+
+    s_f = make_train_state(model, opt, sync, jax.random.key(1))
+    s_l = make_train_state(model, opt, sync_leaf, jax.random.key(1))
+    step_f = jax.jit(make_train_step(model, opt, sync, None))
+    step_l = jax.jit(make_train_step(model, opt, sync_leaf, None))
+    for _ in range(3):
+        s_f, m_f = step_f(s_f, cbatch)
+        s_l, m_l = step_l(s_l, cbatch)
+    assert float(m_f["loss"]) == pytest.approx(float(m_l["loss"]), rel=1e-4)
+    _close(s_f["params"], s_l["params"], rtol=2e-4, atol=2e-5)
+    _close(s_f["center"], s_l["center"], rtol=2e-4, atol=2e-5)
+
+    # structurally: both steps carry the ONE (vmapped) fused-SGD launch;
+    # the default step adds exactly ONE more — the packed exchange — and
+    # the per-leaf flag's exchange adds none
+    names_f = _primitive_counts(step_f, s_f, cbatch)
+    names_l = _primitive_counts(step_l, s_l, cbatch)
+    assert names_l.count("pallas_call") == 1
+    assert names_f.count("pallas_call") == 2
