@@ -32,11 +32,15 @@ from benchmarks.bench_convergence import (
 from repro.core.algorithms import AlgoConfig, run as run_algo
 
 
+QUICK = os.environ.get("REPRO_BENCH_QUICK", "") not in ("", "0")
+
+
 def _cfg(mode, net, clients, interval=16):
     return AlgoConfig(
         mode=mode, num_workers=12, num_clients=clients, num_servers=2,
         lr=0.005, momentum=0.9, esgd_alpha=0.5, esgd_interval=interval,
-        epochs=4, steps_per_epoch=25, compute_time=0.45, jitter=0.2,
+        epochs=2 if QUICK else 4, steps_per_epoch=8 if QUICK else 25,
+        compute_time=0.45, jitter=0.2,
         model_bytes=100e6, net=net, seed=0)
 
 
@@ -101,7 +105,7 @@ def run() -> None:
 
 
 def run_flat_accounting(p: int = 8, num_leaves: int = 24,
-                        leaf: int = 16384) -> None:
+                        leaf: int | None = None) -> None:
     """The SyncEngine refactor's claim, measured: the mpi-ESGD exchange
     as per-leaf tree.maps vs ONE packed FlatBuffer + fused Pallas kernel.
 
@@ -125,6 +129,8 @@ def run_flat_accounting(p: int = 8, num_leaves: int = 24,
         elastic_exchange_sharded,
     )
 
+    if leaf is None:
+        leaf = 2048 if QUICK else 16384
     C = 4  # clients for the stacked (single-process) exchange
     tree = {f"layer{i}": jax.random.normal(jax.random.key(i), (leaf,))
             for i in range(num_leaves)}

@@ -18,7 +18,15 @@ leg (everything the update has to wait on) is (p-1)/p·n for the sharded
 path vs 2·(p-1)/p·n for any allreduce: a 50% cut, which the α-β-γ model
 turns into the projected step-time win printed alongside.
 
-Writes the machine-readable baseline to BENCH_fused_step.json.
+The OPTIMIZER dimension (``run_optim_accounting``): the same three-way
+comparison for every lowerable optimizer family — momentum SGD, AdaGrad,
+AdamW — with per-device optimizer-STATE bytes (sharded 1/p vs
+replicated; AdamW carries 2 full-size adaptive streams, so the p× saving
+bites twice) and fused-kernel launch counts (1 vs 0 + O(leaves) update
+chains). Writes BENCH_fused_optim.json next to BENCH_fused_step.json.
+
+``REPRO_BENCH_QUICK=1`` shrinks the payload for CI smoke runs — every
+recorded *ratio* and launch count is geometry-exact at any size.
 """
 from __future__ import annotations
 
@@ -28,15 +36,28 @@ import os
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, ppermute_bytes as _ppermute_bytes, timeit
+from benchmarks.common import (
+    emit,
+    jaxpr_primitives,
+    ppermute_bytes as _ppermute_bytes,
+    timeit,
+)
 from repro.core import collectives as C
 from repro.core import cost_model
 from repro.core import flatbuf as F
-from repro.optim.sgd import scatter_update_gather, sgd
+from repro.optim.sgd import (
+    FLAT_STATE_STREAMS,
+    adagrad,
+    adamw,
+    optstate_shard_init,
+    scatter_update_gather,
+    sgd,
+)
 
+QUICK = os.environ.get("REPRO_BENCH_QUICK", "") not in ("", "0")
 P = 8
 NUM_LEAVES = 24
-LEAF = 16384          # ~1.5 MB of f32 gradient across 24 leaves
+LEAF = 2048 if QUICK else 16384   # ~1.5 MB of f32 gradient across 24 leaves
 AXIS = "ring"
 
 
@@ -167,6 +188,131 @@ def run() -> None:
     }
     out = os.path.join(os.path.dirname(os.path.dirname(
         os.path.abspath(__file__))), "BENCH_fused_step.json")
+    with open(out, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"# wrote {out}")
+
+    run_optim_accounting()
+
+
+def _optimizers():
+    # the flat path lowers from Optimizer.hyper, so BOTH paths measure
+    # the exact same optimizer by construction
+    return {
+        "sgd": sgd(0.05, momentum=0.9),
+        "adagrad": adagrad(0.05),
+        "adamw": adamw(0.01),
+    }
+
+
+def run_optim_accounting() -> None:
+    """The K-stream generalization's claim, measured per optimizer family:
+    per-leaf allreduce + tree.map update chains vs ONE packed
+    reduce-scatter -> fused Pallas kernel -> allgather, with the
+    optimizer-state bytes each device actually holds."""
+    grads = _grad_tree(P)
+    params = jax.tree.map(lambda g: g[0] * 0.01, grads)
+    spec = F.spec_for(params)
+    g1 = jax.tree.map(lambda x: x[0], grads)
+    state_elems = spec.payload  # one full-size stream, true payload
+
+    per_opt = {}
+    for name, leaf_opt in _optimizers().items():
+        hyper = leaf_opt.hyper
+        streams = FLAT_STATE_STREAMS[name]
+        leaf_state = leaf_opt.init(params)
+        stacked_p = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (P,) + x.shape), params)
+        stacked_s = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (P,) + x.shape), leaf_state)
+        flat_state0 = optstate_shard_init(hyper, spec, P)
+        stacked_f = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (P,) + x.shape), flat_state0)
+
+        @jax.jit
+        def leaf_path(g, p_, s, _opt=leaf_opt):
+            synced = C.emulate(C.tensor_allreduce, g, method="per_leaf",
+                               mean=True)
+            return jax.vmap(_opt.update)(synced, s, p_)
+
+        @jax.jit
+        def flat_path(g, p_, s, _h=hyper):
+            def dev(gd, pd, sd):
+                return scatter_update_gather(spec, gd, pd, sd, hyper=_h,
+                                             axis_name=AXIS)
+            return jax.vmap(dev, axis_name=AXIS)(g, p_, s)
+
+        us_leaf = timeit(leaf_path, grads, stacked_p, stacked_s, iters=3)
+        us_flat = timeit(flat_path, grads, stacked_p, stacked_f, iters=3)
+
+        # per-device program structure + wire bytes under an abstract axis
+        def dev_leaf(g, p_, s, _opt=leaf_opt):
+            synced = C.tensor_allreduce(g, AXIS, method="per_leaf",
+                                        mean=True)
+            return _opt.update(synced, s, p_)
+
+        def dev_flat(g, p_, s, _h=hyper):
+            return scatter_update_gather(spec, g, p_, s, hyper=_h,
+                                         axis_name=AXIS)
+
+        f1 = jax.tree.map(lambda x: x[0], stacked_f)
+        prims_leaf = [n for n, _ in jaxpr_primitives(
+            dev_leaf, g1, params, leaf_state, axis=AXIS, p=P)]
+        prims_flat = [n for n, _ in jaxpr_primitives(
+            dev_flat, g1, params, f1, axis=AXIS, p=P)]
+        by_leaf = _ppermute_bytes(dev_leaf, g1, params, leaf_state,
+                                  axis=AXIS, p=P)
+        by_flat = _ppermute_bytes(dev_flat, g1, params, f1, axis=AXIS, p=P)
+
+        sharded_bytes = sum(
+            l.size * l.dtype.itemsize
+            for l in jax.tree_util.tree_leaves(flat_state0))
+        replicated_bytes = streams * state_elems * 4
+        per_opt[name] = {
+            "state_streams": streams,
+            "us_per_step": {"per_leaf": us_leaf, "flat": us_flat},
+            "pallas_calls": {
+                "per_leaf": prims_leaf.count("pallas_call"),
+                "flat": prims_flat.count("pallas_call"),
+            },
+            "update_arith_eqns": {
+                "per_leaf": sum(prims_leaf.count(op)
+                                for op in ("sub", "mul", "add")),
+                "flat": sum(prims_flat.count(op)
+                            for op in ("sub", "mul", "add")),
+            },
+            "wire_bytes_per_dev": {"per_leaf": by_leaf, "flat": by_flat},
+            "state_bytes_per_dev": {
+                "sharded": int(sharded_bytes),
+                "replicated_baseline": int(replicated_bytes),
+                "ratio": sharded_bytes / replicated_bytes,
+            },
+        }
+        emit(f"fused_optim/{name}", us_flat,
+             f"per_leaf_us={us_leaf:.1f};"
+             f"pallas_calls={per_opt[name]['pallas_calls']['flat']};"
+             f"state_sharded={int(sharded_bytes)};"
+             f"state_replicated={int(replicated_bytes)};"
+             f"state_ratio={sharded_bytes/replicated_bytes:.4f}")
+
+    # the gradient leg is optimizer-independent: (p-1)/p·n vs 2·(p-1)/p·n
+    gbuf = spec.pack(g1)
+    gleg_base = ppermute_bytes(lambda b: C.ring_allreduce(b, AXIS), gbuf)
+    gleg_flat = ppermute_bytes(lambda b: C.ring_reduce_scatter(b, AXIS), gbuf)
+
+    result = {
+        "p": P,
+        "num_leaves": NUM_LEAVES,
+        "payload_bytes": spec.payload * 4,
+        "optimizers": per_opt,
+        "grad_leg_bytes_per_dev": {
+            "allreduce_baseline": gleg_base,
+            "reduce_scatter": gleg_flat,
+            "ratio": gleg_flat / gleg_base,
+        },
+    }
+    out = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_fused_optim.json")
     with open(out, "w") as f:
         json.dump(result, f, indent=2)
     print(f"# wrote {out}")

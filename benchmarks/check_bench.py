@@ -1,0 +1,136 @@
+"""CI bench-smoke gate: fail if a recorded comm-bytes / state-bytes ratio
+or fused-kernel launch count regresses vs the checked-in BENCH_*.json.
+
+Usage:
+    python benchmarks/check_bench.py --baseline <dir> --current <dir>
+
+Ratios and launch counts are geometry-exact at any payload size, so the
+quick-mode CI run (REPRO_BENCH_QUICK=1) compares cleanly against the
+committed full-size baselines. Wall-clock numbers are never compared —
+only the structural quantities the papers' claims rest on:
+
+  BENCH_fused_step.json   grad_leg_bytes_per_dev.ratio  ((p-1)/p·n vs 2x)
+  BENCH_esgd_flat.json    diff_leg_bytes_per_dev.ratio, flat pallas_calls
+  BENCH_fused_optim.json  per-optimizer state_bytes ratio + pallas_calls
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+TOL = 1e-3  # absolute slack on ratio comparisons
+
+# every baseline the repo commits must be present on BOTH sides — a
+# missing file silently skipping its gate would green-wash exactly the
+# runs that dropped it
+REQUIRED = (
+    "BENCH_fused_step.json",
+    "BENCH_esgd_flat.json",
+    "BENCH_fused_optim.json",
+)
+
+
+def _load(dirpath: str, name: str) -> dict | None:
+    path = os.path.join(dirpath, name)
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+class Checker:
+    def __init__(self) -> None:
+        self.failures: list[str] = []
+        self.checked = 0
+
+    def ratio(self, label: str, current: float, baseline: float) -> None:
+        # two-sided: the ratios are geometry-exact, so a DROP is not an
+        # improvement but a counting bug (e.g. ppermute eqns no longer
+        # found, a state stream silently missing)
+        self.checked += 1
+        if abs(current - baseline) > TOL:
+            self.failures.append(
+                f"{label}: ratio changed {baseline:.4f} -> {current:.4f}")
+        else:
+            print(f"ok {label}: {current:.4f} (baseline {baseline:.4f})")
+
+    def count(self, label: str, current: int, baseline: int) -> None:
+        # exact match: MORE launches is a fusion regression, FEWER means
+        # the fused path stopped engaging at all (the likelier bug)
+        self.checked += 1
+        if current != baseline:
+            self.failures.append(
+                f"{label}: launch count changed {baseline} -> {current}")
+        else:
+            print(f"ok {label}: {current} (baseline {baseline})")
+
+
+def check(baseline_dir: str, current_dir: str) -> int:
+    c = Checker()
+
+    for name in REQUIRED:
+        for d, which in ((baseline_dir, "baseline"), (current_dir, "current")):
+            if not os.path.exists(os.path.join(d, name)):
+                c.failures.append(f"{name}: missing from {which} dir {d}")
+
+    base = _load(baseline_dir, "BENCH_fused_step.json")
+    cur = _load(current_dir, "BENCH_fused_step.json")
+    if base and cur:
+        c.ratio("fused_step.grad_leg",
+                cur["grad_leg_bytes_per_dev"]["ratio"],
+                base["grad_leg_bytes_per_dev"]["ratio"])
+
+    base = _load(baseline_dir, "BENCH_esgd_flat.json")
+    cur = _load(current_dir, "BENCH_esgd_flat.json")
+    if base and cur:
+        c.ratio("esgd_flat.diff_leg",
+                cur["diff_leg_bytes_per_dev"]["ratio"],
+                base["diff_leg_bytes_per_dev"]["ratio"])
+        c.count("esgd_flat.flat_pallas_calls",
+                cur["kernel_launches"]["flat"]["pallas_calls"],
+                base["kernel_launches"]["flat"]["pallas_calls"])
+
+    base = _load(baseline_dir, "BENCH_fused_optim.json")
+    cur = _load(current_dir, "BENCH_fused_optim.json")
+    if base and cur:
+        c.ratio("fused_optim.grad_leg",
+                cur["grad_leg_bytes_per_dev"]["ratio"],
+                base["grad_leg_bytes_per_dev"]["ratio"])
+        for name, b in base["optimizers"].items():
+            u = cur["optimizers"].get(name)
+            if u is None:
+                c.failures.append(f"fused_optim.{name}: missing from current")
+                continue
+            c.ratio(f"fused_optim.{name}.state_bytes",
+                    u["state_bytes_per_dev"]["ratio"],
+                    b["state_bytes_per_dev"]["ratio"])
+            c.count(f"fused_optim.{name}.pallas_calls",
+                    u["pallas_calls"]["flat"],
+                    b["pallas_calls"]["flat"])
+
+    if c.checked == 0 and not c.failures:
+        print("error: no BENCH_*.json pairs found to compare",
+              file=sys.stderr)
+        return 2
+    if c.failures:
+        for f in c.failures:
+            print(f"REGRESSION {f}", file=sys.stderr)
+        return 1
+    print(f"all {c.checked} bench invariants hold")
+    return 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True,
+                    help="dir with the checked-in BENCH_*.json")
+    ap.add_argument("--current", required=True,
+                    help="dir with freshly emitted BENCH_*.json")
+    args = ap.parse_args()
+    sys.exit(check(args.baseline, args.current))
+
+
+if __name__ == "__main__":
+    main()

@@ -180,6 +180,13 @@ class TrainSettings:
     lr: float = 0.1
     momentum: float = 0.9
     weight_decay: float = 0.0
+    # optimizer family: all three lower onto the fused flat path
+    # (core/sync_engine.flat_update_supported) when fused_update is set
+    optimizer_name: str = "sgd"     # "sgd" | "adagrad" | "adamw"
+    adam_b1: float = 0.9
+    adam_b2: float = 0.95
+    adam_eps: float = 1e-8
+    adagrad_eps: float = 1e-10
     sync_mode: str = "mpi_sgd"      # "mpi_sgd" | "mpi_esgd"
     num_clients: int = 1
     esgd_alpha: float = 0.5
@@ -209,8 +216,21 @@ class TrainSettings:
         )
 
     def optimizer(self):
-        from repro.optim.sgd import sgd
+        from repro.optim.sgd import adagrad, adamw, sgd
 
+        if self.optimizer_name == "adagrad":
+            if self.weight_decay:
+                raise ValueError(
+                    "adagrad has no weight-decay form here; drop "
+                    "--weight-decay or pick sgd/adamw")
+            return adagrad(self.lr, eps=self.adagrad_eps)
+        if self.optimizer_name == "adamw":
+            return adamw(self.lr, b1=self.adam_b1, b2=self.adam_b2,
+                         eps=self.adam_eps, weight_decay=self.weight_decay)
+        if self.optimizer_name != "sgd":
+            raise ValueError(
+                f"optimizer_name must be sgd/adagrad/adamw, "
+                f"got {self.optimizer_name!r}")
         return sgd(self.lr, momentum=self.momentum,
                    weight_decay=self.weight_decay)
 

@@ -32,7 +32,15 @@ from repro.core.collectives import tensor_allreduce, emulate
 from repro.core.elastic import elastic_client_packed, elastic_client_update
 from repro.core.kvstore import KVStore
 from repro.core.scheduler import AsyncEngine, StalenessTracker, UnitTiming
-from repro.optim.sgd import Optimizer, flat_sgd, sgd
+from repro.optim.sgd import (
+    Optimizer,
+    adagrad,
+    adamw,
+    flat_adagrad,
+    flat_adamw,
+    flat_sgd,
+    sgd,
+)
 
 MODES = ("dist_sgd", "mpi_sgd", "dist_asgd", "mpi_asgd", "dist_esgd", "mpi_esgd")
 
@@ -56,8 +64,12 @@ class AlgoConfig:
     net: cost_model.NetParams = field(default_factory=cost_model.testbed)
     allreduce_method: str = "multi_ring"
     compress_push: bool = False  # beyond-paper: int8 PS pushes
-    # fused flat-buffer optimizer step (optim.sgd.flat_sgd): one Pallas
-    # grid over the packed gradient instead of per-leaf tree.map updates
+    # worker/server update rule: sgd / adagrad / adamw — all three lower
+    # onto the fused flat-buffer step below
+    optimizer: str = "sgd"
+    # fused flat-buffer optimizer step (optim.sgd.flat_sgd /
+    # flat_adagrad / flat_adamw): one Pallas grid over the packed
+    # gradient instead of per-leaf tree.map updates
     fused_update: bool = True
     # flat elastic leg: eqs. (2)/(3) on the packed FlatBuffer through the
     # fused exchange kernel (both the KVStore server rule and the local
@@ -117,9 +129,22 @@ def _client_grad(grad_fn: GradFn, params, batches: list[dict],
 
 
 def _make_opt(cfg: AlgoConfig, params) -> Optimizer:
-    """The worker/server update rule: the fused flat-buffer momentum-SGD
+    """The worker/server update rule: the fused flat-buffer optimizer
     (one Pallas grid over the packed gradient, spec built once) when
     enabled, else the per-leaf reference."""
+    if cfg.optimizer == "adagrad":
+        if cfg.fused_update:
+            return flat_adagrad(cfg.lr, flatbuf.spec_for(params),
+                                bucket_bytes=cfg.bucket_bytes)
+        return adagrad(cfg.lr)
+    if cfg.optimizer == "adamw":
+        if cfg.fused_update:
+            return flat_adamw(cfg.lr, flatbuf.spec_for(params),
+                              bucket_bytes=cfg.bucket_bytes)
+        return adamw(cfg.lr)
+    if cfg.optimizer != "sgd":
+        raise ValueError(f"optimizer must be sgd/adagrad/adamw, "
+                         f"got {cfg.optimizer!r}")
     if cfg.fused_update and cfg.momentum > 0.0:
         # momentum == 0 would still pay a full-model momentum buffer for
         # v' = 0*v + g; plain sgd carries no state there
@@ -223,7 +248,7 @@ def _run_async(cfg, init_fn, grad_fn, eval_fn, make_pipeline) -> History:
                         num_workers=cfg.num_workers, num_servers=cfg.num_servers,
                         num_clients=C)
     kv.init("params", params0)
-    kv.set_optimizer(sgd(cfg.lr, cfg.momentum), rescale=1.0)
+    kv.set_optimizer(_make_opt(cfg, params0), rescale=1.0)
 
     comm = _comm_times(cfg)
     rng = np.random.default_rng(cfg.seed)

@@ -17,13 +17,15 @@ builders drive a single interface:
 
 Selection (``make_sync_engine``):
 
-  flat update    ``fused_update`` and momentum-SGD with f32 state and NO
-                 ambient mesh — both ``mpi_sgd`` (C=1, collectives over
-                 ``axis_name``) and ``mpi_esgd`` (per-client local
+  flat update    ``fused_update`` and a lowerable optimizer (momentum
+                 SGD with f32 state, AdaGrad, or AdamW — the K-stream
+                 fused kernels in kernels/fused_sgd + kernels/fused_optim)
+                 and NO ambient mesh — both ``mpi_sgd`` (C=1, collectives
+                 over ``axis_name``) and ``mpi_esgd`` (per-client local
                  geometry; the step vmaps ``update`` over the client dim)
   flat exchange  ``flat_exchange`` and no mesh — independent of the
-                 update substrate, so e.g. an AdamW run still gets the
-                 packed elastic leg
+                 update substrate, so e.g. a custom-optimizer run still
+                 gets the packed elastic leg
 
 With an ambient mesh GSPMD owns the collectives: both legs stay per-leaf
 so parameter sharding is undisturbed.
@@ -43,8 +45,9 @@ from repro.core.elastic import (
 )
 from repro.core.hierarchy import SyncConfig
 from repro.optim.sgd import (
+    FLAT_STATE_STREAMS,
     Optimizer,
-    momentum_shard_init,
+    optstate_shard_init,
     scatter_update_gather,
 )
 
@@ -53,18 +56,24 @@ def flat_update_supported(optimizer: Optimizer, sync: SyncConfig,
                           mesh=None) -> bool:
     """Whether the packed fused-kernel update can replace per-leaf.
 
-    Requires a momentum-SGD optimizer whose momentum dtype is the
-    buffer's f32 (an explicit low-precision ``state_dtype`` keeps the
-    per-leaf path that honors it), and no ambient mesh: with a mesh,
-    GSPMD owns the gradient collectives and per-leaf updates keep
+    Requires a lowerable optimizer — momentum SGD, AdaGrad or AdamW
+    (``optim.sgd.FLAT_STATE_STREAMS``); for SGD the momentum dtype must
+    be the buffer's f32 (an explicit low-precision ``state_dtype`` keeps
+    the per-leaf path that honors it) — and no ambient mesh: with a
+    mesh, GSPMD owns the gradient collectives and per-leaf updates keep
     parameter sharding undisturbed.
     """
     hyper = optimizer.hyper
-    return (sync.fused_update and sync.mode in ("mpi_sgd", "mpi_esgd")
-            and mesh is None
-            and hyper.get("name") == "sgd"
-            and hyper.get("momentum", 0.0) > 0.0
-            and hyper.get("state_dtype") in (None, jnp.float32))
+    if not (sync.fused_update and sync.mode in ("mpi_sgd", "mpi_esgd")
+            and mesh is None):
+        return False
+    # the flat_* Optimizer wrappers alias their per-leaf family
+    name = hyper.get("name", "")
+    name = name[5:] if name.startswith("flat_") else name
+    if name == "sgd":
+        return (hyper.get("momentum", 0.0) > 0.0
+                and hyper.get("state_dtype") in (None, jnp.float32))
+    return name in FLAT_STATE_STREAMS
 
 
 def flat_exchange_active(sync: SyncConfig, mesh=None) -> bool:
@@ -92,9 +101,9 @@ class SyncEngine:
         return self.optimizer.update(grads, opt_state, params)
 
     def check_opt_layout(self, opt_state: Any, num_clients: int = 1) -> None:
-        if isinstance(opt_state, jax.Array):
+        if isinstance(opt_state, jax.Array) or _is_flat_adamw_state(opt_state):
             raise ValueError(
-                "per-leaf update got a flat fused momentum buffer — pass "
+                "per-leaf update got a flat fused state buffer — pass "
                 "the same mesh to make_train_state(..., mesh=...) and "
                 "make_train_step(..., mesh), or set "
                 "SyncConfig.fused_update=False for both")
@@ -108,11 +117,17 @@ class SyncEngine:
         return elastic_exchange_multiclient(client_params, center, alpha)
 
 
+def _is_flat_adamw_state(opt_state: Any) -> bool:
+    """The flat AdamW layout ({"mv": (2, n), "t": ()}) — distinct from the
+    per-leaf adamw pytree ({"m": tree, "v": tree, "t": ()})."""
+    return isinstance(opt_state, dict) and set(opt_state) == {"mv", "t"}
+
+
 @dataclass(frozen=True)
 class FlatEngine(SyncEngine):
     """Flat-buffer strategy: the whole gradient pytree rides one packed
-    buffer through ring collectives and ONE fused Pallas kernel, with
-    momentum stored as the flat (sharded) buffer."""
+    buffer through ring collectives and ONE fused Pallas kernel, with the
+    K optimizer-state streams stored as flat (sharded) buffers."""
 
     fused = True
 
@@ -120,43 +135,53 @@ class FlatEngine(SyncEngine):
         return flatbuf.effective_rings(self.spec.nbytes, self.sync.num_rings,
                                        self.sync.bucket_bytes)
 
-    def init_opt(self, params: Any) -> jax.Array:
+    def init_opt(self, params: Any) -> Any:
         # local (p=1) geometry; device-sharded drivers re-init per device
-        # with momentum_shard_init(spec, p, ...)
-        return momentum_shard_init(self.spec, 1, self._num_rings())
+        # with optstate_shard_init(hyper, spec, p, ...)
+        return optstate_shard_init(self.optimizer.hyper, self.spec, 1,
+                                   self._num_rings())
 
-    def update(self, grads: Any, opt_state: jax.Array, params: Any):
-        hyper = self.optimizer.hyper
+    def update(self, grads: Any, opt_state: Any, params: Any):
         return scatter_update_gather(
             self.spec, grads, params, opt_state,
-            jnp.float32(hyper["lr"]), jnp.float32(hyper["momentum"]),
+            hyper=self.optimizer.hyper,
             axis_name=self.axis_name, num_rings=self.sync.num_rings,
             bucket_bytes=self.sync.bucket_bytes,
-            weight_decay=hyper.get("weight_decay", 0.0) or 0.0,
         )
 
     def check_opt_layout(self, opt_state: Any, num_clients: int = 1) -> None:
         from repro.core.compat import axis_size
 
-        if not isinstance(opt_state, jax.Array):
-            raise ValueError(
-                "fused sync path expects the flat momentum buffer, but the "
-                "train state carries a per-leaf opt state — pass the same "
-                "mesh to make_train_state(..., mesh=...) and "
-                "make_train_step(..., mesh)")
+        if self.optimizer.hyper.get("name", "").endswith("adamw"):
+            if not _is_flat_adamw_state(opt_state):
+                raise ValueError(
+                    "fused adamw sync path expects the flat {'mv', 't'} "
+                    "state, but the train state carries a per-leaf opt "
+                    "state — pass the same mesh to "
+                    "make_train_state(..., mesh=...) and "
+                    "make_train_step(..., mesh)")
+            buf, streams = opt_state["mv"], 2
+        else:
+            if not isinstance(opt_state, jax.Array):
+                raise ValueError(
+                    "fused sync path expects the flat state buffer, but the "
+                    "train state carries a per-leaf opt state — pass the "
+                    "same mesh to make_train_state(..., mesh=...) and "
+                    "make_train_step(..., mesh)")
+            buf, streams = opt_state, 1
         # C>1 vmaps the update per client, so each client is p=1 geometry
         p = (1 if (self.axis_name is None or num_clients > 1)
              else axis_size(self.axis_name))
         want = flatbuf.shard_size(self.spec, p, self.sync.num_rings,
                                   self.sync.bucket_bytes)
-        per_client = opt_state.size // max(num_clients, 1)
+        per_client = buf.size // (streams * max(num_clients, 1))
         if per_client != want:
             raise ValueError(
-                f"fused momentum shard has {per_client} elements but the "
-                f"{p}-way axis geometry needs {want} — per-device state "
-                "for sharded drivers comes from "
-                "optim.sgd.momentum_shard_init(spec, p, ...), not from "
-                "make_train_state's local (p=1) buffer")
+                f"fused state shard has {per_client} elements per stream "
+                f"but the {p}-way axis geometry needs {want} — per-device "
+                "state for sharded drivers comes from "
+                "optim.sgd.optstate_shard_init(hyper, spec, p, ...), not "
+                "from make_train_state's local (p=1) buffer")
 
 
 def make_sync_engine(optimizer: Optimizer, sync: SyncConfig, mesh=None, *,

@@ -1,0 +1,132 @@
+"""Fused flat AdaGrad / AdamW update kernels.
+
+Generalizes ``kernels/fused_sgd`` from one momentum stream to K
+optimizer-state streams, the paper's "group of vectors treated as one"
+applied to the optimizer itself: AdaGrad tiles (param, accum, grad) — 3
+streams — and AdamW (param, m, v, grad) — 4 streams — through VMEM
+together, one grid over the flat buffer, every output computed per tile.
+Unfused, AdamW is four HBM round-trips over the full model (m, v, update,
+decay); fused it is one pass.
+
+Bias correction enters as the precomputed scalars c1 = 1 − β1^t and
+c2 = 1 − β2^t in the hp vector (the step count t is carried by the
+caller as a scalar state stream), so the kernel body stays a pure
+per-element map and the grid never re-reads t.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import pick_block, use_interpret
+
+
+def _adagrad_kernel(hp_ref, p_ref, s_ref, g_ref, p_out_ref, s_out_ref):
+    lr, eps = hp_ref[0], hp_ref[1]
+    g = g_ref[...].astype(jnp.float32)
+    s_new = s_ref[...].astype(jnp.float32) + g * g
+    s_out_ref[...] = s_new.astype(s_out_ref.dtype)
+    p = p_ref[...].astype(jnp.float32)
+    p_out_ref[...] = (p - lr * g / (jnp.sqrt(s_new) + eps)).astype(
+        p_out_ref.dtype)
+
+
+def adagrad_flat(p: jax.Array, s: jax.Array, g: jax.Array,
+                 lr: jax.Array, eps: jax.Array, *,
+                 block: int | None = None,
+                 interpret: bool | None = None):
+    """One fused AdaGrad step on flat (n,) streams: s' = s + g²;
+    p' = p − η·g/(√s' + ε). Returns ``(new_p, new_s)``."""
+    if interpret is None:
+        interpret = use_interpret()
+    n = p.shape[0]
+    # 3 streams in + 2 out, sized by the widest so bf16 params with f32
+    # accumulator still fit the VMEM budget
+    widest = max(p.dtype.itemsize, s.dtype.itemsize, g.dtype.itemsize)
+    block = block or pick_block(n, widest, rows=6)
+    pad = (-n) % block
+    if pad:
+        p, s, g = (jnp.pad(x, (0, pad)) for x in (p, s, g))
+    np_ = n + pad
+    hp = jnp.stack([jnp.asarray(lr, jnp.float32),
+                    jnp.asarray(eps, jnp.float32)])
+    new_p, new_s = pl.pallas_call(
+        _adagrad_kernel,
+        grid=(np_ // block,),
+        in_specs=[
+            pl.BlockSpec((2,), lambda i: (0,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((np_,), p.dtype),
+            jax.ShapeDtypeStruct((np_,), s.dtype),
+        ],
+        interpret=interpret,
+    )(hp, p, s, g)
+    return new_p[:n], new_s[:n]
+
+
+def _adamw_kernel(hp_ref, p_ref, mv_ref, g_ref, p_out_ref, mv_out_ref):
+    lr, b1, b2 = hp_ref[0], hp_ref[1], hp_ref[2]
+    eps, wd, c1, c2 = hp_ref[3], hp_ref[4], hp_ref[5], hp_ref[6]
+    g = g_ref[...].astype(jnp.float32)
+    m_new = b1 * mv_ref[0, :].astype(jnp.float32) + (1.0 - b1) * g
+    v_new = b2 * mv_ref[1, :].astype(jnp.float32) + (1.0 - b2) * g * g
+    mv_out_ref[0, :] = m_new.astype(mv_out_ref.dtype)
+    mv_out_ref[1, :] = v_new.astype(mv_out_ref.dtype)
+    p = p_ref[...].astype(jnp.float32)
+    upd = (m_new / c1) / (jnp.sqrt(v_new / c2) + eps) + wd * p
+    p_out_ref[...] = (p - lr * upd).astype(p_out_ref.dtype)
+
+
+def adamw_flat(p: jax.Array, mv: jax.Array, g: jax.Array,
+               lr: jax.Array, b1: jax.Array, b2: jax.Array,
+               eps: jax.Array, wd: jax.Array, c1: jax.Array, c2: jax.Array,
+               *, block: int | None = None,
+               interpret: bool | None = None):
+    """One fused (decoupled-weight-decay) AdamW step on a flat (n,)
+    param/grad pair and the ``(2, n)`` stacked m/v buffer — carried
+    whole, in and out, so the caller's state never needs re-stacking
+    (no extra HBM copy of the moment streams per step). ``c1``/``c2``
+    are the bias corrections 1 − β^t for the POST-increment step count.
+    Returns ``(new_p, new_mv)``."""
+    if interpret is None:
+        interpret = use_interpret()
+    n = p.shape[0]
+    # 4 streams in + 3 out (mv counts twice)
+    widest = max(p.dtype.itemsize, mv.dtype.itemsize, g.dtype.itemsize)
+    block = block or pick_block(n, widest, rows=8)
+    pad = (-n) % block
+    if pad:
+        p, g = jnp.pad(p, (0, pad)), jnp.pad(g, (0, pad))
+        mv = jnp.pad(mv, ((0, 0), (0, pad)))
+    np_ = n + pad
+    hp = jnp.stack([jnp.asarray(x, jnp.float32)
+                    for x in (lr, b1, b2, eps, wd, c1, c2)])
+    new_p, new_mv = pl.pallas_call(
+        _adamw_kernel,
+        grid=(np_ // block,),
+        in_specs=[
+            pl.BlockSpec((7,), lambda i: (0,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((2, block), lambda i: (0, i)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((2, block), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((np_,), p.dtype),
+            jax.ShapeDtypeStruct((2, np_), mv.dtype),
+        ],
+        interpret=interpret,
+    )(hp, p, mv, g)
+    return new_p[:n], new_mv[:, :n]

@@ -1,0 +1,56 @@
+"""jit'd pytree wrappers for the fused AdaGrad / AdamW kernels."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import use_interpret
+from repro.kernels.fused_optim.fused_optim import adagrad_flat, adamw_flat
+
+
+@jax.jit
+def adagrad_fused(params: Any, accum: Any, grads: Any,
+                  lr: jax.Array, eps: jax.Array):
+    interpret = use_interpret()
+
+    def one(p, s, g):
+        np_, ns = adagrad_flat(
+            p.reshape(-1), s.reshape(-1), g.reshape(-1), lr, eps,
+            interpret=interpret,
+        )
+        return np_.reshape(p.shape), ns.reshape(s.shape)
+
+    pairs = jax.tree.map(one, params, accum, grads)
+    is_pair = lambda x: isinstance(x, tuple)
+    new_p = jax.tree.map(lambda t: t[0], pairs, is_leaf=is_pair)
+    new_s = jax.tree.map(lambda t: t[1], pairs, is_leaf=is_pair)
+    return new_p, new_s
+
+
+@jax.jit
+def adamw_fused(params: Any, m: Any, v: Any, grads: Any, t: jax.Array,
+                lr: jax.Array, b1: jax.Array, b2: jax.Array,
+                eps: jax.Array, wd: jax.Array):
+    """``t`` is the POST-increment step count shared by every leaf."""
+    interpret = use_interpret()
+    tf = jnp.asarray(t, jnp.float32)
+    c1 = 1.0 - jnp.asarray(b1, jnp.float32) ** tf
+    c2 = 1.0 - jnp.asarray(b2, jnp.float32) ** tf
+
+    def one(p, m_, v_, g):
+        mv = jnp.stack([m_.reshape(-1), v_.reshape(-1)])
+        np_, nmv = adamw_flat(
+            p.reshape(-1), mv, g.reshape(-1),
+            lr, b1, b2, eps, wd, c1, c2, interpret=interpret,
+        )
+        return (np_.reshape(p.shape), nmv[0].reshape(m_.shape),
+                nmv[1].reshape(v_.shape))
+
+    triples = jax.tree.map(one, params, m, v, grads)
+    is_triple = lambda x: isinstance(x, tuple)
+    new_p = jax.tree.map(lambda t_: t_[0], triples, is_leaf=is_triple)
+    new_m = jax.tree.map(lambda t_: t_[1], triples, is_leaf=is_triple)
+    new_v = jax.tree.map(lambda t_: t_[2], triples, is_leaf=is_triple)
+    return new_p, new_m, new_v

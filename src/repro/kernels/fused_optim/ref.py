@@ -1,0 +1,22 @@
+"""Oracles for the fused AdaGrad / AdamW updates."""
+import jax.numpy as jnp
+
+
+def adagrad_ref(p, s, g, lr, eps):
+    g32 = g.astype(jnp.float32)
+    s32 = s.astype(jnp.float32) + g32 * g32
+    p32 = p.astype(jnp.float32) - lr * g32 / (jnp.sqrt(s32) + eps)
+    return p32.astype(p.dtype), s32.astype(s.dtype)
+
+
+def adamw_ref(p, m, v, g, t, lr, b1, b2, eps, wd):
+    """``t`` is the POST-increment step count (first step: t=1)."""
+    g32 = g.astype(jnp.float32)
+    m32 = b1 * m.astype(jnp.float32) + (1.0 - b1) * g32
+    v32 = b2 * v.astype(jnp.float32) + (1.0 - b2) * g32 * g32
+    tf = jnp.asarray(t, jnp.float32)
+    c1 = 1.0 - jnp.float32(b1) ** tf
+    c2 = 1.0 - jnp.float32(b2) ** tf
+    upd = (m32 / c1) / (jnp.sqrt(v32 / c2) + eps) + wd * p.astype(jnp.float32)
+    p32 = p.astype(jnp.float32) - lr * upd
+    return p32.astype(p.dtype), m32.astype(m.dtype), v32.astype(v.dtype)

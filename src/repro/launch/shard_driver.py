@@ -7,7 +7,8 @@ BOTH lowerable modes with the step mapped per-device over a real mesh
 axis via ``compat.shard_map`` — gradients computed INSIDE the mapped
 function on the device's batch shard, explicit ring collectives carrying
 every byte of cross-device traffic (GSPMD inserts nothing), optimizer
-state sharded with ``momentum_shard_init``:
+state sharded with ``optstate_shard_init`` (momentum SGD, AdaGrad, or
+AdamW — AdamW's two full-size moment streams both live 1/p per device):
 
   mpi_sgd   the device axis is the intra-client MPI communicator: pack
             grads into the FlatBuffer -> ring reduce-scatter -> fused
@@ -44,7 +45,7 @@ from repro.core.hierarchy import SyncConfig, should_elastic_sync
 from repro.core.sync_engine import flat_update_supported, make_sync_engine
 from repro.launch.train import grad_spec, make_grad_fn
 from repro.models.model import Model
-from repro.optim.sgd import Optimizer, momentum_shard_init
+from repro.optim.sgd import Optimizer, optstate_shard_init
 
 AXIS = "dev"
 
@@ -54,7 +55,8 @@ def _require_supported(model: Model, optimizer: Optimizer, sync: SyncConfig,
     if not flat_update_supported(optimizer, sync, None):
         raise ValueError(
             "the shard driver runs the flat fused substrate only: "
-            "momentum-SGD (f32 state) with SyncConfig.fused_update=True")
+            "momentum-SGD (f32 state), AdaGrad or AdamW with "
+            "SyncConfig.fused_update=True")
     if sync.mode == "mpi_esgd" and sync.num_clients != p:
         raise ValueError(
             f"mpi_esgd under the shard driver maps one client per device: "
@@ -77,9 +79,10 @@ def make_driver_state(model: Model, optimizer: Optimizer, sync: SyncConfig,
                       p: int, rng: jax.Array | None = None) -> dict:
     """Stacked (leading device dim p) initial state.
 
-    mpi_sgd: params replicated p ways, momentum sharded 1/p per device.
+    mpi_sgd: params replicated p ways, optimizer state (momentum /
+    AdaGrad accumulator / AdamW m+v streams) sharded 1/p per device.
     mpi_esgd: one replica per device (device == client), full local
-    momentum per device, replicated center.
+    optimizer state per device, replicated center.
     """
     rng = jax.random.key(0) if rng is None else rng
     spec = _require_supported(model, optimizer, sync, p)
@@ -87,7 +90,7 @@ def make_driver_state(model: Model, optimizer: Optimizer, sync: SyncConfig,
                                  sync.bucket_bytes)
     esgd = sync.mode == "mpi_esgd"
     params = model.init(rng)
-    mom = momentum_shard_init(spec, 1 if esgd else p, nr)
+    opt0 = optstate_shard_init(optimizer.hyper, spec, 1 if esgd else p, nr)
 
     def stack(tree):
         return jax.tree.map(
@@ -96,7 +99,7 @@ def make_driver_state(model: Model, optimizer: Optimizer, sync: SyncConfig,
 
     state = {
         "params": stack(params),
-        "opt": stack(mom),
+        "opt": stack(opt0),
         "step": jnp.zeros((p,), jnp.int32),
     }
     if esgd:
@@ -253,37 +256,40 @@ def drive(model: Model, optimizer: Optimizer, sync: SyncConfig, batches,
 def _selftest(p: int = 8) -> None:  # pragma: no cover (subprocess helper)
     """REAL-mesh check (needs >= p host devices, set XLA_FLAGS): the
     shard_map driver's losses must match the single-process reference
-    step for both modes — run by tests/test_multidevice.py."""
+    step for both modes and every lowerable optimizer family — run by
+    tests/test_multidevice.py."""
     import numpy as np
 
     from repro.configs.base import get_config, reduced
     from repro.core.compat import make_mesh
     from repro.launch.train import make_train_state, make_train_step
     from repro.models.model import build_model
-    from repro.optim.sgd import sgd
+    from repro.optim.sgd import adagrad, adamw, sgd
 
     assert len(jax.devices()) >= p, "set XLA_FLAGS host device count"
     model = build_model(reduced(get_config("qwen2-0.5b")))
-    opt = sgd(0.1, momentum=0.9)
     mesh = make_mesh((p,), (AXIS,))
     k = jax.random.key(0)
     toks = jax.random.randint(k, (p, 32), 0, 1024)
     batch = {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1)}
-    for sync in (SyncConfig(mode="mpi_sgd", num_clients=1),
-                 SyncConfig(mode="mpi_esgd", num_clients=p,
-                            esgd_interval=2)):
-        st = make_driver_state(model, opt, sync, p, jax.random.key(1))
-        step = jax.jit(make_sharded_step(model, opt, sync, mesh))
-        ref = make_train_state(model, opt, sync, jax.random.key(1))
-        ref_step = jax.jit(make_train_step(model, opt, sync, None))
-        ref_batch = batch if sync.num_clients <= 1 else shard_batch(batch, p)
-        for _ in range(3):
-            st, m = step(st, shard_batch(batch, p))
-            ref, mr = ref_step(ref, ref_batch)
-            np.testing.assert_allclose(float(m["loss"]), float(mr["loss"]),
-                                       rtol=1e-4)
-        print(f"shard driver selftest OK p={p} mode={sync.mode} "
-              f"(shard_map on {len(jax.devices())} devices)")
+    for opt in (sgd(0.1, momentum=0.9), adamw(3e-3), adagrad(0.05)):
+        oname = opt.hyper["name"]
+        for sync in (SyncConfig(mode="mpi_sgd", num_clients=1),
+                     SyncConfig(mode="mpi_esgd", num_clients=p,
+                                esgd_interval=2)):
+            st = make_driver_state(model, opt, sync, p, jax.random.key(1))
+            step = jax.jit(make_sharded_step(model, opt, sync, mesh))
+            ref = make_train_state(model, opt, sync, jax.random.key(1))
+            ref_step = jax.jit(make_train_step(model, opt, sync, None))
+            ref_batch = (batch if sync.num_clients <= 1
+                         else shard_batch(batch, p))
+            for _ in range(3):
+                st, m = step(st, shard_batch(batch, p))
+                ref, mr = ref_step(ref, ref_batch)
+                np.testing.assert_allclose(float(m["loss"]),
+                                           float(mr["loss"]), rtol=1e-4)
+            print(f"shard driver selftest OK p={p} mode={sync.mode} "
+                  f"opt={oname} (shard_map on {len(jax.devices())} devices)")
 
 
 if __name__ == "__main__":  # pragma: no cover

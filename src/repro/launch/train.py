@@ -95,10 +95,11 @@ def make_train_state(model: Model, optimizer: Optimizer, sync: SyncConfig,
                      mesh: Mesh | None = None):
     """Concrete (or eval_shape'd) initial state.
 
-    On the fused path the optimizer state is the flat momentum buffer in
-    local (p=1) geometry — one per client when C>1; device-sharded
-    drivers (shard_map / vmap emulation) re-init it per device with
-    ``optim.sgd.momentum_shard_init``.
+    On the fused path the optimizer state is the flat state buffer
+    (momentum / AdaGrad accumulator / AdamW m+v streams) in local (p=1)
+    geometry — one per client when C>1; device-sharded drivers
+    (shard_map / vmap emulation) re-init it per device with
+    ``optim.sgd.optstate_shard_init``.
     """
     rng = jax.random.key(0) if rng is None else rng
     engine = make_sync_engine(optimizer, sync, mesh,
@@ -336,7 +337,7 @@ def main() -> None:  # pragma: no cover (CLI driver; see tests/test_launch.py)
     glues clients together, so --client/--num-clients/--scheduler are
     recorded for the job spec but the in-process sync mode is mpi_sgd).
     Sync knobs arrive as the flags launcher.JobSpec threads through
-    (--fused-update / --no-fused-update / --flat-exchange /
+    (--optimizer / --fused-update / --no-fused-update / --flat-exchange /
     --no-flat-exchange / --bucket-bytes) and are lowered via
     configs.base.TrainSettings.
     """
@@ -358,6 +359,11 @@ def main() -> None:  # pragma: no cover (CLI driver; see tests/test_launch.py)
     ap.add_argument("--steps", type=int, default=20)
     ap.add_argument("--lr", type=float, default=0.1)
     ap.add_argument("--momentum", type=float, default=0.9)
+    ap.add_argument("--optimizer", default="sgd",
+                    choices=("sgd", "adagrad", "adamw"),
+                    help="update rule; every choice rides the fused flat "
+                         "path when --fused-update is set")
+    ap.add_argument("--weight-decay", type=float, default=0.0)
     ap.add_argument("--fused-update", dest="fused_update",
                     action="store_true", default=True)
     ap.add_argument("--no-fused-update", dest="fused_update",
@@ -372,6 +378,8 @@ def main() -> None:  # pragma: no cover (CLI driver; see tests/test_launch.py)
     args = ap.parse_args()
 
     settings = TrainSettings(lr=args.lr, momentum=args.momentum,
+                             optimizer_name=args.optimizer,
+                             weight_decay=args.weight_decay,
                              fused_update=args.fused_update,
                              flat_exchange=args.flat_exchange,
                              bucket_bytes=args.bucket_bytes or None)
@@ -386,6 +394,7 @@ def main() -> None:  # pragma: no cover (CLI driver; see tests/test_launch.py)
         batch_size=8, steps_per_epoch=args.steps, shard=args.client))
     print(f"[train] client {args.client}/{args.num_clients} arch={cfg.name} "
           f"shape={args.shape} scheduler={args.scheduler} "
+          f"optimizer={settings.optimizer_name} "
           f"fused_update={settings.fused_update} "
           f"bucket_bytes={settings.bucket_bytes}", flush=True)
     _, hist = train_loop(model, optimizer, sync, None, pipe.epoch(0),

@@ -1,1 +1,14 @@
-from repro.optim.sgd import Optimizer, adagrad, adamw, get_optimizer, sgd
+from repro.optim.sgd import (
+    FLAT_STATE_STREAMS,
+    Optimizer,
+    adagrad,
+    adamw,
+    flat_adagrad,
+    flat_adamw,
+    flat_sgd,
+    get_optimizer,
+    momentum_shard_init,
+    optstate_shard_init,
+    scatter_update_gather,
+    sgd,
+)

@@ -4,11 +4,13 @@ the Elastic server/client updates (eqs. 2/3) live in core/elastic.py.
 
 Beyond the per-leaf tree.map optimizers, this module owns the **sharded
 fused step** (``scatter_update_gather``): ring reduce-scatter the packed
-flat gradient, run the fused momentum-SGD Pallas kernel on the local 1/p
-shard (momentum state lives sharded — a p× optimizer-memory reduction),
-then ring-allgather the updated params. The gradient leg waits on
-(p-1)/p·n bytes instead of the full allreduce's 2·(p-1)/p·n, and the
-whole update is ONE Pallas grid instead of O(num_leaves) kernels.
+flat gradient, run the fused optimizer Pallas kernel — momentum SGD,
+AdaGrad or AdamW (``FLAT_STATE_STREAMS``) — on the local 1/p shard
+(every full-length state stream lives sharded — a p× optimizer-memory
+reduction, 2 streams' worth for AdamW), then ring-allgather the updated
+params. The gradient leg waits on (p-1)/p·n bytes instead of the full
+allreduce's 2·(p-1)/p·n, and the whole update is ONE Pallas grid instead
+of O(num_leaves) kernels.
 """
 from __future__ import annotations
 
@@ -119,7 +121,9 @@ def adamw(lr: float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
         new_p = jax.tree.map(step, params, m, v)
         return new_p, {"m": m, "v": v, "t": t}
 
-    return Optimizer(init, update, {"name": "adamw", "lr": lr})
+    return Optimizer(init, update,
+                     {"name": "adamw", "lr": lr, "b1": b1, "b2": b2,
+                      "eps": eps, "weight_decay": weight_decay})
 
 
 def get_optimizer(name: str, lr: float, **kw) -> Optimizer:
@@ -127,8 +131,23 @@ def get_optimizer(name: str, lr: float, **kw) -> Optimizer:
 
 
 # ---------------------------------------------------------------------------
-# Sharded fused step: reduce-scatter -> Pallas fused SGD on 1/p -> allgather
+# Sharded fused step: reduce-scatter -> Pallas fused update on 1/p -> allgather
 # ---------------------------------------------------------------------------
+
+#: optimizers the flat fused path can lower, with their full-length f32
+#: state-stream counts (sharded 1/p alongside the momentum buffer):
+#: sgd carries 1 (momentum), adagrad 1 (accumulator), adamw 2 (m, v) plus
+#: the scalar step count t.
+FLAT_STATE_STREAMS: Mapping[str, int] = types.MappingProxyType(
+    {"sgd": 1, "adagrad": 1, "adamw": 2})
+
+
+def _flat_name(hyper) -> str:
+    """Canonical optimizer family of a hyper dict (``flat_*`` aliases of
+    the local Optimizer wrappers map onto their per-leaf family)."""
+    name = hyper if isinstance(hyper, str) else hyper["name"]
+    return name[5:] if name.startswith("flat_") else name
+
 
 def momentum_shard_init(spec: flatbuf.FlatBuffer, p: int = 1,
                         num_rings: int = 1,
@@ -140,32 +159,105 @@ def momentum_shard_init(spec: flatbuf.FlatBuffer, p: int = 1,
                      dtype)
 
 
+def optstate_shard_init(hyper, spec: flatbuf.FlatBuffer, p: int = 1,
+                        num_rings: int = 1,
+                        bucket_bytes: int | None = None) -> Any:
+    """Zero flat optimizer state for one device's 1/p shard of the buffer
+    (``momentum_shard_init`` generalized to K state streams).
+
+    Layout per family — every full-length stream is sharded 1/p:
+
+      sgd      (n,) f32 momentum
+      adagrad  (n,) f32 accumulator
+      adamw    {"mv": (2, n) f32 first/second moments,
+                "t":  ()     i32 shared step count (bias correction)}
+    """
+    name = _flat_name(hyper)
+    n = flatbuf.shard_size(spec, p, num_rings, bucket_bytes)
+    k = FLAT_STATE_STREAMS[name]
+    if name == "adamw":
+        return {"mv": jnp.zeros((k, n), jnp.float32),
+                "t": jnp.zeros((), jnp.int32)}
+    return jnp.zeros((n,), jnp.float32)
+
+
+def _fused_shard_update(name: str, hyper, p_shard: jax.Array,
+                        opt_state: Any, g_shard: jax.Array,
+                        interpret: bool) -> tuple[jax.Array, Any]:
+    """Dispatch the ONE-grid Pallas update on this device's shard: the K
+    state streams ride the same tiles as (param, grad)."""
+    from repro.kernels.fused_optim.fused_optim import adagrad_flat, adamw_flat
+    from repro.kernels.fused_sgd.fused_sgd import sgd_momentum_flat
+
+    lr = jnp.float32(hyper["lr"])
+    if name == "sgd":
+        return sgd_momentum_flat(p_shard, opt_state, g_shard, lr,
+                                 jnp.float32(hyper["momentum"]),
+                                 interpret=interpret)
+    if name == "adagrad":
+        return adagrad_flat(p_shard, opt_state, g_shard, lr,
+                            jnp.float32(hyper.get("eps", 1e-10)),
+                            interpret=interpret)
+    if name == "adamw":
+        t = opt_state["t"] + 1
+        tf = t.astype(jnp.float32)
+        b1 = jnp.float32(hyper.get("b1", 0.9))
+        b2 = jnp.float32(hyper.get("b2", 0.95))
+        # the (2, n) m/v buffer rides the kernel whole — no per-step
+        # slice/re-stack copies of the moment streams
+        new_p, new_mv = adamw_flat(
+            p_shard, opt_state["mv"], g_shard,
+            lr, b1, b2, jnp.float32(hyper.get("eps", 1e-8)),
+            jnp.float32(hyper.get("weight_decay", 0.0) or 0.0),
+            1.0 - b1 ** tf, 1.0 - b2 ** tf, interpret=interpret)
+        return new_p, {"mv": new_mv, "t": t}
+    raise ValueError(
+        f"flat fused update knows {sorted(FLAT_STATE_STREAMS)}, got {name!r}")
+
+
 def scatter_update_gather(spec: flatbuf.FlatBuffer, grads: Any, params: Any,
-                          mom_shard: jax.Array, lr, momentum, *,
+                          opt_state: Any, lr=None, momentum=None, *,
+                          hyper: Optional[Mapping] = None,
                           axis_name: Optional[str] = None,
                           num_rings: int = 1,
                           bucket_bytes: int | None = None,
                           weight_decay: float = 0.0,
                           mean: bool = True,
-                          interpret: bool | None = None) -> tuple[Any, jax.Array]:
+                          interpret: bool | None = None) -> tuple[Any, Any]:
     """One fused sync+update step on this device (the paper-faithful MPI
     worker program; run under shard_map on a mesh or vmap emulation):
 
       1. pack grads into the persistent flat buffer (static offsets)
       2. ring reduce-scatter -> this device owns a fully-reduced 1/p shard
          ((p-1)/p·n gradient-leg bytes — half the full allreduce)
-      3. fused momentum-SGD Pallas kernel on (param shard, momentum shard,
-         grad shard): one grid, momentum stays sharded (p× memory saving)
+      3. fused optimizer Pallas kernel on (param shard, K state-stream
+         shards, grad shard): one grid, state stays sharded (p× memory
+         saving per full-length stream — 2 streams for AdamW)
       4. ring allgather of the UPDATED param shards -> full new params
+
+    The optimizer is selected by ``hyper`` (an ``Optimizer.hyper`` dict:
+    sgd / adagrad / adamw — see ``FLAT_STATE_STREAMS``); the positional
+    ``lr``/``momentum`` form is the momentum-SGD shorthand. ``opt_state``
+    is this device's shard as laid out by ``optstate_shard_init``.
 
     ``axis_name=None`` (or axis of size 1) degenerates to the local fused
     update: no collective, one Pallas grid over the whole buffer — still a
     win over O(num_leaves) per-leaf updates.
 
-    Returns ``(new_params_tree, new_momentum_shard)``.
+    Returns ``(new_params_tree, new_opt_state_shard)``.
     """
     from repro.kernels.common import use_interpret
-    from repro.kernels.fused_sgd.fused_sgd import sgd_momentum_flat
+
+    if hyper is None:
+        hyper = {"name": "sgd", "lr": lr, "momentum": momentum,
+                 "weight_decay": weight_decay}
+    elif lr is not None or momentum is not None or weight_decay:
+        raise ValueError(
+            "pass hyperparameters either positionally (the momentum-SGD "
+            "shorthand) or via hyper=, not both — with hyper= the "
+            "optimizer reads lr/momentum/weight_decay from the dict, so "
+            "move them there")
+    name = _flat_name(hyper)
 
     p = 1 if axis_name is None else axis_size(axis_name)
     nr = flatbuf.effective_rings(spec.nbytes, num_rings, bucket_bytes)
@@ -181,39 +273,67 @@ def scatter_update_gather(spec: flatbuf.FlatBuffer, grads: Any, params: Any,
         p_shard = shard_select(pbuf, axis_name, num_rings=nr)
     if mean:
         g_shard = g_shard / p
-    if weight_decay:
-        g_shard = g_shard + weight_decay * p_shard
+    wd = hyper.get("weight_decay", 0.0) or 0.0
+    if name == "sgd" and wd:
+        # coupled L2, matching per-leaf optim.sgd; adamw decays decoupled
+        # inside its kernel
+        g_shard = g_shard + wd * p_shard
 
     if interpret is None:
         interpret = use_interpret()
-    new_p_shard, new_mom = sgd_momentum_flat(
-        p_shard, mom_shard, g_shard, lr, momentum, interpret=interpret)
+    new_p_shard, new_state = _fused_shard_update(
+        name, hyper, p_shard, opt_state, g_shard, interpret)
 
     if p == 1:
         new_pbuf = new_p_shard
     else:
         new_pbuf = ring_allgather(new_p_shard, axis_name, num_rings=nr)
-    return spec.unpack(new_pbuf[:spec.size]), new_mom
+    return spec.unpack(new_pbuf[:spec.size]), new_state
+
+
+def _flat_optimizer(hyper: dict, spec: flatbuf.FlatBuffer,
+                    num_rings: int, bucket_bytes: int | None) -> Optimizer:
+    """Drop-in ``Optimizer`` whose update is the fused flat-buffer kernel
+    (local p=1 geometry — the single-process drivers' default update).
+    State is the flat f32 stream shard(s) instead of a pytree."""
+    nr = flatbuf.effective_rings(spec.nbytes, num_rings, bucket_bytes)
+
+    def init(params):
+        return optstate_shard_init(hyper, spec, 1, nr)
+
+    @jax.jit
+    def update(grads, state, params):
+        return scatter_update_gather(
+            spec, grads, params, state, hyper=hyper,
+            axis_name=None, num_rings=nr, mean=False)
+
+    return Optimizer(init, update, hyper)
 
 
 def flat_sgd(lr: float, momentum: float, spec: flatbuf.FlatBuffer, *,
              weight_decay: float = 0.0, num_rings: int = 1,
              bucket_bytes: int | None = None) -> Optimizer:
-    """Drop-in ``Optimizer`` whose update is the fused flat-buffer kernel
-    (local p=1 geometry — the single-process drivers' default mpi_sgd
-    update). State is ONE flat f32 momentum buffer instead of a pytree."""
-    nr = flatbuf.effective_rings(spec.nbytes, num_rings, bucket_bytes)
+    """Fused flat momentum SGD: state is ONE flat momentum buffer."""
+    return _flat_optimizer(
+        {"name": "flat_sgd", "lr": lr, "momentum": momentum,
+         "weight_decay": weight_decay}, spec, num_rings, bucket_bytes)
 
-    def init(params):
-        return momentum_shard_init(spec, 1, nr)
 
-    @jax.jit
-    def update(grads, state, params):
-        return scatter_update_gather(
-            spec, grads, params, state, jnp.float32(lr), jnp.float32(momentum),
-            axis_name=None, num_rings=nr, weight_decay=weight_decay,
-            mean=False)
+def flat_adagrad(lr: float, spec: flatbuf.FlatBuffer, *,
+                 eps: float = 1e-10, num_rings: int = 1,
+                 bucket_bytes: int | None = None) -> Optimizer:
+    """Fused flat AdaGrad: state is ONE flat accumulator buffer."""
+    return _flat_optimizer(
+        {"name": "flat_adagrad", "lr": lr, "eps": eps},
+        spec, num_rings, bucket_bytes)
 
-    return Optimizer(init, update,
-                     {"name": "flat_sgd", "lr": lr, "momentum": momentum,
-                      "weight_decay": weight_decay})
+
+def flat_adamw(lr: float, spec: flatbuf.FlatBuffer, *,
+               b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+               weight_decay: float = 0.0, num_rings: int = 1,
+               bucket_bytes: int | None = None) -> Optimizer:
+    """Fused flat AdamW: state is the (2, n) m/v buffer + scalar step
+    count — the two full-size adaptive streams ride one flat object."""
+    return _flat_optimizer(
+        {"name": "flat_adamw", "lr": lr, "b1": b1, "b2": b2, "eps": eps,
+         "weight_decay": weight_decay}, spec, num_rings, bucket_bytes)

@@ -7,6 +7,10 @@ import sys
 
 import pytest
 
+# subprocess selftests: slow (each spawns its own jax process) AND
+# multi-device — the CI tiers select by these markers, not by file path
+pytestmark = [pytest.mark.slow, pytest.mark.multidevice]
+
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(ROOT, "src")
 
@@ -19,7 +23,6 @@ def _run(cmd, env_extra, timeout=500):
                           timeout=timeout, cwd=ROOT)
 
 
-@pytest.mark.slow
 def test_collectives_on_real_shard_map_mesh():
     """Ring/multi-ring/tree/psum over a REAL 8-device mesh via shard_map."""
     r = _run(
@@ -30,22 +33,24 @@ def test_collectives_on_real_shard_map_mesh():
     assert "shard_map on 8 devices" in r.stdout
 
 
-@pytest.mark.slow
 def test_shard_driver_on_real_mesh():
     """The shard_map production driver (grads inside the map, explicit
     ring collectives) matches the single-process reference losses on a
-    REAL 8-device mesh, for both mpi_sgd and mpi_esgd."""
+    REAL 8-device mesh, for both mpi_sgd and mpi_esgd — and for every
+    lowerable optimizer family (momentum SGD / AdaGrad / AdamW)."""
     r = _run(
         [sys.executable, "-m", "repro.launch.shard_driver", "8"],
         {"XLA_FLAGS": "--xla_force_host_platform_device_count=8"},
+        timeout=560,
     )
     assert r.returncode == 0, r.stderr[-2000:]
     assert "mode=mpi_sgd" in r.stdout
     assert "mode=mpi_esgd" in r.stdout
+    for oname in ("sgd", "adamw", "adagrad"):
+        assert f"opt={oname}" in r.stdout
     assert "shard_map on 8 devices" in r.stdout
 
 
-@pytest.mark.slow
 def test_dryrun_single_combo_pod():
     """The deliverable path: lower+compile one (arch x shape) on the
     256-chip production mesh with 512 placeholder devices."""
@@ -59,7 +64,6 @@ def test_dryrun_single_combo_pod():
     assert "dominant=" in r.stdout
 
 
-@pytest.mark.slow
 def test_dryrun_skip_rule():
     r = _run(
         [sys.executable, "-m", "repro.launch.dryrun", "--arch", "qwen2-0.5b",
@@ -71,7 +75,6 @@ def test_dryrun_skip_rule():
     assert "dominant=" not in r.stdout  # skipped, not lowered
 
 
-@pytest.mark.slow
 def test_multidevice_esgd_executes():
     """The production mpi-ESGD step EXECUTES (not just lowers) on a real
     (pod=2, data=2, model=2) host mesh: loss descends and the elastic
