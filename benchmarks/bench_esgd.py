@@ -19,7 +19,13 @@ import os
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, jaxpr_primitives, ppermute_bytes, timeit
+from benchmarks.common import (
+    emit,
+    jaxpr_primitives,
+    ppermute_bytes,
+    ppermute_bytes_by_axis,
+    timeit,
+)
 from repro.core import cost_model
 from benchmarks.bench_convergence import (
     MPI_IB,
@@ -102,6 +108,111 @@ def run() -> None:
          f"ps_wire=0.26x")
 
     run_flat_accounting()
+    run_hierarchy_accounting()
+
+
+def run_hierarchy_accounting(P: int = 2, D: int = 4, num_leaves: int = 24,
+                             leaf: int | None = None) -> None:
+    """Per-leg comm accounting of the 2-axis pod×data hierarchy — the
+    Communicator API's headline layout (one shard_map program, gradient
+    leg confined to 'data' inside each pod-client, elastic leg crossing
+    'pod'). Measured as exact per-device ppermute bytes split by the
+    axis each hop crosses (``ppermute_bytes_by_axis``):
+
+      * mpi_esgd update leg (reduce-scatter grads + allgather params
+        over the DATA communicator): pod bytes must be 0
+      * mpi_esgd elastic exchange (packed diffs reduce-scattered + center
+        shards allgathered over the POD communicator): data bytes must
+        be 0
+      * mpi_sgd update leg (hierarchical reduce-scatter over pod, then
+        data): total bytes == the 1-axis (P*D)-ring's — the hierarchy
+        is free
+
+    The gated quantities are size-independent fractions/ratios, so the
+    quick-mode CI run compares cleanly against the committed baseline.
+    Writes BENCH_hierarchy.json.
+    """
+    from repro.core import comm as comm_lib, flatbuf as F
+    from repro.core.comm import sync_comms
+    from repro.core.elastic import elastic_exchange_sharded
+    from repro.core.hierarchy import SyncConfig
+    from repro.optim.sgd import momentum_shard_init, scatter_update_gather
+
+    if leaf is None:
+        leaf = 2048 if QUICK else 16384
+    tree = {f"layer{i}": jax.random.normal(jax.random.key(i), (leaf,))
+            for i in range(num_leaves)}
+    spec = F.spec_for(tree)
+    env2 = ((("pod", P), ("data", D)))
+    env1 = (("dev", P * D),)
+
+    def update_prog(grad_comm, gp):
+        m = momentum_shard_init(
+            spec, gp, grad_comm.rings_for(spec.nbytes))
+        return lambda g, p_: scatter_update_gather(
+            spec, g, p_, m, 0.1, 0.9, comm=grad_comm)[0]
+
+    # -- mpi_esgd: data-leg update + pod-leg exchange -----------------------
+    sync = SyncConfig(mode="mpi_esgd", num_clients=P, allreduce_method="ring")
+    world = comm_lib.from_sync(sync, ("pod", "data"), (P, D))
+    grad_comm, ex_comm = sync_comms(sync, world)
+    esgd_update = ppermute_bytes_by_axis(
+        update_prog(grad_comm, D), tree, tree, axis_env=env2)
+    esgd_exchange = ppermute_bytes_by_axis(
+        lambda w, c: elastic_exchange_sharded(spec, w, c, 0.25,
+                                              comm=ex_comm),
+        tree, tree, axis_env=env2)
+
+    # -- mpi_sgd: hierarchical 2-axis group vs the 1-axis ring --------------
+    sgd_sync = SyncConfig(mode="mpi_sgd", allreduce_method="ring")
+    world_sgd = comm_lib.from_sync(sgd_sync, ("pod", "data"), (P, D))
+    sgd2 = ppermute_bytes_by_axis(
+        update_prog(world_sgd, P * D), tree, tree, axis_env=env2)
+    world_1ax = comm_lib.from_sync(sgd_sync, ("dev",), (P * D,))
+    sgd1 = ppermute_bytes_by_axis(
+        update_prog(world_1ax, P * D), tree, tree, axis_env=env1)
+
+    tot_esgd_up = sum(esgd_update.values())
+    tot_ex = sum(esgd_exchange.values())
+    tot_sgd2, tot_sgd1 = sum(sgd2.values()), sum(sgd1.values())
+    emit("hierarchy/esgd_update_leg", tot_esgd_up,
+         f"data={esgd_update['data']};pod={esgd_update['pod']};"
+         f"pod_fraction={esgd_update['pod'] / max(tot_esgd_up, 1):.3f}")
+    emit("hierarchy/esgd_exchange_leg", tot_ex,
+         f"pod={esgd_exchange['pod']};data={esgd_exchange['data']};"
+         f"data_fraction={esgd_exchange['data'] / max(tot_ex, 1):.3f}")
+    emit("hierarchy/sgd_2axis_vs_1axis", tot_sgd2,
+         f"2axis={tot_sgd2};1axis={tot_sgd1};"
+         f"ratio={tot_sgd2 / max(tot_sgd1, 1):.4f}")
+
+    result = {
+        "P": P,
+        "D": D,
+        "num_leaves": num_leaves,
+        "payload_bytes": spec.payload * 4,
+        "mpi_esgd": {
+            "update_leg_bytes_per_dev": {
+                **esgd_update,
+                "pod_fraction": esgd_update["pod"] / max(tot_esgd_up, 1),
+            },
+            "exchange_leg_bytes_per_dev": {
+                **esgd_exchange,
+                "data_fraction": esgd_exchange["data"] / max(tot_ex, 1),
+            },
+        },
+        "mpi_sgd": {
+            "update_leg_bytes_per_dev": {
+                **sgd2,
+                "one_axis_total": tot_sgd1,
+                "ratio_vs_one_axis": tot_sgd2 / max(tot_sgd1, 1),
+            },
+        },
+    }
+    out = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_hierarchy.json")
+    with open(out, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"# wrote {out}")
 
 
 def run_flat_accounting(p: int = 8, num_leaves: int = 24,
@@ -159,6 +270,9 @@ def run_flat_accounting(p: int = 8, num_leaves: int = 24,
 
     # -- cross-pod wire bytes (per device, per exchange) --------------------
     AXIS = "pod"
+    from repro.core.comm import Communicator
+
+    pod_comm = Communicator.world((AXIS,), (p,))
 
     def dev_per_leaf(w, c):
         # per-leaf cross-pod leg: allreduce every leaf's difference, then
@@ -170,7 +284,7 @@ def run_flat_accounting(p: int = 8, num_leaves: int = 24,
         return new_w, new_c
 
     def dev_flat(w, c):
-        return elastic_exchange_sharded(spec, w, c, alpha, axis_name=AXIS)
+        return elastic_exchange_sharded(spec, w, c, alpha, comm=pod_comm)
 
     by_leaf = ppermute_bytes(dev_per_leaf, tree, tree, axis=AXIS, p=p)
     by_flat = ppermute_bytes(dev_flat, tree, tree, axis=AXIS, p=p)

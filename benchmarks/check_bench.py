@@ -12,6 +12,11 @@ only the structural quantities the papers' claims rest on:
   BENCH_fused_step.json   grad_leg_bytes_per_dev.ratio  ((p-1)/p·n vs 2x)
   BENCH_esgd_flat.json    diff_leg_bytes_per_dev.ratio, flat pallas_calls
   BENCH_fused_optim.json  per-optimizer state_bytes ratio + pallas_calls
+  BENCH_hierarchy.json    2-axis pod×data per-leg fractions: the esgd
+                          update leg's pod fraction and exchange leg's
+                          data fraction (both 0.0 — the Communicator
+                          confinement proof) and the 2-axis mpi_sgd
+                          update total vs the 1-axis ring (1.0)
 """
 from __future__ import annotations
 
@@ -29,6 +34,7 @@ REQUIRED = (
     "BENCH_fused_step.json",
     "BENCH_esgd_flat.json",
     "BENCH_fused_optim.json",
+    "BENCH_hierarchy.json",
 )
 
 
@@ -91,6 +97,20 @@ def check(baseline_dir: str, current_dir: str) -> int:
         c.count("esgd_flat.flat_pallas_calls",
                 cur["kernel_launches"]["flat"]["pallas_calls"],
                 base["kernel_launches"]["flat"]["pallas_calls"])
+
+    base = _load(baseline_dir, "BENCH_hierarchy.json")
+    cur = _load(current_dir, "BENCH_hierarchy.json")
+    if base and cur:
+        c.ratio("hierarchy.esgd_update.pod_fraction",
+                cur["mpi_esgd"]["update_leg_bytes_per_dev"]["pod_fraction"],
+                base["mpi_esgd"]["update_leg_bytes_per_dev"]["pod_fraction"])
+        c.ratio(
+            "hierarchy.esgd_exchange.data_fraction",
+            cur["mpi_esgd"]["exchange_leg_bytes_per_dev"]["data_fraction"],
+            base["mpi_esgd"]["exchange_leg_bytes_per_dev"]["data_fraction"])
+        c.ratio("hierarchy.sgd_2axis_vs_1axis",
+                cur["mpi_sgd"]["update_leg_bytes_per_dev"]["ratio_vs_one_axis"],
+                base["mpi_sgd"]["update_leg_bytes_per_dev"]["ratio_vs_one_axis"])
 
     base = _load(baseline_dir, "BENCH_fused_optim.json")
     cur = _load(current_dir, "BENCH_fused_optim.json")

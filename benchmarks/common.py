@@ -29,13 +29,19 @@ def emit(name: str, us_per_call: float, derived: str = "") -> None:
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
 
 
-def jaxpr_primitives(fn: Callable, *args, axis: str | None = None,
-                     p: int = 1) -> list:
+def jaxpr_primitives(fn: Callable, *args, axis=None, p: int = 1) -> list:
     """Flat list of (primitive_name, eqn) across the jaxpr and every
-    sub-jaxpr of ``fn(*args)``, optionally traced under an abstract
-    ``p``-way named axis (so per-device collective programs keep their
-    ``ppermute``s instead of vmap rewriting them into local shuffles)."""
-    env = [(axis, p)] if axis else []
+    sub-jaxpr of ``fn(*args)``, optionally traced under abstract named
+    axes (so per-device collective programs keep their ``ppermute``s
+    instead of vmap rewriting them into local shuffles). ``axis`` is a
+    single axis name (size ``p``) or a sequence of (name, size) pairs —
+    the 2-axis pod×data programs trace under both."""
+    if axis is None:
+        env = []
+    elif isinstance(axis, str):
+        env = [(axis, p)]
+    else:
+        env = [(a, int(s)) for a, s in axis]
     closed = jax.make_jaxpr(fn, axis_env=env)(*args)
 
     def _subjaxprs(val):
@@ -68,3 +74,22 @@ def ppermute_bytes(fn: Callable, *args, axis: str = "ring",
         for name, eqn in jaxpr_primitives(fn, *args, axis=axis, p=p)
         if name == "ppermute"
     )
+
+
+def ppermute_bytes_by_axis(fn: Callable, *args, axis_env) -> dict[str, int]:
+    """Per-device wire bytes of a collective program, split by the mesh
+    axis each ``ppermute`` crosses — the per-leg accounting of the 2-axis
+    pod×data hierarchy (data-leg vs pod-leg). ``axis_env`` is a sequence
+    of (name, size) pairs; every axis appears in the result (0 = the
+    program never crosses it)."""
+    out = {a: 0 for a, _ in axis_env}
+    for name, eqn in jaxpr_primitives(fn, *args, axis=axis_env):
+        if name != "ppermute":
+            continue
+        ax = eqn.params.get("axis_name")
+        axes = (ax,) if isinstance(ax, str) else tuple(ax)
+        nbytes = sum(v.aval.size * v.aval.dtype.itemsize
+                     for v in eqn.invars)
+        for a in axes:
+            out[a] = out.get(a, 0) + nbytes
+    return out

@@ -1,15 +1,19 @@
 """mpi-ESGD with the production train step: two clients (the multi-pod
-layout, pods emulated via the leading client dim) doing local sync-SGD
-with lazy elastic exchange — the paper's path to cluster-wide scaling —
-vs fully-synchronous mpi-SGD at the same token budget.
+layout) doing local sync-SGD with lazy elastic exchange — the paper's
+path to cluster-wide scaling — vs fully-synchronous mpi-SGD at the same
+token budget.
 
-Both the single-process multiclient step (vmap over the client dim) and
-the shard_map production driver (``--driver shard``: grads inside the
-mapped per-device step, explicit ring collectives, device == client) run
-the same flat-substrate math — losses match to float tolerance.
+The C>1 production path is the 2-axis pod×data shard driver (the
+default): each client is one pod of ``--data-per-pod`` devices, the
+gradient leg reduce-scatters over the ``data`` communicator INSIDE the
+pod, and the elastic exchange is the only traffic crossing the ``pod``
+communicator (``core.comm.Communicator`` groups — the paper's
+MPI-groups-in-KVStore model). ``--driver vmap`` keeps the single-process
+stacked-client step as the readable reference; both run the same
+flat-substrate math and their losses match to float tolerance.
 
   PYTHONPATH=src python examples/esgd_multipod.py [--steps 80]
-  PYTHONPATH=src python examples/esgd_multipod.py --driver shard
+  PYTHONPATH=src python examples/esgd_multipod.py --driver vmap
 """
 import argparse
 
@@ -25,28 +29,38 @@ from repro.models import build_model
 from repro.optim import sgd
 
 
-def run_mode(model, sync, pipes, steps, lr, driver="vmap"):
+def run_mode(model, sync, pipes, steps, lr, driver="shard",
+             data_per_pod=2):
     optimizer = sgd(lr, momentum=0.9)
     C = sync.num_clients
-    if driver == "shard" and C > 1:
-        state = shard_driver.make_driver_state(model, optimizer, sync, C,
-                                               jax.random.key(0))
+    sharded = driver == "shard" and C > 1
+    if sharded:
+        # one pod per client, data_per_pod devices inside each: the
+        # 2-axis pod×data hierarchy in one mapped program
+        geom = (C, data_per_pod)
+        state = shard_driver.make_driver_state(model, optimizer, sync,
+                                               geom, jax.random.key(0))
         step = jax.jit(shard_driver.make_emulated_step(
-            model, optimizer, sync, C))
+            model, optimizer, sync, geom))
     else:
         state = make_train_state(model, optimizer, sync, jax.random.key(0))
         step = jax.jit(make_train_step(model, optimizer, sync, None))
     losses = []
     for i in range(steps):
         batches = [p.batch_at(0, i) for p in pipes]
-        if C > 1:
+        if sharded:
+            batch = jax.tree.map(
+                lambda *xs: jnp.concatenate(xs, axis=0), *batches)
+            batch = shard_driver.shard_batch(batch, geom)
+        elif C > 1:
             batch = jax.tree.map(lambda *xs: jnp.stack(xs), *batches)
         else:
             batch = jax.tree.map(
                 lambda *xs: jnp.concatenate(xs, axis=0), *batches)
         state, metrics = step(state, batch)
         losses.append(float(metrics["loss"]))
-    params = declientize(state["params"], C)
+    replicas = C * data_per_pod if sharded else C
+    params = declientize(state["params"], replicas)
     return losses, params
 
 
@@ -54,9 +68,14 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=80)
     ap.add_argument("--interval", type=int, default=8)
-    ap.add_argument("--driver", choices=("vmap", "shard"), default="vmap",
-                    help="'shard': the shard_map production driver "
-                         "(launch/shard_driver.py, emulated axis)")
+    ap.add_argument("--driver", choices=("vmap", "shard"), default="shard",
+                    help="'shard' (default): the 2-axis pod×data "
+                         "production driver (launch/shard_driver.py, "
+                         "emulated axes); 'vmap': the single-process "
+                         "stacked-client reference step")
+    ap.add_argument("--data-per-pod", type=int, default=2,
+                    help="devices per pod-client on the shard driver's "
+                         "'data' axis (the intra-client communicator)")
     args = ap.parse_args()
 
     cfg = reduced(get_config("qwen2-0.5b"))
@@ -78,7 +97,8 @@ def main() -> None:
         model,
         SyncConfig(mode="mpi_esgd", num_clients=2, esgd_alpha=0.5,
                    esgd_interval=args.interval),
-        pipes, args.steps, lr=0.1, driver=args.driver)
+        pipes, args.steps, lr=0.1, driver=args.driver,
+        data_per_pod=args.data_per_pod)
 
     print(f"\n{'step':>5s} {'mpi_sgd':>8s} {'mpi_esgd':>9s}")
     for i in range(0, args.steps, 10):

@@ -1,3 +1,4 @@
+from repro.core.comm import Communicator
 from repro.core.kvstore import KVStore
 from repro.core.collectives import tensor_allreduce, tensor_pushpull
 from repro.core.elastic import elastic_exchange, elastic_exchange_multiclient

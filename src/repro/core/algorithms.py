@@ -24,11 +24,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from functools import partial
-
 from repro.core import cost_model, flatbuf
 from repro.core.client import group_workers
-from repro.core.collectives import tensor_allreduce, emulate
+from repro.core.comm import Communicator
 from repro.core.elastic import elastic_client_packed, elastic_client_update
 from repro.core.kvstore import KVStore
 from repro.core.scheduler import AsyncEngine, StalenessTracker, UnitTiming
@@ -100,32 +98,46 @@ GradFn = Callable[[Any, dict], tuple[jax.Array, Any]]
 EvalFn = Callable[[Any], float]
 
 
-@partial(jax.jit, static_argnames=("method",))
-def _emulated_sync(stacked: Any, method: str) -> Any:
-    """Jitted vmap-emulated tensor allreduce. The jit cache makes the
-    FlatBuffer pack trace ONCE per (structure, shapes, method) — eager
-    drivers stop paying a re-flatten + retrace every step."""
-    return emulate(tensor_allreduce, stacked, method=method)
+def _worker_group(cfg: AlgoConfig) -> Communicator:
+    """The intra-client MPI communicator (one group per client — every
+    client has the same geometry, so one object serves them all):
+    ``workers_per_client`` ranks over an emulated 'worker' axis, with
+    the config's collective policy. This is the paper's
+    MPI-communicator-in-KVStore group; the runners register it on the
+    store and all intra-client sync dispatches through it."""
+    return Communicator.world(
+        ("worker",), (cfg.workers_per_client,),
+        method=cfg.allreduce_method, num_rings=2,
+        bucket_bytes=cfg.bucket_bytes)
 
 
-def _client_grad(grad_fn: GradFn, params, batches: list[dict],
-                 method: str) -> tuple[float, Any]:
-    """Intra-client step: per-worker grads, tensor-allreduced (mean).
-
-    Numerically exercises the real ring/multi-ring collective via vmap
-    emulation when the client has >1 worker.
-    """
+def _member_grads(grad_fn: GradFn, params,
+                  batches: list[dict]) -> tuple[float, Any]:
+    """Per-worker grads of one client, stacked on a leading member dim
+    (the group collective's layout)."""
     losses, grads = [], []
     for b in batches:
         l, g = grad_fn(params, b)
         losses.append(float(l))
         grads.append(g)
-    if len(grads) == 1:
-        return losses[0], grads[0]
     stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *grads)
-    summed = _emulated_sync(stacked, method)
-    mean = jax.tree.map(lambda s: s[0] / len(grads), summed)
-    return float(np.mean(losses)), mean
+    return float(np.mean(losses)), stacked
+
+
+def _client_grad(grad_fn: GradFn, params, batches: list[dict],
+                 group: Communicator) -> tuple[float, Any]:
+    """Intra-client step: per-worker grads, group-allreduced (mean)
+    through the client's communicator.
+
+    Numerically exercises the real ring/multi-ring collective via vmap
+    emulation when the client has >1 worker.
+    """
+    loss, stacked = _member_grads(grad_fn, params, batches)
+    if len(batches) == 1:
+        return loss, jax.tree.map(lambda l: l[0], stacked)
+    synced = group.emulate_reduce(stacked)
+    mean = jax.tree.map(lambda s: s[0] / len(batches), synced)
+    return loss, mean
 
 
 def _make_opt(cfg: AlgoConfig, params) -> Optimizer:
@@ -194,6 +206,9 @@ def _run_sync(cfg, init_fn, grad_fn, eval_fn, make_pipeline) -> History:
                         num_workers=cfg.num_workers, num_servers=cfg.num_servers,
                         num_clients=C)
     kv.init("grads", jax.tree.map(jnp.zeros_like, params))
+    group = _worker_group(cfg)
+    for c in range(C):
+        kv.register_group(c, group)
     opt = _make_opt(cfg, params)
     opt_state = opt.init(params)
 
@@ -204,18 +219,17 @@ def _run_sync(cfg, init_fn, grad_fn, eval_fn, make_pipeline) -> History:
     step_times = []
     for epoch in range(cfg.epochs):
         for step in range(cfg.steps_per_epoch):
-            client_grads, losses = [], []
+            losses = []
             for c in range(C):
                 members = [w for w in range(cfg.num_workers)
                            if idents[w].mpi.client == c]
                 batches = [pipelines[w].batch_at(epoch, step) for w in members]
-                loss, g = _client_grad(grad_fn, params, batches,
-                                       cfg.allreduce_method)
-                client_grads.append(jax.tree.map(
-                    lambda x: x * len(members), g))  # client-sum
+                loss, stacked = _member_grads(grad_fn, params, batches)
+                # the paper's worker program: the group collective runs
+                # INSIDE kv.push (register_group'd communicator), the
+                # client-sum crosses to the PS tier as one pusher
+                kv.push("grads", stacked, group=c)
                 losses.append(loss)
-            for g in client_grads:
-                kv.push("grads", g)
             total = kv.pull("grads")[0]
             mean_g = jax.tree.map(lambda x: x / cfg.num_workers, total)
             params, opt_state = opt.update(mean_g, opt_state, params)
@@ -249,6 +263,9 @@ def _run_async(cfg, init_fn, grad_fn, eval_fn, make_pipeline) -> History:
                         num_clients=C)
     kv.init("params", params0)
     kv.set_optimizer(_make_opt(cfg, params0), rescale=1.0)
+    group = _worker_group(cfg)
+    for c in range(C):
+        kv.register_group(c, group)
 
     comm = _comm_times(cfg)
     rng = np.random.default_rng(cfg.seed)
@@ -286,7 +303,7 @@ def _run_async(cfg, init_fn, grad_fn, eval_fn, make_pipeline) -> History:
                    if idents[w].mpi.client == unit]
         batches = [pipelines[w].batch_at(epoch, step) for w in members]
         loss, g = _client_grad(grad_fn, client_params[unit], batches,
-                               cfg.allreduce_method)
+                               group)
         state["losses"].append(loss)
         tracker.on_apply(unit)
         kv.push("params", g)
@@ -328,6 +345,9 @@ def _run_esgd(cfg, init_fn, grad_fn, eval_fn, make_pipeline) -> History:
                         flat_exchange=cfg.flat_exchange)
     kv.init("centers", params0)
     kv.set_elastic(cfg.esgd_alpha)
+    group = _worker_group(cfg)
+    for c in range(C):
+        kv.register_group(c, group)
 
     comm = _comm_times(cfg)
     timing = [
@@ -354,7 +374,7 @@ def _run_esgd(cfg, init_fn, grad_fn, eval_fn, make_pipeline) -> History:
                    if idents[w].mpi.client == unit]
         batches = [pipelines[w].batch_at(epoch, step) for w in members]
         loss, g = _client_grad(grad_fn, client_params[unit], batches,
-                               cfg.allreduce_method)
+                               group)
         state["losses"].append(loss)
         comm_cost = comm["intra"]
         if it % cfg.esgd_interval == 0:

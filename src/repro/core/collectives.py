@@ -247,52 +247,72 @@ def allreduce(x: jax.Array, axis_name: str, method: Method = "ring",
 # --------------------------------------------------------------------------
 # Tensor (fused-pytree) collectives — the paper's group-of-vectors object
 # --------------------------------------------------------------------------
+#
+# The canonical spelling is ``Communicator.tensor_allreduce`` /
+# ``Communicator.pushpull`` (core/comm.py): the group object owns the
+# method/rings/bucketing policy. The free functions below remain as
+# adapters for the deprecated ``axis_name=`` string signature.
 
-def tensor_allreduce(tree: Any, axis_name: str, method: Method = "ring",
-                     *, num_rings: int = 2, mean: bool = False,
+def _as_group(axis_name_or_comm, method, num_rings, bucket_bytes=None,
+              *, where: str):
+    """Shim: a Communicator passes through (explicit policy knobs
+    alongside it are rejected — the policy lives on the group, matching
+    ``scatter_update_gather``'s contract); an axis-name string becomes a
+    trace-time-resolved group behind a DeprecationWarning."""
+    from repro.core import comm as _comm
+
+    if isinstance(axis_name_or_comm, _comm.Communicator):
+        if method is not None or num_rings is not None:
+            raise ValueError(
+                f"{where}: with a Communicator the collective policy "
+                "lives on the group — set method/num_rings there "
+                "(Communicator.with_policy), not as arguments")
+        return axis_name_or_comm
+    _comm._deprecated_axis_name(where)
+    return _comm.Communicator.from_axis_name(
+        axis_name_or_comm, method=method or "ring",
+        num_rings=2 if num_rings is None else num_rings,
+        bucket_bytes=bucket_bytes)
+
+
+def tensor_allreduce(tree: Any, axis_name: "str | Any",
+                     method: Method | None = None, *,
+                     num_rings: int | None = None,
+                     mean: bool = False,
                      spec: flatbuf.FlatBuffer | None = None) -> Any:
     """Allreduce a whole pytree as ONE fused buffer (tensor collective).
 
-    The flat-buffer spec is memoized per tree structure (``spec_for``) or
+    ``axis_name`` may be a ``core.comm.Communicator`` (canonical — the
+    policy lives on the group, and explicit ``method``/``num_rings``
+    arguments are rejected) or the deprecated bare axis-name string
+    (where ``method`` defaults to "ring" and ``num_rings`` to 2). The
+    flat-buffer spec is memoized per tree structure (``spec_for``) or
     passed in by callers that built it once at setup time — either way
     there is no per-step re-flatten/concatenate.
     """
-    p = _axis_size(axis_name)
-    if method == "per_leaf":  # single-vector-at-a-time baseline
-        out = jax.tree.map(
-            lambda l: allreduce(l.astype(jnp.float32), axis_name, "ring").astype(l.dtype),
-            tree,
-        )
-        return jax.tree.map(lambda l: l / p, out) if mean else out
-    spec = spec or flatbuf.spec_for(tree)
-    buf = spec.pack(tree)
-    buf = allreduce(buf, axis_name, method, num_rings=num_rings)
-    if mean:
-        buf = buf / p
-    return spec.unpack(buf)
+    group = _as_group(axis_name_or_comm=axis_name, method=method,
+                      num_rings=num_rings, where="tensor_allreduce")
+    return group.tensor_allreduce(tree, mean=mean, spec=spec)
 
 
-def tensor_pushpull(tree: Any, axis_name: str, *, fused: bool = True,
-                    method: Method | None = None, num_rings: int = 2,
+def tensor_pushpull(tree: Any, axis_name: "str | Any", *, fused: bool = True,
+                    method: Method | None = None,
+                    num_rings: int | None = None,
                     spec: flatbuf.FlatBuffer | None = None) -> Any:
     """KVStore.pushpull comm pattern. ``fused=True`` is the paper's new API
     (one tensor allreduce, with ``method`` selecting the bucket algorithm,
     default ring); ``fused=False`` is push (reduce-to-master) + pull
     (broadcast) — two binomial-tree phases like ZPush + ZPull, which IS
     the communication pattern, so ``method`` must be left unset (or
-    "tree") there."""
-    if fused:
-        return tensor_allreduce(tree, axis_name, method or "ring",
-                                num_rings=num_rings, mean=True, spec=spec)
-    if method not in (None, "tree"):
+    "tree") there. ``axis_name`` may be a ``Communicator`` (canonical)
+    or the deprecated bare string."""
+    if not fused and method not in (None, "tree"):
         raise ValueError(
             f"method={method!r} is only meaningful for fused=True; the "
             "unfused path is defined as tree push + tree pull")
-    p = _axis_size(axis_name)
-    spec = spec or flatbuf.spec_for(tree)
-    buf = spec.pack(tree)
-    buf = tree_allreduce(buf, axis_name) / p
-    return spec.unpack(buf)
+    group = _as_group(axis_name_or_comm=axis_name, method=method,
+                      num_rings=num_rings, where="tensor_pushpull")
+    return group.pushpull(tree, fused=fused, spec=spec)
 
 
 # --------------------------------------------------------------------------

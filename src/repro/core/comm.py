@@ -1,0 +1,378 @@
+"""Communicator: the paper's MPI-groups-in-KVStore model as an object.
+
+MXNET-MPI's central design is an API, not an algorithm: MPI communicators
+embedded as *groups* inside the PS task model (§3-4), so ``kv.pushpull``
+runs an MPI collective within a group while the PS tier spans groups.
+This module is that object for the JAX reproduction. A ``Communicator``
+owns
+
+  * its **group**: a tuple of named mesh/vmap axes (``()`` is the
+    trivial size-1 group — MPI_COMM_SELF),
+  * its **collective policy**: bucket algorithm (``method``), ring count,
+    byte-sized bucketing — what used to travel as loose
+    ``allreduce_method`` / ``num_rings`` / ``bucket_bytes`` knobs,
+  * its **backend**: the named-axis substrate. The same
+    ``lax.ppermute`` programs run inside ``shard_map`` on a real mesh
+    AND under ``jax.vmap(..., axis_name=...)`` emulation, so the backend
+    is fully determined by the group: ``()`` short-circuits every
+    collective to the identity ("trivial"); otherwise the collective is
+    traced against the named axes ("named_axis") and the mapping
+    machinery (shard_map vs vmap) supplies the devices.
+
+``Communicator.world(...)`` builds the top-level group over a mesh (or
+an emulated geometry) and ``world.split("pod" | "data")`` carves
+sub-communicators the way ``MPI_Comm_split`` carves the paper's groups:
+``split("data")`` is the intra-pod gradient group (one per pod — the
+color is the pod rank), ``split("pod")`` is the cross-pod PS tier.
+
+Multi-axis groups compose collectives hierarchically: a reduce-scatter
+over ``("pod", "data")`` ring-reduce-scatters over ``pod`` first, then
+over ``data`` on the shard — (p-1)/p·n total wire bytes, exactly the
+single-axis geometry, with the same final shard size — so one
+``Communicator`` spanning both axes IS the C=1 pure-MPI mode on a 2-axis
+mesh.
+
+Everything below the config layer speaks ``Communicator``;
+``core.hierarchy.SyncConfig`` keeps its fields as the *construction
+recipe* (see ``from_sync``). Bare ``axis_name=`` string signatures on
+the old entry points keep working through ``Communicator.from_axis_name``
+behind a ``DeprecationWarning``.
+"""
+from __future__ import annotations
+
+import warnings
+from dataclasses import dataclass, replace
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import flatbuf
+from repro.core.compat import axis_size as _axis_size
+
+
+def _deprecated_axis_name(where: str) -> None:
+    warnings.warn(
+        f"{where}: passing a bare axis_name string (plus method knobs) is "
+        "deprecated — build a repro.core.comm.Communicator (e.g. "
+        "Communicator.from_axis_name(...) or Communicator.world(...).split(...)) "
+        "and pass comm= instead",
+        DeprecationWarning, stacklevel=3)
+
+
+@dataclass(frozen=True)
+class Communicator:
+    """One MPI-style group + its collective policy.
+
+    ``axes`` are the named axes the group spans (order = hierarchy order
+    for nested collectives: ``axes[0]`` is the outermost level).
+    ``sizes`` are the static axis sizes when construction-site geometry
+    is known (a mesh, an emulated ``p``); ``None`` means "resolve at
+    trace time via ``lax.axis_size``" — the adapter path for legacy
+    axis-name callers.
+    """
+
+    axes: tuple[str, ...] = ()
+    sizes: Optional[tuple[int, ...]] = None
+    method: str = "ring"
+    num_rings: int = 1
+    bucket_bytes: Optional[int] = None
+
+    # -- construction -------------------------------------------------------
+    @classmethod
+    def world(cls, axes, sizes=None, *, mesh=None, **policy) -> "Communicator":
+        """The top-level group. Pass explicit ``sizes`` (emulation) or a
+        ``mesh`` whose ``mesh.shape`` carries them."""
+        axes = tuple(axes)
+        if mesh is not None:
+            missing = [a for a in axes if a not in mesh.shape]
+            if missing:
+                raise ValueError(
+                    f"mesh axes {tuple(mesh.shape)} lack {missing}; build "
+                    f"the mesh with the communicator's axes {axes}")
+            sizes = tuple(mesh.shape[a] for a in axes)
+        elif sizes is not None:
+            sizes = tuple(int(s) for s in sizes)
+            if len(sizes) != len(axes):
+                raise ValueError(f"{len(axes)} axes but {len(sizes)} sizes")
+        return cls(axes=axes, sizes=sizes, **policy)
+
+    @classmethod
+    def from_axis_name(cls, axis_name, **policy) -> "Communicator":
+        """Adapter for the deprecated ``axis_name=`` string signatures:
+        ``None`` is the trivial group, a string (or tuple of strings) is
+        a group with trace-time-resolved sizes."""
+        if axis_name is None:
+            return cls(axes=(), sizes=(), **policy)
+        axes = (axis_name,) if isinstance(axis_name, str) else tuple(axis_name)
+        return cls(axes=axes, sizes=None, **policy)
+
+    def split(self, *axes: str) -> "Communicator":
+        """Carve the sub-communicator spanning ``axes`` — the
+        ``MPI_Comm_split`` of the paper's group model: ``split("data")``
+        yields the intra-pod gradient group (the implicit color is each
+        device's rank along every *other* axis), ``split("pod")`` the
+        cross-pod PS-tier group. Policy is inherited."""
+        unknown = [a for a in axes if a not in self.axes]
+        if unknown:
+            raise ValueError(
+                f"cannot split {unknown} out of communicator over "
+                f"{self.axes}; valid axes: {self.axes}")
+        keep = tuple(a for a in self.axes if a in axes)
+        sizes = (None if self.sizes is None
+                 else tuple(s for a, s in zip(self.axes, self.sizes)
+                            if a in axes))
+        return replace(self, axes=keep, sizes=sizes)
+
+    def complement(self, *axes: str) -> "Communicator":
+        """The sub-communicator over every axis NOT named (the other half
+        of a split): ``world.complement("pod") == world.split(*data_axes)``."""
+        keep = tuple(a for a in self.axes if a not in axes)
+        return self.split(*keep)
+
+    def local(self) -> "Communicator":
+        """The trivial (size-1, MPI_COMM_SELF) group with this policy."""
+        return replace(self, axes=(), sizes=())
+
+    def with_policy(self, **kw) -> "Communicator":
+        return replace(self, **kw)
+
+    # -- geometry -----------------------------------------------------------
+    @property
+    def is_trivial(self) -> bool:
+        return not self.axes
+
+    @property
+    def backend(self) -> str:
+        """"trivial" (size-1 short circuit) or "named_axis" (the shared
+        shard_map / vmap-emulation substrate)."""
+        return "trivial" if self.is_trivial else "named_axis"
+
+    @property
+    def static_size(self) -> Optional[int]:
+        """Product of axis sizes when statically known, else None."""
+        if self.is_trivial:
+            return 1
+        if self.sizes is None:
+            return None
+        p = 1
+        for s in self.sizes:
+            p *= s
+        return p
+
+    def resolve_size(self) -> int:
+        """Group size. Static when known; otherwise resolved from the
+        ambient named-axis context (so it must run under the map)."""
+        if self.static_size is not None:
+            return self.static_size
+        p = 1
+        for a in self.axes:
+            p *= _axis_size(a)
+        return p
+
+    def _axis_sizes(self) -> tuple[int, ...]:
+        if self.sizes is not None:
+            return self.sizes
+        return tuple(_axis_size(a) for a in self.axes)
+
+    def rings_for(self, nbytes: int) -> int:
+        """The policy's effective ring count for an ``nbytes`` buffer
+        (``num_rings`` composed with ``bucket_bytes`` chunking)."""
+        return flatbuf.effective_rings(nbytes, self.num_rings,
+                                       self.bucket_bytes)
+
+    def shard_geometry(self, n: int, num_rings: Optional[int] = None,
+                       *, itemsize: int = 4) -> tuple[int, int]:
+        """(per-device shard length, padded total) for a length-``n``
+        buffer sharded over the whole group, under the full ring policy
+        (``rings_for`` — so it agrees with what ``reduce_scatter`` /
+        ``optstate_shard_init`` lay out when ``bucket_bytes`` is set)."""
+        p = self.resolve_size()
+        nr = (self.rings_for(n * itemsize) if num_rings is None
+              else num_rings)
+        _, total = flatbuf.shard_geometry(n, p, nr)
+        return total // p, total
+
+    # -- collectives (run inside shard_map / vmap named-axis context) -------
+    def allreduce(self, x: jax.Array, *, mean: bool = False) -> jax.Array:
+        """Policy-dispatched allreduce (sum) over the whole group.
+
+        Multi-axis ring-family groups run the hierarchical
+        reduce-scatter + allgather composition, which telescopes to
+        exactly the 1-axis ring's wire bytes (a per-axis allreduce loop
+        would cost Σ 2(p_k-1)/p_k·n instead of 2(Πp_k-1)/(Πp_k)·n);
+        ``tree`` — the PS push/pull baseline pattern — reduces one axis
+        at a time. The FULL ring policy applies: ``bucket_bytes``
+        composes with ``num_rings`` exactly like on the sharded legs."""
+        from repro.core import collectives as C
+
+        out = x
+        if not self.axes:
+            pass
+        elif self.method == "psum":
+            out = lax.psum(out, self.axes)
+        elif self.method == "tree" or len(self.axes) == 1:
+            nr = self.rings_for(x.size * x.dtype.itemsize)
+            for a in self.axes:
+                out = C.allreduce(out, a, self.method, num_rings=nr)
+        else:
+            shape, n = x.shape, x.size
+            nr = self.rings_for(x.size * x.dtype.itemsize)
+            _, total = flatbuf.shard_geometry(n, self.resolve_size(), nr)
+            flat = jnp.pad(x.reshape(-1), (0, total - n))
+            shard = self.reduce_scatter(flat, num_rings=nr)
+            out = self.allgather(shard, num_rings=nr)[:n].reshape(shape)
+        if mean:
+            out = out / self.resolve_size()
+        return out
+
+    def pmean(self, x: jax.Array) -> jax.Array:
+        """Mean over the group (metrics leg): native psum — cheap scalar
+        traffic, not part of any byte-accounted data leg."""
+        if self.is_trivial:
+            return x
+        return lax.pmean(x, self.axes)
+
+    def reduce_scatter(self, buf: jax.Array, *,
+                       num_rings: Optional[int] = None) -> jax.Array:
+        """Hierarchical ring reduce-scatter of a flat buffer: level k
+        reduce-scatters level k-1's shard over ``axes[k]``. The final
+        shard is 1/(prod sizes) of the padded buffer and the total wire
+        bytes telescope to the single-axis (p-1)/p·n. With no explicit
+        ``num_rings`` the FULL ring policy applies (``rings_for`` of the
+        buffer — so the layout agrees with ``shard_geometry`` even when
+        ``bucket_bytes`` is set)."""
+        from repro.core import collectives as C
+
+        out = buf.reshape(-1)
+        nr = (self.rings_for(out.size * out.dtype.itemsize)
+              if num_rings is None else num_rings)
+        for a in self.axes:
+            out = C.ring_reduce_scatter(out, a, num_rings=nr)
+        return out
+
+    def allgather(self, shard: jax.Array, *,
+                  num_rings: Optional[int] = None) -> jax.Array:
+        """Inverse of ``reduce_scatter``: gather level by level, innermost
+        axis first. The default ring count resolves from the FULL
+        (gathered) buffer's bytes, matching ``reduce_scatter``'s."""
+        from repro.core import collectives as C
+
+        out = shard.reshape(-1)
+        nr = (self.rings_for(out.size * self.resolve_size()
+                             * out.dtype.itemsize)
+              if num_rings is None else num_rings)
+        for a in reversed(self.axes):
+            out = C.ring_allgather(out, a, num_rings=nr)
+        return out
+
+    def shard_select(self, buf: jax.Array, *,
+                     num_rings: Optional[int] = None) -> jax.Array:
+        """This device's shard of a *replicated* flat buffer — exactly
+        the slice ``reduce_scatter`` with the same geometry (and the
+        same default ring-policy resolution) leaves here."""
+        from repro.core import collectives as C
+
+        out = buf.reshape(-1)
+        nr = (self.rings_for(out.size * out.dtype.itemsize)
+              if num_rings is None else num_rings)
+        for a in self.axes:
+            out = C.shard_select(out, a, num_rings=nr)
+        return out
+
+    # -- tensor (fused-pytree) collectives ----------------------------------
+    def tensor_allreduce(self, tree: Any, *, mean: bool = False,
+                         spec: Optional[flatbuf.FlatBuffer] = None) -> Any:
+        """Allreduce a whole pytree as ONE fused flat buffer (the paper's
+        group-of-vectors object), under this group's policy."""
+        p = self.resolve_size()
+        if self.method == "per_leaf":  # single-vector-at-a-time baseline
+            from repro.core import collectives as C
+
+            out = tree
+            for a in self.axes:
+                out = jax.tree.map(
+                    lambda l: C.allreduce(
+                        l.astype(jnp.float32), a, "ring").astype(l.dtype),
+                    out)
+            return jax.tree.map(lambda l: l / p, out) if mean else out
+        spec = spec or flatbuf.spec_for(tree)
+        buf = self.allreduce(spec.pack(tree), mean=mean)
+        return spec.unpack(buf)
+
+    def pushpull(self, tree: Any, *, fused: bool = True,
+                 spec: Optional[flatbuf.FlatBuffer] = None) -> Any:
+        """The KVStore.pushpull comm pattern inside this group (§4.2.4
+        with #servers = 0): ``fused=True`` is one tensor allreduce (mean)
+        under the group's bucket algorithm; ``fused=False`` is the
+        push-then-pull pattern — binomial tree reduce + broadcast."""
+        from repro.core import collectives as C
+
+        if fused:
+            return self.tensor_allreduce(tree, mean=True, spec=spec)
+        p = self.resolve_size()
+        spec = spec or flatbuf.spec_for(tree)
+        buf = spec.pack(tree)
+        for a in self.axes:
+            buf = C.tree_allreduce(buf, a)
+        return spec.unpack(buf / p)
+
+    # -- single-process emulation (the in-process PS simulation) ------------
+    def emulate_reduce(self, stacked: Any, *, mean: bool = False) -> Any:
+        """Group collective over a *stacked* member dim (leading axis =
+        group size) via vmap emulation — how the in-process KVStore /
+        six-mode simulation runs the intra-group leg. Multi-axis groups
+        nest one vmap per axis over a matching leading shape."""
+        if self.is_trivial:
+            return stacked
+        return _emulated_reduce(self, mean, stacked)
+
+
+@partial(jax.jit, static_argnums=(0, 1))
+def _emulated_reduce(comm: Communicator, mean: bool, stacked: Any) -> Any:
+    """Jitted so the FlatBuffer pack traces ONCE per (communicator,
+    structure, shapes) — eager drivers don't pay a re-flatten per step."""
+    fn = lambda t: comm.tensor_allreduce(t, mean=mean)
+    for a in reversed(comm.axes):
+        fn = jax.vmap(fn, axis_name=a)
+    return fn(stacked)
+
+
+#: module-level trivial group (MPI_COMM_SELF with the default policy)
+LOCAL = Communicator()
+
+
+def from_sync(sync, axes=(), sizes=None, *, mesh=None) -> Communicator:
+    """Build a communicator from a ``SyncConfig`` recipe: the config's
+    ``allreduce_method`` / ``num_rings`` / ``bucket_bytes`` become the
+    group's collective policy. This is the ONE place config knobs turn
+    into a Communicator — everything below speaks the object."""
+    return Communicator.world(
+        axes, sizes, mesh=mesh, method=sync.allreduce_method,
+        num_rings=sync.num_rings, bucket_bytes=sync.bucket_bytes)
+
+
+def sync_comms(sync, world: Communicator
+               ) -> tuple[Communicator, Optional[Communicator]]:
+    """Resolve a SyncConfig's (gradient group, exchange group) over a
+    world communicator — the paper's mode table as group algebra:
+
+      mpi_sgd   one communicator spanning every axis (C = 1 pure-MPI
+                mode): gradients fully reduced each step, no exchange
+      mpi_esgd  the 'pod' axis is the PS tier: the gradient group is
+                everything BUT 'pod' (intra-client), the elastic
+                exchange group IS 'pod'. A world without a 'pod' axis
+                maps device == client (the 1-axis shard driver): the
+                whole world is the exchange group and the gradient
+                group is trivial.
+    """
+    if sync.mode == "mpi_sgd":
+        return world, None
+    if sync.mode != "mpi_esgd":
+        raise ValueError(f"lowerable modes are mpi_sgd/mpi_esgd, "
+                         f"got {sync.mode!r}")
+    if "pod" in world.axes:
+        return world.complement("pod"), world.split("pod")
+    return world.local(), world

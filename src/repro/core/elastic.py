@@ -200,7 +200,8 @@ def elastic_exchange_multiclient_flat(
 
 def elastic_exchange_sharded(spec: flatbuf.FlatBuffer, params: Any,
                              center: Any, alpha, *,
-                             axis_name: Optional[str],
+                             comm=None,
+                             axis_name: Optional[str] = None,
                              num_rings: int = 1,
                              bucket_bytes: Optional[int] = None,
                              interpret: Optional[bool] = None
@@ -217,18 +218,34 @@ def elastic_exchange_sharded(spec: flatbuf.FlatBuffer, params: Any,
       3. fused eq. (2) kernel on this device's 1/p shard of the center
       4. ring allgather of the updated center shards
 
-    ``axis_name=None`` (or axis of size 1) degenerates to the local
-    exchange: both kernels over the whole buffer, no collective.
+    ``comm`` is the exchange group (``core.comm.Communicator`` — the
+    paper's PS tier, e.g. ``world.split("pod")``); its policy supplies
+    the ring count and bucketing. A trivial group (or axis of size 1)
+    degenerates to the local exchange: both kernels over the whole
+    buffer, no collective. The deprecated ``axis_name=`` string keeps
+    working via ``Communicator.from_axis_name`` (DeprecationWarning;
+    ``axis_name=None`` stays the quiet local form).
     Returns ``(new_params, new_center)``, both full trees.
     """
-    from repro.core.collectives import (
-        ring_allgather, ring_reduce_scatter, shard_select)
-    from repro.core.compat import axis_size
+    from repro.core import comm as _comm
     from repro.kernels.fused_elastic.fused_elastic import (
         elastic_center_flat, elastic_client_diff_flat)
 
-    p = 1 if axis_name is None else axis_size(axis_name)
-    nr = flatbuf.effective_rings(spec.nbytes, num_rings, bucket_bytes)
+    if comm is None:
+        if axis_name is not None:
+            _comm._deprecated_axis_name("elastic_exchange_sharded")
+        comm = _comm.Communicator.from_axis_name(
+            axis_name, num_rings=num_rings, bucket_bytes=bucket_bytes)
+    elif axis_name is not None:
+        raise ValueError("pass comm= or the deprecated axis_name=, not both")
+    elif num_rings != 1 or bucket_bytes is not None:
+        raise ValueError(
+            "with comm= the ring policy lives on the communicator — set "
+            "num_rings/bucket_bytes there (Communicator.with_policy), "
+            "not as arguments")
+
+    p = comm.resolve_size()
+    nr = comm.rings_for(spec.nbytes)
     _, total = flatbuf.shard_geometry(spec.size, p, nr)
     w = flatbuf.pack_padded(spec, params, total)
     c = flatbuf.pack_padded(spec, center, total)
@@ -238,10 +255,10 @@ def elastic_exchange_sharded(spec: flatbuf.FlatBuffer, params: Any,
     if p == 1:
         diff_sum, c_shard = diff, c
     else:
-        diff_sum = ring_reduce_scatter(diff, axis_name, num_rings=nr)
-        c_shard = shard_select(c, axis_name, num_rings=nr)
+        diff_sum = comm.reduce_scatter(diff, num_rings=nr)
+        c_shard = comm.shard_select(c, num_rings=nr)
     new_c_shard = elastic_center_flat(c_shard, diff_sum, alpha,
                                       interpret=interpret)
     new_c = (new_c_shard if p == 1
-             else ring_allgather(new_c_shard, axis_name, num_rings=nr))
+             else comm.allgather(new_c_shard, num_rings=nr))
     return spec.unpack(new_w[:spec.size]), spec.unpack(new_c[:spec.size])

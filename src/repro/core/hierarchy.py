@@ -56,16 +56,44 @@ class SyncConfig:
     bucket_bytes: Optional[int] = None
     fsdp: bool = False  # ZeRO-3: params/opt-state also sharded over 'data'
 
-    def validate(self, mesh: Mesh) -> None:
+    def validate(self, mesh: Optional[Mesh] = None) -> None:
+        """Check the config against a mesh BEFORE any step is traced.
+
+        Called by ``launch.train.make_train_step`` /
+        ``launch.shard_driver`` so a client-count/mesh mismatch fails
+        here with an actionable message instead of surfacing deep inside
+        shard_map as an opaque reshape/shape error. ``mesh=None`` (the
+        single-process vmap-emulation drivers) skips the axis checks.
+        """
         if self.mode not in ("mpi_sgd", "mpi_esgd"):
             raise ValueError(f"lowerable modes are mpi_sgd/mpi_esgd, got {self.mode}")
-        if self.num_clients > 1:
-            if "pod" not in mesh.shape:
-                raise ValueError("num_clients>1 requires a 'pod' mesh axis")
-            if mesh.shape["pod"] != self.num_clients:
-                raise ValueError(
-                    f"num_clients={self.num_clients} != pod axis {mesh.shape['pod']}"
-                )
+        from repro.core.collectives import _METHODS
+
+        if self.allreduce_method not in _METHODS:
+            raise ValueError(
+                f"allreduce_method={self.allreduce_method!r} is not one of "
+                f"{_METHODS} — SyncConfig is the construction recipe for "
+                "core.comm.Communicator, which only dispatches these")
+        if mesh is None or self.num_clients <= 1:
+            return
+        C = self.num_clients
+        if "pod" not in mesh.shape:
+            raise ValueError(
+                f"SyncConfig(num_clients={C}) needs a 'pod' mesh axis to "
+                f"shard the client dim over, but the mesh only has axes "
+                f"{dict(mesh.shape)} — build it with a pod axis of size "
+                f"{C}, e.g. compat.make_mesh(({C}, D), ('pod', 'data')) "
+                "or launch.mesh.make_production_mesh(multi_pod=True); "
+                "without it the client dim cannot be laid out and the "
+                "failure would otherwise surface inside shard_map as a "
+                "shape error")
+        if mesh.shape["pod"] != C:
+            raise ValueError(
+                f"SyncConfig(num_clients={C}) != 'pod' axis size "
+                f"{mesh.shape['pod']} (mesh axes {dict(mesh.shape)}) — "
+                "one client per pod: set num_clients to the pod axis "
+                "size or rebuild the mesh with a pod axis of size "
+                f"{C}")
 
 
 def clientize(params: Any, num_clients: int) -> Any:

@@ -18,6 +18,12 @@ API the paper's workers use:
 
 MPI types ("sync_mpi"/"async_mpi") only change WHO pushes: the client
 master, after an intra-client tensor allreduce — see core/algorithms.py.
+That intra-client collective is a first-class *group* here (the paper's
+MPI-communicators-in-KVStore model): ``register_group`` attaches a
+``core.comm.Communicator`` per client group, and ``push``/``pushpull``
+accept ``group=`` to run the group collective (vmap emulation of the
+real ring programs) before the PS tier — pushpull WITHIN a group, the
+elastic/optimizer server rule ACROSS groups.
 
 Pushed pytrees are treated as ONE fused object end-to-end: the sync
 barrier accumulates them as packed ``FlatBuffer``s (core/flatbuf.py —
@@ -117,6 +123,10 @@ class KVStore:
         self._pending: dict[Any, list[jax.Array]] = {}
         self._rule = _ServerRule()
         self.push_count: dict[Any, int] = {}
+        # MPI groups embedded in the store (paper §3-4): group id ->
+        # the intra-group communicator; + per-group collective counters
+        self._groups: dict[Any, Any] = {}
+        self.group_sync_count: dict[Any, int] = {}
 
     # -- setup --------------------------------------------------------------
     @classmethod
@@ -142,10 +152,81 @@ class KVStore:
         """Server-side Elastic1 (eq. 2): values become center variables."""
         self._rule = _ServerRule("elastic", alpha=alpha)
 
+    def register_group(self, gid: Any, group) -> None:
+        """Attach an MPI group (a ``core.comm.Communicator``) to the
+        store — the paper's communicator-in-KVStore embedding. Pushes
+        tagged ``group=gid`` run the group's collective first; the PS
+        rule then spans groups."""
+        from repro.core.comm import Communicator
+
+        if not isinstance(group, Communicator):
+            raise TypeError(
+                f"register_group wants a core.comm.Communicator, got "
+                f"{type(group).__name__} — build one with "
+                "Communicator.world(...).split(...)")
+        if group.static_size is None:
+            raise ValueError(
+                "register_group needs a communicator with static sizes "
+                "(the in-process emulation splits the stacked member dim "
+                "by them) — build it with Communicator.world(axes, sizes)")
+        self._groups[gid] = group
+        self.group_sync_count.setdefault(gid, 0)
+
+    def group(self, gid: Any):
+        return self._groups[gid]
+
+    def group_reduce(self, gid: Any, stacked: Any, *,
+                     mean: bool = False) -> Any:
+        """The intra-group collective: ``stacked`` carries a leading
+        member dim (= group size); the registered communicator's tensor
+        allreduce runs over it (vmap emulation of the same ring
+        programs shard_map executes) and the group master's copy is
+        returned — sum by default, the client-sum a master pushes.
+
+        Multi-axis groups (e.g. a pod×data hierarchy registered whole)
+        have the flat member dim reshaped to the group's axis sizes
+        before the nested per-axis emulation — the sizes must be static
+        for that, which ``register_group`` guarantees."""
+        group = self._groups[gid]
+        leaves = jax.tree_util.tree_leaves(stacked)
+        members = leaves[0].shape[0] if leaves else 1
+        want = group.static_size
+        if want is not None and members != want:
+            raise ValueError(
+                f"group {gid!r} push carries {members} stacked members "
+                f"but the registered communicator spans {want} ranks "
+                f"(axes {group.axes}, sizes {group.sizes}) — stack one "
+                "entry per group member")
+        self.group_sync_count[gid] = self.group_sync_count.get(gid, 0) + 1
+        if members == 1:
+            return jax.tree.map(lambda l: l[0], stacked)
+        if len(group.axes) > 1:
+            shape = tuple(group.sizes)
+            split = jax.tree.map(
+                lambda l: l.reshape(shape + l.shape[1:]), stacked)
+            synced = group.emulate_reduce(split, mean=mean)
+            return jax.tree.map(
+                lambda l: l.reshape((members,) + l.shape[len(shape):])[0],
+                synced)
+        synced = group.emulate_reduce(stacked, mean=mean)
+        return jax.tree.map(lambda l: l[0], synced)
+
     # -- data plane ----------------------------------------------------------
-    def push(self, key: Any, tensor: list[jax.Array] | jax.Array) -> None:
+    def push(self, key: Any, tensor: list[jax.Array] | jax.Array, *,
+             group: Any = None) -> None:
+        """Worker push. ``group=gid`` marks ``tensor`` as the group's
+        stacked member values (leading dim = group size): the registered
+        communicator's collective reduces them first (the MPI leg) and
+        the group counts as ONE pusher toward the PS barrier — the
+        paper's client-master push."""
         if key not in self._values:
             raise KeyError(f"push to uninitialized key {key!r}")
+        if group is not None:
+            if group not in self._groups:
+                raise KeyError(
+                    f"push(group={group!r}) before register_group — attach "
+                    "the client's Communicator first")
+            tensor = self.group_reduce(group, tensor)
         agg = local_reduce(tensor) if isinstance(tensor, list) else tensor
         self.push_count[key] += 1
         raw = sum(l.size * l.dtype.itemsize
@@ -210,10 +291,14 @@ class KVStore:
         return [v for _ in range(num_dst)]
 
     def pushpull(self, key: Any, tensor: list[jax.Array] | jax.Array,
-                 num_dst: int = 1) -> list[jax.Array]:
+                 num_dst: int = 1, *, group: Any = None) -> list[jax.Array]:
         """Fused push+pull (§4.2.4). With 0 servers this is pure tensor
-        allreduce; here it is push followed by an immediate pull."""
-        self.push(key, tensor)
+        allreduce; here it is push followed by an immediate pull.
+        ``group=gid`` runs the registered group's collective first (the
+        MPI leg inside the client) — for sync types the pull still
+        honors the cross-group barrier, so the LAST group's pushpull
+        releases it."""
+        self.push(key, tensor, group=group)
         return self.pull(key, num_dst)
 
     # -- server rules ---------------------------------------------------------

@@ -21,7 +21,7 @@ Selection (``make_sync_engine``):
                  SGD with f32 state, AdaGrad, or AdamW — the K-stream
                  fused kernels in kernels/fused_sgd + kernels/fused_optim)
                  and NO ambient mesh — both ``mpi_sgd`` (C=1, collectives
-                 over ``axis_name``) and ``mpi_esgd`` (per-client local
+                 over the gradient Communicator) and ``mpi_esgd`` (per-client local
                  geometry; the step vmaps ``update`` over the client dim)
   flat exchange  ``flat_exchange`` and no mesh — independent of the
                  update substrate, so e.g. a custom-optimizer run still
@@ -38,7 +38,7 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import flatbuf
+from repro.core import comm as comm_lib, flatbuf
 from repro.core.elastic import (
     elastic_exchange_multiclient,
     elastic_exchange_multiclient_flat,
@@ -83,11 +83,15 @@ def flat_exchange_active(sync: SyncConfig, mesh=None) -> bool:
 
 @dataclass(frozen=True)
 class SyncEngine:
-    """Per-leaf strategy (the GSPMD / custom-optimizer path)."""
+    """Per-leaf strategy (the GSPMD / custom-optimizer path).
+
+    ``comm`` is the gradient group (``core.comm.Communicator``) the
+    update leg syncs over — trivial for the local / per-client path.
+    """
 
     optimizer: Optimizer
     sync: SyncConfig
-    axis_name: Optional[str] = None
+    comm: comm_lib.Communicator = comm_lib.LOCAL
     flat_exchange: bool = False
     spec: Optional[flatbuf.FlatBuffer] = None
 
@@ -132,8 +136,7 @@ class FlatEngine(SyncEngine):
     fused = True
 
     def _num_rings(self) -> int:
-        return flatbuf.effective_rings(self.spec.nbytes, self.sync.num_rings,
-                                       self.sync.bucket_bytes)
+        return self.comm.rings_for(self.spec.nbytes)
 
     def init_opt(self, params: Any) -> Any:
         # local (p=1) geometry; device-sharded drivers re-init per device
@@ -144,14 +147,10 @@ class FlatEngine(SyncEngine):
     def update(self, grads: Any, opt_state: Any, params: Any):
         return scatter_update_gather(
             self.spec, grads, params, opt_state,
-            hyper=self.optimizer.hyper,
-            axis_name=self.axis_name, num_rings=self.sync.num_rings,
-            bucket_bytes=self.sync.bucket_bytes,
+            hyper=self.optimizer.hyper, comm=self.comm,
         )
 
     def check_opt_layout(self, opt_state: Any, num_clients: int = 1) -> None:
-        from repro.core.compat import axis_size
-
         if self.optimizer.hyper.get("name", "").endswith("adamw"):
             if not _is_flat_adamw_state(opt_state):
                 raise ValueError(
@@ -170,8 +169,7 @@ class FlatEngine(SyncEngine):
                     "make_train_step(..., mesh)")
             buf, streams = opt_state, 1
         # C>1 vmaps the update per client, so each client is p=1 geometry
-        p = (1 if (self.axis_name is None or num_clients > 1)
-             else axis_size(self.axis_name))
+        p = 1 if num_clients > 1 else self.comm.resolve_size()
         want = flatbuf.shard_size(self.spec, p, self.sync.num_rings,
                                   self.sync.bucket_bytes)
         per_client = buf.size // (streams * max(num_clients, 1))
@@ -185,18 +183,32 @@ class FlatEngine(SyncEngine):
 
 
 def make_sync_engine(optimizer: Optimizer, sync: SyncConfig, mesh=None, *,
+                     comm: Optional[comm_lib.Communicator] = None,
                      axis_name: Optional[str] = None,
                      spec: Optional[flatbuf.FlatBuffer] = None) -> SyncEngine:
     """Resolve the strategy for (optimizer, sync, mesh) once.
 
-    ``spec`` (the param-tree FlatBuffer) is required whenever a flat leg
-    engages; callers that might need it build it with
-    ``launch.train.grad_spec``.
+    ``comm`` is the gradient group the update leg syncs over; omitted,
+    it is built from the SyncConfig recipe (trivial group — the local /
+    per-client geometry). The deprecated ``axis_name=`` string keeps
+    working via ``Communicator.from_axis_name``. ``spec`` (the
+    param-tree FlatBuffer) is required whenever a flat leg engages;
+    callers that might need it build it with ``launch.train.grad_spec``.
     """
+    if comm is None:
+        if axis_name is not None:
+            comm_lib._deprecated_axis_name("make_sync_engine")
+            comm = comm_lib.Communicator.from_axis_name(
+                axis_name, method=sync.allreduce_method,
+                num_rings=sync.num_rings, bucket_bytes=sync.bucket_bytes)
+        else:
+            comm = comm_lib.from_sync(sync)
+    elif axis_name is not None:
+        raise ValueError("pass comm= or the deprecated axis_name=, not both")
     fused = flat_update_supported(optimizer, sync, mesh)
     flat_ex = flat_exchange_active(sync, mesh)
     if fused and spec is None:
         raise ValueError("flat-update engine needs the FlatBuffer spec")
     cls = FlatEngine if fused else SyncEngine
-    return cls(optimizer, sync, axis_name=axis_name, flat_exchange=flat_ex,
+    return cls(optimizer, sync, comm=comm, flat_exchange=flat_ex,
                spec=spec)

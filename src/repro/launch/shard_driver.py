@@ -2,44 +2,67 @@
 
 launch/train.py's collective-explicit fused path engages when no mesh is
 given; under GSPMD (a mesh) XLA owns the gradient collectives. This
-driver closes the gap between the two (ROADMAP open item 3): it runs
-BOTH lowerable modes with the step mapped per-device over a real mesh
-axis via ``compat.shard_map`` — gradients computed INSIDE the mapped
-function on the device's batch shard, explicit ring collectives carrying
-every byte of cross-device traffic (GSPMD inserts nothing), optimizer
-state sharded with ``optstate_shard_init`` (momentum SGD, AdaGrad, or
-AdamW — AdamW's two full-size moment streams both live 1/p per device):
+driver closes the gap between the two: it runs BOTH lowerable modes with
+the step mapped per-device over real mesh axes via ``compat.shard_map``
+— gradients computed INSIDE the mapped function on the device's batch
+shard, explicit ring collectives carrying every byte of cross-device
+traffic (GSPMD inserts nothing), optimizer state sharded with
+``optstate_shard_init`` (momentum SGD, AdaGrad, or AdamW — AdamW's two
+full-size moment streams both live 1/p per device).
 
-  mpi_sgd   the device axis is the intra-client MPI communicator: pack
-            grads into the FlatBuffer -> ring reduce-scatter -> fused
-            momentum-SGD Pallas kernel on the local 1/p shard (momentum
-            sharded 1/p) -> ring allgather of updated params
-  mpi_esgd  each device is one CLIENT (the pod axis): local fused SGD
-            every step; every INTERVAL steps the flat sharded elastic
-            exchange crosses the axis (ONE Pallas pass for eq. (3) + the
+Which collective runs over which devices is decided by **communicator
+algebra** (core/comm.py), not axis-name strings: the driver builds a
+``world`` communicator over the mesh axes and ``comm.sync_comms`` carves
+it into the paper's groups —
+
+  mpi_sgd   the gradient group IS the world (C = 1 pure-MPI mode): pack
+            grads into the FlatBuffer -> (hierarchical) ring
+            reduce-scatter -> fused optimizer Pallas kernel on the local
+            1/p shard (state sharded 1/p) -> ring allgather
+  mpi_esgd  the 'pod' axis is the PS tier: the gradient group is
+            everything BUT 'pod' (local fused update inside the client),
+            and every INTERVAL steps the flat sharded elastic exchange
+            crosses the 'pod' group (ONE Pallas pass for eq. (3) + the
             packed differences, ring reduce-scatter of the differences,
             fused eq. (2) on the 1/p center shard, allgather) — the only
-            cross-device traffic
+            cross-client traffic
 
-Driver state is *stacked*: every leaf carries a leading device dim p,
-sharded over the axis on a real mesh (so each device holds exactly its
-replica/shard) and vmapped under single-device emulation — one layout
-serves production and tests alike. The elastic INTERVAL condition is
-applied OUTSIDE the mapped functions (a scalar ``lax.cond`` choosing
-whether to invoke the mapped exchange at all), so the collectives never
-sit inside a data-dependent branch.
+Two mesh layouts serve this:
+
+  1-axis    ``p`` is an int, one axis (default "dev"). mpi_sgd: the axis
+            is the intra-client MPI communicator. mpi_esgd: each device
+            is one CLIENT (the axis plays the pod role).
+  2-axis    ``p`` is ``(P, D)`` (or the mesh has 'pod' and 'data' axes):
+            the paper's full hierarchy in ONE shard_map program. mpi_sgd
+            reduce-scatters hierarchically over pod then data (same
+            total bytes and final 1/(P*D) shard as one (P*D)-ring).
+            mpi_esgd confines the gradient leg to 'data' INSIDE each
+            pod-client (state sharded 1/D) while the elastic leg crosses
+            'pod' — provably: the legs' ppermutes name disjoint axes
+            (tests/test_shard_driver.py asserts this on the jaxpr).
+
+Driver state is *stacked*: every leaf carries a leading device dim
+p_total (pod-major for 2-axis), sharded over the axes on a real mesh (so
+each device holds exactly its replica/shard) and vmapped — one nested
+vmap per axis — under single-device emulation; one layout serves
+production and tests alike. The elastic INTERVAL condition is applied
+OUTSIDE the mapped functions (a scalar ``lax.cond`` choosing whether to
+invoke the mapped exchange at all), so the collectives never sit inside
+a data-dependent branch.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Optional
+import math
+from typing import Any, Callable, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from repro.core import flatbuf
-from repro.core.compat import axis_size, shard_map
+from repro.core import comm as comm_lib, flatbuf
+from repro.core.comm import Communicator, sync_comms
+from repro.core.compat import shard_map
 from repro.core.elastic import elastic_exchange_sharded
 from repro.core.hierarchy import SyncConfig, should_elastic_sync
 from repro.core.sync_engine import flat_update_supported, make_sync_engine
@@ -47,84 +70,125 @@ from repro.launch.train import grad_spec, make_grad_fn
 from repro.models.model import Model
 from repro.optim.sgd import Optimizer, optstate_shard_init
 
-AXIS = "dev"
+AXIS = "dev"                       # the 1-axis layout's single axis
+POD_AXIS, DATA_AXIS = "pod", "data"  # the 2-axis (hierarchy) layout
+
+Geometry = Union[int, Sequence[int]]
+
+
+def _factorize(p: Geometry, axis_name: str = AXIS
+               ) -> tuple[tuple[int, ...], tuple[str, ...]]:
+    """Normalize the device geometry: an int is the 1-axis layout over
+    ``axis_name``; a (pods, data) pair is the 2-axis pod×data layout."""
+    if isinstance(p, (tuple, list)):
+        if len(p) != 2:
+            raise ValueError(
+                f"2-axis geometry is (pods, data), got {tuple(p)}")
+        return (int(p[0]), int(p[1])), (POD_AXIS, DATA_AXIS)
+    return (int(p),), (axis_name,)
+
+
+def driver_world(sync: SyncConfig, p: Geometry, *,
+                 axis_name: str = AXIS) -> Communicator:
+    """The top-level communicator for a driver geometry, carrying the
+    SyncConfig's collective policy."""
+    shape, axes = _factorize(p, axis_name)
+    return comm_lib.from_sync(sync, axes, shape)
 
 
 def _require_supported(model: Model, optimizer: Optimizer, sync: SyncConfig,
-                       p: int) -> flatbuf.FlatBuffer:
+                       world: Communicator) -> flatbuf.FlatBuffer:
     if not flat_update_supported(optimizer, sync, None):
         raise ValueError(
             "the shard driver runs the flat fused substrate only: "
             "momentum-SGD (f32 state), AdaGrad or AdamW with "
             "SyncConfig.fused_update=True")
-    if sync.mode == "mpi_esgd" and sync.num_clients != p:
-        raise ValueError(
-            f"mpi_esgd under the shard driver maps one client per device: "
-            f"num_clients={sync.num_clients} != p={p}")
+    sync.validate()
+    if sync.mode == "mpi_esgd":
+        _, ex = sync_comms(sync, world)
+        pods = ex.static_size
+        if sync.num_clients != pods:
+            what = ("one client per pod" if POD_AXIS in world.axes
+                    else "one client per device")
+            raise ValueError(
+                f"mpi_esgd under the shard driver maps {what}: "
+                f"num_clients={sync.num_clients} != {pods} (world "
+                f"axes {world.axes}, sizes {world.sizes})")
     return grad_spec(model)
 
 
-def shard_batch(batch: Any, p: int) -> Any:
-    """(B, ...) host batch -> (p, B/p, ...) stacked per-device shards.
+def shard_batch(batch: Any, p: Geometry) -> Any:
+    """(B, ...) host batch -> (p_total, B/p_total, ...) stacked
+    per-device shards (pod-major for 2-axis geometries).
 
-    For mpi_esgd the leading dim doubles as the client dim (device ==
+    For mpi_esgd the leading dim doubles as the client dim (pod ==
     client), matching launch/train.py's clientized batch layout.
     """
+    shape, _ = _factorize(p)
+    n = math.prod(shape)
     return jax.tree.map(
-        lambda a: a.reshape((p, a.shape[0] // p) + a.shape[1:]), batch
+        lambda a: a.reshape((n, a.shape[0] // n) + a.shape[1:]), batch
     )
 
 
 def make_driver_state(model: Model, optimizer: Optimizer, sync: SyncConfig,
-                      p: int, rng: jax.Array | None = None) -> dict:
-    """Stacked (leading device dim p) initial state.
+                      p: Geometry, rng: jax.Array | None = None) -> dict:
+    """Stacked (leading device dim p_total) initial state.
 
-    mpi_sgd: params replicated p ways, optimizer state (momentum /
-    AdaGrad accumulator / AdamW m+v streams) sharded 1/p per device.
-    mpi_esgd: one replica per device (device == client), full local
-    optimizer state per device, replicated center.
+    mpi_sgd: params replicated, optimizer state (momentum / AdaGrad
+    accumulator / AdamW m+v streams) sharded 1/p_total per device.
+    mpi_esgd: one replica per client (pod), optimizer state sharded over
+    the client's gradient group (1-axis: full local state per device;
+    2-axis: 1/D per device), replicated center.
     """
     rng = jax.random.key(0) if rng is None else rng
-    spec = _require_supported(model, optimizer, sync, p)
-    nr = flatbuf.effective_rings(spec.nbytes, sync.num_rings,
-                                 sync.bucket_bytes)
-    esgd = sync.mode == "mpi_esgd"
+    world = driver_world(sync, p)
+    spec = _require_supported(model, optimizer, sync, world)
+    grad_comm, _ = sync_comms(sync, world)
+    gp = grad_comm.static_size
+    nr = grad_comm.rings_for(spec.nbytes)
+    n = world.static_size
     params = model.init(rng)
-    opt0 = optstate_shard_init(optimizer.hyper, spec, 1 if esgd else p, nr)
+    opt0 = optstate_shard_init(optimizer.hyper, spec, gp, nr)
 
     def stack(tree):
         return jax.tree.map(
-            lambda l: jnp.broadcast_to(l[None], (p,) + l.shape).copy(), tree
+            lambda l: jnp.broadcast_to(l[None], (n,) + l.shape).copy(), tree
         )
 
     state = {
         "params": stack(params),
         "opt": stack(opt0),
-        "step": jnp.zeros((p,), jnp.int32),
+        "step": jnp.zeros((n,), jnp.int32),
     }
-    if esgd:
+    if sync.mode == "mpi_esgd":
         state["center"] = stack(params)
     return state
 
 
 def make_device_step(model: Model, optimizer: Optimizer, sync: SyncConfig,
-                     *, axis_name: str = AXIS, microbatch: int = 1
+                     *, world: Optional[Communicator] = None,
+                     axis_name: str = AXIS, microbatch: int = 1
                      ) -> tuple[Callable, Optional[Callable]]:
     """The per-device programs: ``(device_step, device_exchange)``.
 
     ``device_step`` computes grads on the device's batch shard and runs
-    the engine's sync+update leg; ``device_exchange`` (mpi_esgd only) is
-    the flat sharded elastic exchange. Both are meant to run inside
-    shard_map on a real mesh or under ``jax.vmap(..., axis_name=...)``
-    emulation — ``make_sharded_step`` / ``make_emulated_step`` wrap them.
+    the engine's sync+update leg over the gradient communicator;
+    ``device_exchange`` (mpi_esgd only) is the flat sharded elastic
+    exchange over the exchange (pod) communicator. Both are meant to run
+    inside shard_map on a real mesh or under nested
+    ``jax.vmap(..., axis_name=...)`` emulation — ``make_sharded_step`` /
+    ``make_emulated_step`` wrap them.
+
+    ``world`` is the driver's top-level communicator (see
+    ``driver_world``); omitted, a 1-axis world over ``axis_name`` with
+    trace-time-resolved size is built (the legacy spelling).
     """
-    esgd = sync.mode == "mpi_esgd"
+    if world is None:
+        world = comm_lib.from_sync(sync, (axis_name,))
+    grad_comm, ex_comm = sync_comms(sync, world)
     spec = grad_spec(model)
-    # mpi_sgd: the axis is the gradient communicator. mpi_esgd: gradient
-    # sync is intra-client (local here — one device IS one client), so
-    # the update runs in p=1 geometry and only the exchange crosses.
-    engine = make_sync_engine(optimizer, sync, None,
-                              axis_name=None if esgd else axis_name,
+    engine = make_sync_engine(optimizer, sync, None, comm=grad_comm,
                               spec=spec)
     grad_fn = make_grad_fn(model, microbatch)
 
@@ -132,19 +196,17 @@ def make_device_step(model: Model, optimizer: Optimizer, sync: SyncConfig,
         loss, metrics, grads = grad_fn(state["params"], batch)
         new_p, new_o = engine.update(grads, state["opt"], state["params"])
         metrics = {"loss": loss, **metrics}
-        metrics = jax.tree.map(lambda m: lax.pmean(m, axis_name), metrics)
+        metrics = jax.tree.map(world.pmean, metrics)
         return dict(state, params=new_p, opt=new_o,
                     step=state["step"] + 1), metrics
 
-    if not esgd:
+    if ex_comm is None:
         return device_step, None
 
     def device_exchange(state):
-        alpha = sync.esgd_alpha / axis_size(axis_name)
+        alpha = sync.esgd_alpha / ex_comm.resolve_size()
         new_p, new_c = elastic_exchange_sharded(
-            spec, state["params"], state["center"], alpha,
-            axis_name=axis_name, num_rings=sync.num_rings,
-            bucket_bytes=sync.bucket_bytes)
+            spec, state["params"], state["center"], alpha, comm=ex_comm)
         return dict(state, params=new_p, center=new_c)
 
     return device_step, device_exchange
@@ -166,36 +228,73 @@ def _compose(mapped_step: Callable, mapped_exchange: Optional[Callable],
                 mapped_exchange, lambda s: s, new_state,
             )
         # pmean'd inside the map: identical on every device — report one
-        return new_state, jax.tree.map(lambda m: m[0], metrics)
+        return new_state, jax.tree.map(lambda m: m.reshape(-1)[0], metrics)
 
     return step
 
 
+def _nested_vmap(fn: Callable, shape: tuple[int, ...],
+                 axes: tuple[str, ...]) -> Callable:
+    """Map a per-device program over stacked (p_total-leading) state with
+    one named vmap per mesh axis (outermost axis first) — the emulation
+    backend of the same communicator programs shard_map runs."""
+    mapped = fn
+    for a in reversed(axes):
+        mapped = jax.vmap(mapped, axis_name=a)
+
+    def g(*args):
+        split = jax.tree.map(
+            lambda l: l.reshape(shape + l.shape[1:]), args)
+        out = mapped(*split)
+        n = math.prod(shape)
+        return jax.tree.map(
+            lambda l: l.reshape((n,) + l.shape[len(shape):]), out)
+
+    return g
+
+
 def make_emulated_step(model: Model, optimizer: Optimizer, sync: SyncConfig,
-                       p: int, *, axis_name: str = AXIS,
+                       p: Geometry, *, axis_name: str = AXIS,
                        microbatch: int = 1) -> Callable:
     """vmap-emulated driver step (tests / single-device hosts): the same
-    per-device program, with vmap providing the named axis."""
-    _require_supported(model, optimizer, sync, p)
-    dev_step, dev_ex = make_device_step(model, optimizer, sync,
-                                        axis_name=axis_name,
+    per-device program, with nested vmaps providing the named axes."""
+    shape, axes = _factorize(p, axis_name)
+    world = driver_world(sync, p, axis_name=axis_name)
+    _require_supported(model, optimizer, sync, world)
+    dev_step, dev_ex = make_device_step(model, optimizer, sync, world=world,
                                         microbatch=microbatch)
-    vstep = jax.vmap(dev_step, axis_name=axis_name)
-    vex = jax.vmap(dev_ex, axis_name=axis_name) if dev_ex else None
+    vstep = _nested_vmap(dev_step, shape, axes)
+    vex = _nested_vmap(dev_ex, shape, axes) if dev_ex else None
     return _compose(vstep, vex, sync)
+
+
+def _mesh_geometry(mesh, axis_name: str = AXIS
+                   ) -> tuple[Geometry, tuple[str, ...]]:
+    """Which driver layout a mesh carries: ('pod' and 'data') -> 2-axis,
+    else the single ``axis_name`` axis."""
+    if POD_AXIS in mesh.shape and DATA_AXIS in mesh.shape:
+        return ((mesh.shape[POD_AXIS], mesh.shape[DATA_AXIS]),
+                (POD_AXIS, DATA_AXIS))
+    if axis_name not in mesh.shape:
+        raise ValueError(
+            f"mesh axes {dict(mesh.shape)} fit neither driver layout: "
+            f"expected a '{axis_name}' axis (1-axis) or both "
+            f"'{POD_AXIS}' and '{DATA_AXIS}' axes (2-axis hierarchy)")
+    return mesh.shape[axis_name], (axis_name,)
 
 
 def make_sharded_step(model: Model, optimizer: Optimizer, sync: SyncConfig,
                       mesh, *, axis_name: str = AXIS,
                       microbatch: int = 1) -> Callable:
     """Real-mesh driver step: the per-device program under
-    ``compat.shard_map`` with every stacked leaf sharded over
-    ``axis_name`` — each device holds exactly its replica/shard and the
-    ring collectives are the only cross-device traffic."""
-    p = mesh.shape[axis_name]
-    _require_supported(model, optimizer, sync, p)
-    dev_step, dev_ex = make_device_step(model, optimizer, sync,
-                                        axis_name=axis_name,
+    ``compat.shard_map`` with every stacked leaf sharded over the mesh
+    axes — each device holds exactly its replica/shard and the ring
+    collectives are the only cross-device traffic. A mesh with 'pod'
+    and 'data' axes selects the 2-axis hierarchy layout."""
+    p, axes = _mesh_geometry(mesh, axis_name)
+    world = driver_world(sync, p, axis_name=axis_name)
+    _require_supported(model, optimizer, sync, world)
+    dev_step, dev_ex = make_device_step(model, optimizer, sync, world=world,
                                         microbatch=microbatch)
 
     def _blocked(fn):
@@ -208,7 +307,7 @@ def make_sharded_step(model: Model, optimizer: Optimizer, sync: SyncConfig,
 
         return g
 
-    sspec = P(axis_name)
+    sspec = P(axes)
     mstep = shard_map(_blocked(dev_step), mesh=mesh,
                       in_specs=(sspec, sspec), out_specs=(sspec, sspec),
                       check_vma=False)
@@ -219,18 +318,19 @@ def make_sharded_step(model: Model, optimizer: Optimizer, sync: SyncConfig,
 
 
 def drive(model: Model, optimizer: Optimizer, sync: SyncConfig, batches,
-          *, p: int | None = None, mesh=None, axis_name: str = AXIS,
+          *, p: Geometry | None = None, mesh=None, axis_name: str = AXIS,
           rng=None, microbatch: int = 1, log_every: int = 10,
           callback: Optional[Callable] = None):
     """Training loop over the shard driver.
 
-    ``mesh=None`` emulates ``p`` devices with vmap; with a mesh, ``p``
-    is the ``axis_name`` axis size and the step runs under shard_map.
+    ``mesh=None`` emulates ``p`` devices with nested vmaps — an int, or
+    a (pods, data) pair for the 2-axis hierarchy; with a mesh, the
+    geometry comes from the mesh axes and the step runs under shard_map.
     ``batches`` yield host-layout (B, ...) arrays; they are split into
     per-device shards here.
     """
     if mesh is not None:
-        p = mesh.shape[axis_name]
+        p, _ = _mesh_geometry(mesh, axis_name)
     if p is None:
         raise ValueError("pass p= (emulation) or mesh=")
     state = make_driver_state(model, optimizer, sync, p, rng)
@@ -257,7 +357,8 @@ def _selftest(p: int = 8) -> None:  # pragma: no cover (subprocess helper)
     """REAL-mesh check (needs >= p host devices, set XLA_FLAGS): the
     shard_map driver's losses must match the single-process reference
     step for both modes and every lowerable optimizer family — run by
-    tests/test_multidevice.py."""
+    tests/test_multidevice.py. Also runs the 2-axis pod×data hierarchy
+    layout (both factorizations of p) against the same references."""
     import numpy as np
 
     from repro.configs.base import get_config, reduced
@@ -290,6 +391,30 @@ def _selftest(p: int = 8) -> None:  # pragma: no cover (subprocess helper)
                                            float(mr["loss"]), rtol=1e-4)
             print(f"shard driver selftest OK p={p} mode={sync.mode} "
                   f"opt={oname} (shard_map on {len(jax.devices())} devices)")
+
+    # 2-axis pod×data hierarchy: losses must match the stacked C-client
+    # reference (mpi_esgd, C = pods) and the single-process data-parallel
+    # reference (mpi_sgd) on a REAL (P, D) mesh
+    opt = sgd(0.1, momentum=0.9)
+    for P_, D_ in ((2, p // 2), (p // 2, 2)):
+        mesh2 = make_mesh((P_, D_), (POD_AXIS, DATA_AXIS))
+        for sync in (SyncConfig(mode="mpi_sgd", num_clients=1),
+                     SyncConfig(mode="mpi_esgd", num_clients=P_,
+                                esgd_interval=2)):
+            st = make_driver_state(model, opt, sync, (P_, D_),
+                                   jax.random.key(1))
+            step = jax.jit(make_sharded_step(model, opt, sync, mesh2))
+            ref = make_train_state(model, opt, sync, jax.random.key(1))
+            ref_step = jax.jit(make_train_step(model, opt, sync, None))
+            ref_batch = (batch if sync.num_clients <= 1
+                         else shard_batch(batch, P_))
+            for _ in range(3):
+                st, m = step(st, shard_batch(batch, (P_, D_)))
+                ref, mr = ref_step(ref, ref_batch)
+                np.testing.assert_allclose(float(m["loss"]),
+                                           float(mr["loss"]), rtol=1e-4)
+            print(f"shard driver selftest OK mesh=({P_}x{D_}) "
+                  f"mode={sync.mode} (2-axis pod×data hierarchy)")
 
 
 if __name__ == "__main__":  # pragma: no cover

@@ -44,7 +44,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core import flatbuf
+from repro.core import comm as comm_lib, flatbuf
 from repro.core.hierarchy import (
     SyncConfig,
     clientize,
@@ -214,20 +214,28 @@ def make_grad_fn(model: Model, microbatch: int = 1,
 
 def make_train_step(model: Model, optimizer: Optimizer, sync: SyncConfig,
                     mesh: Mesh, *, microbatch: int = 1,
+                    comm: comm_lib.Communicator | None = None,
                     axis_name: str | None = None) -> Callable:
     """Returns train_step(state, batch) -> (state, metrics).
 
-    ``axis_name`` names the device axis for the fused sync path when the
-    step runs inside shard_map (real mesh) or vmap (emulation); ``None``
-    means single-process — the fused update still runs (one Pallas grid
-    over the whole flat buffer) with no collective.
+    ``comm`` is the gradient communicator for the fused sync path when
+    the step runs inside shard_map (real mesh) or vmap (emulation);
+    omitted (and with no deprecated ``axis_name``), the group is trivial
+    — single-process: the fused update still runs (one Pallas grid over
+    the whole flat buffer) with no collective.
     """
     C = sync.num_clients
+    if mesh is not None:
+        sync.validate(mesh)
     # C>1 vmaps the update over the client dim, so each client's sync
-    # geometry is local (no device axis inside the vmap)
+    # geometry is local (the trivial group inside the vmap)
+    if comm is None:
+        axes = (axis_name,) if (axis_name is not None and C <= 1) else ()
+        comm = comm_lib.from_sync(sync, axes)
+    elif C > 1:
+        comm = comm.local()
     engine = make_sync_engine(
-        optimizer, sync, mesh,
-        axis_name=axis_name if C <= 1 else None,
+        optimizer, sync, mesh, comm=comm,
         spec=_engine_spec(model, optimizer, sync, mesh))
 
     # the gradient accumulator is a while-loop carry: without an explicit

@@ -23,12 +23,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import flatbuf
-from repro.core.collectives import (
-    ring_allgather,
-    ring_reduce_scatter,
-    shard_select,
-)
-from repro.core.compat import axis_size
 
 
 class Optimizer(NamedTuple):
@@ -218,6 +212,7 @@ def _fused_shard_update(name: str, hyper, p_shard: jax.Array,
 def scatter_update_gather(spec: flatbuf.FlatBuffer, grads: Any, params: Any,
                           opt_state: Any, lr=None, momentum=None, *,
                           hyper: Optional[Mapping] = None,
+                          comm=None,
                           axis_name: Optional[str] = None,
                           num_rings: int = 1,
                           bucket_bytes: int | None = None,
@@ -228,8 +223,10 @@ def scatter_update_gather(spec: flatbuf.FlatBuffer, grads: Any, params: Any,
     worker program; run under shard_map on a mesh or vmap emulation):
 
       1. pack grads into the persistent flat buffer (static offsets)
-      2. ring reduce-scatter -> this device owns a fully-reduced 1/p shard
-         ((p-1)/p·n gradient-leg bytes — half the full allreduce)
+      2. ring reduce-scatter over the gradient communicator -> this
+         device owns a fully-reduced 1/p shard ((p-1)/p·n gradient-leg
+         bytes — half the full allreduce; multi-axis groups nest the
+         reduce-scatter level by level at the same total cost)
       3. fused optimizer Pallas kernel on (param shard, K state-stream
          shards, grad shard): one grid, state stays sharded (p× memory
          saving per full-length stream — 2 streams for AdamW)
@@ -240,12 +237,18 @@ def scatter_update_gather(spec: flatbuf.FlatBuffer, grads: Any, params: Any,
     ``lr``/``momentum`` form is the momentum-SGD shorthand. ``opt_state``
     is this device's shard as laid out by ``optstate_shard_init``.
 
-    ``axis_name=None`` (or axis of size 1) degenerates to the local fused
-    update: no collective, one Pallas grid over the whole buffer — still a
-    win over O(num_leaves) per-leaf updates.
+    ``comm`` is the gradient group (``core.comm.Communicator``); its
+    policy supplies the ring count and bucketing. A trivial communicator
+    (or one whose axes have size 1) degenerates to the local fused
+    update: no collective, one Pallas grid over the whole buffer — still
+    a win over O(num_leaves) per-leaf updates. The old
+    ``axis_name=``/``num_rings=``/``bucket_bytes=`` spelling keeps
+    working via ``Communicator.from_axis_name`` (DeprecationWarning for
+    a bare string; ``axis_name=None`` stays the quiet local form).
 
     Returns ``(new_params_tree, new_opt_state_shard)``.
     """
+    from repro.core import comm as _comm
     from repro.kernels.common import use_interpret
 
     if hyper is None:
@@ -259,8 +262,22 @@ def scatter_update_gather(spec: flatbuf.FlatBuffer, grads: Any, params: Any,
             "move them there")
     name = _flat_name(hyper)
 
-    p = 1 if axis_name is None else axis_size(axis_name)
-    nr = flatbuf.effective_rings(spec.nbytes, num_rings, bucket_bytes)
+    if comm is None:
+        if axis_name is not None:
+            _comm._deprecated_axis_name("scatter_update_gather")
+        comm = _comm.Communicator.from_axis_name(
+            axis_name, num_rings=num_rings, bucket_bytes=bucket_bytes)
+    elif axis_name is not None:
+        raise ValueError("pass comm= or the deprecated axis_name=, not both")
+    elif num_rings != 1 or bucket_bytes is not None:
+        raise ValueError(
+            "with comm= the ring policy lives on the communicator — set "
+            "num_rings/bucket_bytes there (Communicator.with_policy), "
+            "not as arguments; mixing the two would desync the gradient "
+            "sharding from the optimizer-state layout")
+
+    p = comm.resolve_size()
+    nr = comm.rings_for(spec.nbytes)
     _, total = flatbuf.shard_geometry(spec.size, p, nr)
 
     gbuf = flatbuf.pack_padded(spec, grads, total)
@@ -269,8 +286,8 @@ def scatter_update_gather(spec: flatbuf.FlatBuffer, grads: Any, params: Any,
     if p == 1:
         g_shard, p_shard = gbuf, pbuf
     else:
-        g_shard = ring_reduce_scatter(gbuf, axis_name, num_rings=nr)
-        p_shard = shard_select(pbuf, axis_name, num_rings=nr)
+        g_shard = comm.reduce_scatter(gbuf, num_rings=nr)
+        p_shard = comm.shard_select(pbuf, num_rings=nr)
     if mean:
         g_shard = g_shard / p
     wd = hyper.get("weight_decay", 0.0) or 0.0
@@ -287,7 +304,7 @@ def scatter_update_gather(spec: flatbuf.FlatBuffer, grads: Any, params: Any,
     if p == 1:
         new_pbuf = new_p_shard
     else:
-        new_pbuf = ring_allgather(new_p_shard, axis_name, num_rings=nr)
+        new_pbuf = comm.allgather(new_p_shard, num_rings=nr)
     return spec.unpack(new_pbuf[:spec.size]), new_state
 
 
@@ -296,7 +313,10 @@ def _flat_optimizer(hyper: dict, spec: flatbuf.FlatBuffer,
     """Drop-in ``Optimizer`` whose update is the fused flat-buffer kernel
     (local p=1 geometry — the single-process drivers' default update).
     State is the flat f32 stream shard(s) instead of a pytree."""
+    from repro.core import comm as _comm
+
     nr = flatbuf.effective_rings(spec.nbytes, num_rings, bucket_bytes)
+    local = _comm.Communicator(axes=(), sizes=(), num_rings=nr)
 
     def init(params):
         return optstate_shard_init(hyper, spec, 1, nr)
@@ -304,8 +324,7 @@ def _flat_optimizer(hyper: dict, spec: flatbuf.FlatBuffer,
     @jax.jit
     def update(grads, state, params):
         return scatter_update_gather(
-            spec, grads, params, state, hyper=hyper,
-            axis_name=None, num_rings=nr, mean=False)
+            spec, grads, params, state, hyper=hyper, comm=local, mean=False)
 
     return Optimizer(init, update, hyper)
 

@@ -211,3 +211,246 @@ def test_driver_rejects_non_flat_optimizer(model):
         SD.make_driver_state(
             model, sgd(0.1, momentum=0.9),
             SyncConfig(mode="mpi_esgd", num_clients=3), 2)
+
+
+# ---------------------------------------------------------------------------
+# 2-axis pod×data hierarchy (the Communicator API's headline layout)
+# ---------------------------------------------------------------------------
+
+TWO_AXIS_FACTORIZATIONS = [(2, 4), (4, 2)]
+
+
+@pytest.mark.parametrize("opt_name", ["sgd", "adamw"])
+@pytest.mark.parametrize("PD", TWO_AXIS_FACTORIZATIONS)
+def test_driver_2axis_sgd_matches_1axis(model, PD, opt_name):
+    """mpi_sgd on the pod×data hierarchy: the gradient group spans BOTH
+    axes (hierarchical reduce-scatter: pod level, then data level on the
+    shard) and must equal the 1-axis p=P*D driver — same losses, same
+    final params, same 1/(P*D) state shard geometry."""
+    P_, D_ = PD
+    p = P_ * D_
+    opt = OPTIMIZERS[opt_name]()
+    sync = SyncConfig(mode="mpi_sgd", num_clients=1)
+    batch = _batch(B=8)
+
+    s1 = SD.make_driver_state(model, opt, sync, p, jax.random.key(1))
+    s2 = SD.make_driver_state(model, opt, sync, (P_, D_), jax.random.key(1))
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a.shape), np.asarray(b.shape)), s1["opt"], s2["opt"])
+    step1 = jax.jit(SD.make_emulated_step(model, opt, sync, p))
+    step2 = jax.jit(SD.make_emulated_step(model, opt, sync, (P_, D_)))
+    for _ in range(3):
+        s1, m1 = step1(s1, SD.shard_batch(batch, p))
+        s2, m2 = step2(s2, SD.shard_batch(batch, (P_, D_)))
+        assert float(m2["loss"]) == pytest.approx(float(m1["loss"]),
+                                                  rel=1e-4)
+    tight = (dict(rtol=2e-4, atol=2e-5) if opt_name == "sgd"
+             else dict(rtol=5e-3, atol=5e-4))
+    _close(jax.tree.map(lambda l: l[0], s2["params"]),
+           jax.tree.map(lambda l: l[0], s1["params"]), **tight)
+
+
+@pytest.mark.parametrize("opt_name", ["sgd", "adamw"])
+@pytest.mark.parametrize("PD", TWO_AXIS_FACTORIZATIONS)
+def test_driver_2axis_esgd_matches_multiclient_step(model, PD, opt_name):
+    """mpi_esgd on the pod×data hierarchy: client == pod (P clients, D
+    devices each; gradient leg confined to 'data', optimizer state 1/D
+    per device), elastic exchange across 'pod' — must equal the
+    single-process stacked C-client step (C = P), crossing two INTERVAL
+    boundaries."""
+    P_, D_ = PD
+    opt = OPTIMIZERS[opt_name]()
+    sync = SyncConfig(mode="mpi_esgd", num_clients=P_, esgd_interval=2,
+                      esgd_alpha=0.5)
+    batch = _batch(B=8)
+    cbatch = SD.shard_batch(batch, P_)
+
+    s_ref = make_train_state(model, opt, sync, jax.random.key(1))
+    step_ref = jax.jit(make_train_step(model, opt, sync, None))
+    s_drv = SD.make_driver_state(model, opt, sync, (P_, D_),
+                                 jax.random.key(1))
+    step_drv = jax.jit(SD.make_emulated_step(model, opt, sync, (P_, D_)))
+
+    for i in range(4):
+        s_ref, m_ref = step_ref(s_ref, cbatch)
+        s_drv, m_drv = step_drv(s_drv, SD.shard_batch(batch, (P_, D_)))
+        assert float(m_drv["loss"]) == pytest.approx(
+            float(m_ref["loss"]), rel=1e-4), i
+    tol = (dict(rtol=2e-4, atol=2e-5) if opt_name == "sgd"
+           else dict(rtol=5e-3, atol=5e-4))
+    # device d of pod c holds client c's replica (pod-major stacking)
+    for c in range(P_):
+        _close(jax.tree.map(lambda l: l[c * D_], s_drv["params"]),
+               jax.tree.map(lambda l: l[c], s_ref["params"]), **tol)
+    _close(jax.tree.map(lambda l: l[0], s_drv["center"]),
+           s_ref["center"], **tol)
+    # optimizer state sharded over the client's data group: 1/D each
+    from repro.core import flatbuf as F
+    from repro.launch.train import grad_spec
+
+    shard = F.shard_size(grad_spec(model), D_, sync.num_rings,
+                         sync.bucket_bytes)
+    opt_leaf = (s_drv["opt"]["mv"] if opt_name == "adamw" else s_drv["opt"])
+    assert opt_leaf.shape[-1] == shard
+
+
+def _ppermute_axis_names(fn, *args, axis_env):
+    """All axis names ppermute eqns reference across the jaxpr and every
+    sub-jaxpr — the acceptance criterion's inspection primitive.
+
+    Deliberately independent of benchmarks/common.py's jaxpr walk: this
+    test is the confinement PROOF that cross-checks the
+    BENCH_hierarchy.json gate, so the two must not share plumbing."""
+    closed = jax.make_jaxpr(fn, axis_env=axis_env)(*args)
+
+    def subjaxprs(val):
+        if hasattr(val, "jaxpr"):
+            yield val.jaxpr
+        elif hasattr(val, "eqns"):
+            yield val
+        elif isinstance(val, (list, tuple)):
+            for v in val:
+                yield from subjaxprs(v)
+
+    def walk(jaxpr):
+        found = []
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "ppermute":
+                ax = eqn.params.get("axis_name")
+                found += [ax] if isinstance(ax, str) else list(ax)
+            for v in eqn.params.values():
+                for sub in subjaxprs(v):
+                    found += walk(sub)
+        return found
+
+    return set(walk(closed.jaxpr))
+
+
+def test_2axis_ppermute_axis_confinement(model):
+    """PROOF (jaxpr-level) of the hierarchy's traffic separation: in the
+    2-axis mpi_esgd programs the gradient leg's ppermutes name ONLY the
+    'data' axis and the elastic exchange's ppermutes name ONLY 'pod';
+    the 2-axis mpi_sgd gradient group spans both."""
+    from repro.core import comm as CM
+
+    P_, D_ = 2, 4
+    axis_env = [(SD.POD_AXIS, P_), (SD.DATA_AXIS, D_)]
+    opt = sgd(0.1, momentum=0.9)
+    batch_dev = jax.tree.map(lambda l: l[0],
+                             SD.shard_batch(_batch(B=8), (P_, D_)))
+
+    sync = SyncConfig(mode="mpi_esgd", num_clients=P_, esgd_interval=2)
+    world = SD.driver_world(sync, (P_, D_))
+    dev_step, dev_ex = SD.make_device_step(model, opt, sync, world=world)
+    state_dev = jax.tree.map(
+        lambda l: l[0], SD.make_driver_state(model, opt, sync, (P_, D_)))
+
+    grad_axes = _ppermute_axis_names(dev_step, state_dev, batch_dev,
+                                     axis_env=axis_env)
+    assert grad_axes == {SD.DATA_AXIS}, grad_axes
+    ex_axes = _ppermute_axis_names(dev_ex, state_dev, axis_env=axis_env)
+    assert ex_axes == {SD.POD_AXIS}, ex_axes
+
+    sync = SyncConfig(mode="mpi_sgd", num_clients=1)
+    world = SD.driver_world(sync, (P_, D_))
+    dev_step, dev_ex = SD.make_device_step(model, opt, sync, world=world)
+    assert dev_ex is None
+    state_dev = jax.tree.map(
+        lambda l: l[0], SD.make_driver_state(model, opt, sync, (P_, D_)))
+    grad_axes = _ppermute_axis_names(dev_step, state_dev, batch_dev,
+                                     axis_env=axis_env)
+    assert grad_axes == {SD.POD_AXIS, SD.DATA_AXIS}, grad_axes
+
+
+# ---------------------------------------------------------------------------
+# 2-axis driver vs the six-mode simulation (core/algorithms.py)
+# ---------------------------------------------------------------------------
+
+def _sim_setup(model, opt_name, mode, P_, D_, steps, interval, epochs=1):
+    """Drive algorithms.run with the SAME model, init, and per-worker
+    batch shards as the 2-axis driver: worker w of client c gets device
+    (c, w % D)'s shard — the layouts coincide."""
+    import dataclasses as DC
+
+    from repro.core.algorithms import AlgoConfig, run as run_algo
+    from repro.launch.train import make_grad_fn
+
+    p = P_ * D_
+    lr = dict(sgd=0.1, adamw=3e-3)[opt_name]
+
+    def full_batch(epoch, step):
+        k = jax.random.key(7000 + epoch * 131 + step)
+        toks = jax.random.randint(k, (2 * p, 32), 0, 1024)
+        return {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1)}
+
+    gf = make_grad_fn(model)
+    grad_fn = jax.jit(lambda prm, b: gf(prm, b)[::2])  # (loss, grads)
+
+    class _Pipe:
+        def __init__(self, w):
+            self.w = w
+
+        def batch_at(self, epoch, step):
+            return jax.tree.map(lambda a: a[self.w],
+                                SD.shard_batch(full_batch(epoch, step), p))
+
+    cfg = AlgoConfig(
+        mode=mode, num_workers=p, num_clients=P_, num_servers=1,
+        lr=lr, momentum=0.9, optimizer=opt_name,
+        esgd_alpha=0.5, esgd_interval=interval,
+        epochs=epochs, steps_per_epoch=steps, jitter=0.0,
+        allreduce_method="multi_ring", seed=0)
+    hist = run_algo(cfg, lambda key: model.init(jax.random.key(1)),
+                    grad_fn, lambda prm: 0.0, _Pipe)
+    return hist, full_batch, lr
+
+
+def _drive_2axis(model, opt_name, sync, P_, D_, steps, full_batch, lr):
+    opt = {"sgd": lambda: sgd(lr, momentum=0.9),
+           "adamw": lambda: adamw(lr)}[opt_name]()
+    st = SD.make_driver_state(model, opt, sync, (P_, D_), jax.random.key(1))
+    step = jax.jit(SD.make_emulated_step(model, opt, sync, (P_, D_)))
+    losses = []
+    for e in range(steps[0]):
+        for s in range(steps[1]):
+            st, m = step(st, SD.shard_batch(full_batch(e, s), (P_, D_)))
+            losses.append(float(m["loss"]))
+    return losses
+
+
+@pytest.mark.parametrize("opt_name", ["sgd", "adamw"])
+def test_2axis_sgd_matches_six_mode_simulation(model, opt_name):
+    """pod×data mpi_sgd == the six-mode simulation's mpi_sgd (KVStore
+    push/pull through registered worker groups) step for step: the
+    sim's worker w IS device (pod, data) = divmod(w, D), the group
+    collective is the data leg, the PS barrier the pod leg."""
+    P_, D_, steps = 2, 4, 4
+    hist, full_batch, lr = _sim_setup(model, opt_name, "mpi_sgd",
+                                      P_, D_, steps, interval=64)
+    sync = SyncConfig(mode="mpi_sgd", num_clients=1)
+    losses = _drive_2axis(model, opt_name, sync, P_, D_, (1, steps),
+                          full_batch, lr)
+    assert len(hist.losses) == steps
+    for i, (a, b) in enumerate(zip(losses, hist.losses)):
+        assert a == pytest.approx(b, rel=1e-3), (i, losses, hist.losses)
+
+
+@pytest.mark.parametrize("opt_name", ["sgd", "adamw"])
+def test_2axis_esgd_matches_six_mode_simulation(model, opt_name):
+    """pod×data mpi_esgd == the six-mode simulation's mpi_esgd over one
+    INTERVAL window (where the exchange semantics provably coincide:
+    the step-0 exchange is a no-op from identical init), epoch-mean
+    losses; and stays within a few percent across the next window,
+    where the sim's sequential per-client server rule and the driver's
+    simultaneous summed exchange legitimately differ at O(alpha^2)."""
+    P_, D_, steps, interval = 2, 4, 4, 4
+    hist, full_batch, lr = _sim_setup(model, opt_name, "mpi_esgd",
+                                      P_, D_, steps, interval, epochs=2)
+    sync = SyncConfig(mode="mpi_esgd", num_clients=P_,
+                      esgd_interval=interval, esgd_alpha=0.5)
+    losses = _drive_2axis(model, opt_name, sync, P_, D_, (2, steps),
+                          full_batch, lr)
+    drv_epoch1 = float(np.mean(losses[:steps]))
+    drv_epoch2 = float(np.mean(losses[steps:]))
+    assert drv_epoch1 == pytest.approx(hist.losses[0], rel=1e-3)
+    assert drv_epoch2 == pytest.approx(hist.losses[1], rel=5e-2)
