@@ -55,11 +55,12 @@ def make_pipe(w):
                                     shard=w), image_size=8, noise=NOISE)
 
 
-def _cfg(mode, net, clients):
+def _cfg(mode, net, clients, wire_dtype=None):
     return AlgoConfig(
         mode=mode, num_workers=12, num_clients=clients, num_servers=2,
         lr=0.005, momentum=0.9, epochs=4, steps_per_epoch=25,
-        compute_time=0.45, jitter=0.2, model_bytes=100e6, net=net, seed=0)
+        compute_time=0.45, jitter=0.2, model_bytes=100e6, net=net, seed=0,
+        wire_dtype=wire_dtype)
 
 
 def run() -> None:
@@ -94,5 +95,39 @@ def run() -> None:
          f"ok={time_to(curves['mpi_sgd'], target) < curves['dist_sgd'].times[-1]}")
 
 
+def run_wire(wire_dtype: str) -> None:
+    """Accuracy vs bytes: the low-precision wire protocol's convergence
+    delta. Runs mpi_sgd + mpi_esgd with the intra-client ring hops AND
+    the PS push on the compressed wire (allreduce_method must be
+    ring-family: the config uses multi_ring) against the f32 baseline,
+    on real gradients. The README's 'accuracy vs bytes' note cites these
+    numbers (``--wire-dtype int8``)."""
+    import dataclasses
+
+    from repro.core.cost_model import wire_ratio
+
+    for mode, clients in (("mpi_sgd", 2), ("mpi_esgd", 2)):
+        base_cfg = _cfg(mode, MPI_IB, clients)
+        hb = run_algo(base_cfg, init_fn, grad_fn, eval_fn, make_pipe)
+        hw = run_algo(dataclasses.replace(base_cfg, wire_dtype=wire_dtype),
+                      init_fn, grad_fn, eval_fn, make_pipe)
+        emit(f"convergence/wire_{wire_dtype}_{mode}", hw.epoch_time * 1e6,
+             f"final_acc={hw.metrics[-1]:.3f};f32_acc={hb.metrics[-1]:.3f};"
+             f"delta={hw.metrics[-1] - hb.metrics[-1]:+.3f};"
+             f"wire={wire_ratio(wire_dtype):.3f}x;"
+             f"epoch_s={hw.epoch_time:.0f}_vs_{hb.epoch_time:.0f}")
+
+
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--wire-dtype", default=None,
+                    choices=("bf16", "int8"),
+                    help="run the accuracy-vs-bytes comparison for this "
+                         "wire dtype instead of the paper-figure curves")
+    args = ap.parse_args()
+    if args.wire_dtype:
+        run_wire(args.wire_dtype)
+    else:
+        run()

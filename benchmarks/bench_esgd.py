@@ -93,22 +93,28 @@ def run() -> None:
         emit(f"esgd/interval_{interval}", h.epoch_time * 1e6,
              f"final_acc={h.metrics[-1]:.3f}")
 
-    # beyond-paper: int8-compressed PS pushes (kernels/quant_bucket) —
-    # 3.9x less PS wire, same convergence (quantization noise absorbed by
-    # the elastic force)
+    # beyond-paper: the low-precision wire protocol end to end — int8
+    # codes + per-bucket scales on the intra-client ring hops AND the PS
+    # push (0.258x wire), same convergence (quantization noise absorbed
+    # by the elastic force); bf16 is the cheap 0.5x middle tier
     import dataclasses
 
-    cfgq = dataclasses.replace(_cfg("mpi_esgd", MPI_IB, 2, 1),
-                               compress_push=True)
-    hq = run_algo(cfgq, init_fn, grad_fn, eval_fn, make_pipe)
     h1 = run_algo(_cfg("mpi_esgd", MPI_IB, 2, 1), init_fn, grad_fn, eval_fn,
                   make_pipe)
-    emit("esgd/int8_compressed_push", hq.epoch_time * 1e6,
-         f"final_acc={hq.metrics[-1]:.3f};uncompressed_acc={h1.metrics[-1]:.3f};"
-         f"ps_wire=0.26x")
+    for wd in ("int8", "bf16"):
+        cfgq = dataclasses.replace(_cfg("mpi_esgd", MPI_IB, 2, 1),
+                                   wire_dtype=wd)
+        hq = run_algo(cfgq, init_fn, grad_fn, eval_fn, make_pipe)
+        from repro.core.cost_model import wire_ratio
+
+        emit(f"esgd/wire_{wd}_push", hq.epoch_time * 1e6,
+             f"final_acc={hq.metrics[-1]:.3f};"
+             f"f32_acc={h1.metrics[-1]:.3f};"
+             f"ps_wire={wire_ratio(wd):.3f}x")
 
     run_flat_accounting()
     run_hierarchy_accounting()
+    run_wire_exchange_accounting()
 
 
 def run_hierarchy_accounting(P: int = 2, D: int = 4, num_leaves: int = 24,
@@ -212,6 +218,46 @@ def run_hierarchy_accounting(P: int = 2, D: int = 4, num_leaves: int = 24,
         os.path.abspath(__file__))), "BENCH_hierarchy.json")
     with open(out, "w") as f:
         json.dump(result, f, indent=2)
+    print(f"# wrote {out}")
+
+
+def run_wire_exchange_accounting(p: int = 8, num_leaves: int = 24,
+                                 leaf: int | None = None) -> None:
+    """The elastic leg under the low-precision wire protocol: exact
+    per-device ppermute bytes (codes + scales) of the sharded cross-pod
+    exchange per wire dtype, merged into BENCH_wire.json next to
+    bench_fused_step's gradient-leg section. The ratios are
+    geometry-exact (WIRE_BLOCK divides every lane-aligned chunk)."""
+    from benchmarks.bench_fused_step import merge_wire_json
+    from repro.core import flatbuf as F
+    from repro.core.comm import Communicator
+    from repro.core.elastic import elastic_exchange_sharded
+
+    if leaf is None:
+        leaf = 2048 if QUICK else 16384
+    tree = {f"layer{i}": jax.random.normal(jax.random.key(i), (leaf,))
+            for i in range(num_leaves)}
+    spec = F.spec_for(tree)
+    alpha = 0.5 / p
+
+    legs = {}
+    for wire in (None, "bf16", "int8"):
+        comm = Communicator.world(("pod",), (p,), method="ring",
+                                  wire_dtype=wire)
+        legs[wire or "f32"] = ppermute_bytes(
+            lambda w, c: elastic_exchange_sharded(spec, w, c, alpha,
+                                                  comm=comm),
+            tree, tree, axis="pod", p=p)
+    ratios = {k: legs[k] / legs["f32"] for k in legs}
+    for k in ("bf16", "int8"):
+        emit(f"wire/elastic_leg_{k}", legs[k],
+             f"f32={legs['f32']};ratio={ratios[k]:.6f}")
+    out = merge_wire_json("elastic", {
+        "p": p,
+        "payload_bytes": spec.payload * 4,
+        "exchange_bytes_per_dev": legs,
+        "ratio_vs_f32": ratios,
+    })
     print(f"# wrote {out}")
 
 

@@ -25,6 +25,14 @@ replicated; AdamW carries 2 full-size adaptive streams, so the p× saving
 bites twice) and fused-kernel launch counts (1 vs 0 + O(leaves) update
 chains). Writes BENCH_fused_optim.json next to BENCH_fused_step.json.
 
+The WIRE dimension (``run_wire_accounting``): exact per-device ppermute
+bytes of the gradient reduce-scatter and param allgather under the
+low-precision wire protocol (f32 / bf16 / int8 codes + per-bucket
+scales) on BOTH the 1-axis and the 2-axis pod×data drivers, plus the
+fused-state stream bytes for bf16 streams, cross-checked against the
+``core.cost_model.wire_ratio`` predictions. Writes the grad/state
+sections of BENCH_wire.json (bench_esgd.py merges the elastic section).
+
 ``REPRO_BENCH_QUICK=1`` shrinks the payload for CI smoke runs — every
 recorded *ratio* and launch count is geometry-exact at any size.
 """
@@ -40,6 +48,7 @@ from benchmarks.common import (
     emit,
     jaxpr_primitives,
     ppermute_bytes as _ppermute_bytes,
+    ppermute_bytes_by_axis,
     timeit,
 )
 from repro.core import collectives as C
@@ -315,6 +324,114 @@ def run_optim_accounting() -> None:
         os.path.abspath(__file__))), "BENCH_fused_optim.json")
     with open(out, "w") as f:
         json.dump(result, f, indent=2)
+    print(f"# wrote {out}")
+
+    run_wire_accounting()
+
+
+def merge_wire_json(section: str, payload: dict) -> str:
+    """Merge one section into BENCH_wire.json (bench_fused_step writes
+    grad/state, bench_esgd writes elastic — whichever runs second must
+    not clobber the first's sections)."""
+    out = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_wire.json")
+    data = {}
+    if os.path.exists(out):
+        with open(out) as f:
+            data = json.load(f)
+    data[section] = payload
+    with open(out, "w") as f:
+        json.dump(data, f, indent=2)
+    return out
+
+
+def run_wire_accounting() -> None:
+    """The low-precision wire protocol's claim, measured: exact per-device
+    ppermute bytes (codes AND scales) per wire dtype, as ratios vs the
+    f32 wire — geometry-exact at any payload size because the scale
+    granularity (WIRE_BLOCK = LANE) divides every lane-aligned chunk."""
+    from repro.core import comm as comm_lib, cost_model
+    from repro.optim.sgd import adamw
+
+    tree = _grad_tree(1)
+    g1 = jax.tree.map(lambda x: x[0], tree)
+    params = jax.tree.map(lambda g: g * 0.01, g1)
+    spec = F.spec_for(params)
+    buf = spec.pack(g1)
+    WIRES = (None, "bf16", "int8")
+
+    def comm1(wire):
+        return comm_lib.Communicator.world((AXIS,), (P,), method="ring",
+                                           wire_dtype=wire)
+
+    def comm2(wire):
+        return comm_lib.Communicator.world(("pod", "data"), (2, P // 2),
+                                           method="ring", wire_dtype=wire)
+
+    # -- gradient leg (reduce-scatter) + param leg (allgather), 1-axis ------
+    grad_leg, param_leg, grad_leg_2ax = {}, {}, {}
+    for wire in WIRES:
+        key = wire or "f32"
+        c1, c2 = comm1(wire), comm2(wire)
+        grad_leg[key] = _ppermute_bytes(
+            lambda b: c1.reduce_scatter(b), buf, axis=AXIS, p=P)
+        shard = jnp.zeros((c1.shard_geometry(buf.size)[0],), jnp.float32)
+        param_leg[key] = _ppermute_bytes(
+            lambda s: c1.allgather(s), shard, axis=AXIS, p=P)
+        grad_leg_2ax[key] = sum(ppermute_bytes_by_axis(
+            lambda b: c2.reduce_scatter(b), buf,
+            axis_env=(("pod", 2), ("data", P // 2))).values())
+
+    ratios = {k: grad_leg[k] / grad_leg["f32"] for k in grad_leg}
+    ratios_2ax = {k: grad_leg_2ax[k] / grad_leg_2ax["f32"]
+                  for k in grad_leg_2ax}
+    predicted = {(w or "f32"): cost_model.wire_ratio(w) for w in WIRES}
+
+    # -- full sharded step wire bytes (RS + AG through scatter_update_gather)
+    step_bytes = {}
+    for wire in WIRES:
+        c1 = comm1(wire)
+        m = jnp.zeros((F.shard_size(spec, P),))
+
+        def dev(g, p_, mm, _c=c1):
+            return scatter_update_gather(spec, g, p_, mm, jnp.float32(0.05),
+                                         jnp.float32(0.9), comm=_c)
+
+        step_bytes[wire or "f32"] = _ppermute_bytes(
+            dev, g1, params, m, axis=AXIS, p=P)
+
+    # -- low-precision optimizer-state streams (bytes per device) -----------
+    f32_state = optstate_shard_init(adamw(0.01).hyper, spec, P)
+    bf16_state = optstate_shard_init(
+        adamw(0.01, state_dtype=jnp.bfloat16).hyper, spec, P)
+    state = {
+        "adamw_mv_bytes_per_dev": {
+            "f32": int(f32_state["mv"].nbytes),
+            "bf16": int(bf16_state["mv"].nbytes),
+            "ratio": bf16_state["mv"].nbytes / f32_state["mv"].nbytes,
+        },
+    }
+
+    for k in ("bf16", "int8"):
+        emit(f"wire/grad_leg_{k}", grad_leg[k],
+             f"f32={grad_leg['f32']};ratio={ratios[k]:.6f};"
+             f"predicted={predicted[k]:.6f};ratio_2axis={ratios_2ax[k]:.6f}")
+    emit("wire/state_bf16_streams", state["adamw_mv_bytes_per_dev"]["bf16"],
+         f"f32={state['adamw_mv_bytes_per_dev']['f32']};"
+         f"ratio={state['adamw_mv_bytes_per_dev']['ratio']:.3f}")
+
+    out = merge_wire_json("grad", {
+        "p": P,
+        "payload_bytes": spec.payload * 4,
+        "reduce_scatter_bytes_per_dev": grad_leg,
+        "allgather_bytes_per_dev": param_leg,
+        "full_step_bytes_per_dev": step_bytes,
+        "two_axis_reduce_scatter_bytes_per_dev": grad_leg_2ax,
+        "ratio_vs_f32": ratios,
+        "ratio_vs_f32_two_axis": ratios_2ax,
+        "predicted_ratio": predicted,
+    })
+    merge_wire_json("state", state)
     print(f"# wrote {out}")
 
 

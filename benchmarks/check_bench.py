@@ -17,6 +17,12 @@ only the structural quantities the papers' claims rest on:
                           data fraction (both 0.0 — the Communicator
                           confinement proof) and the 2-axis mpi_sgd
                           update total vs the 1-axis ring (1.0)
+  BENCH_wire.json         low-precision wire protocol: int8/bf16 vs f32
+                          byte ratios on the gradient reduce-scatter
+                          (1-axis AND 2-axis) and the elastic exchange,
+                          plus the bf16 state-stream ratio — with HARD
+                          bounds (int8 grad leg <= 0.30, bf16 <= 0.50)
+                          on top of the baseline comparison
 """
 from __future__ import annotations
 
@@ -35,6 +41,7 @@ REQUIRED = (
     "BENCH_esgd_flat.json",
     "BENCH_fused_optim.json",
     "BENCH_hierarchy.json",
+    "BENCH_wire.json",
 )
 
 
@@ -61,6 +68,16 @@ class Checker:
                 f"{label}: ratio changed {baseline:.4f} -> {current:.4f}")
         else:
             print(f"ok {label}: {current:.4f} (baseline {baseline:.4f})")
+
+    def bound(self, label: str, current: float, limit: float) -> None:
+        # one-sided hard ceiling (the acceptance-criterion bounds) — holds
+        # regardless of what the committed baseline says
+        self.checked += 1
+        if current > limit + TOL:
+            self.failures.append(
+                f"{label}: {current:.4f} exceeds the hard bound {limit}")
+        else:
+            print(f"ok {label}: {current:.4f} <= {limit}")
 
     def count(self, label: str, current: int, baseline: int) -> None:
         # exact match: MORE launches is a fusion regression, FEWER means
@@ -129,6 +146,34 @@ def check(baseline_dir: str, current_dir: str) -> int:
             c.count(f"fused_optim.{name}.pallas_calls",
                     u["pallas_calls"]["flat"],
                     b["pallas_calls"]["flat"])
+
+    base = _load(baseline_dir, "BENCH_wire.json")
+    cur = _load(current_dir, "BENCH_wire.json")
+    if base and cur:
+        for wd in ("int8", "bf16"):
+            c.ratio(f"wire.grad_leg.{wd}",
+                    cur["grad"]["ratio_vs_f32"][wd],
+                    base["grad"]["ratio_vs_f32"][wd])
+            c.ratio(f"wire.grad_leg_2axis.{wd}",
+                    cur["grad"]["ratio_vs_f32_two_axis"][wd],
+                    base["grad"]["ratio_vs_f32_two_axis"][wd])
+            c.ratio(f"wire.elastic_leg.{wd}",
+                    cur["elastic"]["ratio_vs_f32"][wd],
+                    base["elastic"]["ratio_vs_f32"][wd])
+        # the acceptance bounds: int8 gradient leg <= 0.30x f32 (incl.
+        # scales), bf16 <= 0.50x — on both drivers and the elastic leg
+        for section, key in (("grad", "ratio_vs_f32"),
+                             ("grad", "ratio_vs_f32_two_axis"),
+                             ("elastic", "ratio_vs_f32")):
+            c.bound(f"wire.{section}.{key}.int8",
+                    cur[section][key]["int8"], 0.30)
+            c.bound(f"wire.{section}.{key}.bf16",
+                    cur[section][key]["bf16"], 0.50)
+        c.ratio("wire.state_bf16_streams",
+                cur["state"]["adamw_mv_bytes_per_dev"]["ratio"],
+                base["state"]["adamw_mv_bytes_per_dev"]["ratio"])
+        c.bound("wire.state_bf16_streams",
+                cur["state"]["adamw_mv_bytes_per_dev"]["ratio"], 0.50)
 
     if c.checked == 0 and not c.failures:
         print("error: no BENCH_*.json pairs found to compare",

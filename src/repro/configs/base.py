@@ -200,6 +200,15 @@ class TrainSettings:
     # + ONE fused Pallas kernel instead of per-leaf tree.maps
     flat_exchange: bool = True
     bucket_bytes: Optional[int] = None
+    # low-precision wire protocol on the explicit ring hops ("f32" off,
+    # "bf16" cast per hop, "int8" codes + per-bucket scales); requires a
+    # ring-family allreduce_method (SyncConfig.validate enforces it)
+    wire_dtype: str = "f32"
+    # flat optimizer-state stream dtype ("f32" | "bf16"): bf16 halves the
+    # AdaGrad accumulator / AdamW m+v bytes per device on top of the 1/p
+    # sharding (the fused kernels compute f32 per tile either way). For
+    # SGD a bf16 momentum keeps the per-leaf path that honors it.
+    state_dtype: str = "f32"
     fsdp: bool = False
     microbatch: int = 1
 
@@ -212,27 +221,38 @@ class TrainSettings:
             allreduce_method=self.allreduce_method, num_rings=self.num_rings,
             fused_update=self.fused_update, flat_exchange=self.flat_exchange,
             bucket_bytes=self.bucket_bytes,
+            wire_dtype=None if self.wire_dtype == "f32" else self.wire_dtype,
             fsdp=self.fsdp,
         )
+
+    def _state_dtype(self):
+        import jax.numpy as jnp
+
+        if self.state_dtype not in ("f32", "bf16"):
+            raise ValueError(
+                f"state_dtype must be f32/bf16, got {self.state_dtype!r}")
+        return None if self.state_dtype == "f32" else jnp.bfloat16
 
     def optimizer(self):
         from repro.optim.sgd import adagrad, adamw, sgd
 
+        sd = self._state_dtype()
         if self.optimizer_name == "adagrad":
             if self.weight_decay:
                 raise ValueError(
                     "adagrad has no weight-decay form here; drop "
                     "--weight-decay or pick sgd/adamw")
-            return adagrad(self.lr, eps=self.adagrad_eps)
+            return adagrad(self.lr, eps=self.adagrad_eps, state_dtype=sd)
         if self.optimizer_name == "adamw":
             return adamw(self.lr, b1=self.adam_b1, b2=self.adam_b2,
-                         eps=self.adam_eps, weight_decay=self.weight_decay)
+                         eps=self.adam_eps, weight_decay=self.weight_decay,
+                         state_dtype=sd)
         if self.optimizer_name != "sgd":
             raise ValueError(
                 f"optimizer_name must be sgd/adagrad/adamw, "
                 f"got {self.optimizer_name!r}")
         return sgd(self.lr, momentum=self.momentum,
-                   weight_decay=self.weight_decay)
+                   weight_decay=self.weight_decay, state_dtype=sd)
 
 
 INPUT_SHAPES = {

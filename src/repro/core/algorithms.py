@@ -61,7 +61,13 @@ class AlgoConfig:
     seed: int = 0
     net: cost_model.NetParams = field(default_factory=cost_model.testbed)
     allreduce_method: str = "multi_ring"
-    compress_push: bool = False  # beyond-paper: int8 PS pushes
+    # deprecated: int8 on the PS-push leg only — the scope it always
+    # had; use wire_dtype="int8" for the full wire protocol
+    compress_push: bool = False
+    # beyond-paper low-precision wire protocol: applied to the intra-client
+    # collective hops (via the worker group's Communicator policy) AND the
+    # PS push leg (KVStore wire) — None/"f32", "bf16", "int8"
+    wire_dtype: Optional[str] = None
     # worker/server update rule: sgd / adagrad / adamw — all three lower
     # onto the fused flat-buffer step below
     optimizer: str = "sgd"
@@ -74,6 +80,39 @@ class AlgoConfig:
     # client update) instead of per-leaf tree.maps
     flat_exchange: bool = True
     bucket_bytes: Optional[int] = None
+
+    def __post_init__(self):
+        if self.compress_push:
+            import warnings
+
+            warnings.warn(
+                "AlgoConfig(compress_push=True) is deprecated — it is the "
+                "int8 wire: pass wire_dtype='int8' instead",
+                DeprecationWarning, stacklevel=3)
+            if self.wire_dtype not in (None, "int8"):
+                raise ValueError(
+                    f"compress_push=True IS wire_dtype='int8' but "
+                    f"wire_dtype={self.wire_dtype!r} was also set — drop "
+                    "the deprecated flag")
+
+    @property
+    def collective_wire_dtype(self) -> Optional[str]:
+        """Wire dtype of the intra-client collective hops (None =
+        full-precision). Only the NEW ``wire_dtype`` knob reaches the
+        hops — the deprecated ``compress_push`` alias stays scoped to
+        the PS leg it always compressed, so old configs keep their
+        exact behavior (e.g. psum + compress_push must not start
+        raising, and intra-client sums must not silently gain
+        quantization noise)."""
+        return None if self.wire_dtype == "f32" else self.wire_dtype
+
+    @property
+    def effective_wire_dtype(self) -> Optional[str]:
+        """Wire dtype of the PS push leg (KVStore wire), with the
+        ``compress_push`` deprecation resolved to int8."""
+        if self.compress_push:
+            return "int8"
+        return self.collective_wire_dtype
 
     @property
     def effective_clients(self) -> int:
@@ -108,7 +147,8 @@ def _worker_group(cfg: AlgoConfig) -> Communicator:
     return Communicator.world(
         ("worker",), (cfg.workers_per_client,),
         method=cfg.allreduce_method, num_rings=2,
-        bucket_bytes=cfg.bucket_bytes)
+        bucket_bytes=cfg.bucket_bytes,
+        wire_dtype=cfg.collective_wire_dtype)
 
 
 def _member_grads(grad_fn: GradFn, params,
@@ -168,10 +208,12 @@ def _make_opt(cfg: AlgoConfig, params) -> Optimizer:
 def _comm_times(cfg: AlgoConfig) -> dict[str, float]:
     per_client = cfg.workers_per_client
     intra = cost_model.allreduce_time(
-        cfg.model_bytes, per_client, cfg.net, cfg.allreduce_method
+        cfg.model_bytes, per_client, cfg.net, cfg.allreduce_method,
+        wire_dtype=cfg.collective_wire_dtype,
     )
     ps = cost_model.ps_pushpull_time(
-        cfg.model_bytes, cfg.effective_clients, cfg.num_servers, cfg.net
+        cfg.model_bytes, cfg.effective_clients, cfg.num_servers, cfg.net,
+        wire_dtype=cfg.effective_wire_dtype,
     )
     return {"intra": intra, "ps": ps}
 
@@ -341,7 +383,7 @@ def _run_esgd(cfg, init_fn, grad_fn, eval_fn, make_pipeline) -> History:
     params0 = init_fn(jax.random.key(cfg.seed))
     kv = KVStore.create("async_mpi" if cfg.mode == "mpi_esgd" else "dist_async",
                         num_workers=cfg.num_workers, num_servers=cfg.num_servers,
-                        num_clients=C, compress_push=cfg.compress_push,
+                        num_clients=C, wire_dtype=cfg.effective_wire_dtype,
                         flat_exchange=cfg.flat_exchange)
     kv.init("centers", params0)
     kv.set_elastic(cfg.esgd_alpha)
@@ -389,9 +431,9 @@ def _run_esgd(cfg, init_fn, grad_fn, eval_fn, make_pipeline) -> History:
                 client_params[unit] = elastic_client_update(  # per-leaf ref
                     client_params[unit], old_center, cfg.esgd_alpha
                 )
-            wire = cfg.model_bytes / (3.9 if cfg.compress_push else 1.0)
             comm_cost += cost_model.ps_pushpull_time(
-                wire, 1, cfg.num_servers, cfg.net)
+                cfg.model_bytes, 1, cfg.num_servers, cfg.net,
+                wire_dtype=cfg.effective_wire_dtype)
         new_p, new_s = opt.update(g, client_opt[unit], client_params[unit])
         client_params[unit] = new_p
         client_opt[unit] = new_s

@@ -30,6 +30,25 @@ Variants:
 ``flatbuf.effective_rings``), emitted interleaved so the scheduler
 overlaps ring r's reduction with ring r+1's transfer.
 
+``ring_reduce_scatter``/``ring_allgather`` additionally take a
+``wire_dtype`` knob — the low-precision wire protocol:
+
+  None/"f32"  every hop sends the full-precision chunk (the baseline)
+  "bf16"      each hop casts the outgoing chunk to bf16 (pure cast, no
+              scales) — 0.5x the f32 wire bytes
+  "int8"      each hop sends int8 codes + one f32 scale per WIRE_BLOCK
+              (=LANE) bucket (kernels/quant_bucket.wire_encode) —
+              (1 + 4/128)/4 ~ 0.258x the f32 wire bytes
+
+The ACCUMULATOR always stays high-precision: a reduce-scatter hop
+dequantizes the received chunk, adds it to the local f32 partial, and
+re-quantizes only what the next hop sends (dequant-accumulate-requant).
+An allgather shard is encoded ONCE and its codes forwarded verbatim —
+and the owner roundtrips its own shard through the codec too, so every
+device reconstructs bit-identical values and replicas cannot diverge.
+The codec is plain jnp traced inline (XLA fuses it): a quantized hop
+adds ZERO kernel launches to the step.
+
 All algorithms are written against ``lax.ppermute``/named axes, so the
 same code runs inside ``shard_map`` on a real mesh *and* under
 ``jax.vmap(..., axis_name=...)`` single-device emulation (used by tests).
@@ -48,6 +67,41 @@ from repro.core.compat import axis_size as _axis_size
 
 Method = str
 _METHODS = ("ring", "multi_ring", "tree", "psum", "per_leaf", "scatter_gather")
+
+#: wire dtypes of the low-precision protocol; None and "f32" are the
+#: full-precision baseline, the ring-family methods accept all of them
+WIRE_DTYPES = (None, "f32", "bf16", "int8")
+#: the methods whose hops can carry a quantized wire (explicit ppermute
+#: rings; psum/tree are XLA-native or full-buffer baselines)
+RING_METHODS = ("ring", "multi_ring", "scatter_gather")
+
+
+def check_wire_dtype(wire_dtype, *, where: str) -> "str | None":
+    """Validate + normalize a wire dtype ("f32" -> None)."""
+    if wire_dtype not in WIRE_DTYPES:
+        raise ValueError(
+            f"{where}: wire_dtype must be one of {WIRE_DTYPES}, "
+            f"got {wire_dtype!r}")
+    return None if wire_dtype == "f32" else wire_dtype
+
+
+def _hop_permute(x: jax.Array, axis_name: str, perm,
+                 wire_dtype: "str | None") -> jax.Array:
+    """One ring hop of ``x`` under the wire protocol: returns the
+    receiver's high-precision (f32) view of what crossed the wire."""
+    if wire_dtype is None:
+        return lax.ppermute(x, axis_name, perm)
+    if wire_dtype == "bf16":
+        return lax.ppermute(
+            x.astype(jnp.bfloat16), axis_name, perm).astype(jnp.float32)
+    # int8: codes + per-bucket scales both ride the permute; dequant at
+    # the receiver (inline jnp — no extra kernel launch)
+    from repro.kernels.quant_bucket.quant_bucket import wire_decode, wire_encode
+
+    codes, scales = wire_encode(x)
+    codes = lax.ppermute(codes, axis_name, perm)
+    scales = lax.ppermute(scales, axis_name, perm)
+    return wire_decode(codes, scales, x.shape[0])
 
 
 def ring_allreduce(x: jax.Array, axis_name: str, *, num_rings: int = 1) -> jax.Array:
@@ -92,7 +146,8 @@ def ring_allreduce(x: jax.Array, axis_name: str, *, num_rings: int = 1) -> jax.A
 
 
 def ring_reduce_scatter(x: jax.Array, axis_name: str, *,
-                        num_rings: int = 1) -> jax.Array:
+                        num_rings: int = 1,
+                        wire_dtype: "str | None" = None) -> jax.Array:
     """Each device ends with its own fully-reduced 1/p slice.
 
     With ``num_rings = R > 1`` the buffer splits into R independent ring
@@ -100,7 +155,14 @@ def ring_reduce_scatter(x: jax.Array, axis_name: str, *,
     and the local shard is the R per-ring chunks raveled to
     ``(R*chunk,)`` — the same strided selection ``shard_select`` makes,
     and what ``ring_allgather(num_rings=R)`` inverts.
+
+    With a low-precision ``wire_dtype`` every hop sends the compressed
+    chunk (bf16 cast, or int8 codes + per-bucket scales) while the
+    accumulator stays f32: dequant-accumulate-requant per hop, so the
+    quantization error never compounds through the running sum — each
+    hop's error is one encode of the current partial. The result is f32.
     """
+    wire = check_wire_dtype(wire_dtype, where="ring_reduce_scatter")
     p = _axis_size(axis_name)
     n = x.size
     nr = max(1, num_rings)
@@ -116,37 +178,66 @@ def ring_reduce_scatter(x: jax.Array, axis_name: str, *,
     for s in range(p - 1):
         for r in range(nr):
             send = jnp.take(bufs[r], (idx - s - 1) % p, axis=0) if s == 0 else acc[r]
-            recv = lax.ppermute(send, axis_name, fwd)
-            acc[r] = jnp.take(bufs[r], (idx - s - 2) % p, axis=0) + recv
+            recv = _hop_permute(send, axis_name, fwd, wire)
+            local = jnp.take(bufs[r], (idx - s - 2) % p, axis=0)
+            if wire is not None:
+                local = local.astype(jnp.float32)  # hp accumulator
+            acc[r] = local + recv
     if nr == 1:
         return acc[0]  # fully-reduced chunk idx
     return jnp.stack(acc).reshape(-1)
 
 
 def ring_allgather(x: jax.Array, axis_name: str, *,
-                   num_rings: int = 1) -> jax.Array:
+                   num_rings: int = 1,
+                   wire_dtype: "str | None" = None) -> jax.Array:
     """Inverse of reduce-scatter: gather per-device shards to the full
     ``(nr*p*chunk,)`` buffer (ring-major layout, matching
-    ``ring_reduce_scatter(num_rings=nr)``)."""
+    ``ring_reduce_scatter(num_rings=nr)``).
+
+    With a low-precision ``wire_dtype`` each shard is encoded ONCE and
+    its codes forwarded verbatim hop to hop (gathering moves values, it
+    never re-reduces them, so nothing compounds) — and the owner
+    roundtrips its OWN shard through the codec too, so every device
+    reconstructs bit-identical buffers and replicated params cannot
+    diverge. The result is f32.
+    """
+    from repro.kernels.quant_bucket.quant_bucket import wire_decode, wire_encode
+
+    wire = check_wire_dtype(wire_dtype, where="ring_allgather")
     p = _axis_size(axis_name)
     nr = max(1, num_rings)
     if p == 1:
-        return x.reshape(-1)
+        return x.reshape(-1) if wire is None else \
+            x.reshape(-1).astype(jnp.float32)
     idx = lax.axis_index(axis_name)
     chunk = x.size // nr
     shards = x.reshape(nr, chunk)
     fwd = [(i, (i + 1) % p) for i in range(p)]
     outs, cur = [], []
     for r in range(nr):
-        out = jnp.zeros((p, chunk), x.dtype)
-        out = lax.dynamic_update_slice_in_dim(out, shards[r][None], idx, axis=0)
+        if wire is None:
+            own, wired = shards[r], shards[r]
+        elif wire == "bf16":
+            wired = shards[r].astype(jnp.bfloat16)
+            own = wired.astype(jnp.float32)
+        else:
+            wired = wire_encode(shards[r])  # (codes, scales)
+            own = wire_decode(*wired, chunk)
+        out = jnp.zeros((p, chunk), own.dtype)
+        out = lax.dynamic_update_slice_in_dim(out, own[None], idx, axis=0)
         outs.append(out)
-        cur.append(shards[r])
+        cur.append(wired)
     for s in range(p - 1):
         for r in range(nr):
-            nxt = lax.ppermute(cur[r], axis_name, fwd)
+            if wire == "int8":
+                nxt = tuple(lax.ppermute(c, axis_name, fwd) for c in cur[r])
+                val = wire_decode(*nxt, chunk)
+            else:
+                nxt = lax.ppermute(cur[r], axis_name, fwd)
+                val = nxt if wire is None else nxt.astype(jnp.float32)
             outs[r] = lax.dynamic_update_slice_in_dim(
-                outs[r], nxt[None], (idx - s - 1) % p, axis=0
+                outs[r], val[None], (idx - s - 1) % p, axis=0
             )
             cur[r] = nxt
     if nr == 1:
@@ -212,21 +303,25 @@ def tree_allreduce(x: jax.Array, axis_name: str) -> jax.Array:
 
 
 def scatter_gather_allreduce(x: jax.Array, axis_name: str, *,
-                             num_rings: int = 1) -> jax.Array:
+                             num_rings: int = 1,
+                             wire_dtype: "str | None" = None) -> jax.Array:
     """Allreduce as its two explicit halves (reduce-scatter + allgather).
 
     Same wire bytes as ``ring`` — the point is that the halves are
     *separable*: the sharded fused-step path runs the optimizer between
     them, so the second half carries updated params instead of gradients.
+    Each half applies the ``wire_dtype`` protocol independently.
     """
     p = _axis_size(axis_name)
     if p == 1:
         return x
     shape, n = x.shape, x.size
     nr = max(1, num_rings)
-    shard = ring_reduce_scatter(x, axis_name, num_rings=nr)
-    full = ring_allgather(shard, axis_name, num_rings=nr)
-    return full[:n].reshape(shape)
+    shard = ring_reduce_scatter(x, axis_name, num_rings=nr,
+                                wire_dtype=wire_dtype)
+    full = ring_allgather(shard, axis_name, num_rings=nr,
+                          wire_dtype=wire_dtype)
+    return full[:n].reshape(shape).astype(x.dtype)
 
 
 def allreduce(x: jax.Array, axis_name: str, method: Method = "ring",
@@ -254,7 +349,7 @@ def allreduce(x: jax.Array, axis_name: str, method: Method = "ring",
 # adapters for the deprecated ``axis_name=`` string signature.
 
 def _as_group(axis_name_or_comm, method, num_rings, bucket_bytes=None,
-              *, where: str):
+              wire_dtype=None, *, where: str):
     """Shim: a Communicator passes through (explicit policy knobs
     alongside it are rejected — the policy lives on the group, matching
     ``scatter_update_gather``'s contract); an axis-name string becomes a
@@ -262,22 +357,25 @@ def _as_group(axis_name_or_comm, method, num_rings, bucket_bytes=None,
     from repro.core import comm as _comm
 
     if isinstance(axis_name_or_comm, _comm.Communicator):
-        if method is not None or num_rings is not None:
+        if method is not None or num_rings is not None \
+                or wire_dtype is not None:
             raise ValueError(
                 f"{where}: with a Communicator the collective policy "
-                "lives on the group — set method/num_rings there "
-                "(Communicator.with_policy), not as arguments")
+                "lives on the group — set method/num_rings/wire_dtype "
+                "there (Communicator.with_policy), not as arguments")
         return axis_name_or_comm
     _comm._deprecated_axis_name(where)
     return _comm.Communicator.from_axis_name(
         axis_name_or_comm, method=method or "ring",
         num_rings=2 if num_rings is None else num_rings,
-        bucket_bytes=bucket_bytes)
+        bucket_bytes=bucket_bytes,
+        wire_dtype=check_wire_dtype(wire_dtype, where=where))
 
 
 def tensor_allreduce(tree: Any, axis_name: "str | Any",
                      method: Method | None = None, *,
                      num_rings: int | None = None,
+                     wire_dtype: "str | None" = None,
                      mean: bool = False,
                      spec: flatbuf.FlatBuffer | None = None) -> Any:
     """Allreduce a whole pytree as ONE fused buffer (tensor collective).
@@ -291,13 +389,15 @@ def tensor_allreduce(tree: Any, axis_name: "str | Any",
     there is no per-step re-flatten/concatenate.
     """
     group = _as_group(axis_name_or_comm=axis_name, method=method,
-                      num_rings=num_rings, where="tensor_allreduce")
+                      num_rings=num_rings, wire_dtype=wire_dtype,
+                      where="tensor_allreduce")
     return group.tensor_allreduce(tree, mean=mean, spec=spec)
 
 
 def tensor_pushpull(tree: Any, axis_name: "str | Any", *, fused: bool = True,
                     method: Method | None = None,
                     num_rings: int | None = None,
+                    wire_dtype: "str | None" = None,
                     spec: flatbuf.FlatBuffer | None = None) -> Any:
     """KVStore.pushpull comm pattern. ``fused=True`` is the paper's new API
     (one tensor allreduce, with ``method`` selecting the bucket algorithm,
@@ -311,7 +411,8 @@ def tensor_pushpull(tree: Any, axis_name: "str | Any", *, fused: bool = True,
             f"method={method!r} is only meaningful for fused=True; the "
             "unfused path is defined as tree push + tree pull")
     group = _as_group(axis_name_or_comm=axis_name, method=method,
-                      num_rings=num_rings, where="tensor_pushpull")
+                      num_rings=num_rings, wire_dtype=wire_dtype,
+                      where="tensor_pushpull")
     return group.pushpull(tree, fused=fused, spec=spec)
 
 

@@ -9,8 +9,10 @@ owns
   * its **group**: a tuple of named mesh/vmap axes (``()`` is the
     trivial size-1 group — MPI_COMM_SELF),
   * its **collective policy**: bucket algorithm (``method``), ring count,
-    byte-sized bucketing — what used to travel as loose
-    ``allreduce_method`` / ``num_rings`` / ``bucket_bytes`` knobs,
+    byte-sized bucketing, and the low-precision wire protocol
+    (``wire_dtype``: f32 / bf16 / int8 ring hops) — what used to travel
+    as loose ``allreduce_method`` / ``num_rings`` / ``bucket_bytes``
+    knobs,
   * its **backend**: the named-axis substrate. The same
     ``lax.ppermute`` programs run inside ``shard_map`` on a real mesh
     AND under ``jax.vmap(..., axis_name=...)`` emulation, so the backend
@@ -79,6 +81,11 @@ class Communicator:
     method: str = "ring"
     num_rings: int = 1
     bucket_bytes: Optional[int] = None
+    # low-precision wire protocol: None/"f32" (full precision), "bf16"
+    # (cast per hop), "int8" (codes + per-bucket scales per hop); part of
+    # the collective policy, so splits/complements inherit it and every
+    # level of a hierarchical collective quantizes its own hops
+    wire_dtype: Optional[str] = None
 
     # -- construction -------------------------------------------------------
     @classmethod
@@ -177,6 +184,21 @@ class Communicator:
             return self.sizes
         return tuple(_axis_size(a) for a in self.axes)
 
+    @property
+    def wire(self) -> Optional[str]:
+        """Normalized wire dtype (None for the full-precision "f32")."""
+        from repro.core import collectives as C
+
+        return C.check_wire_dtype(self.wire_dtype, where="Communicator")
+
+    def _require_plain_wire(self, what: str) -> None:
+        if self.wire is not None:
+            raise ValueError(
+                f"wire_dtype={self.wire_dtype!r} only rides the explicit "
+                f"ring hops (methods {('ring', 'multi_ring', 'scatter_gather')}), "
+                f"but this group dispatches {what} — drop the wire_dtype "
+                "or pick a ring-family method")
+
     def rings_for(self, nbytes: int) -> int:
         """The policy's effective ring count for an ``nbytes`` buffer
         (``num_rings`` composed with ``bucket_bytes`` chunking)."""
@@ -212,18 +234,31 @@ class Communicator:
         if not self.axes:
             pass
         elif self.method == "psum":
+            self._require_plain_wire("XLA's native psum")
             out = lax.psum(out, self.axes)
-        elif self.method == "tree" or len(self.axes) == 1:
+        elif self.method == "tree":
+            self._require_plain_wire("full-buffer binomial-tree hops")
+            nr = self.rings_for(x.size * x.dtype.itemsize)
+            for a in self.axes:
+                out = C.allreduce(out, a, self.method, num_rings=nr)
+        elif len(self.axes) == 1 and self.wire is None:
             nr = self.rings_for(x.size * x.dtype.itemsize)
             for a in self.axes:
                 out = C.allreduce(out, a, self.method, num_rings=nr)
         else:
+            # hierarchical RS + AG composition — also the 1-axis form of
+            # every quantized ring-family allreduce (the halves carry the
+            # wire protocol; an overlapped in-place quantized ring would
+            # re-encode the same partials for no byte win)
+            if self.method == "per_leaf":
+                self._require_plain_wire("the per-leaf baseline")
             shape, n = x.shape, x.size
             nr = self.rings_for(x.size * x.dtype.itemsize)
             _, total = flatbuf.shard_geometry(n, self.resolve_size(), nr)
             flat = jnp.pad(x.reshape(-1), (0, total - n))
             shard = self.reduce_scatter(flat, num_rings=nr)
             out = self.allgather(shard, num_rings=nr)[:n].reshape(shape)
+            out = out.astype(x.dtype)
         if mean:
             out = out / self.resolve_size()
         return out
@@ -250,7 +285,8 @@ class Communicator:
         nr = (self.rings_for(out.size * out.dtype.itemsize)
               if num_rings is None else num_rings)
         for a in self.axes:
-            out = C.ring_reduce_scatter(out, a, num_rings=nr)
+            out = C.ring_reduce_scatter(out, a, num_rings=nr,
+                                        wire_dtype=self.wire)
         return out
 
     def allgather(self, shard: jax.Array, *,
@@ -265,7 +301,8 @@ class Communicator:
                              * out.dtype.itemsize)
               if num_rings is None else num_rings)
         for a in reversed(self.axes):
-            out = C.ring_allgather(out, a, num_rings=nr)
+            out = C.ring_allgather(out, a, num_rings=nr,
+                                   wire_dtype=self.wire)
         return out
 
     def shard_select(self, buf: jax.Array, *,
@@ -291,6 +328,7 @@ class Communicator:
         if self.method == "per_leaf":  # single-vector-at-a-time baseline
             from repro.core import collectives as C
 
+            self._require_plain_wire("the per-leaf baseline")
             out = tree
             for a in self.axes:
                 out = jax.tree.map(
@@ -312,6 +350,7 @@ class Communicator:
 
         if fused:
             return self.tensor_allreduce(tree, mean=True, spec=spec)
+        self._require_plain_wire("the tree push + tree pull pattern")
         p = self.resolve_size()
         spec = spec or flatbuf.spec_for(tree)
         buf = spec.pack(tree)
@@ -346,12 +385,14 @@ LOCAL = Communicator()
 
 def from_sync(sync, axes=(), sizes=None, *, mesh=None) -> Communicator:
     """Build a communicator from a ``SyncConfig`` recipe: the config's
-    ``allreduce_method`` / ``num_rings`` / ``bucket_bytes`` become the
-    group's collective policy. This is the ONE place config knobs turn
-    into a Communicator — everything below speaks the object."""
+    ``allreduce_method`` / ``num_rings`` / ``bucket_bytes`` /
+    ``wire_dtype`` become the group's collective policy. This is the ONE
+    place config knobs turn into a Communicator — everything below
+    speaks the object."""
     return Communicator.world(
         axes, sizes, mesh=mesh, method=sync.allreduce_method,
-        num_rings=sync.num_rings, bucket_bytes=sync.bucket_bytes)
+        num_rings=sync.num_rings, bucket_bytes=sync.bucket_bytes,
+        wire_dtype=getattr(sync, "wire_dtype", None))
 
 
 def sync_comms(sync, world: Communicator

@@ -31,23 +31,83 @@ def tpu_v5e() -> NetParams:
     return NetParams(alpha=1e-6, beta=1 / 45e9, gamma=1 / 819e9)
 
 
-def ring_allreduce_time(nbytes: float, p: int, net: NetParams) -> float:
+# --------------------------------------------------------------------------
+# Low-precision wire protocol: bytes-on-wire per f32 payload byte
+# --------------------------------------------------------------------------
+
+#: f32 -> wire byte ratio per wire dtype. int8 counts the codes (1 byte
+#: per value) PLUS one f32 scale per WIRE_BLOCK=128 bucket, matching
+#: kernels/quant_bucket.wire_encode exactly: (1 + 4/128)/4 = 0.2578125.
+WIRE_RATIO = {
+    None: 1.0,
+    "f32": 1.0,
+    "bf16": 0.5,
+    "int8": (1 + 4 / 128) / 4,
+}
+
+
+def wire_ratio(wire_dtype: "str | None" = None) -> float:
+    try:
+        return WIRE_RATIO[wire_dtype]
+    except KeyError:
+        raise ValueError(
+            f"wire_dtype must be one of {tuple(WIRE_RATIO)}, "
+            f"got {wire_dtype!r}") from None
+
+
+def wire_bytes(nbytes: float, wire_dtype: "str | None" = None) -> float:
+    """f32 payload bytes -> bytes that actually cross the wire."""
+    return nbytes * wire_ratio(wire_dtype)
+
+
+def grad_leg_bytes(nbytes: float, p: int,
+                   wire_dtype: "str | None" = None) -> float:
+    """Per-device gradient-leg wire bytes of the sharded fused step: the
+    ring reduce-scatter's (p−1)/p·n, scaled by the wire dtype."""
+    if p <= 1:
+        return 0.0
+    return (p - 1) / p * wire_bytes(nbytes, wire_dtype)
+
+
+def param_leg_bytes(nbytes: float, p: int,
+                    wire_dtype: "str | None" = None) -> float:
+    """Per-device param-allgather wire bytes (the second half)."""
+    return grad_leg_bytes(nbytes, p, wire_dtype)
+
+
+def elastic_leg_bytes(nbytes: float, p: int,
+                      wire_dtype: "str | None" = None) -> float:
+    """Per-device wire bytes of one sharded elastic exchange: the packed
+    diff reduce-scatter + the center-shard allgather."""
+    return 2 * grad_leg_bytes(nbytes, p, wire_dtype)
+
+
+def ps_push_bytes(nbytes: float, wire_dtype: "str | None" = None) -> float:
+    """PS-leg wire bytes of one push (the KVStore's compressed form)."""
+    return wire_bytes(nbytes, wire_dtype)
+
+
+def ring_allreduce_time(nbytes: float, p: int, net: NetParams,
+                        wire_dtype: "str | None" = None) -> float:
+    """β (transfer) pays the wire-dtype ratio; γ (local reduction) stays
+    full-precision — hops dequantize before accumulating."""
     if p <= 1:
         return 0.0
     return (
         (p - 1) * net.alpha
-        + 2 * (p - 1) / p * nbytes * net.beta
+        + 2 * (p - 1) / p * wire_bytes(nbytes, wire_dtype) * net.beta
         + (p - 1) / p * nbytes * net.gamma
     )
 
 
 def multi_ring_allreduce_time(nbytes: float, p: int, net: NetParams,
-                              num_rings: int = 2) -> float:
+                              num_rings: int = 2,
+                              wire_dtype: "str | None" = None) -> float:
     """γ of ring i overlaps β of ring i+1 → pay max(β, γ) instead of β+γ
     on the steady-state term (plus one non-overlapped γ pipeline fill)."""
     if p <= 1:
         return 0.0
-    beta_term = 2 * (p - 1) / p * nbytes * net.beta
+    beta_term = 2 * (p - 1) / p * wire_bytes(nbytes, wire_dtype) * net.beta
     gamma_term = (p - 1) / p * nbytes * net.gamma
     fill = gamma_term / max(num_rings, 1)
     return (p - 1) * net.alpha * num_rings + max(beta_term, gamma_term) + fill
@@ -64,21 +124,29 @@ def tree_allreduce_time(nbytes: float, p: int, net: NetParams) -> float:
 
 
 def ps_pushpull_time(nbytes: float, num_pushers: int, num_servers: int,
-                     net: NetParams) -> float:
-    """Server ingress shared by concurrent pushers + egress for pulls.
-    Each server holds 1/num_servers of the keys."""
+                     net: NetParams,
+                     wire_dtype: "str | None" = None) -> float:
+    """Server ingress shared by every concurrent pusher + egress for
+    pulls. Each server holds 1/num_servers of the keys. A low-precision
+    ``wire_dtype`` shrinks the ingress/egress bytes (the hot-spot of
+    §2.3); the server reduces on dequantized values, so γ is unscaled."""
     per_server = nbytes / max(num_servers, 1)
-    ingress = per_server * num_pushers * net.beta  # serialized hot-spot
-    egress = per_server * num_pushers * net.beta
+    on_wire = per_server * wire_ratio(wire_dtype)
+    ingress = on_wire * num_pushers * net.beta  # serialized hot-spot
+    egress = on_wire * num_pushers * net.beta
     reduce_cost = per_server * num_pushers * net.gamma
     return 2 * net.alpha + ingress + egress + reduce_cost
 
 
 def allreduce_time(nbytes: float, p: int, net: NetParams, method: str,
-                   num_rings: int = 2) -> float:
+                   num_rings: int = 2,
+                   wire_dtype: "str | None" = None) -> float:
     return {
-        "ring": lambda: ring_allreduce_time(nbytes, p, net),
-        "multi_ring": lambda: multi_ring_allreduce_time(nbytes, p, net, num_rings),
+        "ring": lambda: ring_allreduce_time(nbytes, p, net, wire_dtype),
+        "multi_ring": lambda: multi_ring_allreduce_time(
+            nbytes, p, net, num_rings, wire_dtype),
+        "scatter_gather": lambda: ring_allreduce_time(
+            nbytes, p, net, wire_dtype),  # same wire bytes, separable halves
         "tree": lambda: tree_allreduce_time(nbytes, p, net),
         "psum": lambda: ring_allreduce_time(nbytes, p, net),  # XLA uses rings
     }[method]()

@@ -29,6 +29,7 @@ Two substrates implement the exchange:
 """
 from __future__ import annotations
 
+import warnings
 from functools import partial
 from typing import Any, Optional
 
@@ -97,22 +98,49 @@ def elastic_exchange_multiclient(
 # Flat substrate: the exchange as ONE packed buffer + ONE fused kernel
 # ---------------------------------------------------------------------------
 
-def _quant_roundtrip(buf: jax.Array) -> jax.Array:
-    """The int8 wire model on ONE packed buffer (kernels/quant_bucket):
-    quantize + dequantize = what the receiving end of a compressed push
-    sees. The single place the packed wire form is defined."""
-    from repro.kernels.common import use_interpret
+def _wire_roundtrip(buf: jax.Array, wire_dtype: Optional[str]) -> jax.Array:
+    """The low-precision wire model on ONE packed buffer: encode +
+    decode = what the receiving end of a compressed push sees. The
+    single place the packed (hop-free) wire form is defined — int8 rides
+    the streaming WIRE_BLOCK Pallas pair (one quantize/dequantize kernel
+    launch for the whole buffer), bf16 is a pure cast XLA fuses away."""
+    from repro.core.collectives import check_wire_dtype
     from repro.kernels.quant_bucket.quant_bucket import (
-        dequantize_flat, quantize_flat)
+        dequantize_wire, quantize_wire)
 
-    interpret = use_interpret()
-    codes, scales = quantize_flat(buf, interpret=interpret)
-    return dequantize_flat(codes, scales, buf.shape[0], interpret=interpret)
+    wire = check_wire_dtype(wire_dtype, where="_wire_roundtrip")
+    if wire is None:
+        return buf
+    if wire == "bf16":
+        return buf.astype(jnp.bfloat16).astype(buf.dtype)
+    codes, scales = quantize_wire(buf)
+    return dequantize_wire(codes, scales, buf.shape[0], buf.dtype)
 
 
-@partial(jax.jit, static_argnames=("compress",))
+def _quant_roundtrip(buf: jax.Array) -> jax.Array:
+    """Back-compat spelling of the int8 packed wire."""
+    return _wire_roundtrip(buf, "int8")
+
+
+@partial(jax.jit, static_argnames=("wire_dtype",))
+def _elastic_exchange_packed(params: Any, center: Any, alpha,
+                             *, wire_dtype: Optional[str] = None
+                             ) -> tuple[Any, Any]:
+    from repro.kernels.fused_elastic.fused_elastic import elastic_exchange_flat
+
+    spec_w = flatbuf.spec_for(params)
+    spec_c = flatbuf.spec_for(center)
+    w = spec_w.pack(params)
+    c = spec_c.pack(center)
+    w = _wire_roundtrip(w, wire_dtype)
+    new_w, new_c = elastic_exchange_flat(w, c, jnp.asarray(alpha, jnp.float32))
+    return spec_w.unpack(new_w), spec_c.unpack(new_c)
+
+
 def elastic_exchange_packed(params: Any, center: Any, alpha,
-                            *, compress: bool = False) -> tuple[Any, Any]:
+                            *, compress: bool = False,
+                            wire_dtype: Optional[str] = None
+                            ) -> tuple[Any, Any]:
     """Eqs. (2)+(3) on the WHOLE pytree as one packed FlatBuffer.
 
     Pack w and w̃ (static lane-aligned offsets, spec memoized per tree
@@ -120,20 +148,26 @@ def elastic_exchange_packed(params: Any, center: Any, alpha,
     launch — and unpack. Zero per-leaf tree.map updates; the per-leaf
     reference is ``elastic_exchange``.
 
-    ``compress=True`` int8 block-quantizes the packed w buffer first
-    (kernels/quant_bucket) — the PS-push wire form — so the exchange
-    sees exactly what a compressed push delivers.
+    ``wire_dtype`` ("bf16"/"int8") runs the packed w buffer through the
+    wire roundtrip first — the PS-push wire form — so the exchange sees
+    exactly what a compressed push delivers. ``compress=True`` is the
+    deprecated spelling of ``wire_dtype="int8"`` (same contract as
+    ``KVStore(compress_push=)``: warns, and conflicts are an error,
+    never a silent override).
     """
-    from repro.kernels.fused_elastic.fused_elastic import elastic_exchange_flat
-
-    spec_w = flatbuf.spec_for(params)
-    spec_c = flatbuf.spec_for(center)
-    w = spec_w.pack(params)
-    c = spec_c.pack(center)
     if compress:
-        w = _quant_roundtrip(w)
-    new_w, new_c = elastic_exchange_flat(w, c, jnp.asarray(alpha, jnp.float32))
-    return spec_w.unpack(new_w), spec_c.unpack(new_c)
+        warnings.warn(
+            "elastic_exchange_packed(compress=True) is deprecated — it "
+            "is the int8 wire: pass wire_dtype='int8' instead",
+            DeprecationWarning, stacklevel=2)
+        if wire_dtype not in (None, "int8"):
+            raise ValueError(
+                f"compress=True IS wire_dtype='int8' but "
+                f"wire_dtype={wire_dtype!r} was also passed — drop the "
+                "deprecated flag")
+        wire_dtype = "int8"
+    return _elastic_exchange_packed(params, center, alpha,
+                                    wire_dtype=wire_dtype)
 
 
 @jax.jit
@@ -165,13 +199,18 @@ def elastic_server_packed(pushed: Any, center: Any, alpha) -> Any:
     return spec_c.unpack(new_c)
 
 
-@jax.jit
-def quantize_packed(tree: Any) -> Any:
-    """int8 wire roundtrip of the packed FlatBuffer: what a compressed PS
-    push delivers to the server (kernels/quant_bucket on the ONE packed
-    buffer instead of per-leaf codes)."""
+@partial(jax.jit, static_argnames=("wire_dtype",))
+def wire_packed(tree: Any, wire_dtype: Optional[str] = "int8") -> Any:
+    """Wire roundtrip of the packed FlatBuffer: what a compressed PS
+    push delivers to the server (the ONE packed buffer through the
+    WIRE_BLOCK codec or a bf16 cast, instead of per-leaf codes)."""
     spec = flatbuf.spec_for(tree)
-    return spec.unpack(_quant_roundtrip(spec.pack(tree)))
+    return spec.unpack(_wire_roundtrip(spec.pack(tree), wire_dtype))
+
+
+def quantize_packed(tree: Any) -> Any:
+    """Back-compat spelling of the int8 packed wire roundtrip."""
+    return wire_packed(tree, "int8")
 
 
 @jax.jit
@@ -204,6 +243,7 @@ def elastic_exchange_sharded(spec: flatbuf.FlatBuffer, params: Any,
                              axis_name: Optional[str] = None,
                              num_rings: int = 1,
                              bucket_bytes: Optional[int] = None,
+                             wire_dtype: Optional[str] = None,
                              interpret: Optional[bool] = None
                              ) -> tuple[Any, Any]:
     """Per-device cross-pod exchange (run inside shard_map over the pod
@@ -220,7 +260,10 @@ def elastic_exchange_sharded(spec: flatbuf.FlatBuffer, params: Any,
 
     ``comm`` is the exchange group (``core.comm.Communicator`` — the
     paper's PS tier, e.g. ``world.split("pod")``); its policy supplies
-    the ring count and bucketing. A trivial group (or axis of size 1)
+    the ring count, bucketing and the wire protocol (``wire_dtype``
+    "bf16"/"int8": the reduce-scattered differences and the allgathered
+    center shards ride the compressed wire, hp accumulation per hop).
+    A trivial group (or axis of size 1)
     degenerates to the local exchange: both kernels over the whole
     buffer, no collective. The deprecated ``axis_name=`` string keeps
     working via ``Communicator.from_axis_name`` (DeprecationWarning;
@@ -235,14 +278,15 @@ def elastic_exchange_sharded(spec: flatbuf.FlatBuffer, params: Any,
         if axis_name is not None:
             _comm._deprecated_axis_name("elastic_exchange_sharded")
         comm = _comm.Communicator.from_axis_name(
-            axis_name, num_rings=num_rings, bucket_bytes=bucket_bytes)
+            axis_name, num_rings=num_rings, bucket_bytes=bucket_bytes,
+            wire_dtype=wire_dtype)
     elif axis_name is not None:
         raise ValueError("pass comm= or the deprecated axis_name=, not both")
-    elif num_rings != 1 or bucket_bytes is not None:
+    elif num_rings != 1 or bucket_bytes is not None or wire_dtype is not None:
         raise ValueError(
-            "with comm= the ring policy lives on the communicator — set "
-            "num_rings/bucket_bytes there (Communicator.with_policy), "
-            "not as arguments")
+            "with comm= the ring/wire policy lives on the communicator — "
+            "set num_rings/bucket_bytes/wire_dtype there "
+            "(Communicator.with_policy), not as arguments")
 
     p = comm.resolve_size()
     nr = comm.rings_for(spec.nbytes)

@@ -54,6 +54,13 @@ class SyncConfig:
     # split the flat buffer into ceil(bytes/bucket_bytes) independent ring
     # schedules (composes with num_rings; see flatbuf.effective_rings)
     bucket_bytes: Optional[int] = None
+    # low-precision wire protocol on the explicit ring hops (gradient
+    # reduce-scatter / param allgather / elastic diff+center legs):
+    # None/"f32" full precision, "bf16" cast per hop (0.5x bytes), "int8"
+    # codes + per-128-bucket f32 scales per hop (~0.258x bytes). Requires
+    # a ring-family allreduce_method — psum/tree hops are XLA-native or
+    # full-buffer patterns the codec cannot ride.
+    wire_dtype: Optional[str] = None
     fsdp: bool = False  # ZeRO-3: params/opt-state also sharded over 'data'
 
     def validate(self, mesh: Optional[Mesh] = None) -> None:
@@ -74,6 +81,19 @@ class SyncConfig:
                 f"allreduce_method={self.allreduce_method!r} is not one of "
                 f"{_METHODS} — SyncConfig is the construction recipe for "
                 "core.comm.Communicator, which only dispatches these")
+        from repro.core.collectives import (
+            RING_METHODS,
+            check_wire_dtype,
+        )
+
+        wire = check_wire_dtype(self.wire_dtype, where="SyncConfig")
+        if wire is not None and self.allreduce_method not in RING_METHODS:
+            raise ValueError(
+                f"wire_dtype={self.wire_dtype!r} rides the explicit ring "
+                f"hops, but allreduce_method={self.allreduce_method!r} is "
+                f"not one of {RING_METHODS} — set e.g. "
+                "allreduce_method='ring' (psum is XLA-native and tree "
+                "moves full buffers; neither carries the int8/bf16 codec)")
         if mesh is None or self.num_clients <= 1:
             return
         C = self.num_clients

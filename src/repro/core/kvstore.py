@@ -37,6 +37,7 @@ pushes quantize that single packed buffer instead of per-leaf codes.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from dataclasses import dataclass, field
 from typing import Any, Callable, Optional
 
@@ -99,15 +100,32 @@ class KVStore:
 
     def __init__(self, kv_type: str, *, num_workers: int = 1,
                  num_servers: int = 1, num_clients: Optional[int] = None,
-                 compress_push: bool = False, flat_exchange: bool = True):
+                 compress_push: bool = False,
+                 wire_dtype: Optional[str] = None,
+                 flat_exchange: bool = True):
+        from repro.core.collectives import check_wire_dtype
+
         if kv_type not in VALID_TYPES:
             raise ValueError(f"kv_type must be one of {VALID_TYPES}")
+        if compress_push:
+            warnings.warn(
+                "KVStore(compress_push=True) is deprecated — it is the "
+                "int8 wire: pass wire_dtype='int8' instead (one "
+                "compression knob, shared with the collective legs)",
+                DeprecationWarning, stacklevel=2)
+            if wire_dtype not in (None, "int8"):
+                raise ValueError(
+                    f"compress_push=True IS wire_dtype='int8' but "
+                    f"wire_dtype={wire_dtype!r} was also passed — drop "
+                    "the deprecated flag")
+            wire_dtype = "int8"
         self.kv_type = kv_type
         self.num_workers = num_workers
         self.num_servers = max(num_servers, 1)
         self.num_clients = num_clients or num_workers
-        # beyond-paper: int8 block-quantize the PS leg (kernels/quant_bucket)
-        self.compress_push = compress_push
+        # beyond-paper low-precision PS wire: "int8" block-quantizes the
+        # push (kernels/quant_bucket wire codec), "bf16" casts it
+        self.wire_dtype = check_wire_dtype(wire_dtype, where="KVStore")
         # elastic server rule as ONE packed buffer + ONE fused Pallas
         # kernel (core.elastic.elastic_exchange_packed) instead of
         # per-leaf tree.maps; False = per-leaf reference
@@ -127,6 +145,11 @@ class KVStore:
         # the intra-group communicator; + per-group collective counters
         self._groups: dict[Any, Any] = {}
         self.group_sync_count: dict[Any, int] = {}
+
+    @property
+    def compress_push(self) -> bool:
+        """Deprecated alias: whether the PS wire is the int8 codec."""
+        return self.wire_dtype == "int8"
 
     # -- setup --------------------------------------------------------------
     @classmethod
@@ -232,17 +255,22 @@ class KVStore:
         raw = sum(l.size * l.dtype.itemsize
                   for l in jax.tree_util.tree_leaves(agg))
         self.pushed_bytes_uncompressed += raw
-        if self.compress_push:
+        if self.wire_dtype == "bf16":
+            # pure-cast wire: half the bytes, no scales, works per leaf
+            agg = jax.tree.map(
+                lambda l: l.astype(jnp.bfloat16).astype(l.dtype), agg)
+            self.pushed_bytes += sum(
+                l.size * 2 for l in jax.tree_util.tree_leaves(agg))
+        elif self.wire_dtype == "int8":
             if self._flat_elastic_ok(agg):
-                # the wire form is ONE packed int8 buffer + per-block
+                # the wire form is ONE packed int8 buffer + per-bucket
                 # scales, quantized per push (so the sync barrier sums
                 # exactly what crossed the wire, like the per-leaf path)
-                from repro.core.elastic import quantize_packed
-                from repro.kernels.quant_bucket.quant_bucket import QBLOCK
+                from repro.core.elastic import wire_packed
+                from repro.kernels.quant_bucket.quant_bucket import wire_nbytes
 
-                payload = flatbuf.spec_for(agg).payload
-                self.pushed_bytes += payload + -(-payload // QBLOCK) * 4
-                agg = quantize_packed(agg)  # what the server receives
+                self.pushed_bytes += wire_nbytes(flatbuf.spec_for(agg).payload)
+                agg = wire_packed(agg)  # what the server receives
             else:
                 from repro.kernels.quant_bucket.ops import (
                     compress, compressed_bytes, decompress)

@@ -131,7 +131,11 @@ def _is_flat_adamw_state(opt_state: Any) -> bool:
 class FlatEngine(SyncEngine):
     """Flat-buffer strategy: the whole gradient pytree rides one packed
     buffer through ring collectives and ONE fused Pallas kernel, with the
-    K optimizer-state streams stored as flat (sharded) buffers."""
+    K optimizer-state streams stored as flat (sharded) buffers — in the
+    declared stream dtype (``hyper["state_dtype"]``: bf16 halves the
+    state bytes on top of the 1/p sharding), over the gradient
+    communicator's full policy (rings, bucketing, and the bf16/int8
+    low-precision wire protocol on every hop)."""
 
     fused = True
 

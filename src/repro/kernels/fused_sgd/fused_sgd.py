@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.common import pick_block
+from repro.kernels.common import pick_block, use_interpret
 
 
 def _sgd_kernel(hp_ref, p_ref, v_ref, g_ref, p_out_ref, v_out_ref):
@@ -26,7 +26,10 @@ def _sgd_kernel(hp_ref, p_ref, v_ref, g_ref, p_out_ref, v_out_ref):
 
 def sgd_momentum_flat(p: jax.Array, v: jax.Array, g: jax.Array,
                       lr: jax.Array, mu: jax.Array, *,
-                      block: int | None = None, interpret: bool = True):
+                      block: int | None = None,
+                      interpret: bool | None = None):
+    if interpret is None:
+        interpret = use_interpret()
     n = p.shape[0]
     # VMEM working set: p, v, g in + p, v out + the hp scalar vector, sized
     # by the widest stream so bf16 params with f32 momentum still fit.

@@ -1,13 +1,30 @@
-"""Block-quantization kernel pair (beyond-paper): int8-compress gradient
-/ parameter pushes on the PS leg.
+"""Block-quantization kernels (beyond-paper): the int8 wire form of every
+compressed leg.
 
 The paper's hot-spot is the server ingress link (§2.3); its remedy is
 fewer pushers (MPI clients). An orthogonal, modern remedy is pushing
-*smaller* tensors: block-wise absmax int8 quantization cuts the PS-leg
-bytes 4x (f32) at <0.4% relative error per block. The kernels stream
-(block,) tiles through VMEM: quantize emits int8 codes + one f32 scale
-per block; dequantize reverses it. Grid-pipelined like the other
-kernels: DMA of tile i+1 overlaps VPU quantization of tile i.
+*smaller* tensors: block-wise absmax int8 quantization cuts the wire
+bytes ~4x (f32) at <0.4% relative error per block. Two granularities
+live here:
+
+  QBLOCK (1024)      the original PS-push codec: ``quantize_flat`` /
+                     ``dequantize_flat`` stream (block,) tiles through
+                     VMEM — one f32 scale per 1024 values (the per-leaf
+                     ``ops.compress`` form)
+  WIRE_BLOCK (128)   the ring-hop wire codec: one f32 scale per LANE of
+                     128 values, so EVERY lane-aligned ring chunk splits
+                     into whole buckets and the int8/f32 byte ratio is
+                     geometry-exact ((1 + 4/128)/4 = 0.2578) at any
+                     buffer size. ``wire_encode``/``wire_decode`` are the
+                     plain-jnp form traced INLINE into the quantized
+                     collectives (core/collectives.py) — XLA fuses them,
+                     so a quantized ring hop adds ZERO extra kernel
+                     launches; ``quantize_wire``/``dequantize_wire`` are
+                     the streaming Pallas pair for the hop-free one-shot
+                     wire (the packed PS push / elastic exchange buffer).
+
+Grid-pipelined like the other kernels: DMA of tile i+1 overlaps VPU
+quantization of tile i.
 """
 from __future__ import annotations
 
@@ -15,7 +32,10 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-QBLOCK = 1024  # quantization granularity (one scale per QBLOCK values)
+from repro.kernels.common import use_interpret
+
+QBLOCK = 1024  # PS-push quantization granularity (one scale per QBLOCK values)
+WIRE_BLOCK = 128  # ring-hop wire granularity (one scale per LANE of values)
 
 
 def _quantize_kernel(x_ref, codes_ref, scale_ref):
@@ -33,8 +53,10 @@ def _dequantize_kernel(codes_ref, scale_ref, x_ref):
     ).astype(x_ref.dtype)
 
 
-def quantize_flat(x: jax.Array, *, interpret: bool = True):
+def quantize_flat(x: jax.Array, *, interpret: bool | None = None):
     """x: (N,) -> (codes (N,) int8, scales (N/QBLOCK,) f32). N padded."""
+    if interpret is None:
+        interpret = use_interpret()
     n = x.shape[0]
     pad = (-n) % QBLOCK
     if pad:
@@ -59,7 +81,9 @@ def quantize_flat(x: jax.Array, *, interpret: bool = True):
 
 
 def dequantize_flat(codes: jax.Array, scales: jax.Array, n: int,
-                    dtype=jnp.float32, *, interpret: bool = True):
+                    dtype=jnp.float32, *, interpret: bool | None = None):
+    if interpret is None:
+        interpret = use_interpret()
     pad = (-n) % QBLOCK
     if pad:
         codes = jnp.pad(codes, (0, pad))
@@ -75,4 +99,118 @@ def dequantize_flat(codes: jax.Array, scales: jax.Array, n: int,
         out_shape=jax.ShapeDtypeStruct((nb, QBLOCK), dtype),
         interpret=interpret,
     )(codes.reshape(nb, QBLOCK), scales.reshape(nb, 1))
+    return out.reshape(-1)[:n]
+
+
+# ---------------------------------------------------------------------------
+# WIRE_BLOCK codec: the int8 form a quantized ring hop puts on the wire
+# ---------------------------------------------------------------------------
+
+def wire_nbytes(n: int) -> int:
+    """Wire bytes of n f32 values in the int8 wire form (codes + scales)."""
+    return n + -(-n // WIRE_BLOCK) * 4
+
+
+def wire_encode(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(n,) float -> (codes (n_pad,) int8, scales (n_pad/128,) f32).
+
+    Plain jnp on purpose: this is the form the quantized collectives
+    trace INLINE per ring hop, so XLA fuses it into the surrounding
+    program and the hop adds no kernel launch. Padding (to whole
+    WIRE_BLOCK buckets) is zeros, which never raise a bucket's absmax —
+    pad values cannot poison the scales. An all-zero bucket hits the
+    ``max(absmax, 1e-12)`` guard: its scale is ~7.9e-15 and every code
+    is 0, so it decodes to exactly 0.0.
+    """
+    n = x.shape[0]
+    pad = (-n) % WIRE_BLOCK
+    xf = x.astype(jnp.float32)
+    if pad:
+        xf = jnp.pad(xf, (0, pad))
+    xb = xf.reshape(-1, WIRE_BLOCK)
+    absmax = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-12) / 127.0
+    codes = jnp.clip(jnp.round(xb / scale), -127, 127).astype(jnp.int8)
+    return codes.reshape(-1), scale[:, 0]
+
+
+def wire_decode(codes: jax.Array, scales: jax.Array,
+                n: int | None = None) -> jax.Array:
+    """Inverse of ``wire_encode``: (codes, scales) -> (n,) f32 (the
+    receiver's hp view; ``n`` trims the encoder's bucket padding)."""
+    nb = scales.shape[0]
+    out = codes.reshape(nb, WIRE_BLOCK).astype(jnp.float32) * scales[:, None]
+    out = out.reshape(-1)
+    return out if n is None else out[:n]
+
+
+# streaming Pallas pair for the hop-free one-shot wire (the packed PS
+# push / elastic exchange buffer): same math as wire_encode/wire_decode
+# bucket-for-bucket, but tiled through VMEM as one grid
+
+WIRE_TILE_ROWS = 64  # buckets per grid step (64*128 = 8K values/tile)
+
+
+def _quantize_wire_kernel(x_ref, codes_ref, scale_ref):
+    x = x_ref[...].astype(jnp.float32)  # (WIRE_TILE_ROWS, WIRE_BLOCK)
+    absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-12) / 127.0
+    codes_ref[...] = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    scale_ref[...] = scale.astype(jnp.float32)
+
+
+def _dequantize_wire_kernel(codes_ref, scale_ref, x_ref):
+    x_ref[...] = (
+        codes_ref[...].astype(jnp.float32) * scale_ref[...]
+    ).astype(x_ref.dtype)
+
+
+def quantize_wire(x: jax.Array, *, interpret: bool | None = None):
+    """x: (N,) -> (codes (N_pad,) int8, scales (N_pad/128,) f32), padded
+    to whole WIRE_TILE_ROWS×WIRE_BLOCK tiles. Matches ``wire_encode``
+    bucket-for-bucket on the shared length."""
+    if interpret is None:
+        interpret = use_interpret()
+    n = x.shape[0]
+    tile = WIRE_TILE_ROWS * WIRE_BLOCK
+    pad = (-n) % tile
+    xf = x.astype(jnp.float32)
+    if pad:
+        xf = jnp.pad(xf, (0, pad))
+    nb = (n + pad) // WIRE_BLOCK
+    xb = xf.reshape(nb, WIRE_BLOCK)
+    codes, scales = pl.pallas_call(
+        _quantize_wire_kernel,
+        grid=(nb // WIRE_TILE_ROWS,),
+        in_specs=[pl.BlockSpec((WIRE_TILE_ROWS, WIRE_BLOCK), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((WIRE_TILE_ROWS, WIRE_BLOCK), lambda i: (i, 0)),
+            pl.BlockSpec((WIRE_TILE_ROWS, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, WIRE_BLOCK), jnp.int8),
+            jax.ShapeDtypeStruct((nb, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xb)
+    return codes.reshape(-1), scales[:, 0]
+
+
+def dequantize_wire(codes: jax.Array, scales: jax.Array, n: int,
+                    dtype=jnp.float32, *, interpret: bool | None = None):
+    """Inverse of ``quantize_wire``, trimmed back to ``n`` values."""
+    if interpret is None:
+        interpret = use_interpret()
+    nb = scales.shape[0]
+    out = pl.pallas_call(
+        _dequantize_wire_kernel,
+        grid=(nb // WIRE_TILE_ROWS,),
+        in_specs=[
+            pl.BlockSpec((WIRE_TILE_ROWS, WIRE_BLOCK), lambda i: (i, 0)),
+            pl.BlockSpec((WIRE_TILE_ROWS, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((WIRE_TILE_ROWS, WIRE_BLOCK), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, WIRE_BLOCK), dtype),
+        interpret=interpret,
+    )(codes.reshape(nb, WIRE_BLOCK), scales.reshape(nb, 1))
     return out.reshape(-1)[:n]

@@ -1,7 +1,7 @@
 """Oracle: block absmax int8 quantization in plain jnp."""
 import jax.numpy as jnp
 
-from repro.kernels.quant_bucket.quant_bucket import QBLOCK
+from repro.kernels.quant_bucket.quant_bucket import QBLOCK, WIRE_BLOCK
 
 
 def quantize_ref(x):
@@ -18,3 +18,20 @@ def dequantize_ref(codes, scales, n, dtype=jnp.float32):
     cp = jnp.pad(codes, (0, pad)).reshape(-1, QBLOCK)
     out = cp.astype(jnp.float32) * scales[:, None]
     return out.reshape(-1)[:n].astype(dtype)
+
+
+def wire_encode_ref(x):
+    """WIRE_BLOCK-bucket oracle of ``quant_bucket.wire_encode``."""
+    n = x.shape[0]
+    pad = (-n) % WIRE_BLOCK
+    xp = jnp.pad(x.astype(jnp.float32), (0, pad)).reshape(-1, WIRE_BLOCK)
+    scale = jnp.maximum(
+        jnp.max(jnp.abs(xp), axis=-1, keepdims=True), 1e-12) / 127.0
+    codes = jnp.clip(jnp.round(xp / scale), -127, 127).astype(jnp.int8)
+    return codes.reshape(-1), scale[:, 0]
+
+
+def wire_decode_ref(codes, scales, n=None):
+    out = (codes.reshape(-1, WIRE_BLOCK).astype(jnp.float32)
+           * scales[:, None]).reshape(-1)
+    return out if n is None else out[:n]

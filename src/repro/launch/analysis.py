@@ -137,13 +137,21 @@ class Roofline:
 
 
 def roofline_from_analysis(cost: dict, coll: CollectiveStats, chips: int,
-                           model_flops: float = 0.0) -> Roofline:
+                           model_flops: float = 0.0,
+                           wire_dtype: "str | None" = None) -> Roofline:
     # cost_analysis of an SPMD executable reports the per-device module
     per_dev_flops = float(cost.get("flops", 0.0))
     per_dev_bytes = float(cost.get("bytes accessed", 0.0))
     flops = per_dev_flops * chips
     bytes_ = per_dev_bytes * chips
-    wire = coll.wire_bytes * chips
+    # wire_dtype projects the low-precision wire protocol onto a module
+    # traced at full precision (the quantized collectives move
+    # cost_model.wire_ratio of the f32 bytes per hop — codes + scales
+    # for int8); the compiled-on-TPU path would show the s8 operands in
+    # the HLO directly and needs no projection
+    from repro.core.cost_model import wire_ratio
+    per_dev_wire = coll.wire_bytes * wire_ratio(wire_dtype)
+    wire = per_dev_wire * chips
     return Roofline(
         chips=chips,
         hlo_flops=flops,
@@ -151,7 +159,7 @@ def roofline_from_analysis(cost: dict, coll: CollectiveStats, chips: int,
         wire_bytes=wire,
         compute_s=per_dev_flops / PEAK_FLOPS,
         memory_s=per_dev_bytes / HBM_BW,
-        collective_s=coll.wire_bytes / ICI_BW,
+        collective_s=per_dev_wire / ICI_BW,
         model_flops=model_flops,
     )
 

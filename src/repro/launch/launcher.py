@@ -40,11 +40,24 @@ class JobSpec:
     # flat elastic leg: packed FlatBuffer + one fused exchange kernel
     flat_exchange: bool = True
     bucket_bytes: int = 0       # 0 = no byte-sized bucketing
+    # low-precision wire protocol every worker runs its ring hops with
+    # ("f32" = full precision; "bf16"/"int8" compress the gradient,
+    # param and elastic legs — threaded to --wire-dtype)
+    wire_dtype: str = "f32"
+    # flat optimizer-state stream dtype ("f32" | "bf16" — threaded to
+    # --state-dtype; bf16 halves AdaGrad/AdamW state bytes per device)
+    state_dtype: str = "f32"
 
     def validate(self) -> None:
         if self.optimizer not in ("sgd", "adagrad", "adamw"):
             raise ValueError(
                 f"optimizer must be sgd/adagrad/adamw, got {self.optimizer!r}")
+        if self.wire_dtype not in ("f32", "bf16", "int8"):
+            raise ValueError(
+                f"wire_dtype must be f32/bf16/int8, got {self.wire_dtype!r}")
+        if self.state_dtype not in ("f32", "bf16"):
+            raise ValueError(
+                f"state_dtype must be f32/bf16, got {self.state_dtype!r}")
         if self.num_workers % self.num_clients:
             raise ValueError("#workers must divide evenly into #clients")
         if self.num_servers < 0:
@@ -82,6 +95,10 @@ def build_job(spec: JobSpec) -> dict:
                    else " --no-flat-exchange")
                 + (f" --bucket-bytes {spec.bucket_bytes}"
                    if spec.bucket_bytes else "")
+                + (f" --wire-dtype {spec.wire_dtype}"
+                   if spec.wire_dtype != "f32" else "")
+                + (f" --state-dtype {spec.state_dtype}"
+                   if spec.state_dtype != "f32" else "")
             ),
         })
     return {
@@ -98,7 +115,9 @@ def build_job(spec: JobSpec) -> dict:
         "sync": {"optimizer": spec.optimizer,
                  "fused_update": spec.fused_update,
                  "flat_exchange": spec.flat_exchange,
-                 "bucket_bytes": spec.bucket_bytes},
+                 "bucket_bytes": spec.bucket_bytes,
+                 "wire_dtype": spec.wire_dtype,
+                 "state_dtype": spec.state_dtype},
         "mesh": spec.mesh,
         "total_chips": spec.num_workers * spec.chips_per_worker,
         "spec": dataclasses.asdict(spec),
@@ -154,13 +173,21 @@ def main() -> None:  # pragma: no cover
                     help="per-leaf elastic exchange instead of the packed "
                          "fused kernel")
     ap.add_argument("--bucket-bytes", type=int, default=0)
+    ap.add_argument("--wire-dtype", default="f32",
+                    choices=("f32", "bf16", "int8"),
+                    help="low-precision wire protocol for every worker")
+    ap.add_argument("--state-dtype", default="f32",
+                    choices=("f32", "bf16"),
+                    help="flat optimizer-state stream dtype for every worker")
     args = ap.parse_args()
     spec = JobSpec(args.workers, args.servers, args.clients, args.arch,
                    args.shape, args.mesh,
                    optimizer=args.optimizer,
                    fused_update=not args.no_fused_update,
                    flat_exchange=not args.no_flat_exchange,
-                   bucket_bytes=args.bucket_bytes)
+                   bucket_bytes=args.bucket_bytes,
+                   wire_dtype=args.wire_dtype,
+                   state_dtype=args.state_dtype)
     for p in emit_scripts(spec, args.outdir):
         print(p)
 

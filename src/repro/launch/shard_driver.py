@@ -41,6 +41,13 @@ Two mesh layouts serve this:
             'pod' — provably: the legs' ppermutes name disjoint axes
             (tests/test_shard_driver.py asserts this on the jaxpr).
 
+Both legs run under the world communicator's full collective policy —
+including the low-precision wire protocol (``SyncConfig.wire_dtype``:
+bf16 casts or int8 codes + per-bucket scales on every ppermute hop,
+compounding the (p−1)/p·n gradient-leg saving by another 2–4x) and the
+low-precision optimizer-state streams (``hyper["state_dtype"]``: bf16
+AdaGrad accumulator / AdamW m+v at half the bytes per device).
+
 Driver state is *stacked*: every leaf carries a leading device dim
 p_total (pod-major for 2-axis), sharded over the axes on a real mesh (so
 each device holds exactly its replica/shard) and vmapped — one nested

@@ -381,16 +381,35 @@ def main() -> None:  # pragma: no cover (CLI driver; see tests/test_launch.py)
     ap.add_argument("--no-flat-exchange", dest="flat_exchange",
                     action="store_false")
     ap.add_argument("--bucket-bytes", type=int, default=0)
+    ap.add_argument("--wire-dtype", default="f32",
+                    choices=("f32", "bf16", "int8"),
+                    help="low-precision wire protocol on the ring hops "
+                         "(requires a ring-family --allreduce method; "
+                         "f32 = full precision)")
+    ap.add_argument("--state-dtype", default="f32",
+                    choices=("f32", "bf16"),
+                    help="flat optimizer-state stream dtype (bf16 halves "
+                         "AdaGrad/AdamW state bytes per device)")
+    ap.add_argument("--allreduce", default=None,
+                    choices=("psum", "ring", "multi_ring", "tree",
+                             "scatter_gather"),
+                    help="intra-client collective (default: psum, or ring "
+                         "when --wire-dtype is low-precision)")
     ap.add_argument("--full-size", action="store_true",
                     help="full architecture (default: reduced smoke config)")
     args = ap.parse_args()
 
+    method = args.allreduce or (
+        "psum" if args.wire_dtype == "f32" else "ring")
     settings = TrainSettings(lr=args.lr, momentum=args.momentum,
                              optimizer_name=args.optimizer,
                              weight_decay=args.weight_decay,
                              fused_update=args.fused_update,
                              flat_exchange=args.flat_exchange,
-                             bucket_bytes=args.bucket_bytes or None)
+                             bucket_bytes=args.bucket_bytes or None,
+                             allreduce_method=method,
+                             wire_dtype=args.wire_dtype,
+                             state_dtype=args.state_dtype)
     cfg = get_config(args.arch)
     if not args.full_size:
         cfg = reduced(cfg)
@@ -404,7 +423,9 @@ def main() -> None:  # pragma: no cover (CLI driver; see tests/test_launch.py)
           f"shape={args.shape} scheduler={args.scheduler} "
           f"optimizer={settings.optimizer_name} "
           f"fused_update={settings.fused_update} "
-          f"bucket_bytes={settings.bucket_bytes}", flush=True)
+          f"bucket_bytes={settings.bucket_bytes} "
+          f"wire_dtype={settings.wire_dtype} "
+          f"state_dtype={settings.state_dtype}", flush=True)
     _, hist = train_loop(model, optimizer, sync, None, pipe.epoch(0),
                          log_every=max(args.steps // 10, 1))
     for entry in hist:

@@ -50,11 +50,20 @@ def sgd(lr: float, momentum: float = 0.0, weight_decay: float = 0.0,
         if momentum == 0.0:
             new_p = jax.tree.map(lambda p, g: p - lr * g, params, grads)
             return new_p, ()
-        new_v = jax.tree.map(lambda v, g: momentum * v + g, state, grads)
-        new_p = jax.tree.map(
-            lambda p, v: (p.astype(jnp.float32) - lr * v.astype(jnp.float32)).astype(p.dtype),
-            params, new_v,
+        # hp momentum arithmetic, rounded back to the declared state
+        # dtype only at the store — otherwise a bf16 stream would
+        # silently promote to f32 on the first update (and retrace any
+        # jitted step when the state aval changed)
+        hp_v = jax.tree.map(
+            lambda v, g: momentum * v.astype(jnp.float32)
+            + g.astype(jnp.float32),
+            state, grads,
         )
+        new_p = jax.tree.map(
+            lambda p, v: (p.astype(jnp.float32) - lr * v).astype(p.dtype),
+            params, hp_v,
+        )
+        new_v = jax.tree.map(lambda v, s: v.astype(s.dtype), hp_v, state)
         return new_p, new_v
 
     return Optimizer(init, update,
@@ -63,30 +72,41 @@ def sgd(lr: float, momentum: float = 0.0, weight_decay: float = 0.0,
                       "state_dtype": state_dtype})
 
 
-def adagrad(lr: float, eps: float = 1e-10) -> Optimizer:
+def adagrad(lr: float, eps: float = 1e-10, state_dtype=None) -> Optimizer:
+    sd = state_dtype or jnp.float32
+
     def init(params):
-        return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return jax.tree.map(lambda p: jnp.zeros_like(p, sd), params)
 
     def update(grads, state, params):
-        new_s = jax.tree.map(
-            lambda s, g: s + jnp.square(g.astype(jnp.float32)), state, grads
+        # hp accumulator arithmetic, rounded to the (possibly bf16) state
+        # stream only at the store — mirroring the fused kernel, which
+        # computes f32 per tile and casts on write
+        hp_s = jax.tree.map(
+            lambda s, g: s.astype(jnp.float32)
+            + jnp.square(g.astype(jnp.float32)),
+            state, grads,
         )
         new_p = jax.tree.map(
             lambda p, g, s: (
                 p.astype(jnp.float32)
                 - lr * g.astype(jnp.float32) / (jnp.sqrt(s) + eps)
             ).astype(p.dtype),
-            params, grads, new_s,
+            params, grads, hp_s,
         )
-        return new_p, new_s
+        return new_p, jax.tree.map(lambda s: s.astype(sd), hp_s)
 
-    return Optimizer(init, update, {"name": "adagrad", "lr": lr, "eps": eps})
+    return Optimizer(init, update,
+                     {"name": "adagrad", "lr": lr, "eps": eps,
+                      "state_dtype": state_dtype})
 
 
 def adamw(lr: float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
-          weight_decay: float = 0.0) -> Optimizer:
+          weight_decay: float = 0.0, state_dtype=None) -> Optimizer:
+    sd = state_dtype or jnp.float32
+
     def init(params):
-        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        zeros = lambda p: jnp.zeros(p.shape, sd)
         return {
             "m": jax.tree.map(zeros, params),
             "v": jax.tree.map(zeros, params),
@@ -95,12 +115,16 @@ def adamw(lr: float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
 
     def update(grads, state, params):
         t = state["t"] + 1
+        # hp moment arithmetic; the (possibly bf16) streams are rounded
+        # only at the store, like the fused kernel's per-tile f32 compute
         m = jax.tree.map(
-            lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+            lambda m_, g: b1 * m_.astype(jnp.float32)
+            + (1 - b1) * g.astype(jnp.float32),
             state["m"], grads,
         )
         v = jax.tree.map(
-            lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            lambda v_, g: b2 * v_.astype(jnp.float32)
+            + (1 - b2) * jnp.square(g.astype(jnp.float32)),
             state["v"], grads,
         )
         c1 = 1 - b1 ** t.astype(jnp.float32)
@@ -113,11 +137,13 @@ def adamw(lr: float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
             return (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
 
         new_p = jax.tree.map(step, params, m, v)
-        return new_p, {"m": m, "v": v, "t": t}
+        cast = lambda tree: jax.tree.map(lambda l: l.astype(sd), tree)
+        return new_p, {"m": cast(m), "v": cast(v), "t": t}
 
     return Optimizer(init, update,
                      {"name": "adamw", "lr": lr, "b1": b1, "b2": b2,
-                      "eps": eps, "weight_decay": weight_decay})
+                      "eps": eps, "weight_decay": weight_decay,
+                      "state_dtype": state_dtype})
 
 
 def get_optimizer(name: str, lr: float, **kw) -> Optimizer:
@@ -153,26 +179,43 @@ def momentum_shard_init(spec: flatbuf.FlatBuffer, p: int = 1,
                      dtype)
 
 
+def state_stream_dtype(hyper, state_dtypes=None) -> Any:
+    """The dtype the flat state streams are stored in: an explicit
+    ``state_dtypes`` wins, else the optimizer's ``hyper["state_dtype"]``,
+    else f32. The fused kernels always COMPUTE in f32 per tile and cast
+    on store, so a bf16 stream halves the state bytes per device without
+    touching the update math's precision."""
+    sd = state_dtypes
+    if sd is None and not isinstance(hyper, str):
+        sd = hyper.get("state_dtype")
+    return jnp.dtype(sd) if sd is not None else jnp.float32
+
+
 def optstate_shard_init(hyper, spec: flatbuf.FlatBuffer, p: int = 1,
                         num_rings: int = 1,
-                        bucket_bytes: int | None = None) -> Any:
+                        bucket_bytes: int | None = None,
+                        state_dtypes=None) -> Any:
     """Zero flat optimizer state for one device's 1/p shard of the buffer
     (``momentum_shard_init`` generalized to K state streams).
 
-    Layout per family — every full-length stream is sharded 1/p:
+    Layout per family — every full-length stream is sharded 1/p, stored
+    in the declared stream dtype (``state_stream_dtype``: f32 default,
+    bf16 for the low-precision streams — another 2x state-bytes cut on
+    top of the 1/p sharding):
 
-      sgd      (n,) f32 momentum
-      adagrad  (n,) f32 accumulator
-      adamw    {"mv": (2, n) f32 first/second moments,
+      sgd      (n,) momentum
+      adagrad  (n,) accumulator
+      adamw    {"mv": (2, n) first/second moments,
                 "t":  ()     i32 shared step count (bias correction)}
     """
     name = _flat_name(hyper)
+    sd = state_stream_dtype(hyper, state_dtypes)
     n = flatbuf.shard_size(spec, p, num_rings, bucket_bytes)
     k = FLAT_STATE_STREAMS[name]
     if name == "adamw":
-        return {"mv": jnp.zeros((k, n), jnp.float32),
+        return {"mv": jnp.zeros((k, n), sd),
                 "t": jnp.zeros((), jnp.int32)}
-    return jnp.zeros((n,), jnp.float32)
+    return jnp.zeros((n,), sd)
 
 
 def _fused_shard_update(name: str, hyper, p_shard: jax.Array,
@@ -216,6 +259,7 @@ def scatter_update_gather(spec: flatbuf.FlatBuffer, grads: Any, params: Any,
                           axis_name: Optional[str] = None,
                           num_rings: int = 1,
                           bucket_bytes: int | None = None,
+                          wire_dtype: Optional[str] = None,
                           weight_decay: float = 0.0,
                           mean: bool = True,
                           interpret: bool | None = None) -> tuple[Any, Any]:
@@ -238,7 +282,12 @@ def scatter_update_gather(spec: flatbuf.FlatBuffer, grads: Any, params: Any,
     is this device's shard as laid out by ``optstate_shard_init``.
 
     ``comm`` is the gradient group (``core.comm.Communicator``); its
-    policy supplies the ring count and bucketing. A trivial communicator
+    policy supplies the ring count, bucketing, AND the wire protocol:
+    with ``wire_dtype`` "bf16"/"int8" the reduce-scatter hops carry the
+    compressed gradient chunks (hp accumulation per hop) and the
+    allgather hops carry the compressed updated-param shards (every
+    device roundtrips its own shard through the codec, so replicas stay
+    bit-identical). A trivial communicator
     (or one whose axes have size 1) degenerates to the local fused
     update: no collective, one Pallas grid over the whole buffer — still
     a win over O(num_leaves) per-leaf updates. The old
@@ -266,15 +315,17 @@ def scatter_update_gather(spec: flatbuf.FlatBuffer, grads: Any, params: Any,
         if axis_name is not None:
             _comm._deprecated_axis_name("scatter_update_gather")
         comm = _comm.Communicator.from_axis_name(
-            axis_name, num_rings=num_rings, bucket_bytes=bucket_bytes)
+            axis_name, num_rings=num_rings, bucket_bytes=bucket_bytes,
+            wire_dtype=wire_dtype)
     elif axis_name is not None:
         raise ValueError("pass comm= or the deprecated axis_name=, not both")
-    elif num_rings != 1 or bucket_bytes is not None:
+    elif num_rings != 1 or bucket_bytes is not None or wire_dtype is not None:
         raise ValueError(
-            "with comm= the ring policy lives on the communicator — set "
-            "num_rings/bucket_bytes there (Communicator.with_policy), "
-            "not as arguments; mixing the two would desync the gradient "
-            "sharding from the optimizer-state layout")
+            "with comm= the ring/wire policy lives on the communicator — "
+            "set num_rings/bucket_bytes/wire_dtype there "
+            "(Communicator.with_policy), not as arguments; mixing the two "
+            "would desync the gradient sharding (or the wire form) from "
+            "the optimizer-state layout")
 
     p = comm.resolve_size()
     nr = comm.rings_for(spec.nbytes)
@@ -340,19 +391,25 @@ def flat_sgd(lr: float, momentum: float, spec: flatbuf.FlatBuffer, *,
 
 def flat_adagrad(lr: float, spec: flatbuf.FlatBuffer, *,
                  eps: float = 1e-10, num_rings: int = 1,
-                 bucket_bytes: int | None = None) -> Optimizer:
-    """Fused flat AdaGrad: state is ONE flat accumulator buffer."""
+                 bucket_bytes: int | None = None,
+                 state_dtype=None) -> Optimizer:
+    """Fused flat AdaGrad: state is ONE flat accumulator buffer
+    (optionally bf16 — half the state bytes, f32 compute per tile)."""
     return _flat_optimizer(
-        {"name": "flat_adagrad", "lr": lr, "eps": eps},
+        {"name": "flat_adagrad", "lr": lr, "eps": eps,
+         "state_dtype": state_dtype},
         spec, num_rings, bucket_bytes)
 
 
 def flat_adamw(lr: float, spec: flatbuf.FlatBuffer, *,
                b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
                weight_decay: float = 0.0, num_rings: int = 1,
-               bucket_bytes: int | None = None) -> Optimizer:
+               bucket_bytes: int | None = None,
+               state_dtype=None) -> Optimizer:
     """Fused flat AdamW: state is the (2, n) m/v buffer + scalar step
-    count — the two full-size adaptive streams ride one flat object."""
+    count — the two full-size adaptive streams ride one flat object
+    (optionally bf16: another 2x off the dominant state cost)."""
     return _flat_optimizer(
         {"name": "flat_adamw", "lr": lr, "b1": b1, "b2": b2, "eps": eps,
-         "weight_decay": weight_decay}, spec, num_rings, bucket_bytes)
+         "weight_decay": weight_decay, "state_dtype": state_dtype},
+        spec, num_rings, bucket_bytes)

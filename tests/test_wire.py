@@ -1,0 +1,659 @@
+"""Low-precision wire protocol: the WIRE_BLOCK codec (kernel vs jnp vs
+oracle, pad/all-zero edge cases), quantized ring collectives vs an exact
+hop-by-hop dequant-oracle, wire policy plumbing (Communicator / SyncConfig
+/ KVStore / AlgoConfig guards and deprecations), low-precision optimizer
+state streams, and the train-step equivalence + convergence windows."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import collectives as C
+from repro.core import flatbuf as F
+from repro.core.comm import Communicator
+from repro.core.hierarchy import SyncConfig
+from repro.kernels.quant_bucket.quant_bucket import (
+    WIRE_BLOCK,
+    dequantize_wire,
+    quantize_wire,
+    wire_decode,
+    wire_encode,
+    wire_nbytes,
+)
+from repro.kernels.quant_bucket.ref import wire_decode_ref, wire_encode_ref
+
+AXIS = "ring"
+
+
+def _roundtrip(x, wire):
+    """The hop codec applied to one chunk (what the receiver sees)."""
+    if wire == "bf16":
+        return np.asarray(x, np.float32).astype(jnp.bfloat16).astype(
+            np.float32)
+    codes, scales = wire_encode(jnp.asarray(x))
+    return np.asarray(wire_decode(codes, scales, x.shape[0]))
+
+
+# --------------------------------------------------------------------------
+# the WIRE_BLOCK codec
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [8, WIRE_BLOCK, WIRE_BLOCK + 17,
+                               5 * WIRE_BLOCK, 64 * WIRE_BLOCK + 3])
+def test_wire_codec_kernel_matches_jnp_and_ref(n):
+    x = jax.random.normal(jax.random.key(0), (n,)) * 2.5
+    cj, sj = wire_encode(x)
+    cr, sr = wire_encode_ref(x)
+    np.testing.assert_array_equal(np.asarray(cj), np.asarray(cr))
+    np.testing.assert_allclose(sj, sr, rtol=1e-7)
+    ck, sk = quantize_wire(x)
+    # kernel pads to whole tiles; the shared buckets must match exactly
+    np.testing.assert_array_equal(np.asarray(ck)[:cj.shape[0]],
+                                  np.asarray(cj))
+    np.testing.assert_allclose(sk[:sj.shape[0]], sj, rtol=1e-6)
+    back_j = wire_decode(cj, sj, n)
+    back_r = wire_decode_ref(cr, sr, n)
+    back_k = dequantize_wire(ck, sk, n)
+    np.testing.assert_allclose(back_j, back_r, rtol=1e-7)
+    # the Pallas pair may differ by one ulp of the scale (interpret-mode
+    # reduction ordering), never more
+    np.testing.assert_allclose(back_k, back_j, rtol=1e-6, atol=1e-7)
+    # error bound: one quantization step of the bucket absmax
+    pad = (-n) % WIRE_BLOCK
+    xp = np.pad(np.asarray(x), (0, pad)).reshape(-1, WIRE_BLOCK)
+    bound = np.abs(xp).max(axis=1) / 127.0
+    err = np.pad(np.abs(np.asarray(back_j) - np.asarray(x)),
+                 (0, pad)).reshape(-1, WIRE_BLOCK)
+    assert (err <= bound[:, None] * 0.51 + 1e-9).all()
+
+
+def test_wire_codec_pad_does_not_poison_scales():
+    """Bucket padding is zeros: a partial final bucket's scale must come
+    from the real values only (zeros never raise an absmax)."""
+    n = WIRE_BLOCK + 7  # final bucket: 7 real values + 121 pad zeros
+    x = jnp.concatenate([jnp.ones((WIRE_BLOCK,)) * 3.0,
+                         jnp.ones((7,)) * 0.5])
+    _, scales = wire_encode(x)
+    np.testing.assert_allclose(scales, [3.0 / 127.0, 0.5 / 127.0],
+                               rtol=1e-6)
+    back = wire_decode(*wire_encode(x), n)
+    np.testing.assert_allclose(back, x, rtol=1e-6)
+
+
+def test_wire_codec_all_zero_bucket_decodes_to_zero():
+    """The max(absmax, 1e-12) guard: an all-zero bucket must not divide
+    by zero and must decode to exactly 0.0."""
+    x = jnp.concatenate([jnp.zeros((WIRE_BLOCK,)),
+                         jnp.ones((WIRE_BLOCK,))])
+    codes, scales = wire_encode(x)
+    assert np.isfinite(np.asarray(scales)).all()
+    back = wire_decode(codes, scales, x.shape[0])
+    np.testing.assert_array_equal(np.asarray(back[:WIRE_BLOCK]),
+                                  np.zeros(WIRE_BLOCK))
+    # the Pallas kernel hits the same guard
+    back_k = dequantize_wire(*quantize_wire(x), x.shape[0])
+    np.testing.assert_array_equal(np.asarray(back_k[:WIRE_BLOCK]),
+                                  np.zeros(WIRE_BLOCK))
+
+
+def test_wire_codec_bf16_input():
+    x = (jax.random.normal(jax.random.key(3), (300,)) * 4).astype(
+        jnp.bfloat16)
+    back = wire_decode(*wire_encode(x), 300)
+    assert back.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(back),
+                               np.asarray(x, np.float32),
+                               atol=4 * 4 / 127.0)
+
+
+def test_wire_nbytes():
+    assert wire_nbytes(WIRE_BLOCK) == WIRE_BLOCK + 4
+    assert wire_nbytes(WIRE_BLOCK + 1) == WIRE_BLOCK + 1 + 8
+    # the geometry-exact ratio the benches gate: (1 + 4/128)/4
+    assert wire_nbytes(1 << 20) / (4 << 20) == pytest.approx(0.2578125)
+
+
+# --------------------------------------------------------------------------
+# quantized ring reduce-scatter == the hop-by-hop dequant-oracle, exactly
+# --------------------------------------------------------------------------
+
+def _oracle_reduce_scatter(x, nr, wire):
+    """Sequential simulation of ``ring_reduce_scatter``'s exact schedule
+    with the hop codec applied where the wire is: the reference the
+    quantized collective must match BIT-FOR-BIT (same jnp ops in the
+    same order)."""
+    p, n = x.shape
+    chunk = -(-n // (p * nr))
+    flat = np.pad(np.asarray(x, np.float32), ((0, 0), (0, chunk * p * nr - n)))
+    bufs = flat.reshape(p, nr, p, chunk)
+    acc = [[None] * nr for _ in range(p)]
+    for s in range(p - 1):
+        for r in range(nr):
+            sends = []
+            for d in range(p):
+                send = bufs[d][r][(d - s - 1) % p] if s == 0 else acc[d][r]
+                sends.append(_roundtrip(send, wire) if wire else send)
+            new = []
+            for d in range(p):
+                recv = sends[(d - 1) % p]
+                local = bufs[d][r][(d - s - 2) % p]
+                new.append(np.asarray(jnp.asarray(local) + jnp.asarray(recv)))
+            for d in range(p):
+                acc[d][r] = new[d]
+    if nr == 1:
+        return np.stack([acc[d][0] for d in range(p)])
+    return np.stack([np.stack(acc[d]).reshape(-1) for d in range(p)])
+
+
+@pytest.mark.parametrize("wire", ["int8", "bf16"])
+@pytest.mark.parametrize("p,nr", [(2, 1), (8, 1), (8, 3), (2, 2)])
+def test_quantized_reduce_scatter_matches_dequant_oracle(p, nr, wire):
+    n = 999  # odd on purpose: pad must ride the rings without poisoning
+    x = jax.random.normal(jax.random.key(4), (p, n)) * 3
+    got = C.emulate(C.ring_reduce_scatter, x, num_rings=nr, wire_dtype=wire)
+    want = _oracle_reduce_scatter(x, nr, wire)
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+@pytest.mark.parametrize("wire", ["int8", "bf16"])
+@pytest.mark.parametrize("p,nr", [(2, 1), (8, 1), (8, 3)])
+def test_quantized_allgather_is_allgather_of_roundtrip(p, nr, wire):
+    """Gathering moves values without reducing them, so the quantized
+    allgather must equal the f32 allgather of codec-roundtripped shards
+    EXACTLY — including each device's own shard (the replica-identity
+    property)."""
+    chunk = 128
+    shards = jax.random.normal(jax.random.key(5), (p, nr * chunk)) * 2
+    got = C.emulate(C.ring_allgather, shards, num_rings=nr, wire_dtype=wire)
+    rt = jnp.stack([
+        jnp.asarray(np.concatenate([
+            _roundtrip(np.asarray(shards[d]).reshape(nr, chunk)[r], wire)
+            for r in range(nr)]))
+        for d in range(p)])
+    want = C.emulate(C.ring_allgather, rt, num_rings=nr)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # every device reconstructs the identical buffer
+    assert (np.asarray(got) == np.asarray(got)[0][None]).all()
+
+
+@pytest.mark.parametrize("wire", ["int8", "bf16"])
+def test_quantized_rs_ag_roundtrip_accuracy(wire):
+    """End-to-end RS + AG: sum within the codec's error envelope (p hops
+    of one-quant-step error each), replicas identical."""
+    p, n = 8, 1000
+    x = jax.random.normal(jax.random.key(6), (p, n))
+    rs = C.emulate(C.ring_reduce_scatter, x, wire_dtype=wire)
+    ag = C.emulate(C.ring_allgather, rs, wire_dtype=wire)
+    want = np.asarray(jnp.sum(x, 0))
+    tol = 0.2 if wire == "int8" else 0.1
+    np.testing.assert_allclose(np.asarray(ag)[0][:n], want, atol=tol)
+    assert (np.asarray(ag) == np.asarray(ag)[0][None]).all()
+
+
+def test_hierarchical_two_axis_quantized_allreduce():
+    """Multi-axis groups quantize per level; the result stays within the
+    compounded codec error of the true sum and is replica-identical."""
+    P, D, n = 2, 4, 600
+    x = jax.random.normal(jax.random.key(7), (P, D, n))
+    comm = Communicator.world(("pod", "data"), (P, D), method="ring",
+                              wire_dtype="int8")
+    fn = jax.vmap(jax.vmap(comm.allreduce, axis_name="data"),
+                  axis_name="pod")
+    out = np.asarray(fn(x))
+    want = np.asarray(jnp.sum(x, (0, 1)))
+    np.testing.assert_allclose(out.reshape(P * D, n)[0], want, atol=0.2)
+    assert (out.reshape(P * D, n) == out.reshape(P * D, n)[0][None]).all()
+
+
+def test_unknown_wire_dtype_raises():
+    x = jnp.zeros((4, 64))
+    with pytest.raises(ValueError, match="wire_dtype"):
+        C.emulate(C.ring_reduce_scatter, x, wire_dtype="fp8")
+    with pytest.raises(ValueError, match="wire_dtype"):
+        SyncConfig(wire_dtype="fp4", allreduce_method="ring").validate()
+
+
+# --------------------------------------------------------------------------
+# policy plumbing: guards, validate, deprecations
+# --------------------------------------------------------------------------
+
+def test_explicit_wire_knob_alongside_comm_raises():
+    from repro.core.elastic import elastic_exchange_sharded
+    from repro.optim.sgd import scatter_update_gather, sgd
+
+    tree = {"w": jnp.ones((40,))}
+    spec = F.spec_for(tree)
+    comm = Communicator.world((AXIS,), (2,), wire_dtype="int8")
+    with pytest.raises(ValueError, match="wire"):
+        scatter_update_gather(spec, tree, tree, jnp.zeros((spec.size,)),
+                              0.1, 0.9, comm=comm, wire_dtype="int8")
+    with pytest.raises(ValueError, match="wire"):
+        elastic_exchange_sharded(spec, tree, tree, 0.5, comm=comm,
+                                 wire_dtype="bf16")
+    with pytest.raises(ValueError, match="policy"):
+        C.tensor_allreduce(tree, comm, wire_dtype="int8")
+    with pytest.raises(ValueError, match="policy"):
+        C.tensor_pushpull(tree, comm, wire_dtype="int8")
+
+
+def test_wire_requires_ring_family_method():
+    with pytest.raises(ValueError, match="ring"):
+        SyncConfig(wire_dtype="int8").validate()  # default psum
+    SyncConfig(wire_dtype="int8", allreduce_method="ring").validate()
+    SyncConfig(wire_dtype="bf16",
+               allreduce_method="multi_ring").validate()
+    # a psum/tree group refuses to silently drop the codec
+    comm = Communicator.world((AXIS,), (4,), method="psum",
+                              wire_dtype="int8")
+    with pytest.raises(ValueError, match="wire_dtype"):
+        C.emulate(lambda v, a: comm.allreduce(v),
+                  jnp.ones((4, 8)))
+    tree_comm = Communicator.world((AXIS,), (4,), method="tree",
+                                   wire_dtype="bf16")
+    with pytest.raises(ValueError, match="wire_dtype"):
+        C.emulate(lambda v, a: tree_comm.allreduce(v), jnp.ones((4, 8)))
+
+
+def test_wire_policy_inherited_through_split():
+    w = Communicator.world(("pod", "data"), (2, 4), method="ring",
+                           wire_dtype="int8")
+    assert w.split("data").wire_dtype == "int8"
+    assert w.complement("pod").wire_dtype == "int8"
+    assert w.local().wire_dtype == "int8"
+    assert w.with_policy(wire_dtype=None).wire_dtype is None
+
+
+def test_kvstore_compress_push_is_deprecated_int8_alias():
+    from repro.core.kvstore import KVStore
+
+    n = 4 * WIRE_BLOCK
+    with pytest.warns(DeprecationWarning, match="wire_dtype"):
+        kv_old = KVStore.create("dist_async", num_workers=1,
+                                compress_push=True)
+    kv_new = KVStore.create("dist_async", num_workers=1, wire_dtype="int8")
+    assert kv_old.wire_dtype == "int8" and kv_old.compress_push
+    for kv in (kv_old, kv_new):
+        kv.init("w", jnp.zeros((n,), jnp.float32))
+        kv.set_elastic(0.5)
+        kv.push("w", jnp.full((n,), 2.0, jnp.float32))
+    np.testing.assert_array_equal(np.asarray(kv_old.value("w")),
+                                  np.asarray(kv_new.value("w")))
+    assert kv_old.pushed_bytes == kv_new.pushed_bytes == wire_nbytes(n)
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(ValueError, match="compress_push"):
+            KVStore.create("dist_async", compress_push=True,
+                           wire_dtype="bf16")
+
+
+def test_kvstore_bf16_wire():
+    from repro.core.kvstore import KVStore
+
+    kv = KVStore.create("dist_async", num_workers=1, wire_dtype="bf16")
+    kv.init("w", jnp.zeros((256,), jnp.float32))
+    kv.set_elastic(1.0)  # center <- pushed (roundtripped) value
+    x = jax.random.normal(jax.random.key(8), (256,))
+    kv.push("w", x)
+    assert kv.pushed_bytes == 256 * 2
+    np.testing.assert_array_equal(
+        np.asarray(kv.value("w")),
+        np.asarray(x.astype(jnp.bfloat16).astype(jnp.float32)))
+
+
+def test_algo_config_compress_push_deprecated():
+    from repro.core.algorithms import AlgoConfig, _worker_group
+
+    with pytest.warns(DeprecationWarning, match="wire_dtype"):
+        cfg = AlgoConfig(mode="mpi_esgd", compress_push=True)
+    assert cfg.effective_wire_dtype == "int8"
+    # the deprecated alias stays scoped to the PS leg it always
+    # compressed: the intra-client hops keep the f32 wire (old
+    # compress_push runs must not silently gain quantization noise, and
+    # a non-ring allreduce_method must keep working)
+    assert cfg.collective_wire_dtype is None
+    assert _worker_group(cfg).wire_dtype is None
+    with pytest.warns(DeprecationWarning):
+        cfg_psum = AlgoConfig(mode="mpi_sgd", compress_push=True,
+                              allreduce_method="psum", num_workers=4,
+                              num_clients=2)
+    x = jnp.ones((2, 8))
+    np.testing.assert_allclose(  # psum + compress_push still collective-ok
+        np.asarray(_worker_group(cfg_psum).emulate_reduce(x)),
+        np.full((2, 8), 2.0))
+    assert AlgoConfig(mode="mpi_sgd").effective_wire_dtype is None
+    full = AlgoConfig(mode="mpi_sgd", wire_dtype="bf16")
+    assert full.effective_wire_dtype == "bf16"
+    assert full.collective_wire_dtype == "bf16"  # the NEW knob goes wide
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(ValueError, match="compress_push"):
+            AlgoConfig(mode="mpi_esgd", compress_push=True,
+                       wire_dtype="bf16")
+
+
+def test_train_settings_and_jobspec_thread_wire_dtype():
+    from repro.configs.base import TrainSettings
+    from repro.launch.launcher import JobSpec, build_job
+
+    s = TrainSettings(wire_dtype="int8", allreduce_method="ring",
+                      state_dtype="bf16", optimizer_name="adamw")
+    sync = s.sync_config()
+    assert sync.wire_dtype == "int8"
+    sync.validate()
+    opt = s.optimizer()
+    assert opt.hyper["state_dtype"] == jnp.bfloat16
+    # "f32" normalizes to None (one spelling below the config layer)
+    assert TrainSettings().sync_config().wire_dtype is None
+
+    spec = JobSpec(num_workers=4, num_servers=1, num_clients=2,
+                   arch="qwen2-0.5b", shape="train_4k", wire_dtype="int8",
+                   state_dtype="bf16")
+    job = build_job(spec)
+    assert job["sync"]["wire_dtype"] == "int8"
+    assert job["sync"]["state_dtype"] == "bf16"
+    assert "--wire-dtype int8" in job["clients"][0]["launch_cmd"]
+    assert "--state-dtype bf16" in job["clients"][0]["launch_cmd"]
+    # f32 stays off the command line (the default needs no flag)
+    job_f32 = build_job(JobSpec(num_workers=4, num_servers=1,
+                                num_clients=2, arch="qwen2-0.5b",
+                                shape="train_4k"))
+    assert "--wire-dtype" not in job_f32["clients"][0]["launch_cmd"]
+    assert "--state-dtype" not in job_f32["clients"][0]["launch_cmd"]
+    with pytest.raises(ValueError, match="wire_dtype"):
+        JobSpec(num_workers=4, num_servers=1, num_clients=2,
+                arch="qwen2-0.5b", shape="train_4k",
+                wire_dtype="fp8").validate()
+    with pytest.raises(ValueError, match="state_dtype"):
+        JobSpec(num_workers=4, num_servers=1, num_clients=2,
+                arch="qwen2-0.5b", shape="train_4k",
+                state_dtype="fp8").validate()
+
+
+# --------------------------------------------------------------------------
+# low-precision optimizer state streams
+# --------------------------------------------------------------------------
+
+def _tree(seed=0):
+    k = jax.random.split(jax.random.key(seed), 3)
+    return {"w": jax.random.normal(k[0], (13, 7)),
+            "b": jax.random.normal(k[1], (5,)),
+            "deep": {"u": jax.random.normal(k[2], (3, 11, 2))}}
+
+
+def test_optstate_shard_init_declares_stream_dtypes():
+    from repro.optim.sgd import adagrad, adamw, optstate_shard_init
+
+    spec = F.spec_for(_tree())
+    st = optstate_shard_init(adamw(0.01, state_dtype=jnp.bfloat16).hyper,
+                             spec, 2)
+    assert st["mv"].dtype == jnp.bfloat16 and st["t"].dtype == jnp.int32
+    st32 = optstate_shard_init(adamw(0.01).hyper, spec, 2)
+    assert st32["mv"].dtype == jnp.float32
+    assert st["mv"].nbytes * 2 == st32["mv"].nbytes
+    acc = optstate_shard_init(adagrad(0.01, state_dtype=jnp.bfloat16).hyper,
+                              spec, 2)
+    assert acc.dtype == jnp.bfloat16
+    # explicit override beats the hyper's declaration
+    o = optstate_shard_init(adamw(0.01).hyper, spec, 2,
+                            state_dtypes=jnp.bfloat16)
+    assert o["mv"].dtype == jnp.bfloat16
+
+
+@pytest.mark.parametrize("p", [1, 2, 8])
+@pytest.mark.parametrize("family", ["adamw", "adagrad"])
+def test_fused_bf16_state_streams_match_f32_within_eps(p, family):
+    """The acceptance bound: bf16 m/v (or accumulator) streams track the
+    f32-state run within test eps — the streams only round at the store,
+    compute stays f32 inside the kernel."""
+    from repro.optim.sgd import (
+        adagrad,
+        adamw,
+        optstate_shard_init,
+        scatter_update_gather,
+    )
+
+    params = _tree(1)
+    spec = F.spec_for(params)
+    make = adamw if family == "adamw" else adagrad
+    h32 = make(0.01).hyper
+    h16 = make(0.01, state_dtype=jnp.bfloat16).hyper
+    comm = Communicator.world((AXIS,), (p,), method="ring")
+    steps = 4
+    k = jax.random.key(42)
+    grads = jax.tree.map(
+        lambda x: jax.random.normal(
+            jax.random.fold_in(k, x.size), (steps, p) + x.shape),
+        params)
+
+    def run(hyper):
+        st = optstate_shard_init(hyper, spec, p)
+        stacked_p = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (p,) + x.shape), params)
+        stacked_s = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (p,) + x.shape), st)
+
+        def dev(g, pp, s):
+            return scatter_update_gather(spec, g, pp, s, hyper=hyper,
+                                         comm=comm)
+
+        step = jax.vmap(dev, axis_name=AXIS)
+        for s in range(steps):
+            g = jax.tree.map(lambda x: x[s], grads)
+            stacked_p, stacked_s = step(g, stacked_p, stacked_s)
+        return stacked_p
+
+    p32, p16 = run(h32), run(h16)
+    jax.tree.map(
+        lambda a, b: np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=2e-2, atol=2e-3),
+        p32, p16)
+
+
+def test_sgd_bf16_momentum_stays_bf16():
+    """Per-leaf sgd must hold the declared state dtype across updates
+    (f32 arithmetic, rounded store — not a silent f32 promotion that
+    voids the bytes saving and retraces jitted steps)."""
+    from repro.optim.sgd import sgd
+
+    opt = sgd(0.1, momentum=0.9, state_dtype=jnp.bfloat16)
+    params = _tree(7)
+    st = opt.init(params)
+    for s in range(2):
+        g = jax.tree.map(lambda x: jnp.ones_like(x) * (s + 1), params)
+        params, st = opt.update(g, st, params)
+        assert all(l.dtype == jnp.bfloat16
+                   for l in jax.tree_util.tree_leaves(st))
+
+
+def test_elastic_exchange_packed_compress_deprecated():
+    from repro.core.elastic import elastic_exchange_packed
+
+    w, c = _tree(5), _tree(6)
+    with pytest.warns(DeprecationWarning, match="wire_dtype"):
+        old_w, old_c = elastic_exchange_packed(w, c, 0.4, compress=True)
+    new_w, new_c = elastic_exchange_packed(w, c, 0.4, wire_dtype="int8")
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), (old_w, old_c), (new_w, new_c))
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(ValueError, match="compress=True"):
+            elastic_exchange_packed(w, c, 0.4, compress=True,
+                                    wire_dtype="bf16")
+
+
+def test_per_leaf_bf16_state_matches_flat_bf16_state():
+    """Per-leaf adamw with bf16 state mirrors the kernel's f32-compute /
+    bf16-store contract, so the two substrates agree leaf-for-leaf."""
+    from repro.optim.sgd import adamw, flat_adamw
+
+    params = _tree(2)
+    spec = F.spec_for(params)
+    leaf_opt = adamw(0.02, state_dtype=jnp.bfloat16)
+    flat_opt = flat_adamw(0.02, spec, state_dtype=jnp.bfloat16)
+    sl, sf = leaf_opt.init(params), flat_opt.init(params)
+    assert sf["mv"].dtype == jnp.bfloat16
+    pl_, pf = params, params
+    k = jax.random.key(9)
+    for s in range(3):
+        g = jax.tree.map(
+            lambda x: jax.random.normal(
+                jax.random.fold_in(jax.random.fold_in(k, s), x.size),
+                x.shape), params)
+        pl_, sl = leaf_opt.update(g, sl, pl_)
+        pf, sf = flat_opt.update(g, sf, pf)
+    jax.tree.map(
+        lambda a, b: np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=2e-5, atol=1e-6),
+        pl_, pf)
+
+
+# --------------------------------------------------------------------------
+# full-path equivalence + structural checks
+# --------------------------------------------------------------------------
+
+def test_quantized_step_adds_zero_pallas_launches():
+    """Structural acceptance: quantize/dequant live inside the jitted
+    step as fused jnp — the per-device program has exactly the ONE fused
+    update launch regardless of wire dtype; the hop-free packed wire
+    (KVStore push) is exactly one quant/dequant Pallas pair."""
+    from benchmarks.common import jaxpr_primitives
+    from repro.core.elastic import wire_packed
+    from repro.optim.sgd import optstate_shard_init, scatter_update_gather
+
+    params = _tree(3)
+    spec = F.spec_for(params)
+    grads = jax.tree.map(jnp.ones_like, params)
+    counts = {}
+    for wire in (None, "bf16", "int8"):
+        comm = Communicator.world((AXIS,), (8,), method="ring",
+                                  wire_dtype=wire)
+        st = optstate_shard_init({"name": "sgd", "lr": 0.1,
+                                  "momentum": 0.9}, spec, 8)
+
+        def dev(g, pp, s, _c=comm):
+            return scatter_update_gather(spec, g, pp, s, 0.1, 0.9, comm=_c)
+
+        prims = [n for n, _ in jaxpr_primitives(dev, grads, params, st,
+                                                axis=AXIS, p=8)]
+        counts[wire] = prims.count("pallas_call")
+    assert counts == {None: 1, "bf16": 1, "int8": 1}
+
+    prims = [n for n, _ in jaxpr_primitives(
+        lambda t: wire_packed(t, "int8"), params)]
+    assert prims.count("pallas_call") == 2  # one quantize + one dequantize
+
+
+@pytest.mark.parametrize("p", [2, 8])
+def test_sharded_exchange_with_quantized_wire(p):
+    """The elastic leg under the wire protocol: centers stay identical
+    across devices and land within the codec envelope of the exact
+    exchange."""
+    from repro.core.elastic import elastic_exchange_sharded
+
+    tree = _tree(4)
+    spec = F.spec_for(tree)
+    center = jax.tree.map(lambda l: l * 0.5, tree)
+    stacked_w = jax.tree.map(
+        lambda l: jnp.stack([l * (1 + 0.1 * i) for i in range(p)]), tree)
+    stacked_c = jax.tree.map(
+        lambda l: jnp.broadcast_to(l[None], (p,) + l.shape), center)
+    alpha = 0.5 / p
+    out = {}
+    for wire in (None, "int8"):
+        comm = Communicator.world(("pod",), (p,), method="ring",
+                                  wire_dtype=wire)
+
+        def dev(w, c, _c=comm):
+            return elastic_exchange_sharded(spec, w, c, alpha, comm=_c)
+
+        out[wire] = jax.vmap(dev, axis_name="pod")(stacked_w, stacked_c)
+    for leaf_q, leaf_f in zip(jax.tree_util.tree_leaves(out["int8"][1]),
+                              jax.tree_util.tree_leaves(out[None][1])):
+        # replicated center identical on every device
+        assert (np.asarray(leaf_q) == np.asarray(leaf_q)[0][None]).all()
+        np.testing.assert_allclose(np.asarray(leaf_q),
+                                   np.asarray(leaf_f), atol=0.1)
+
+
+def _driver_losses(sync, p, steps, model, batch):
+    from repro.launch.shard_driver import (
+        make_driver_state,
+        make_emulated_step,
+        shard_batch,
+    )
+    from repro.optim.sgd import sgd
+
+    opt = sgd(0.1, momentum=0.9)
+    st = make_driver_state(model, opt, sync, p, jax.random.key(1))
+    step = jax.jit(make_emulated_step(model, opt, sync, p))
+    losses = []
+    for _ in range(steps):
+        st, m = step(st, shard_batch(batch, p))
+        losses.append(float(m["loss"]))
+    return losses
+
+
+@pytest.mark.slow
+def test_bf16_wire_train_step_matches_f32_within_bf16_tol():
+    from repro.configs.base import get_config, reduced
+    from repro.models.model import build_model
+
+    model = build_model(reduced(get_config("qwen2-0.5b")))
+    k = jax.random.key(0)
+    toks = jax.random.randint(k, (8, 32), 0, 1024)
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1)}
+    p, steps = 4, 3
+    base = SyncConfig(mode="mpi_sgd", allreduce_method="ring")
+    bf16 = SyncConfig(mode="mpi_sgd", allreduce_method="ring",
+                      wire_dtype="bf16")
+    lf = _driver_losses(base, p, steps, model, batch)
+    lb = _driver_losses(bf16, p, steps, model, batch)
+    np.testing.assert_allclose(lb, lf, rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.slow
+def test_int8_wire_convergence_window():
+    """The documented loss window: int8 wire training tracks f32 within
+    5% relative loss on the LM smoke (README's accuracy-vs-bytes note;
+    the real-accuracy number comes from bench_convergence
+    ``--wire-dtype int8``: Δacc within ±0.01 of f32)."""
+    from repro.configs.base import get_config, reduced
+    from repro.models.model import build_model
+
+    model = build_model(reduced(get_config("qwen2-0.5b")))
+    k = jax.random.key(0)
+    toks = jax.random.randint(k, (8, 32), 0, 1024)
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1)}
+    p, steps = 4, 6
+    base = SyncConfig(mode="mpi_sgd", allreduce_method="ring")
+    q = SyncConfig(mode="mpi_sgd", allreduce_method="ring",
+                   wire_dtype="int8")
+    lf = _driver_losses(base, p, steps, model, batch)
+    lq = _driver_losses(q, p, steps, model, batch)
+    assert abs(lq[-1] - lf[-1]) / lf[-1] <= 0.05
+    assert lq[-1] < lq[0]  # it still learns
+
+
+def test_wire_cost_model_matches_measured_bytes():
+    """cost_model's per-leg accounting == the jaxpr-measured ppermute
+    bytes (the launch/analysis predictions and BENCH_wire.json agree by
+    construction)."""
+    from benchmarks.common import ppermute_bytes
+    from repro.core import cost_model
+
+    tree = {f"l{i}": jnp.zeros((640,)) for i in range(4)}
+    spec = F.spec_for(tree)
+    buf = spec.pack(tree)
+    p = 8
+    for wire in (None, "bf16", "int8"):
+        comm = Communicator.world((AXIS,), (p,), method="ring",
+                                  wire_dtype=wire)
+        measured = ppermute_bytes(lambda b: comm.reduce_scatter(b), buf,
+                                  axis=AXIS, p=p)
+        # measured operates on the padded total; predict on the same
+        _, total = F.shard_geometry(spec.size, p, 1)
+        want = cost_model.grad_leg_bytes(total * 4, p, wire)
+        assert measured == want
+    assert cost_model.elastic_leg_bytes(1000, 8, "int8") == \
+        pytest.approx(2 * cost_model.grad_leg_bytes(1000, 8, "int8"))
+    assert cost_model.ps_push_bytes(4096, "int8") == \
+        pytest.approx(4096 * 0.2578125)
