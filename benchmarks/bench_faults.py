@@ -1,0 +1,194 @@
+"""Chaos smoke: the six-mode simulation under a seeded fault schedule.
+
+Reproduces the robustness claims the README's "Robustness" section makes
+on real gradients (same logistic-regression harness as
+bench_convergence) and writes BENCH_faults.json for check_bench.py:
+
+  six_modes    every mode under one dropped push + one straggler —
+               |acc delta vs fault-free| gated at 0.05 (loose: the
+               schedule only delays work, it loses none)
+  esgd_kill    dist/mpi-ESGD under one mid-run kill + one straggler —
+               |acc delta| gated HARD at 0.01 (the paper's elastic
+               rule tolerates a lost client by construction)
+  replay       the same schedule run twice, one mode per runner family
+               — 1.0 iff losses/times/metrics are bit-identical
+  reshard      survivor re-shard moved_bytes measured from
+               membership.reshard_optstate vs the cost model's
+               (s-1)-shard leg — ratio gated at exactly 1.0
+
+The fault runs are already smoke-sized (20 steps of an 8x8 logistic
+regression), so REPRO_BENCH_QUICK runs the identical configuration —
+the flag is accepted for uniformity with the other benches, and the
+committed baseline compares cleanly against quick-mode CI runs because
+every gated quantity is schedule-exact, not size-dependent.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.core import cost_model, flatbuf
+from repro.core.algorithms import AlgoConfig, run as run_algo
+from repro.core.membership import reshard_optstate
+from repro.data.pipeline import DataConfig, ImagePipeline
+from repro.optim.sgd import optstate_shard_init, sgd
+
+QUICK = os.environ.get("REPRO_BENCH_QUICK", "") not in ("", "0")
+
+# separable data (default pipeline noise): every mode converges to the
+# same ~1.0 plateau, so an accuracy delta measures LOST convergence, not
+# eval-set sampling noise — that's what makes the 0.01 gate meaningful
+D, NCLS = 8 * 8 * 3, 10
+
+
+def init_fn(key):
+    return {"w": jax.random.normal(key, (D, NCLS)) * 0.01,
+            "b": jnp.zeros((NCLS,))}
+
+
+def _loss(params, batch):
+    x = batch["images"].reshape(batch["images"].shape[0], -1)
+    logits = x @ params["w"] + params["b"]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, batch["labels"][:, None], 1)[:, 0]
+    return jnp.mean(lse - gold)
+
+
+grad_fn = jax.jit(jax.value_and_grad(_loss))
+
+_test = ImagePipeline(DataConfig(seed=0, batch_size=256, steps_per_epoch=1,
+                                 shard=12345), image_size=8)
+_tb = _test.batch_at(999, 0)
+
+
+def eval_fn(params):
+    x = _tb["images"].reshape(256, -1)
+    logits = x @ params["w"] + params["b"]
+    return float(jnp.mean(
+        (jnp.argmax(logits, -1) == _tb["labels"]).astype(jnp.float32)))
+
+MODES = ("dist_sgd", "mpi_sgd", "dist_asgd", "mpi_asgd",
+         "dist_esgd", "mpi_esgd")
+
+# one dropped push (recovered by retry) + one straggler: no work is lost,
+# so every mode must land close to its fault-free accuracy
+DROP_SCHED = "drop@3:unit=0:duration=2;straggle@0:unit=1:factor=3:duration=5"
+# one client killed mid-run (step 10 of 20) + one straggler: the elastic
+# modes' acceptance schedule
+KILL_SCHED = "kill@10:unit=1;straggle@0:unit=0:factor=3:duration=8"
+BARRIER_TIMEOUT = 1.0
+
+
+def make_pipe(w):
+    return ImagePipeline(DataConfig(seed=0, batch_size=16, steps_per_epoch=10,
+                                    shard=w), image_size=8)
+
+
+def _cfg(mode, **kw):
+    base = dict(mode=mode, num_workers=4, num_clients=2, num_servers=1,
+                lr=0.05, epochs=2, steps_per_epoch=10, esgd_interval=4,
+                compute_time=0.2, jitter=0.1, model_bytes=1e7, seed=0)
+    base.update(kw)
+    return AlgoConfig(**base)
+
+
+def _run(mode, **kw):
+    return run_algo(_cfg(mode, **kw), init_fn, grad_fn, eval_fn, make_pipe)
+
+
+def run() -> None:
+    result: dict = {
+        "schedules": {"six_modes": DROP_SCHED, "esgd_kill": KILL_SCHED,
+                      "barrier_timeout": BARRIER_TIMEOUT},
+        "quick": QUICK,
+    }
+
+    # -- six modes, drop + straggler vs fault-free -------------------------
+    clean = {m: _run(m) for m in MODES}
+    six = {}
+    for mode in MODES:
+        h = _run(mode, faults=DROP_SCHED, barrier_timeout=BARRIER_TIMEOUT)
+        six[mode] = {
+            "clean_acc": clean[mode].metrics[-1],
+            "faulted_acc": h.metrics[-1],
+            "abs_delta": abs(clean[mode].metrics[-1] - h.metrics[-1]),
+            "degraded_syncs": h.degraded_syncs,
+            "late_pushes": h.late_pushes,
+            "live_clients": h.live_clients,
+            "mean_staleness": h.mean_staleness,
+        }
+        emit(f"faults/six_modes/{mode}", h.epoch_time * 1e6,
+             f"acc={h.metrics[-1]:.3f};clean={clean[mode].metrics[-1]:.3f};"
+             f"delta={six[mode]['abs_delta']:.3f};"
+             f"degraded={h.degraded_syncs};late={h.late_pushes}")
+    result["six_modes"] = six
+
+    # -- elastic modes, kill + straggler (the hard acceptance bar) ---------
+    esgd = {}
+    for mode in ("dist_esgd", "mpi_esgd"):
+        h = _run(mode, faults=KILL_SCHED)
+        esgd[mode] = {
+            "clean_acc": clean[mode].metrics[-1],
+            "faulted_acc": h.metrics[-1],
+            "abs_delta": abs(clean[mode].metrics[-1] - h.metrics[-1]),
+            "live_clients_clean": clean[mode].live_clients,
+            "live_clients_faulted": h.live_clients,
+        }
+        emit(f"faults/esgd_kill/{mode}", h.epoch_time * 1e6,
+             f"acc={h.metrics[-1]:.3f};clean={clean[mode].metrics[-1]:.3f};"
+             f"delta={esgd[mode]['abs_delta']:.3f};"
+             f"live={h.live_clients}/{clean[mode].live_clients}")
+    result["esgd_kill"] = esgd
+
+    # -- replay determinism: same schedule, bit-identical history ----------
+    replay = {}
+    for family, mode, kw in (
+        ("sync", "mpi_sgd",
+         dict(faults=KILL_SCHED, barrier_timeout=BARRIER_TIMEOUT)),
+        ("async", "mpi_asgd", dict(faults=DROP_SCHED)),
+        ("esgd", "mpi_esgd", dict(faults=KILL_SCHED)),
+    ):
+        a, b = _run(mode, **kw), _run(mode, **kw)
+        identical = (a.losses == b.losses and a.times == b.times
+                     and a.metrics == b.metrics)
+        replay[family] = 1.0 if identical else 0.0
+        emit(f"faults/replay/{family}", 0.0,
+             f"mode={mode};bit_identical={identical}")
+    result["replay"] = replay
+
+    # -- recovery accounting: measured re-shard bytes vs the cost model ----
+    params = {"w": jnp.zeros((64, 32)), "b": jnp.zeros((17,))}
+    spec = flatbuf.spec_for(params)
+    hyper = sgd(0.1, momentum=0.9).hyper
+    p_old, survivors = 4, (0, 1, 3)
+    shard = optstate_shard_init(hyper, spec, p_old, 1)
+    state = jnp.stack([shard + d for d in range(p_old)])
+    _, info = reshard_optstate(hyper, spec, state, p_old, len(survivors),
+                               survivors=survivors)
+    model_bytes = cost_model.reshard_leg_bytes(info["state_nbytes"], p_old,
+                                               survivors=len(survivors))
+    result["reshard"] = {
+        "p_old": p_old, "p_new": len(survivors), "survivors": len(survivors),
+        "state_nbytes": info["state_nbytes"],
+        "measured_moved_bytes": info["moved_bytes"],
+        "model_moved_bytes": model_bytes,
+        "ratio_vs_model": (info["moved_bytes"] / model_bytes
+                           if model_bytes else 1.0),
+    }
+    emit("faults/reshard/moved_bytes", info["moved_bytes"],
+         f"model={model_bytes:.0f};"
+         f"ratio={result['reshard']['ratio_vs_model']:.4f}")
+
+    out = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_faults.json")
+    with open(out, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    run()

@@ -23,6 +23,11 @@ only the structural quantities the papers' claims rest on:
                           plus the bf16 state-stream ratio — with HARD
                           bounds (int8 grad leg <= 0.30, bf16 <= 0.50)
                           on top of the baseline comparison
+  BENCH_faults.json       chaos smoke: replay bit-identity flags (1.0,
+                          hard), survivor re-shard moved_bytes vs the
+                          cost model (1.0, hard), six-mode accuracy
+                          delta under drop+straggler (<= 0.05) and the
+                          elastic kill+straggler delta (<= 0.01)
 """
 from __future__ import annotations
 
@@ -42,6 +47,7 @@ REQUIRED = (
     "BENCH_fused_optim.json",
     "BENCH_hierarchy.json",
     "BENCH_wire.json",
+    "BENCH_faults.json",
 )
 
 
@@ -174,6 +180,25 @@ def check(baseline_dir: str, current_dir: str) -> int:
                 base["state"]["adamw_mv_bytes_per_dev"]["ratio"])
         c.bound("wire.state_bf16_streams",
                 cur["state"]["adamw_mv_bytes_per_dev"]["ratio"], 0.50)
+
+    base = _load(baseline_dir, "BENCH_faults.json")
+    cur = _load(current_dir, "BENCH_faults.json")
+    if base and cur:
+        # replay determinism and the re-shard byte contract are exact by
+        # construction — gate against the literal 1.0, not the baseline
+        for family in ("sync", "async", "esgd"):
+            c.ratio(f"faults.replay.{family}", cur["replay"][family], 1.0)
+        c.ratio("faults.reshard.ratio_vs_model",
+                cur["reshard"]["ratio_vs_model"], 1.0)
+        # a mode silently dropped from the sweep would green-wash its gate
+        c.count("faults.six_modes.count",
+                len(cur["six_modes"]), len(base["six_modes"]))
+        for mode, m in sorted(cur["six_modes"].items()):
+            c.bound(f"faults.six_modes.{mode}.abs_delta",
+                    m["abs_delta"], 0.05)
+        for mode, m in sorted(cur["esgd_kill"].items()):
+            c.bound(f"faults.esgd_kill.{mode}.abs_delta",
+                    m["abs_delta"], 0.01)
 
     if c.checked == 0 and not c.failures:
         print("error: no BENCH_*.json pairs found to compare",

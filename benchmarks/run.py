@@ -9,6 +9,9 @@
   bench_convergence  Fig 11      dist/mpi x SGD/ASGD curves
   bench_esgd         Figs 13/14  elastic averaging
   bench_scaling      Figs 15/16  weak/strong scaling (#servers=0)
+  bench_faults       (this repo) chaos smoke: six modes under a seeded
+                                 fault schedule, elastic kill tolerance,
+                                 replay bit-identity (BENCH_faults.json)
 
 The multi-pod dry-run / roofline table (EXPERIMENTS.md §Roofline) is
 produced separately by launch/dryrun.py + benchmarks/roofline.py since it
@@ -26,13 +29,15 @@ def main() -> None:
         bench_convergence,
         bench_epoch_time,
         bench_esgd,
+        bench_faults,
         bench_fused_step,
         bench_scaling,
     )
 
     print("name,us_per_call,derived")
     for mod in (bench_allreduce, bench_fused_step, bench_epoch_time,
-                bench_convergence, bench_esgd, bench_scaling):
+                bench_convergence, bench_esgd, bench_scaling,
+                bench_faults):
         t0 = time.time()
         mod.run()
         print(f"# {mod.__name__} done in {time.time()-t0:.1f}s",

@@ -211,6 +211,19 @@ class TrainSettings:
     state_dtype: str = "f32"
     fsdp: bool = False
     microbatch: int = 1
+    # deterministic fault schedule (core/faults.py compact string form,
+    # e.g. "kill@12:unit=1;straggle@0:unit=3:factor=4"); "" = clean run
+    faults: str = ""
+    # sync-barrier graceful degradation: seconds past a round's first
+    # arrival before the PS barrier releases with the survivor group
+    # (None blocks forever — required for kill/drop fault schedules)
+    barrier_timeout: Optional[float] = None
+
+    def fault_schedule(self, seed: int = 0):
+        """The parsed core.faults.FaultSchedule (None when clean)."""
+        from repro.core.faults import as_schedule
+
+        return as_schedule(self.faults or None, seed)
 
     def sync_config(self):
         from repro.core.hierarchy import SyncConfig

@@ -28,7 +28,9 @@ from repro.core import cost_model, flatbuf
 from repro.core.client import group_workers
 from repro.core.comm import Communicator
 from repro.core.elastic import elastic_client_packed, elastic_client_update
+from repro.core.faults import FaultInjector, delivery_time, injector
 from repro.core.kvstore import KVStore
+from repro.core.membership import Membership
 from repro.core.scheduler import AsyncEngine, StalenessTracker, UnitTiming
 from repro.optim.sgd import (
     Optimizer,
@@ -80,6 +82,21 @@ class AlgoConfig:
     # client update) instead of per-leaf tree.maps
     flat_exchange: bool = True
     bucket_bytes: Optional[int] = None
+    # fault injection (core/faults.py): a FaultSchedule or its compact
+    # string form ("kill@12:unit=1;straggle@0:unit=3:factor=4"); None
+    # runs the clean path BIT-IDENTICALLY to pre-fault configs
+    faults: Any = None
+    # sync-barrier graceful degradation (KVStore): seconds past a
+    # round's first arrival before the barrier releases with the
+    # survivor subset; required for kill/drop schedules in sync modes
+    barrier_timeout: Optional[float] = None
+    # async server rule: damp an s-stale push by 1/(1+s) on the packed
+    # FlatBuffer (off by default — the paper's plain ASGD)
+    staleness_scaling: bool = False
+    # dropped-push retry policy: 1 + push_retries delivery attempts,
+    # doubling backoff starting at push_backoff seconds
+    push_retries: int = 2
+    push_backoff: float = 0.05
 
     def __post_init__(self):
         if self.compress_push:
@@ -131,6 +148,11 @@ class History:
     losses: list[float] = field(default_factory=list)
     mean_staleness: float = 0.0
     epoch_time: float = 0.0
+    # robustness accounting (0/full on clean runs)
+    degraded_syncs: int = 0
+    late_pushes: int = 0
+    live_clients: int = 0
+    membership_epochs: int = 0
 
 
 GradFn = Callable[[Any, dict], tuple[jax.Array, Any]]
@@ -218,6 +240,21 @@ def _comm_times(cfg: AlgoConfig) -> dict[str, float]:
     return {"intra": intra, "ps": ps}
 
 
+def _injector(cfg: AlgoConfig) -> Optional[FaultInjector]:
+    """The config's fault injector (None when the schedule is empty —
+    the clean path runs bit-identically to pre-fault configs)."""
+    return injector(cfg.faults, seed=cfg.seed)
+
+
+def _client_membership(cfg: AlgoConfig, C: int) -> Membership:
+    """The PS tier's membership: clients over an emulated 'client' axis,
+    so every epoch change re-splits a real Communicator (the group a
+    deployment would MPI_Comm_split over the survivors)."""
+    return Membership(
+        C, Communicator.world(("client",), (C,),
+                              method=cfg.allreduce_method))
+
+
 def run(cfg: AlgoConfig, init_fn: Callable[[jax.Array], Any], grad_fn: GradFn,
         eval_fn: EvalFn, make_pipeline: Callable[[int], Any]) -> History:
     if cfg.mode not in MODES:
@@ -237,6 +274,14 @@ def run(cfg: AlgoConfig, init_fn: Callable[[jax.Array], Any], grad_fn: GradFn,
 # ---------------------------------------------------------------------------
 
 def _run_sync(cfg, init_fn, grad_fn, eval_fn, make_pipeline) -> History:
+    inj = _injector(cfg)
+    if inj is not None:
+        return _run_sync_faulted(cfg, init_fn, grad_fn, eval_fn,
+                                 make_pipeline, inj)
+    return _run_sync_clean(cfg, init_fn, grad_fn, eval_fn, make_pipeline)
+
+
+def _run_sync_clean(cfg, init_fn, grad_fn, eval_fn, make_pipeline) -> History:
     C = cfg.effective_clients
     idents = group_workers(cfg.num_workers, C)
     pipelines = [make_pipeline(w) for w in range(cfg.num_workers)]
@@ -288,6 +333,114 @@ def _run_sync(cfg, init_fn, grad_fn, eval_fn, make_pipeline) -> History:
         hist.epochs.append(epoch)
         hist.metrics.append(eval_fn(params))
     hist.epoch_time = float(np.mean(step_times)) * cfg.steps_per_epoch
+    hist.live_clients = C
+    return hist
+
+
+def _run_sync_faulted(cfg, init_fn, grad_fn, eval_fn, make_pipeline,
+                      inj: FaultInjector) -> History:
+    """The synchronous modes under a fault schedule: the paper's
+    robustness story exercised end to end. Dead clients miss the PS
+    barrier; the FIRST missed round degrades via barrier_timeout
+    (survivor release + rescale), after which the Membership evicts them
+    (epoch bump + Communicator re-split) and later barriers are full
+    barriers of the survivor group. Straggle/delay stretch a client's
+    arrival; drops ride the retry/backoff policy; pushes past the
+    deadline are discarded as late by the store."""
+    C = cfg.effective_clients
+    if (cfg.barrier_timeout is None
+            and inj.schedule.kinds & {"kill", "drop"}):
+        raise ValueError(
+            f"mode {cfg.mode!r} has a sync PS barrier: a kill/drop fault "
+            "schedule would deadlock it — set "
+            "AlgoConfig.barrier_timeout so the barrier can release with "
+            "the survivor group")
+    idents = group_workers(cfg.num_workers, C)
+    pipelines = [make_pipeline(w) for w in range(cfg.num_workers)]
+    params = init_fn(jax.random.key(cfg.seed))
+    kv = KVStore.create("sync_mpi" if cfg.mode == "mpi_sgd" else "dist_sync",
+                        num_workers=cfg.num_workers, num_servers=cfg.num_servers,
+                        num_clients=C, barrier_timeout=cfg.barrier_timeout)
+    kv.init("grads", jax.tree.map(jnp.zeros_like, params))
+    group = _worker_group(cfg)
+    for c in range(C):
+        kv.register_group(c, group)
+    live = _client_membership(cfg, C)
+    kv.attach_membership(live)
+    opt = _make_opt(cfg, params)
+    opt_state = opt.init(params)
+
+    comm = _comm_times(cfg)
+    wpc = cfg.workers_per_client
+    rng = np.random.default_rng(cfg.seed)
+    now = 0.0
+    hist = History()
+    step_times = []
+    for epoch in range(cfg.epochs):
+        for step in range(cfg.steps_per_epoch):
+            gstep = epoch * cfg.steps_per_epoch + step
+            newly_dead = [c for c in live.live if inj.is_killed(c, gstep)]
+            losses, arrivals, pushes = [], {}, {}
+            for c in live.live:
+                if c in newly_dead:
+                    continue  # died before this round's compute
+                members = [w for w in range(cfg.num_workers)
+                           if idents[w].mpi.client == c]
+                batches = [pipelines[w].batch_at(epoch, step)
+                           for w in members]
+                loss, stacked = _member_grads(grad_fn, params, batches)
+                draws = [rng.lognormal(0, cfg.jitter) for _ in members]
+                compute = cfg.compute_time * max(draws)
+                leg = (compute * inj.straggle_factor(c, gstep)
+                       + inj.delay(c, gstep))
+                arrivals[c] = now + leg + comm["intra"]
+                pushes[c] = inj.corrupt(stacked, c, gstep)
+                losses.append(loss)
+            deliver = {}
+            for c in sorted(arrivals):
+                at = delivery_time(inj, c, gstep, arrivals[c],
+                                   retries=cfg.push_retries,
+                                   backoff=cfg.push_backoff)
+                if at is not None:
+                    deliver[c] = at
+            if deliver:
+                first = min(deliver.values())
+                deadline = (float("inf") if cfg.barrier_timeout is None
+                            else first + cfg.barrier_timeout)
+                in_time = [c for c in deliver if deliver[c] <= deadline]
+                for c in sorted(deliver, key=lambda c: (deliver[c], c)):
+                    # the store discards deliveries past the deadline
+                    # (late_pushes); in-time ones fill the barrier
+                    kv.push("grads", pushes[c], group=c, at=deliver[c],
+                            unit=c)
+                release = (max(deliver[c] for c in in_time)
+                           if len(in_time) == kv.expected_pushers
+                           else deadline)
+                total = kv.pull("grads", now=release)[0]
+                k = kv.last_barrier_count or len(in_time)
+                mean_g = jax.tree.map(lambda x: x / (k * wpc), total)
+                params, opt_state = opt.update(mean_g, opt_state, params)
+            else:
+                # every live push lost this round: no update, the round
+                # still burns the timeout waiting
+                release = now + (cfg.barrier_timeout or cfg.compute_time)
+            dt = release + comm["ps"] - now
+            now = release + comm["ps"]
+            step_times.append(dt)
+            if losses:
+                hist.losses.append(float(np.mean(losses)))
+            for c in newly_dead:
+                # the missed barrier IS the failure detector: evict after
+                # the degraded round, shrinking later barriers
+                live.fail(c)
+        hist.times.append(now)
+        hist.epochs.append(epoch)
+        hist.metrics.append(eval_fn(params))
+    hist.epoch_time = float(np.mean(step_times)) * cfg.steps_per_epoch
+    hist.degraded_syncs = kv.degraded_syncs
+    hist.late_pushes = kv.late_pushes
+    hist.live_clients = live.live_count
+    hist.membership_epochs = live.epoch
     return hist
 
 
@@ -297,6 +450,8 @@ def _run_sync(cfg, init_fn, grad_fn, eval_fn, make_pipeline) -> History:
 
 def _run_async(cfg, init_fn, grad_fn, eval_fn, make_pipeline) -> History:
     C = cfg.effective_clients
+    inj = _injector(cfg)
+    live = _client_membership(cfg, C) if inj is not None else None
     idents = group_workers(cfg.num_workers, C)
     pipelines = [make_pipeline(w) for w in range(cfg.num_workers)]
     params0 = init_fn(jax.random.key(cfg.seed))
@@ -308,6 +463,8 @@ def _run_async(cfg, init_fn, grad_fn, eval_fn, make_pipeline) -> History:
     group = _worker_group(cfg)
     for c in range(C):
         kv.register_group(c, group)
+    if live is not None:
+        kv.attach_membership(live)
 
     comm = _comm_times(cfg)
     rng = np.random.default_rng(cfg.seed)
@@ -326,6 +483,10 @@ def _run_async(cfg, init_fn, grad_fn, eval_fn, make_pipeline) -> History:
 
     engine = AsyncEngine(C, timing)
     tracker = StalenessTracker()
+    # the tracker rides the store: push(unit=)/pull(unit=) record
+    # apply/pull versions server-side, and (opt-in) the optimize rule
+    # damps an s-stale push by 1/(1+s) on the packed FlatBuffer
+    kv.attach_staleness(tracker, scale=cfg.staleness_scaling)
     client_params = [params0] * C
     client_iter = [0] * C
     hist = History()
@@ -337,8 +498,13 @@ def _run_async(cfg, init_fn, grad_fn, eval_fn, make_pipeline) -> History:
     total = cfg.epochs * per_epoch
     state = {"completions": 0, "losses": []}
 
-    def on_complete(unit: int, now: float) -> float:
+    def on_complete(unit: int, now: float) -> Optional[float]:
         it = client_iter[unit]
+        if inj is not None and inj.is_killed(unit, it):
+            # unit dies at dispatch: membership evicts it and the engine
+            # never re-queues it; survivors drain the completion budget
+            live.fail(unit)
+            return None
         epoch = min(it // cfg.steps_per_epoch, cfg.epochs - 1)
         step = it % cfg.steps_per_epoch
         members = [w for w in range(cfg.num_workers)
@@ -347,10 +513,22 @@ def _run_async(cfg, init_fn, grad_fn, eval_fn, make_pipeline) -> History:
         loss, g = _client_grad(grad_fn, client_params[unit], batches,
                                group)
         state["losses"].append(loss)
-        tracker.on_apply(unit)
-        kv.push("params", g)
-        client_params[unit] = kv.pull("params")[0]
-        tracker.on_pull(unit)
+        extra = 0.0
+        if inj is not None:
+            g = inj.corrupt(g, unit, it)
+            at = delivery_time(inj, unit, it, now,
+                               retries=cfg.push_retries,
+                               backoff=cfg.push_backoff)
+            if at is not None:
+                extra += (at - now) + inj.delay(unit, it)
+                kv.push("params", g, unit=unit)
+            else:
+                kv.late_pushes += 1  # lost for good: server never sees it
+            extra += ((inj.straggle_factor(unit, it) - 1.0)
+                      * cfg.compute_time)
+        else:
+            kv.push("params", g, unit=unit)
+        client_params[unit] = kv.pull("params", unit=unit)[0]
         client_iter[unit] += 1
         state["completions"] += 1
         if state["completions"] % per_epoch == 0:
@@ -360,7 +538,7 @@ def _run_async(cfg, init_fn, grad_fn, eval_fn, make_pipeline) -> History:
             hist.metrics.append(eval_fn(kv.value("params")))
             hist.losses.append(float(np.mean(
                 state["losses"][-per_epoch:])))
-        return comm["intra"] + push_time
+        return comm["intra"] + push_time + extra
 
     for u in range(C):
         tracker.on_pull(u)
@@ -368,6 +546,9 @@ def _run_async(cfg, init_fn, grad_fn, eval_fn, make_pipeline) -> History:
     engine.run(total, on_complete)
     hist.mean_staleness = tracker.mean_staleness()
     hist.epoch_time = engine.now / cfg.epochs
+    hist.late_pushes = kv.late_pushes
+    hist.live_clients = live.live_count if live is not None else C
+    hist.membership_epochs = live.epoch if live is not None else 0
     return hist
 
 
@@ -378,6 +559,8 @@ def _run_async(cfg, init_fn, grad_fn, eval_fn, make_pipeline) -> History:
 
 def _run_esgd(cfg, init_fn, grad_fn, eval_fn, make_pipeline) -> History:
     C = cfg.effective_clients
+    inj = _injector(cfg)
+    live = _client_membership(cfg, C) if inj is not None else None
     idents = group_workers(cfg.num_workers, C)
     pipelines = [make_pipeline(w) for w in range(cfg.num_workers)]
     params0 = init_fn(jax.random.key(cfg.seed))
@@ -408,8 +591,14 @@ def _run_esgd(cfg, init_fn, grad_fn, eval_fn, make_pipeline) -> History:
     state = {"completions": 0, "losses": []}
     per_epoch = cfg.steps_per_epoch * C
 
-    def on_complete(unit: int, now: float) -> float:
+    def on_complete(unit: int, now: float) -> Optional[float]:
         it = client_iter[unit]
+        if inj is not None and inj.is_killed(unit, it):
+            # the dead client's local replica is simply abandoned — the
+            # center keeps the mass it already absorbed (eq. 2), which
+            # is ESGD's whole tolerance story
+            live.fail(unit)
+            return None
         epoch = min(it // cfg.steps_per_epoch, cfg.epochs - 1)
         step = it % cfg.steps_per_epoch
         members = [w for w in range(cfg.num_workers)
@@ -420,20 +609,36 @@ def _run_esgd(cfg, init_fn, grad_fn, eval_fn, make_pipeline) -> History:
         state["losses"].append(loss)
         comm_cost = comm["intra"]
         if it % cfg.esgd_interval == 0:
-            old_center = kv.value("centers")
-            kv.push("centers", client_params[unit])      # Elastic1 on server
-            if cfg.flat_exchange:
-                # Elastic2 on the packed FlatBuffer: one fused launch
-                client_params[unit] = elastic_client_packed(
-                    client_params[unit], old_center, cfg.esgd_alpha
-                )
-            else:
-                client_params[unit] = elastic_client_update(  # per-leaf ref
-                    client_params[unit], old_center, cfg.esgd_alpha
-                )
-            comm_cost += cost_model.ps_pushpull_time(
-                cfg.model_bytes, 1, cfg.num_servers, cfg.net,
-                wire_dtype=cfg.effective_wire_dtype)
+            pushed = client_params[unit]
+            deliver = True
+            if inj is not None:
+                pushed = inj.corrupt(pushed, unit, it)
+                at = delivery_time(inj, unit, it, now,
+                                   retries=cfg.push_retries,
+                                   backoff=cfg.push_backoff)
+                if at is None:
+                    # exchange lost: neither Elastic1 nor Elastic2 runs
+                    # this round — the replica just drifts one interval
+                    # longer (the elastic penalty pulls it back later)
+                    deliver = False
+                    kv.late_pushes += 1
+                else:
+                    comm_cost += (at - now) + inj.delay(unit, it)
+            if deliver:
+                old_center = kv.value("centers")
+                kv.push("centers", pushed)               # Elastic1 on server
+                if cfg.flat_exchange:
+                    # Elastic2 on the packed FlatBuffer: one fused launch
+                    client_params[unit] = elastic_client_packed(
+                        client_params[unit], old_center, cfg.esgd_alpha
+                    )
+                else:
+                    client_params[unit] = elastic_client_update(  # per-leaf
+                        client_params[unit], old_center, cfg.esgd_alpha
+                    )
+                comm_cost += cost_model.ps_pushpull_time(
+                    cfg.model_bytes, 1, cfg.num_servers, cfg.net,
+                    wire_dtype=cfg.effective_wire_dtype)
         new_p, new_s = opt.update(g, client_opt[unit], client_params[unit])
         client_params[unit] = new_p
         client_opt[unit] = new_s
@@ -445,9 +650,15 @@ def _run_esgd(cfg, init_fn, grad_fn, eval_fn, make_pipeline) -> History:
             hist.epochs.append(ep)
             hist.metrics.append(eval_fn(kv.value("centers")))
             hist.losses.append(float(np.mean(state["losses"][-per_epoch:])))
+        if inj is not None:
+            comm_cost += ((inj.straggle_factor(unit, it) - 1.0)
+                          * cfg.compute_time)
         return comm_cost
 
     engine.start()
     engine.run(total, on_complete)
     hist.epoch_time = engine.now / cfg.epochs
+    hist.late_pushes = kv.late_pushes
+    hist.live_clients = live.live_count if live is not None else C
+    hist.membership_epochs = live.epoch if live is not None else 0
     return hist

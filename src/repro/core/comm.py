@@ -143,6 +143,35 @@ class Communicator:
         """The trivial (size-1, MPI_COMM_SELF) group with this policy."""
         return replace(self, axes=(), sizes=())
 
+    def resized(self, size: int, axis: Optional[str] = None) -> "Communicator":
+        """The SAME group with one axis re-sized — the re-split an
+        elastic membership change performs (core/membership.py): a
+        member failed/left/joined, so the axis it lived on shrinks or
+        grows while the policy (method / rings / buckets / wire) is
+        inherited unchanged. Needs static sizes (there is nothing to
+        re-split on the trace-time-resolved adapter path); multi-axis
+        groups must name which ``axis`` the membership rides."""
+        if self.is_trivial:
+            raise ValueError("cannot resize the trivial group")
+        if self.sizes is None:
+            raise ValueError(
+                "resized() needs static sizes — build the communicator "
+                "with Communicator.world(axes, sizes)")
+        if size < 1:
+            raise ValueError(f"resized group must keep >= 1 member, "
+                             f"got {size}")
+        if axis is None:
+            if len(self.axes) > 1:
+                raise ValueError(
+                    f"communicator spans {self.axes}; name the membership "
+                    "axis: resized(size, axis=...)")
+            axis = self.axes[0]
+        if axis not in self.axes:
+            raise ValueError(f"no axis {axis!r} in {self.axes}")
+        sizes = tuple(int(size) if a == axis else s
+                      for a, s in zip(self.axes, self.sizes))
+        return replace(self, sizes=sizes)
+
     def with_policy(self, **kw) -> "Communicator":
         return replace(self, **kw)
 

@@ -87,6 +87,44 @@ def ps_push_bytes(nbytes: float, wire_dtype: "str | None" = None) -> float:
     return wire_bytes(nbytes, wire_dtype)
 
 
+def reshard_leg_bytes(state_nbytes: float, p_old: int,
+                      survivors: "int | None" = None,
+                      wire_dtype: "str | None" = None) -> float:
+    """Per-survivor wire bytes of re-laying-out 1/p_old-sharded state
+    after a membership change: an allgather among the ``s`` survivors of
+    their old shards — each receives the other s−1 shards of
+    ``state_nbytes / p_old`` bytes. This is EXACTLY the ``moved_bytes``
+    core/membership.py's ``reshard_optstate`` reports (bench_faults.py
+    gates on the match)."""
+    if p_old <= 1:
+        return 0.0
+    s = p_old if survivors is None else int(survivors)
+    if s <= 1:
+        return 0.0
+    return (s - 1) * wire_bytes(state_nbytes / p_old, wire_dtype)
+
+
+def resplit_time(p_new: int, net: NetParams) -> float:
+    """Communicator re-split (MPI_Comm_split over the survivor group):
+    an agreement round — ceil(log2(p_new)) latency-bound hops, no
+    payload to speak of."""
+    import math
+
+    if p_new <= 1:
+        return net.alpha
+    return math.ceil(math.log2(p_new)) * net.alpha
+
+
+def reconfig_time(state_nbytes: float, p_old: int, p_new: int,
+                  net: NetParams, survivors: "int | None" = None,
+                  wire_dtype: "str | None" = None) -> float:
+    """Total recovery overhead of one membership change: the re-split
+    agreement plus the survivor allgather realizing the new state
+    layout (per-survivor bytes × β; the shards move in parallel)."""
+    moved = reshard_leg_bytes(state_nbytes, p_old, survivors, wire_dtype)
+    return resplit_time(p_new, net) + moved * net.beta
+
+
 def ring_allreduce_time(nbytes: float, p: int, net: NetParams,
                         wire_dtype: "str | None" = None) -> float:
     """β (transfer) pays the wire-dtype ratio; γ (local reduction) stays

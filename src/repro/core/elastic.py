@@ -214,6 +214,17 @@ def quantize_packed(tree: Any) -> Any:
 
 
 @jax.jit
+def scale_packed(tree: Any, factor) -> Any:
+    """Scale a whole pytree as ONE packed FlatBuffer multiply — the
+    staleness-scaling leg of the async server rule (KVStore
+    attach_staleness): a push that is s versions stale is damped by
+    1/(1+s) on the same flat substrate the wire codec rides, instead of
+    per-leaf tree.maps."""
+    spec = flatbuf.spec_for(tree)
+    return spec.unpack(spec.pack(tree) * jnp.asarray(factor, jnp.float32))
+
+
+@jax.jit
 def elastic_exchange_multiclient_flat(
     client_params: Any, center: Any, alpha
 ) -> tuple[Any, Any]:

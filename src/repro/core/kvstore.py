@@ -102,7 +102,8 @@ class KVStore:
                  num_servers: int = 1, num_clients: Optional[int] = None,
                  compress_push: bool = False,
                  wire_dtype: Optional[str] = None,
-                 flat_exchange: bool = True):
+                 flat_exchange: bool = True,
+                 barrier_timeout: Optional[float] = None):
         from repro.core.collectives import check_wire_dtype
 
         if kv_type not in VALID_TYPES:
@@ -134,8 +135,23 @@ class KVStore:
         self.pushed_bytes_uncompressed = 0
         self.is_mpi = kv_type.endswith("_mpi")
         self.is_sync = kv_type in ("dist_sync", "sync_mpi")
-        # number of pushers the sync barrier waits for
-        self.expected_pushers = self.num_clients if self.is_mpi else num_workers
+        # number of pushers the sync barrier waits for at FULL strength;
+        # the expected_pushers property degrades it to the live-member
+        # count when a Membership is attached
+        self._static_expected = (self.num_clients if self.is_mpi
+                                 else num_workers)
+        # failure tolerance (paper §2-3): after ``barrier_timeout``
+        # simulated seconds past a round's first arrival, the sync
+        # barrier releases with the survivor subset instead of blocking
+        # forever on a dead pusher (pull(now=...) drives the clock)
+        self.barrier_timeout = barrier_timeout
+        self._membership = None
+        self._staleness = None
+        self._stale_scale = False
+        self.degraded_syncs = 0          # barriers released short
+        self.late_pushes = 0             # pushes landing after release
+        self.last_barrier_count: Optional[int] = None
+        self._first_arrival: dict[Any, float] = {}
         self._values: dict[Any, jax.Array] = {}
         self._opt_state: dict[Any, Any] = {}
         self._pending: dict[Any, list[jax.Array]] = {}
@@ -150,6 +166,43 @@ class KVStore:
     def compress_push(self) -> bool:
         """Deprecated alias: whether the PS wire is the int8 codec."""
         return self.wire_dtype == "int8"
+
+    @property
+    def expected_pushers(self) -> int:
+        """Pushers the sync barrier waits for: the static client/worker
+        count, degraded to the live-member count when an elastic
+        Membership (core/membership.py) is attached — an ANNOUNCED
+        leave/failure shrinks the barrier immediately; unannounced
+        deaths degrade via barrier_timeout instead."""
+        base = self._static_expected
+        if self._membership is not None:
+            return max(1, min(base, self._membership.live_count))
+        return base
+
+    def attach_membership(self, membership) -> None:
+        """Attach the tier's Membership: the barrier tracks its live
+        count from now on (and shrinks/grows across epochs)."""
+        self._membership = membership
+
+    def attach_staleness(self, tracker, *, scale: bool = False) -> None:
+        """Wire a scheduler.StalenessTracker into the server rule:
+        ``push(..., unit=)`` records the apply (and its staleness),
+        ``pull(..., unit=)`` records the pull. With ``scale=True`` the
+        async optimize rule damps a push that is s versions stale by
+        1/(1+s) — applied on the packed FlatBuffer
+        (core.elastic.scale_packed), the same substrate the wire codec
+        rides."""
+        self._staleness = tracker
+        self._stale_scale = scale
+
+    def _require_key(self, key: Any, what: str) -> None:
+        """Actionable unknown-key error: name the key AND the known
+        ones, instead of a bare KeyError from the values dict."""
+        if key not in self._values:
+            known = ", ".join(repr(k) for k in self._values) or "(none)"
+            raise KeyError(
+                f"{what} of unregistered key {key!r} — known keys: "
+                f"{known}; register it first with kv.init({key!r}, value)")
 
     # -- setup --------------------------------------------------------------
     @classmethod
@@ -236,14 +289,27 @@ class KVStore:
 
     # -- data plane ----------------------------------------------------------
     def push(self, key: Any, tensor: list[jax.Array] | jax.Array, *,
-             group: Any = None) -> None:
+             group: Any = None, at: Optional[float] = None,
+             unit: Optional[int] = None) -> None:
         """Worker push. ``group=gid`` marks ``tensor`` as the group's
         stacked member values (leading dim = group size): the registered
         communicator's collective reduces them first (the MPI leg) and
         the group counts as ONE pusher toward the PS barrier — the
-        paper's client-master push."""
-        if key not in self._values:
-            raise KeyError(f"push to uninitialized key {key!r}")
+        paper's client-master push.
+
+        ``at`` is the push's simulated arrival time: with a
+        ``barrier_timeout`` configured, a push landing more than the
+        timeout after its round's FIRST arrival is late — the barrier
+        already released without it — and is discarded (counted in
+        ``late_pushes``). ``unit`` names the pusher for the attached
+        StalenessTracker."""
+        self._require_key(key, "push")
+        if (self.is_sync and at is not None
+                and self.barrier_timeout is not None
+                and key in self._first_arrival
+                and at - self._first_arrival[key] > self.barrier_timeout):
+            self.late_pushes += 1
+            return
         if group is not None:
             if group not in self._groups:
                 raise KeyError(
@@ -282,13 +348,18 @@ class KVStore:
             self.pushed_bytes += raw
         if self.is_sync:
             pend = self._pending.setdefault(key, [])
+            if not pend and at is not None:
+                self._first_arrival[key] = at
             pend.append(agg)
             if len(pend) >= self.expected_pushers:
                 total = self._barrier_sum(pend)
+                count = len(pend)
                 del self._pending[key]
-                self._apply(key, total)
+                self._first_arrival.pop(key, None)
+                self.last_barrier_count = count
+                self._apply(key, total, count=count, unit=unit)
         else:
-            self._apply(key, agg)
+            self._apply(key, agg, unit=unit)
 
     @staticmethod
     def _barrier_sum(pend: list) -> Any:
@@ -308,14 +379,42 @@ class KVStore:
             total = _tree_add(total, other)
         return total
 
-    def pull(self, key: Any, num_dst: int = 1) -> list[jax.Array]:
-        """Returns the server value broadcast to ``num_dst`` tensor slots."""
+    def pull(self, key: Any, num_dst: int = 1, *,
+             unit: Optional[int] = None,
+             now: Optional[float] = None) -> list[jax.Array]:
+        """Returns the server value broadcast to ``num_dst`` tensor slots.
+
+        Graceful degradation (paper §2-3): with ``barrier_timeout``
+        configured and ``now`` past ``first_arrival + timeout``, an
+        incomplete sync barrier RELEASES with the pushes that made it —
+        the survivor subset — instead of raising; ``degraded_syncs``
+        counts the short releases and ``last_barrier_count`` records how
+        many pushes each release summed, so callers can rescale their
+        mean by the live contribution. ``unit`` records the pull on the
+        attached StalenessTracker."""
+        self._require_key(key, "pull")
         if key in self._pending:
-            raise RuntimeError(
-                f"pull of key {key!r} while sync barrier incomplete "
-                f"({len(self._pending[key])}/{self.expected_pushers} pushes)"
-            )
+            pend = self._pending[key]
+            opened = self._first_arrival.get(key)
+            timed_out = (
+                self.barrier_timeout is not None and now is not None
+                and opened is not None
+                and now - opened >= self.barrier_timeout)
+            if not timed_out:
+                raise RuntimeError(
+                    f"pull of key {key!r} while sync barrier incomplete "
+                    f"({len(pend)}/{self.expected_pushers} pushes)"
+                )
+            total = self._barrier_sum(pend)
+            count = len(pend)
+            del self._pending[key]
+            self._first_arrival.pop(key, None)
+            self.degraded_syncs += 1
+            self.last_barrier_count = count
+            self._apply(key, total, count=count)
         v = self._values[key]
+        if self._staleness is not None and unit is not None:
+            self._staleness.on_pull(unit)
         return [v for _ in range(num_dst)]
 
     def pushpull(self, key: Any, tensor: list[jax.Array] | jax.Array,
@@ -330,12 +429,34 @@ class KVStore:
         return self.pull(key, num_dst)
 
     # -- server rules ---------------------------------------------------------
-    def _apply(self, key: Any, pushed: Any) -> None:
+    def _apply(self, key: Any, pushed: Any, *, count: Optional[int] = None,
+               unit: Optional[int] = None) -> None:
         rule = self._rule
+        stale = None
+        if self._staleness is not None and unit is not None:
+            stale = self._staleness.on_apply(unit)
         if rule.kind == "assign":
             self._values[key] = pushed
         elif rule.kind == "optimize":
-            grad = jax.tree.map(lambda g: g * rule.rescale, pushed)
+            rescale = rule.rescale
+            if count is not None and count != self._static_expected:
+                # degraded/elastic barrier: the sum covers ``count``
+                # pushers where the rule's rescale assumed the full
+                # roster — rescale by the live fraction so the effective
+                # step magnitude survives membership changes
+                rescale = rescale * (self._static_expected / count)
+            grad = jax.tree.map(lambda g: g * rescale, pushed)
+            if self._stale_scale and stale:
+                # staleness-scaled async rule on the flat substrate:
+                # damp an s-stale push by 1/(1+s) as ONE packed multiply
+                factor = 1.0 / (1.0 + stale)
+                if all(jnp.issubdtype(l.dtype, jnp.floating)
+                       for l in jax.tree_util.tree_leaves(grad)):
+                    from repro.core.elastic import scale_packed
+
+                    grad = scale_packed(grad, factor)
+                else:
+                    grad = jax.tree.map(lambda g: g * factor, grad)
             new_v, new_s = rule.optimizer.update(
                 grad, self._opt_state[key], self._values[key]
             )
@@ -370,6 +491,7 @@ class KVStore:
 
     # -- introspection ---------------------------------------------------------
     def value(self, key: Any) -> jax.Array:
+        self._require_key(key, "value")
         return self._values[key]
 
     def keys(self) -> list:

@@ -54,6 +54,10 @@ class AsyncEngine:
         self._heap: list[_Event] = []
         self._seq = 0
         self.completions = 0
+        # membership failures: killed units' in-flight events are
+        # discarded and they are never re-dispatched — the survivors
+        # keep draining the completion budget (elastic semantics)
+        self.dead: set[int] = set()
 
     def start(self) -> None:
         for u in range(self.num_units):
@@ -63,14 +67,27 @@ class AsyncEngine:
         self._seq += 1
         heapq.heappush(self._heap, _Event(self.now + dt, self._seq, unit))
 
+    def kill(self, unit: int) -> None:
+        """Mark a unit dead (fault injection / membership failure)."""
+        self.dead.add(unit)
+
     def run(self, until_completions: int,
             on_complete: Callable[[int, float], float]) -> None:
+        """``on_complete(unit, now)`` may return None to signal the unit
+        died AT this dispatch (core/faults.py kill events): the event
+        neither counts as a completion nor re-queues the unit."""
         while self.completions < until_completions and self._heap:
             ev = heapq.heappop(self._heap)
+            if ev.unit in self.dead:
+                continue
             self.now = ev.time
             comm = on_complete(ev.unit, self.now)
+            if comm is None:
+                self.dead.add(ev.unit)
+                continue
             self.completions += 1
-            self._push(ev.unit, comm + self.timing[ev.unit].sample())
+            if ev.unit not in self.dead:
+                self._push(ev.unit, comm + self.timing[ev.unit].sample())
 
 
 @dataclass

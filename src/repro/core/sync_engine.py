@@ -183,7 +183,11 @@ class FlatEngine(SyncEngine):
                 f"but the {p}-way axis geometry needs {want} — per-device "
                 "state for sharded drivers comes from "
                 "optim.sgd.optstate_shard_init(hyper, spec, p, ...), not "
-                "from make_train_state's local (p=1) buffer")
+                "from make_train_state's local (p=1) buffer; state saved "
+                "under a DIFFERENT device count (elastic membership "
+                "change, restore on new geometry) re-lays-out with "
+                "core.membership.reshard_optstate(hyper, spec, state, "
+                "p_old, p_new)")
 
 
 def make_sync_engine(optimizer: Optimizer, sync: SyncConfig, mesh=None, *,

@@ -47,6 +47,12 @@ class JobSpec:
     # flat optimizer-state stream dtype ("f32" | "bf16" — threaded to
     # --state-dtype; bf16 halves AdaGrad/AdamW state bytes per device)
     state_dtype: str = "f32"
+    # deterministic fault schedule every client ships with (core/faults.py
+    # string form — threaded to --faults; "" = clean)
+    faults: str = ""
+    # sync-barrier degradation timeout in seconds (threaded to
+    # --barrier-timeout; kill/drop schedules need it)
+    barrier_timeout: float = 0.0  # 0 = block forever
 
     def validate(self) -> None:
         if self.optimizer not in ("sgd", "adagrad", "adamw"):
@@ -65,6 +71,18 @@ class JobSpec:
         if self.num_servers == 0 and self.num_clients != 1:
             # pure-MPI: one COMM_WORLD, no PS tier to glue clients together
             raise ValueError("#servers=0 (pure MPI) requires #clients=1")
+        if self.faults:
+            from repro.core.faults import FaultSchedule
+
+            sched = FaultSchedule.parse(self.faults)  # raises on bad form
+            if (sched.kinds & {"kill", "drop"} and not self.barrier_timeout
+                    and self.num_servers > 0):
+                raise ValueError(
+                    "a kill/drop fault schedule against the sync PS "
+                    "barrier needs barrier_timeout > 0 so survivors can "
+                    "release it (see KVStore.barrier_timeout)")
+        if self.barrier_timeout < 0:
+            raise ValueError("barrier_timeout must be >= 0 (0 = none)")
 
 
 def build_job(spec: JobSpec) -> dict:
@@ -99,6 +117,9 @@ def build_job(spec: JobSpec) -> dict:
                    if spec.wire_dtype != "f32" else "")
                 + (f" --state-dtype {spec.state_dtype}"
                    if spec.state_dtype != "f32" else "")
+                + (f" --faults '{spec.faults}'" if spec.faults else "")
+                + (f" --barrier-timeout {spec.barrier_timeout:g}"
+                   if spec.barrier_timeout else "")
             ),
         })
     return {
@@ -117,7 +138,9 @@ def build_job(spec: JobSpec) -> dict:
                  "flat_exchange": spec.flat_exchange,
                  "bucket_bytes": spec.bucket_bytes,
                  "wire_dtype": spec.wire_dtype,
-                 "state_dtype": spec.state_dtype},
+                 "state_dtype": spec.state_dtype,
+                 "faults": spec.faults,
+                 "barrier_timeout": spec.barrier_timeout},
         "mesh": spec.mesh,
         "total_chips": spec.num_workers * spec.chips_per_worker,
         "spec": dataclasses.asdict(spec),
@@ -179,6 +202,12 @@ def main() -> None:  # pragma: no cover
     ap.add_argument("--state-dtype", default="f32",
                     choices=("f32", "bf16"),
                     help="flat optimizer-state stream dtype for every worker")
+    ap.add_argument("--faults", default="",
+                    help="deterministic fault schedule for every client "
+                         "(core/faults.py string form)")
+    ap.add_argument("--barrier-timeout", type=float, default=0.0,
+                    help="sync-barrier degradation timeout in seconds "
+                         "(0 = block forever)")
     args = ap.parse_args()
     spec = JobSpec(args.workers, args.servers, args.clients, args.arch,
                    args.shape, args.mesh,
@@ -187,7 +216,9 @@ def main() -> None:  # pragma: no cover
                    flat_exchange=not args.no_flat_exchange,
                    bucket_bytes=args.bucket_bytes,
                    wire_dtype=args.wire_dtype,
-                   state_dtype=args.state_dtype)
+                   state_dtype=args.state_dtype,
+                   faults=args.faults,
+                   barrier_timeout=args.barrier_timeout)
     for p in emit_scripts(spec, args.outdir):
         print(p)
 

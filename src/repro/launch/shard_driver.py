@@ -133,6 +133,13 @@ def shard_batch(batch: Any, p: Geometry) -> Any:
     """
     shape, _ = _factorize(p)
     n = math.prod(shape)
+    leaves = jax.tree_util.tree_leaves(batch)
+    if leaves and leaves[0].shape[0] % n:
+        raise ValueError(
+            f"batch size {leaves[0].shape[0]} does not divide over "
+            f"{n} devices (geometry {p}) — after an elastic membership "
+            "change, feed batches sized for the SURVIVOR count (a "
+            "multiple of every geometry the fault schedule can reach)")
     return jax.tree.map(
         lambda a: a.reshape((n, a.shape[0] // n) + a.shape[1:]), batch
     )
@@ -324,10 +331,87 @@ def make_sharded_step(model: Model, optimizer: Optimizer, sync: SyncConfig,
     return _compose(mstep, mex, sync)
 
 
+def _check_driver_faults(inj, mesh, p) -> None:
+    """What the driver's fault path can serve: kill (membership
+    reconfiguration) and corrupt (deterministic batch noise), under
+    vmap emulation. Timing faults need a clock and a real mesh needs
+    real process recovery — both out of scope here."""
+    if mesh is not None:
+        raise ValueError(
+            "drive(faults=...) runs under vmap emulation only: elastic "
+            "reconfiguration on a REAL mesh needs the multi-process "
+            "transport (see ROADMAP.md 'real multi-process transport') "
+            "— pass p= instead of mesh=")
+    timed = inj.schedule.kinds & {"drop", "delay", "straggle"}
+    if timed:
+        raise ValueError(
+            f"fault kinds {sorted(timed)} need a clock — the driver's "
+            "jitted step has no timing axis; run them through the "
+            "event-driven simulation (core/algorithms.py, "
+            "AlgoConfig.faults). The driver serves kill/corrupt.")
+    shape, _ = _factorize(p)
+    if "kill" in inj.schedule.kinds and len(shape) == 2:
+        # pod kills need the hierarchical (pod-then-data) shard layout
+        # re-derived, which only the 1-axis ring-major geometry shares
+        # with membership.reshard_optstate today
+        raise ValueError(
+            "kill faults under the 2-axis pod×data layout are not wired "
+            "— the hierarchical state re-layout is part of the ROADMAP "
+            "'real multi-process transport' item; use the 1-axis layout")
+
+
+def _reconfigure(model: Model, optimizer: Optimizer, sync: SyncConfig,
+                 state: dict, p_old: int, dead: list[int],
+                 live: "Membership", *, axis_name: str,
+                 microbatch: int) -> tuple[dict, int, Callable, dict]:
+    """Evict ``dead`` devices from a 1-axis emulated run: re-split the
+    geometry to the survivor count, carry survivor rows of the stacked
+    state over, re-shard the FlatBuffer optimizer state
+    (membership.reshard_optstate — survivors keep their slices, dead
+    slices restart from zero), and rebuild + re-jit the step.
+
+    mpi_sgd: the axis is ONE data-parallel group — params are replicated
+    (any survivor row serves) and opt state is 1/p sharded, so it is
+    re-laid-out p_old -> p_new. mpi_esgd: each device is one CLIENT with
+    full local opt state — the dead client's row is simply dropped and
+    the SyncConfig shrinks to the survivor client count."""
+    import dataclasses as _dc
+
+    from repro.core.membership import reshard_optstate
+
+    for u in dead:
+        live.fail(u)
+    survivors = [r for r in range(p_old) if live.is_live(r)]
+    p_new = len(survivors)
+    rows = jnp.asarray(survivors)
+    world = driver_world(sync, p_old, axis_name=axis_name)
+    info: dict = {"p_old": p_old, "p_new": p_new, "moved_bytes": 0.0,
+                  "survivors": tuple(survivors)}
+    if sync.mode == "mpi_esgd":
+        sync = _dc.replace(sync, num_clients=p_new)
+        state = jax.tree.map(lambda l: l[rows], state)
+    else:
+        spec = grad_spec(model)
+        new_opt, rinfo = reshard_optstate(
+            optimizer.hyper, spec, state["opt"], p_old, p_new,
+            survivors=survivors, num_rings=world.num_rings,
+            bucket_bytes=world.bucket_bytes)
+        info.update(rinfo)
+        state = {**jax.tree.map(lambda l: l[rows],
+                                {k: v for k, v in state.items()
+                                 if k != "opt"}),
+                 "opt": new_opt}
+    step = jax.jit(make_emulated_step(model, optimizer, sync, p_new,
+                                      axis_name=axis_name,
+                                      microbatch=microbatch))
+    return state, p_new, step, dict(info, sync=sync)
+
+
 def drive(model: Model, optimizer: Optimizer, sync: SyncConfig, batches,
           *, p: Geometry | None = None, mesh=None, axis_name: str = AXIS,
           rng=None, microbatch: int = 1, log_every: int = 10,
-          callback: Optional[Callable] = None):
+          callback: Optional[Callable] = None, faults=None,
+          fault_seed: int = 0, net: Optional[Any] = None):
     """Training loop over the shard driver.
 
     ``mesh=None`` emulates ``p`` devices with nested vmaps — an int, or
@@ -335,11 +419,27 @@ def drive(model: Model, optimizer: Optimizer, sync: SyncConfig, batches,
     geometry comes from the mesh axes and the step runs under shard_map.
     ``batches`` yield host-layout (B, ...) arrays; they are split into
     per-device shards here.
+
+    ``faults`` (a core.faults schedule / string) injects deterministic
+    failures, emulation only: ``kill@s:unit=d`` evicts device d before
+    step s — the run reconfigures to the survivors (state re-laid-out
+    via membership.reshard_optstate, step re-jitted) and a
+    ``reconfigure`` entry with the recovery byte/time accounting
+    (cost_model.reconfig_time over ``net``) lands in the history;
+    ``corrupt`` adds seeded noise to the device's batch shard. The same
+    schedule replayed is bit-identical.
     """
+    from repro.core import cost_model
+    from repro.core.faults import injector
+    from repro.core.membership import Membership
+
     if mesh is not None:
         p, _ = _mesh_geometry(mesh, axis_name)
     if p is None:
         raise ValueError("pass p= (emulation) or mesh=")
+    inj = injector(faults, seed=fault_seed)
+    if inj is not None:
+        _check_driver_faults(inj, mesh, p)
     state = make_driver_state(model, optimizer, sync, p, rng)
     if mesh is None:
         step = make_emulated_step(model, optimizer, sync, p,
@@ -348,9 +448,40 @@ def drive(model: Model, optimizer: Optimizer, sync: SyncConfig, batches,
         step = make_sharded_step(model, optimizer, sync, mesh,
                                  axis_name=axis_name, microbatch=microbatch)
     step = jax.jit(step)
+    live = (Membership(math.prod(_factorize(p)[0]))
+            if inj is not None else None)
     history = []
     for i, batch in enumerate(batches):
-        state, metrics = step(state, shard_batch(batch, p))
+        if inj is not None:
+            dead = [u for u in live.live if inj.is_killed(u, i)]
+            if dead:
+                if len(dead) >= live.live_count:
+                    raise ValueError(
+                        f"fault schedule kills every live device at "
+                        f"step {i} — no survivor group to reconfigure to")
+                state, p, step, info = _reconfigure(
+                    model, optimizer, sync, state, int(p), dead, live,
+                    axis_name=axis_name, microbatch=microbatch)
+                sync = info.pop("sync")
+                netp = net or cost_model.testbed()
+                entry = {"step": i, "event": "reconfigure",
+                         "killed": dead, **info,
+                         "reconfig_time": cost_model.reconfig_time(
+                             info.get("state_nbytes", 0.0), info["p_old"],
+                             info["p_new"], netp,
+                             survivors=len(info["survivors"]))}
+                history.append(entry)
+                if callback:
+                    callback(entry)
+        shard = shard_batch(batch, p)
+        if inj is not None:
+            for r, u in enumerate(live.live):
+                if inj.active(u, i):
+                    noisy = inj.corrupt(
+                        jax.tree.map(lambda l: l[r], shard), u, i)
+                    shard = jax.tree.map(
+                        lambda l, x: l.at[r].set(x), shard, noisy)
+        state, metrics = step(state, shard)
         if i % log_every == 0:
             entry = {k: float(v) for k, v in metrics.items()}
             entry["step"] = i

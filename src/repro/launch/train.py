@@ -395,6 +395,15 @@ def main() -> None:  # pragma: no cover (CLI driver; see tests/test_launch.py)
                              "scatter_gather"),
                     help="intra-client collective (default: psum, or ring "
                          "when --wire-dtype is low-precision)")
+    ap.add_argument("--faults", default="",
+                    help="deterministic fault schedule (core/faults.py "
+                         "string form, e.g. 'kill@12:unit=1'); validated "
+                         "here, injected by the drivers that own a clock "
+                         "(core/algorithms.py, shard_driver.drive)")
+    ap.add_argument("--barrier-timeout", type=float, default=None,
+                    help="seconds before the sync PS barrier releases "
+                         "with the survivor group (kill/drop schedules "
+                         "need it)")
     ap.add_argument("--full-size", action="store_true",
                     help="full architecture (default: reduced smoke config)")
     args = ap.parse_args()
@@ -409,7 +418,10 @@ def main() -> None:  # pragma: no cover (CLI driver; see tests/test_launch.py)
                              bucket_bytes=args.bucket_bytes or None,
                              allreduce_method=method,
                              wire_dtype=args.wire_dtype,
-                             state_dtype=args.state_dtype)
+                             state_dtype=args.state_dtype,
+                             faults=args.faults,
+                             barrier_timeout=args.barrier_timeout)
+    settings.fault_schedule()  # parse errors surface before any compute
     cfg = get_config(args.arch)
     if not args.full_size:
         cfg = reduced(cfg)
@@ -425,7 +437,9 @@ def main() -> None:  # pragma: no cover (CLI driver; see tests/test_launch.py)
           f"fused_update={settings.fused_update} "
           f"bucket_bytes={settings.bucket_bytes} "
           f"wire_dtype={settings.wire_dtype} "
-          f"state_dtype={settings.state_dtype}", flush=True)
+          f"state_dtype={settings.state_dtype} "
+          f"faults={settings.faults!r} "
+          f"barrier_timeout={settings.barrier_timeout}", flush=True)
     _, hist = train_loop(model, optimizer, sync, None, pipe.epoch(0),
                          log_every=max(args.steps // 10, 1))
     for entry in hist:

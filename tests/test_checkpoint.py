@@ -1,0 +1,124 @@
+"""checkpoint/checkpoint.py: the save -> kill -> restore -> resume
+roundtrip the PS task model's restartability story leans on (paper §8),
+exercised against the real train stack for both lowerable sync modes."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core  # noqa: F401  (core before optim: package init order)
+from repro.checkpoint.checkpoint import restore_checkpoint, save_checkpoint
+from repro.configs.base import get_config, reduced
+from repro.core.hierarchy import SyncConfig
+from repro.launch.shard_driver import shard_batch
+from repro.launch.train import make_train_state, make_train_step
+from repro.models.model import build_model
+from repro.optim.sgd import sgd
+
+
+@pytest.fixture(scope="module")
+def model():
+    return build_model(reduced(get_config("qwen2-0.5b")))
+
+
+def _batch(i, clients=1):
+    k = jax.random.fold_in(jax.random.key(42), i)
+    toks = jax.random.randint(k, (4 * max(clients, 1), 32), 0, 1024)
+    b = {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1)}
+    return shard_batch(b, clients) if clients > 1 else b
+
+
+def _run(step_fn, state, steps, *, clients=1, start=0):
+    for i in range(start, start + steps):
+        state, _ = step_fn(state, _batch(i, clients))
+    return state
+
+
+def _leaves(tree):
+    return [np.asarray(l) for l in jax.tree_util.tree_leaves(tree)]
+
+
+def test_mpi_sgd_kill_restore_resume_bit_exact(model, tmp_path):
+    sync = SyncConfig(mode="mpi_sgd", num_clients=1)
+    opt = sgd(0.1, momentum=0.9)
+    step_fn = jax.jit(make_train_step(model, opt, sync, None))
+    rng = jax.random.key(1)
+
+    ref = _run(step_fn, make_train_state(model, opt, sync, rng), 4)
+
+    state = _run(step_fn, make_train_state(model, opt, sync, rng), 2)
+    path = str(tmp_path / "ckpt.npz")
+    save_checkpoint(path, state, step=2)
+    del state                                    # the "kill"
+
+    fresh = make_train_state(model, opt, sync, jax.random.key(999))
+    restored, meta = restore_checkpoint(path, fresh)
+    assert meta["step"] == 2
+    assert int(restored["step"]) == 2
+    resumed = _run(step_fn, restored, 2, start=2)
+
+    for a, b in zip(_leaves(resumed), _leaves(ref)):
+        np.testing.assert_array_equal(a, b)      # bit-exact
+
+
+def test_mpi_esgd_kill_restore_resume(model, tmp_path):
+    sync = SyncConfig(mode="mpi_esgd", num_clients=2, esgd_interval=2)
+    opt = sgd(0.1, momentum=0.9)
+    step_fn = jax.jit(make_train_step(model, opt, sync, None))
+    rng = jax.random.key(1)
+
+    ref = _run(step_fn, make_train_state(model, opt, sync, rng), 5,
+               clients=2)
+
+    state = _run(step_fn, make_train_state(model, opt, sync, rng), 3,
+                 clients=2)
+    path = str(tmp_path / "ckpt.npz")
+    save_checkpoint(path, state, step=3,
+                    metadata={"mode": sync.mode, "clients": 2})
+    del state
+
+    restored, meta = restore_checkpoint(
+        path, make_train_state(model, opt, sync, jax.random.key(777)))
+    assert meta["mode"] == "mpi_esgd" and meta["clients"] == 2
+    resumed = _run(step_fn, restored, 2, clients=2, start=3)
+
+    for a, b in zip(_leaves(resumed), _leaves(ref)):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+def test_roundtrip_preserves_structure_and_dtypes(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.int32).reshape(2, 3),
+            "b": [jnp.ones((4,), jnp.bfloat16), jnp.zeros((), jnp.float32)],
+            "c": {"t": jnp.asarray(3, jnp.int32)}}
+    path = str(tmp_path / "t.npz")
+    save_checkpoint(path, tree, step=7, metadata={"note": "x"})
+    got, meta = restore_checkpoint(path, jax.tree.map(jnp.zeros_like, tree))
+    assert meta["step"] == 7 and meta["note"] == "x"
+    assert jax.tree_util.tree_structure(got) == \
+        jax.tree_util.tree_structure(tree)
+    for a, b in zip(jax.tree_util.tree_leaves(got),
+                    jax.tree_util.tree_leaves(tree)):
+        assert np.asarray(a).dtype == np.asarray(b).dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_restore_rejects_missing_leaf_and_bad_shape(tmp_path):
+    path = str(tmp_path / "t.npz")
+    save_checkpoint(path, {"a": jnp.ones((2,))})
+    with pytest.raises(KeyError, match="missing leaf"):
+        restore_checkpoint(path, {"a": jnp.ones((2,)), "b": jnp.ones((1,))})
+    with pytest.raises(ValueError, match="shape"):
+        restore_checkpoint(path, {"a": jnp.ones((3,))})
+
+
+def test_save_overwrites_atomically(tmp_path):
+    path = str(tmp_path / "t.npz")
+    save_checkpoint(path, {"a": jnp.zeros((2,))}, step=1)
+    save_checkpoint(path, {"a": jnp.ones((2,))}, step=2)
+    got, meta = restore_checkpoint(path, {"a": jnp.zeros((2,))})
+    assert meta["step"] == 2
+    np.testing.assert_array_equal(np.asarray(got["a"]), 1.0)
+    assert not [f for f in os.listdir(tmp_path) if f.endswith(".tmp")]

@@ -1,0 +1,181 @@
+"""Deterministic fault injection (core/faults.py) and its wiring through
+the six-mode simulation: schedules parse/replay exactly, sync barriers
+degrade instead of deadlocking, async/elastic runs survive kills."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.faults import (
+    FaultEvent,
+    FaultInjector,
+    FaultSchedule,
+    as_schedule,
+    delivery_time,
+    injector,
+)
+
+from test_algorithms import _cfg, eval_fn, grad_fn, init_fn, make_pipeline
+from repro.core.algorithms import run
+
+
+# -- schedule form ----------------------------------------------------------
+
+def test_parse_format_roundtrip():
+    text = ("kill@12:unit=1;straggle@0:unit=3:factor=4:duration=20;"
+            "corrupt@5:unit=0:sigma=0.1;drop@3:unit=2:duration=2;"
+            "delay@7:unit=1:factor=0.5")
+    sched = FaultSchedule.parse(text, seed=7)
+    assert FaultSchedule.parse(sched.format(), seed=7) == sched
+    assert sched.kinds == {"kill", "straggle", "corrupt", "drop", "delay"}
+
+
+def test_parse_rejects_malformed():
+    for bad in ("kill:unit=1", "kill@3", "kill@3:unit=1:bogus=2",
+                "explode@3:unit=1", "kill@3:unit"):
+        with pytest.raises(ValueError):
+            FaultSchedule.parse(bad)
+
+
+def test_event_validation():
+    with pytest.raises(ValueError):
+        FaultEvent("kill", unit=-1, step=0)
+    with pytest.raises(ValueError):
+        FaultEvent("drop", unit=0, step=1, duration=0)
+
+
+def test_as_schedule_normalizes():
+    assert as_schedule(None) is None
+    assert as_schedule("") is None
+    assert as_schedule(FaultSchedule()) is None
+    s = as_schedule("kill@1:unit=0", seed=3)
+    assert isinstance(s, FaultSchedule) and s.seed == 3
+    assert as_schedule(s) is s
+
+
+# -- injector lookups -------------------------------------------------------
+
+def test_kill_is_permanent():
+    inj = injector("kill@5:unit=2")
+    assert not inj.is_killed(2, 4)
+    assert inj.is_killed(2, 5) and inj.is_killed(2, 99)
+    assert not inj.is_killed(1, 99)
+    assert inj.killed_at(2) == 5 and inj.killed_at(0) is None
+
+
+def test_drop_consumes_attempts():
+    inj = injector("drop@3:unit=1:duration=2")
+    assert inj.should_drop(1, 3, attempt=0)
+    assert inj.should_drop(1, 3, attempt=1)
+    assert not inj.should_drop(1, 3, attempt=2)
+    assert not inj.should_drop(1, 4, attempt=0)
+
+
+def test_delivery_time_retry_backoff():
+    inj = injector("drop@0:unit=0:duration=2")
+    # attempts at +0.05, then +0.1 after the second drop -> lands at 0.15
+    assert delivery_time(inj, 0, 0, 0.0, retries=2, backoff=0.05) == \
+        pytest.approx(0.15)
+    # gives up: 3 consecutive drops > 1 initial + 2 retries... duration=3
+    inj3 = injector("drop@0:unit=0:duration=3")
+    assert delivery_time(inj3, 0, 0, 0.0, retries=2) is None
+    # clean pushes land at their arrival time
+    assert delivery_time(None, 0, 0, 1.5) == 1.5
+    assert delivery_time(inj, 0, 1, 1.5) == 1.5
+
+
+def test_straggle_window_and_compounding():
+    inj = injector("straggle@2:unit=0:factor=3:duration=4;"
+                   "straggle@4:unit=0:factor=2")
+    assert inj.straggle_factor(0, 1) == 1.0
+    assert inj.straggle_factor(0, 2) == 3.0
+    assert inj.straggle_factor(0, 4) == 6.0   # overlap compounds
+    assert inj.straggle_factor(0, 6) == 1.0
+    assert inj.straggle_factor(1, 3) == 1.0
+
+
+def test_corrupt_replay_identical_and_float_only():
+    inj = injector("corrupt@4:unit=1:sigma=0.5", seed=11)
+    tree = {"w": jnp.ones((4, 3)), "n": jnp.arange(5)}
+    a = inj.corrupt(tree, 1, 4)
+    b = inj.corrupt(tree, 1, 4)
+    assert jnp.array_equal(a["w"], b["w"])          # seeded per (unit, step)
+    assert not jnp.array_equal(a["w"], tree["w"])   # noise applied
+    assert jnp.array_equal(a["n"], tree["n"])       # int leaves untouched
+    untouched = inj.corrupt(tree, 0, 4)
+    assert jnp.array_equal(untouched["w"], tree["w"])
+
+
+# -- six-mode simulation under faults --------------------------------------
+
+SYNC_SCHED = "kill@12:unit=1;straggle@0:unit=0:factor=3:duration=5"
+
+
+def test_sync_kill_degrades_then_shrinks_barrier():
+    h = run(_cfg("mpi_sgd", faults=SYNC_SCHED, barrier_timeout=1.0),
+            init_fn, grad_fn, eval_fn, make_pipeline)
+    assert h.degraded_syncs >= 1          # the detection round
+    assert h.live_clients == 1            # the dead client was evicted
+    assert h.membership_epochs == 1
+    assert h.metrics[-1] > 0.5            # survivors still converge
+
+
+def test_sync_replay_bit_identical():
+    a = run(_cfg("dist_sgd", faults=SYNC_SCHED, barrier_timeout=1.0),
+            init_fn, grad_fn, eval_fn, make_pipeline)
+    b = run(_cfg("dist_sgd", faults=SYNC_SCHED, barrier_timeout=1.0),
+            init_fn, grad_fn, eval_fn, make_pipeline)
+    assert a.losses == b.losses
+    assert a.times == b.times
+    assert a.metrics == b.metrics
+
+
+def test_sync_kill_without_timeout_raises():
+    with pytest.raises(ValueError, match="barrier_timeout"):
+        run(_cfg("mpi_sgd", faults="kill@3:unit=0"),
+            init_fn, grad_fn, eval_fn, make_pipeline)
+
+
+def test_clean_path_unchanged_by_fault_knobs():
+    """An empty schedule must run the EXACT clean code path."""
+    a = run(_cfg("mpi_sgd"), init_fn, grad_fn, eval_fn, make_pipeline)
+    b = run(_cfg("mpi_sgd", faults="", push_retries=5),
+            init_fn, grad_fn, eval_fn, make_pipeline)
+    assert a.losses == b.losses and a.times == b.times
+
+
+def test_async_kill_and_drop():
+    sched = "kill@8:unit=1;drop@3:unit=0:duration=9"
+    h = run(_cfg("mpi_asgd", faults=sched),
+            init_fn, grad_fn, eval_fn, make_pipeline)
+    assert h.live_clients == 1
+    assert h.late_pushes == 1            # duration=9 outlives the retries
+    assert h.metrics[-1] > 0.5
+    h2 = run(_cfg("mpi_asgd", faults=sched),
+             init_fn, grad_fn, eval_fn, make_pipeline)
+    assert h.losses == h2.losses and h.times == h2.times
+
+
+def test_esgd_kill_plus_straggler_converges():
+    """The acceptance bar: one client killed mid-run + one straggler
+    leaves the elastic modes within ±0.01 of the fault-free accuracy."""
+    sched = "kill@10:unit=1;straggle@0:unit=0:factor=3:duration=8"
+    for mode in ("dist_esgd", "mpi_esgd"):
+        clean = run(_cfg(mode), init_fn, grad_fn, eval_fn, make_pipeline)
+        faulted = run(_cfg(mode, faults=sched),
+                      init_fn, grad_fn, eval_fn, make_pipeline)
+        assert abs(clean.metrics[-1] - faulted.metrics[-1]) <= 0.01, mode
+        assert faulted.live_clients < clean.live_clients
+
+
+def test_staleness_scaling_damps_stale_pushes():
+    base = dict(num_workers=8, jitter=0.3)
+    plain = run(_cfg("dist_asgd", **base),
+                init_fn, grad_fn, eval_fn, make_pipeline)
+    scaled = run(_cfg("dist_asgd", staleness_scaling=True, **base),
+                 init_fn, grad_fn, eval_fn, make_pipeline)
+    # same event order (scaling only touches the server update), and the
+    # damped rule must still learn
+    assert scaled.mean_staleness == plain.mean_staleness
+    assert scaled.losses != plain.losses
+    assert scaled.metrics[-1] > 0.5

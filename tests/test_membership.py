@@ -1,0 +1,239 @@
+"""Elastic membership (core/membership.py): epoch tracking, the
+Communicator re-split, the survivor optimizer-state re-shard, and the
+KVStore barrier shrinking with the live count."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cost_model, flatbuf
+from repro.core.comm import Communicator
+from repro.core.kvstore import KVStore
+from repro.core.membership import Membership, reshard_optstate
+from repro.optim.sgd import adamw, optstate_shard_init, sgd
+
+
+def _world(c):
+    return Communicator.world(("client",), (c,))
+
+
+# -- membership epochs ------------------------------------------------------
+
+def test_epoch_advances_and_comm_resplits():
+    m = Membership(4, _world(4))
+    assert m.live == (0, 1, 2, 3) and m.epoch == 0
+    assert m.comm.static_size == 4
+    ep = m.fail(2)
+    assert ep.kind == "fail" and ep.member == 2 and ep.epoch == 1
+    assert m.live == (0, 1, 3) and m.comm.static_size == 3
+    m.leave(0)
+    assert m.live == (1, 3) and m.comm.static_size == 2
+    m.join(2)
+    assert m.live == (1, 2, 3) and m.comm.static_size == 3
+    assert [e.kind for e in m.history] == ["init", "fail", "leave", "join"]
+
+
+def test_rank_of_is_dense_survivor_rank():
+    m = Membership(4)
+    m.fail(1)
+    assert m.rank_of(0) == 0 and m.rank_of(2) == 1 and m.rank_of(3) == 2
+    with pytest.raises(KeyError):
+        m.rank_of(1)
+
+
+def test_membership_guards():
+    m = Membership(2)
+    with pytest.raises(ValueError):
+        m.join(1)            # already live
+    m.fail(0)
+    with pytest.raises(ValueError):
+        m.fail(1)            # last member
+    with pytest.raises(ValueError):
+        m.fail(0)            # not live
+    with pytest.raises(ValueError):
+        Membership([])
+    with pytest.raises(ValueError):
+        # trace-time adapter comms have nothing to re-split
+        Membership(2, Communicator.world(("x",)))
+
+
+def test_resized_guards():
+    w = Communicator.world(("a", "b"), (2, 3))
+    assert w.resized(4, axis="b").sizes == (2, 4)
+    with pytest.raises(ValueError):
+        w.resized(4)          # multi-axis needs axis=
+    with pytest.raises(ValueError):
+        w.resized(4, axis="c")
+    with pytest.raises(ValueError):
+        Communicator.world(("a",), (2,)).resized(0)
+
+
+# -- optimizer-state re-shard ----------------------------------------------
+
+PARAMS = {"w": jnp.zeros((13, 5)), "b": jnp.zeros((7,)),
+          "s": jnp.zeros((3, 3))}
+
+
+def _stacked_sgd(spec, p, nr=1):
+    """Distinct per-position momentum values, sharded ring-major: device
+    d owns full.reshape(nr, p, chunk)[:, d, :] of full = arange(total)."""
+    chunk, total = flatbuf.shard_geometry(spec.size, p, nr)
+    full = jnp.arange(total, dtype=jnp.float32) + 1.0
+    view = full.reshape(nr, p, chunk)
+    return jnp.stack([view[:, d, :].reshape(-1) for d in range(p)])
+
+
+def _reconstruct(stacked, n, p, nr):
+    chunk, total = flatbuf.shard_geometry(n, p, nr)
+    full = jnp.zeros((nr, p, chunk))
+    for d in range(p):
+        full = full.at[:, d, :].set(stacked[d].reshape(nr, chunk))
+    return full.reshape(-1)[:n]
+
+
+@pytest.mark.parametrize("p_old,p_new", [(2, 1), (2, 2), (8, 7), (8, 4),
+                                         (2, 3), (8, 8)])
+@pytest.mark.parametrize("nr", [1, 2])
+def test_reshard_carries_survivor_state(p_old, p_new, nr):
+    spec = flatbuf.spec_for(PARAMS)
+    stacked = _stacked_sgd(spec, p_old, nr)
+    survivors = tuple(range(min(p_old, p_new)))
+    new, info = reshard_optstate(
+        sgd(0.1, momentum=0.9).hyper, spec, stacked, p_old, p_new,
+        survivors=survivors, num_rings=nr)
+    assert new.shape == (p_new, flatbuf.shard_size(spec, p_new, nr, None))
+    # logical-offset carry-over: reconstructing the full stream at the
+    # NEW geometry gives the old stream wherever a survivor owned it
+    got = _reconstruct(new, spec.size, p_new, nr)
+    want = _reconstruct(stacked, spec.size, p_old, nr)
+    chunk_o, _ = flatbuf.shard_geometry(spec.size, p_old, nr)
+    mask = np.zeros(spec.size, bool)
+    for r in range(nr):
+        for d in survivors:
+            lo = (r * p_old + d) * chunk_o
+            mask[lo:min(lo + chunk_o, spec.size)] = True
+    np.testing.assert_array_equal(np.asarray(got)[mask],
+                                  np.asarray(want)[mask])
+    np.testing.assert_array_equal(np.asarray(got)[~mask], 0.0)
+    assert info["p_old"] == p_old and info["p_new"] == p_new
+
+
+def test_reshard_with_dead_member_zeroes_its_slice():
+    spec = flatbuf.spec_for(PARAMS)
+    stacked = _stacked_sgd(spec, 4)
+    new, info = reshard_optstate(sgd(0.1, momentum=0.9).hyper, spec,
+                                 stacked, 4, 3, survivors=(0, 1, 3))
+    got = _reconstruct(new, spec.size, 3, 1)
+    want = _reconstruct(stacked, spec.size, 4, 1)
+    chunk, _ = flatbuf.shard_geometry(spec.size, 4, 1)
+    dead = slice(2 * chunk, 3 * chunk)
+    np.testing.assert_array_equal(np.asarray(got)[dead], 0.0)
+    keep = np.ones(spec.size, bool)
+    keep[dead] = False
+    np.testing.assert_array_equal(np.asarray(got)[keep],
+                                  np.asarray(want)[keep])
+    assert info["survivors"] == (0, 1, 3)
+
+
+def test_reshard_adamw_streams_and_t():
+    spec = flatbuf.spec_for(PARAMS)
+    opt = adamw(1e-3)
+    state0 = optstate_shard_init(opt.hyper, spec, 4, 1)
+    mv = jnp.stack([state0["mv"] + d for d in range(4)])
+    t = jnp.asarray([5, 5, 5, 5], state0["t"].dtype)
+    new, info = reshard_optstate(opt.hyper, spec, {"mv": mv, "t": t},
+                                 4, 5, survivors=(0, 1, 2, 3))
+    assert new["mv"].shape[0] == 5 and new["mv"].shape[1] == 2
+    # survivors keep their step count; the joiner inherits it
+    np.testing.assert_array_equal(np.asarray(new["t"]), 5)
+
+
+def test_reshard_validates_inputs():
+    spec = flatbuf.spec_for(PARAMS)
+    stacked = _stacked_sgd(spec, 2)
+    hyper = sgd(0.1, momentum=0.9).hyper
+    with pytest.raises(ValueError, match="duplicate"):
+        reshard_optstate(hyper, spec, stacked, 2, 2, survivors=(0, 0))
+    with pytest.raises(ValueError, match="outside"):
+        reshard_optstate(hyper, spec, stacked, 2, 2, survivors=(3,))
+    with pytest.raises(ValueError, match="cannot fit"):
+        reshard_optstate(hyper, spec, stacked, 2, 1, survivors=(0, 1))
+    with pytest.raises(ValueError, match="shape"):
+        reshard_optstate(hyper, spec, stacked[:, :-1], 2, 1)
+    with pytest.raises(ValueError, match="flat families"):
+        reshard_optstate({"name": "lbfgs"}, spec, stacked, 2, 1)
+
+
+def test_reshard_bytes_match_cost_model():
+    """The contract bench_faults.py gates on: moved_bytes equals the
+    cost model's (s-1)-shard survivor allgather leg EXACTLY."""
+    spec = flatbuf.spec_for(PARAMS)
+    for p_old, survivors in [(2, (0,)), (4, (0, 2, 3)), (8, tuple(range(7)))]:
+        stacked = _stacked_sgd(spec, p_old)
+        _, info = reshard_optstate(sgd(0.1, momentum=0.9).hyper, spec,
+                                   stacked, p_old, len(survivors),
+                                   survivors=survivors)
+        assert info["moved_bytes"] == cost_model.reshard_leg_bytes(
+            info["state_nbytes"], p_old, survivors=len(survivors))
+
+
+def test_reconfig_time_composition():
+    net = cost_model.testbed()
+    t = cost_model.reconfig_time(1e6, 4, 3, net, survivors=3)
+    assert t == cost_model.resplit_time(3, net) + \
+        cost_model.reshard_leg_bytes(1e6, 4, survivors=3) * net.beta
+    assert cost_model.reshard_leg_bytes(1e6, 1) == 0.0
+    assert cost_model.reshard_leg_bytes(1e6, 4, survivors=1) == 0.0
+
+
+# -- KVStore barrier under membership --------------------------------------
+
+@pytest.mark.parametrize("clients", [2, 4])
+def test_barrier_shrinks_with_live_count(clients):
+    kv = KVStore.create("sync_mpi", num_workers=clients * 2,
+                        num_clients=clients)
+    kv.init("g", jnp.zeros((3,)))
+    m = Membership(clients)
+    kv.attach_membership(m)
+    assert kv.expected_pushers == clients
+    m.fail(clients - 1)
+    assert kv.expected_pushers == clients - 1
+    for c in range(clients - 1):
+        kv.push("g", jnp.ones((3,)))
+    np.testing.assert_array_equal(np.asarray(kv.value("g")), clients - 1)
+    assert kv.last_barrier_count == clients - 1
+
+
+def test_degraded_release_and_late_push():
+    kv = KVStore.create("dist_sync", num_workers=3, barrier_timeout=1.0)
+    kv.init("g", jnp.zeros((2,)))
+    kv.push("g", jnp.ones((2,)), at=0.0)
+    kv.push("g", jnp.ones((2,)), at=0.5)
+    # worker 2 never arrives; the pull at the deadline releases short
+    out = kv.pull("g", now=1.0)[0]
+    np.testing.assert_array_equal(np.asarray(out), 2.0)
+    assert kv.degraded_syncs == 1 and kv.last_barrier_count == 2
+    # its push finally lands late -> discarded, not applied
+    kv.push("g", jnp.ones((2,)), at=0.0)   # next round opens at 0.0
+    kv.push("g", jnp.full((2,), 7.0), at=2.0)
+    assert kv.late_pushes == 1
+    np.testing.assert_array_equal(np.asarray(kv.value("g")), 2.0)
+
+
+def test_incomplete_barrier_still_raises_without_timeout():
+    kv = KVStore.create("dist_sync", num_workers=2)
+    kv.init("g", jnp.zeros((2,)))
+    kv.push("g", jnp.ones((2,)))
+    with pytest.raises(RuntimeError, match="barrier incomplete"):
+        kv.pull("g")
+
+
+def test_unregistered_key_errors_name_known_keys():
+    kv = KVStore.create("local")
+    kv.init("weights", jnp.zeros((2,)))
+    with pytest.raises(KeyError, match="known keys: 'weights'"):
+        kv.push("grads", jnp.ones((2,)))
+    with pytest.raises(KeyError, match="kv.init\\('grads', value\\)"):
+        kv.pull("grads")
+    with pytest.raises(KeyError, match="unregistered key 'grads'"):
+        kv.value("grads")
