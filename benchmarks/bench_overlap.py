@@ -1,0 +1,221 @@
+"""Backward-overlapped bucketed reduce-scatter: the PR's perf claim,
+measured on the real staged train step (reduced qwen2 decoder).
+
+Two structural quantities carry the acceptance criteria:
+
+  1. byte conservation — the per-bucket ring reduce-scatter legs move
+     EXACTLY the bytes of the monolithic flat-buffer leg (ratio 1.0):
+     bucketing the schedule redistributes the wire work across backward,
+     it never adds wire work. Counted per bucket by tracing
+     ``Communicator.reduce_scatter_bucket`` under an abstract p-way axis
+     and summing ppermute operands (exact because every schedule-bucket
+     extent divides p·LANE at this geometry: zero chunk padding).
+
+  2. overlap fraction — modeled (``cost_model.overlap_fraction`` over
+     the schedule's bucket extents) vs MEASURED from the traced program:
+     walk the TOP-LEVEL eqns of the staged grad fn's jaxpr (issue
+     order == trace order; the ring legs are fully unrolled, so their
+     ppermutes sit at top level) and take the reduce-scatter ppermute
+     bytes issued BEFORE the last backward-compute eqn as a fraction of
+     all reduce-scatter bytes. The two must agree: the model's claim
+     about what the scheduler can hide is a statement about eqn order,
+     and this checks the traced program actually has that order.
+
+Also recorded: the wire-dtype composition (bf16/int8 per-bucket legs vs
+the f32 bucketed legs — the codec ratio must survive bucketing), the RS
+ppermute counts (num_buckets·(p−1) — fewer means a leg collapsed, more
+means a bucket split), and the α-β-γ projected step time with/without
+overlap (``launch.analysis.overlap_projection`` on the real bucket
+extents). Writes BENCH_overlap.json; check_bench gates the ratios.
+
+``REPRO_BENCH_QUICK=1`` shrinks batch/steps only — every recorded ratio
+is geometry-exact at any size (the schedule comes from the model spec,
+which QUICK does not change).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, ppermute_bytes, timeit
+from repro.configs.base import get_config, reduced
+from repro.core import collectives as C
+from repro.core import comm as comm_lib
+from repro.core import cost_model
+from repro.core.hierarchy import SyncConfig
+from repro.launch.analysis import overlap_projection
+from repro.launch.train import make_overlap_grad_fn, overlap_schedule
+from repro.models.model import build_model
+
+QUICK = os.environ.get("REPRO_BENCH_QUICK", "") not in ("", "0")
+P = 8
+AXIS = "ring"
+BUCKETS = 4
+B, S = (2, 16) if QUICK else (4, 32)
+
+# primitives that are backward COMPUTE at the top level of the staged
+# grad fn's jaxpr: matmul transposes, scanned layer pullbacks, the
+# embedding-gradient scatter-add (stage 0's pullback — the last compute
+# the schedule's final leg waits on), and remat replay wrappers. The
+# ring legs' own arithmetic (pad/add/slice around ppermute) is
+# deliberately NOT in this set — it is wire work, not backward compute.
+_COMPUTE = {
+    "dot_general", "conv_general_dilated", "scan", "scatter-add",
+    "remat", "remat2", "checkpoint", "custom_vjp_call",
+    "custom_vjp_call_jaxpr",
+}
+
+
+def _model():
+    return build_model(reduced(get_config("qwen2-0.5b")))
+
+
+def _batch(b=B, s=S, seed=0):
+    toks = jax.random.randint(jax.random.key(seed), (b, s), 0, 1024)
+    return {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1)}
+
+
+def _sync(p_unused=None):
+    return SyncConfig(mode="mpi_sgd", allreduce_method="ring", num_rings=1,
+                      fused_update=True, overlap=True,
+                      overlap_buckets=BUCKETS)
+
+
+def measured_overlap(grad_fn, params, batch, p: int) -> dict:
+    """Trace the staged grad fn under an abstract p-way axis and read the
+    overlap fraction off the TOP-LEVEL eqn order (no recursion — a
+    ppermute inside a scan would not be a schedulable mid-backward leg)."""
+    closed = jax.make_jaxpr(grad_fn, axis_env=[(AXIS, p)])(params, batch)
+    pp, last_compute = [], -1
+    for i, eqn in enumerate(closed.jaxpr.eqns):
+        name = eqn.primitive.name
+        if name == "ppermute":
+            pp.append((i, sum(v.aval.size * v.aval.dtype.itemsize
+                              for v in eqn.invars)))
+        elif name in _COMPUTE:
+            last_compute = i
+    total = sum(nb for _, nb in pp)
+    hidden = sum(nb for i, nb in pp if i < last_compute)
+    return {
+        "rs_ppermute_count": len(pp),
+        "rs_bytes_per_dev": int(total),
+        "rs_bytes_before_last_compute": int(hidden),
+        "fraction": hidden / total if total else 0.0,
+    }
+
+
+def run() -> None:
+    model = _model()
+    sync = _sync()
+    comm = comm_lib.Communicator.world((AXIS,), (P,), method="ring")
+    stages, schedule = overlap_schedule(model, sync, P)
+    spec = schedule.spec
+    params = model.init(jax.random.key(0))
+    batch = _batch()
+
+    # -- 1. byte conservation: per-bucket legs vs the monolithic leg --------
+    def bucket_leg(b, _comm=comm):
+        def fn(seg):
+            return _comm.reduce_scatter_bucket(seg, schedule, b)
+        return ppermute_bytes(fn, jnp.zeros((schedule.sizes[b],)),
+                              axis=AXIS, p=P)
+
+    per_bucket = [bucket_leg(b) for b in range(schedule.num_buckets)]
+    mono = ppermute_bytes(lambda buf: C.ring_reduce_scatter(buf, AXIS),
+                          spec.zeros(), axis=AXIS, p=P)
+    ratio = sum(per_bucket) / mono
+
+    # -- 2. modeled vs measured overlap fraction on the real grad fn --------
+    grad_fn = make_overlap_grad_fn(model, stages, schedule, comm)
+    meas = measured_overlap(grad_fn, params, batch, P)
+    bucket_payload = [n * 4 for n in schedule.sizes]
+    modeled = cost_model.overlap_fraction(bucket_payload, P)
+
+    # -- 3. wire-dtype composition: the codec ratio survives bucketing ------
+    wire_ratio = {}
+    for wd in ("bf16", "int8"):
+        cw = comm_lib.Communicator.world((AXIS,), (P,), method="ring",
+                                         wire_dtype=wd)
+        total = sum(
+            ppermute_bytes(
+                lambda seg, _b=b, _c=cw: _c.reduce_scatter_bucket(
+                    seg, schedule, _b),
+                jnp.zeros((schedule.sizes[b],)), axis=AXIS, p=P)
+            for b in range(schedule.num_buckets))
+        wire_ratio[wd] = total / sum(per_bucket)
+
+    # -- 4. α-β-γ projection on the real bucket extents ---------------------
+    compute_s = 5e-3  # ~reduced-model step; the fraction does not use it
+    proj = overlap_projection(spec.size * 4, P, compute_s,
+                              bucket_bytes=bucket_payload,
+                              net=cost_model.tpu_v5e())
+
+    # -- 5. wall time of the staged grad fn under emulation (sanity only:
+    # CPU vmap emulation cannot overlap, so this just proves the staged
+    # trace is not slower to execute than the monolithic one) --------------
+    p2 = 2
+    comm2 = comm_lib.Communicator.world((AXIS,), (p2,), method="ring")
+    stages2, sched2 = overlap_schedule(model, sync, p2)
+    gfn2 = make_overlap_grad_fn(model, stages2, sched2, comm2)
+    stacked_p = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (p2,) + x.shape), params)
+    sb = _batch(b=p2 * B)
+    stacked_b = jax.tree.map(
+        lambda x: x.reshape((p2, B) + x.shape[1:]), sb)
+
+    @jax.jit
+    def staged_step(ps, bs):
+        def dev(pb, ax):
+            return gfn2(pb[0], pb[1])
+        return C.emulate(dev, (ps, bs))
+
+    us_staged = timeit(staged_step, stacked_p, stacked_b, warmup=1, iters=3)
+
+    emit("overlap/bucket_bytes_vs_monolithic", float(sum(per_bucket)),
+         f"monolithic={mono};ratio={ratio:.6f}")
+    emit("overlap/fraction", meas["fraction"] * 1e6,
+         f"modeled={modeled:.6f};measured={meas['fraction']:.6f};"
+         f"rs_ppermutes={meas['rs_ppermute_count']};"
+         f"expected_ppermutes={schedule.num_buckets * (P - 1)}")
+    emit("overlap/staged_grad_fn", us_staged,
+         f"p={p2};model_step_no_overlap_s={proj['step_no_overlap_s']:.4f};"
+         f"model_step_overlap_s={proj['step_overlap_s']:.4f};"
+         f"model_speedup={proj['speedup']:.3f}x")
+
+    result = {
+        "p": P,
+        "num_buckets": schedule.num_buckets,
+        "payload_bytes": spec.size * 4,
+        "bucket_leg_bytes_per_dev": {
+            "per_bucket": [int(x) for x in per_bucket],
+            "sum": int(sum(per_bucket)),
+            "monolithic": int(mono),
+            "ratio": ratio,
+        },
+        "rs_ppermutes": {
+            "traced": meas["rs_ppermute_count"],
+            "expected": schedule.num_buckets * (P - 1),
+        },
+        "overlap_fraction": {
+            "modeled": modeled,
+            "measured": meas["fraction"],
+            "rs_bytes_before_last_compute":
+                meas["rs_bytes_before_last_compute"],
+            "rs_bytes_total": meas["rs_bytes_per_dev"],
+        },
+        "wire_ratio_vs_f32": wire_ratio,
+        "model_v5e": proj,
+        "us_per_staged_grad_fn_p2": us_staged,
+    }
+    out = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_overlap.json")
+    with open(out, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"# wrote {out}")
+
+
+if __name__ == "__main__":
+    run()

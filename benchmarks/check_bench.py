@@ -28,6 +28,14 @@ only the structural quantities the papers' claims rest on:
                           cost model (1.0, hard), six-mode accuracy
                           delta under drop+straggler (<= 0.05) and the
                           elastic kill+straggler delta (<= 0.01)
+  BENCH_overlap.json      backward-overlapped bucketed reduce-scatter:
+                          per-bucket leg bytes sum vs the monolithic
+                          flat leg (1.0, hard — bucketing must conserve
+                          wire bytes), measured overlap fraction (from
+                          top-level jaxpr eqn order) vs the cost-model
+                          fraction, RS ppermute count vs the schedule's
+                          num_buckets·(p−1), and the codec ratios on the
+                          bucketed legs (int8 <= 0.30, bf16 <= 0.50)
 """
 from __future__ import annotations
 
@@ -48,6 +56,7 @@ REQUIRED = (
     "BENCH_hierarchy.json",
     "BENCH_wire.json",
     "BENCH_faults.json",
+    "BENCH_overlap.json",
 )
 
 
@@ -199,6 +208,33 @@ def check(baseline_dir: str, current_dir: str) -> int:
         for mode, m in sorted(cur["esgd_kill"].items()):
             c.bound(f"faults.esgd_kill.{mode}.abs_delta",
                     m["abs_delta"], 0.01)
+
+    base = _load(baseline_dir, "BENCH_overlap.json")
+    cur = _load(current_dir, "BENCH_overlap.json")
+    if base and cur:
+        # byte conservation is exact by construction — gate against the
+        # literal 1.0, not the baseline (a drifted baseline would
+        # green-wash a leg that started moving extra bytes)
+        c.ratio("overlap.bucket_legs_vs_monolithic",
+                cur["bucket_leg_bytes_per_dev"]["ratio"], 1.0)
+        # the traced program's eqn order must realize the model's claim
+        c.ratio("overlap.fraction.measured_vs_modeled",
+                cur["overlap_fraction"]["measured"],
+                cur["overlap_fraction"]["modeled"])
+        c.ratio("overlap.fraction.modeled",
+                cur["overlap_fraction"]["modeled"],
+                base["overlap_fraction"]["modeled"])
+        # fewer ppermutes = a bucket leg collapsed (or was hoisted out of
+        # the unrolled ring); more = a bucket split into extra schedules
+        c.count("overlap.rs_ppermutes",
+                cur["rs_ppermutes"]["traced"],
+                cur["rs_ppermutes"]["expected"])
+        for wd, limit in (("int8", 0.30), ("bf16", 0.50)):
+            c.ratio(f"overlap.wire_ratio.{wd}",
+                    cur["wire_ratio_vs_f32"][wd],
+                    base["wire_ratio_vs_f32"][wd])
+            c.bound(f"overlap.wire_ratio.{wd}",
+                    cur["wire_ratio_vs_f32"][wd], limit)
 
     if c.checked == 0 and not c.failures:
         print("error: no BENCH_*.json pairs found to compare",

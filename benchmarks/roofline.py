@@ -28,8 +28,20 @@ def fmt_row(r: dict) -> str:
         f"| {r['arch']} | {r['shape']} | {roof['compute_s']*1e3:.1f} | "
         f"{roof['memory_s']*1e3:.1f} | {roof['collective_s']*1e3:.1f} | "
         f"**{roof['dominant']}** | {roof['useful_flops_ratio']:.2f} | "
-        f"{bpd:.1f} | |"
+        f"{bpd:.1f} | {overlap_note(r)} |"
     )
+
+
+def overlap_note(r: dict) -> str:
+    """Render the backward-overlap projection a row may carry (written
+    by launch.analysis.overlap_projection): the modeled step time with
+    and without the bucketed reduce-scatter hidden behind backprop."""
+    ov = r.get("overlap")
+    if not ov:
+        return ""
+    return (f"overlap f={ov['overlap_fraction']:.2f}: "
+            f"{ov['step_no_overlap_s']*1e3:.1f}→"
+            f"{ov['step_overlap_s']*1e3:.1f} ms")
 
 
 HEADER = (

@@ -210,6 +210,11 @@ class TrainSettings:
     # SGD a bf16 momentum keeps the per-leaf path that honors it.
     state_dtype: str = "f32"
     fsdp: bool = False
+    # backward-overlapped bucketed reduce-scatter: issue each schedule
+    # bucket's ring leg mid-backward (SyncConfig.overlap); forces
+    # num_rings=1 in the lowered config — the buckets are the schedules
+    overlap: bool = False
+    overlap_buckets: int = 4
     microbatch: int = 1
     # deterministic fault schedule (core/faults.py compact string form,
     # e.g. "kill@12:unit=1;straggle@0:unit=3:factor=4"); "" = clean run
@@ -231,11 +236,13 @@ class TrainSettings:
         return SyncConfig(
             mode=self.sync_mode, num_clients=self.num_clients,
             esgd_alpha=self.esgd_alpha, esgd_interval=self.esgd_interval,
-            allreduce_method=self.allreduce_method, num_rings=self.num_rings,
+            allreduce_method=self.allreduce_method,
+            num_rings=1 if self.overlap else self.num_rings,
             fused_update=self.fused_update, flat_exchange=self.flat_exchange,
             bucket_bytes=self.bucket_bytes,
             wire_dtype=None if self.wire_dtype == "f32" else self.wire_dtype,
             fsdp=self.fsdp,
+            overlap=self.overlap, overlap_buckets=self.overlap_buckets,
         )
 
     def _state_dtype(self):

@@ -82,6 +82,12 @@ class AlgoConfig:
     # client update) instead of per-leaf tree.maps
     flat_exchange: bool = True
     bucket_bytes: Optional[int] = None
+    # backward-overlapped bucketed reduce-scatter (launch/train.py's
+    # staged grad fn): the intra-client gradient leg's reduce-scatter
+    # half hides behind backward compute; the simulated step time pays
+    # only the exposed remainder (cost_model.overlapped_step_time)
+    overlap: bool = False
+    overlap_buckets: int = 4
     # fault injection (core/faults.py): a FaultSchedule or its compact
     # string form ("kill@12:unit=1;straggle@0:unit=3:factor=4"); None
     # runs the clean path BIT-IDENTICALLY to pre-fault configs
@@ -99,6 +105,14 @@ class AlgoConfig:
     push_backoff: float = 0.05
 
     def __post_init__(self):
+        if self.overlap and self.allreduce_method not in (
+                "ring", "multi_ring", "scatter_gather"):
+            raise ValueError(
+                f"overlap=True issues per-bucket ring reduce-scatter legs "
+                f"mid-backward, but allreduce_method="
+                f"{self.allreduce_method!r} is not ring-family — set e.g. "
+                "allreduce_method='ring' (psum/tree cannot be split at "
+                "the schedule-bucket boundaries)")
         if self.compress_push:
             import warnings
 
@@ -233,6 +247,13 @@ def _comm_times(cfg: AlgoConfig) -> dict[str, float]:
         cfg.model_bytes, per_client, cfg.net, cfg.allreduce_method,
         wire_dtype=cfg.collective_wire_dtype,
     )
+    if cfg.overlap:
+        # exposed comm time only: the hidden reduce-scatter fraction
+        # already rides behind cfg.compute_time in the step accounting
+        bb = [cfg.model_bytes / cfg.overlap_buckets] * cfg.overlap_buckets
+        intra = cost_model.overlapped_step_time(
+            cfg.compute_time, bb, per_client, cfg.net,
+            wire_dtype=cfg.collective_wire_dtype) - cfg.compute_time
     ps = cost_model.ps_pushpull_time(
         cfg.model_bytes, cfg.effective_clients, cfg.num_servers, cfg.net,
         wire_dtype=cfg.effective_wire_dtype,

@@ -340,6 +340,54 @@ def allreduce(x: jax.Array, axis_name: str, method: Method = "ring",
 
 
 # --------------------------------------------------------------------------
+# Schedule-bucketed legs (backward overlap)
+# --------------------------------------------------------------------------
+#
+# A ``flatbuf.BucketSchedule`` partitions the packed buffer at stage
+# boundaries; each bucket gets its OWN single-ring reduce-scatter leg so
+# the grad fn can issue bucket b's leg while later (earlier-in-forward)
+# stages are still differentiating. One trailing allgather moves the
+# whole updated shard, and ``sched_reassemble`` statically re-stitches
+# the device-major gather into the packed layout. Multi-axis (pod×data)
+# nesting lives on ``Communicator.reduce_scatter_bucket`` /
+# ``allgather_sched``, which compose these per level.
+
+def sched_reduce_scatter_bucket(seg: jax.Array, axis_name: str,
+                                schedule, b: int, *,
+                                wire_dtype: "str | None" = None) -> jax.Array:
+    """One schedule bucket's ring reduce-scatter leg (single axis).
+
+    ``seg`` is bucket ``b``'s packed ``(sizes[b],)`` segment (or its
+    already-padded ``(p*chunks[b],)`` form); returns this device's
+    fully-reduced ``(chunks[b],)`` chunk. Single-ring on purpose: the
+    schedule buckets are the overlap units — extra rings inside one
+    would fight the backward-stage interleave.
+    """
+    padded = schedule.bucket_padded(b)
+    if seg.size < padded:
+        seg = jnp.pad(seg.reshape(-1), (0, padded - seg.size))
+    return ring_reduce_scatter(seg, axis_name, num_rings=1,
+                               wire_dtype=wire_dtype)
+
+
+def sched_reassemble(gathered: jax.Array, schedule) -> jax.Array:
+    """Invert the scheduled allgather: ``gathered`` is the device-major
+    ``(p * shard_size,)`` concatenation of per-device schedule shards
+    (each shard the bucket-major concat of its per-bucket chunks);
+    returns the ``(spec.size,)`` packed buffer. Pure static slices."""
+    m = schedule.shard_size
+    offs = schedule.shard_offsets
+    parts = []
+    for b in range(schedule.num_buckets):
+        cb = schedule.chunks[b]
+        pieces = [gathered[d * m + offs[b]: d * m + offs[b] + cb]
+                  for d in range(schedule.p)]
+        full = pieces[0] if len(pieces) == 1 else jnp.concatenate(pieces)
+        parts.append(full[: schedule.sizes[b]])
+    return jnp.concatenate(parts)
+
+
+# --------------------------------------------------------------------------
 # Tensor (fused-pytree) collectives — the paper's group-of-vectors object
 # --------------------------------------------------------------------------
 #

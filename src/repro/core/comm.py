@@ -348,6 +348,60 @@ class Communicator:
             out = C.shard_select(out, a, num_rings=nr)
         return out
 
+    # -- schedule-bucketed legs (backward overlap) ---------------------------
+    def reduce_scatter_bucket(self, seg: jax.Array, schedule,
+                              b: int) -> jax.Array:
+        """One schedule bucket's reduce-scatter leg over the whole group,
+        nested per axis (pod-level first, then data-level on the shard —
+        the same hierarchy as ``reduce_scatter``, at the same telescoped
+        (p-1)/p·size_b wire bytes). Single-ring per bucket: the schedule
+        buckets ARE the overlap units. Returns this device's
+        ``(chunks[b],)`` fully-reduced chunk."""
+        from repro.core import collectives as C
+
+        padded = schedule.bucket_padded(b)
+        out = seg.reshape(-1)
+        if out.size < padded:
+            out = jnp.pad(out, (0, padded - out.size))
+        for a in self.axes:
+            out = C.ring_reduce_scatter(out, a, num_rings=1,
+                                        wire_dtype=self.wire)
+        return out
+
+    def allgather_sched(self, shard: jax.Array, schedule) -> jax.Array:
+        """The ONE trailing allgather of the overlapped step: gather the
+        whole per-device schedule shard (bucket-major concat of chunks,
+        length ``schedule.shard_size``) level by level, innermost axis
+        first, then statically re-stitch the device-major result into
+        the ``(spec.size,)`` packed layout."""
+        from repro.core import collectives as C
+
+        out = shard.reshape(-1)
+        for a in reversed(self.axes):
+            out = C.ring_allgather(out, a, num_rings=1,
+                                   wire_dtype=self.wire)
+        return C.sched_reassemble(out, schedule)
+
+    def shard_select_sched(self, buf: jax.Array, schedule) -> jax.Array:
+        """This device's schedule shard of a *replicated* packed buffer —
+        per bucket, exactly the chunk ``reduce_scatter_bucket`` leaves
+        here; concatenated bucket-major to pair with the reduced grads.
+        Static slices + per-axis selection, no communication."""
+        from repro.core import collectives as C
+
+        flat = buf.reshape(-1)
+        parts = []
+        for b in range(schedule.num_buckets):
+            s, n = schedule.starts[b], schedule.sizes[b]
+            seg = flat[s:s + n]
+            pad = schedule.bucket_padded(b) - n
+            if pad:
+                seg = jnp.pad(seg, (0, pad))
+            for a in self.axes:
+                seg = C.shard_select(seg, a, num_rings=1)
+            parts.append(seg)
+        return parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+
     # -- tensor (fused-pytree) collectives ----------------------------------
     def tensor_allreduce(self, tree: Any, *, mean: bool = False,
                          spec: Optional[flatbuf.FlatBuffer] = None) -> Any:

@@ -125,6 +125,70 @@ def reconfig_time(state_nbytes: float, p_old: int, p_new: int,
     return resplit_time(p_new, net) + moved * net.beta
 
 
+def reduce_scatter_time(nbytes: float, p: int, net: NetParams,
+                        wire_dtype: "str | None" = None) -> float:
+    """One ring reduce-scatter leg: the allreduce's first half — (p−1)
+    latency hops, (p−1)/p·n transfer (wire-scaled) and reduction."""
+    if p <= 1:
+        return 0.0
+    return (
+        (p - 1) * net.alpha
+        + (p - 1) / p * wire_bytes(nbytes, wire_dtype) * net.beta
+        + (p - 1) / p * nbytes * net.gamma
+    )
+
+
+def allgather_time(nbytes: float, p: int, net: NetParams,
+                   wire_dtype: "str | None" = None) -> float:
+    """One ring allgather leg: the allreduce's second half (no γ)."""
+    if p <= 1:
+        return 0.0
+    return (
+        (p - 1) * net.alpha
+        + (p - 1) / p * wire_bytes(nbytes, wire_dtype) * net.beta
+    )
+
+
+def overlap_fraction(bucket_bytes: "list[float] | tuple",
+                     p: int) -> float:
+    """STRUCTURAL fraction of the gradient reduce-scatter's wire bytes
+    issued while backward compute remains.
+
+    The staged backward issues bucket legs last-stage-first, so bucket 0
+    (the embedding stage, differentiated last) is the final leg — the
+    only one with no backward compute left to hide behind. Wire-dtype
+    scaling applies to every bucket alike, so it cancels:
+    ``1 − bucket_bytes[0] / sum(bucket_bytes)``. 0.0 for a single bucket
+    or p ≤ 1 (no wire leg at all). This is exactly what the jaxpr
+    measures: ppermute bytes BEFORE the last backward-compute equation
+    over total reduce-scatter ppermute bytes (bench_overlap.py gates the
+    match)."""
+    total = sum(bucket_bytes)
+    if p <= 1 or len(bucket_bytes) <= 1 or total <= 0:
+        return 0.0
+    return 1.0 - bucket_bytes[0] / total
+
+
+def overlapped_step_time(compute_time: float,
+                         bucket_bytes: "list[float] | tuple", p: int,
+                         net: NetParams,
+                         wire_dtype: "str | None" = None) -> float:
+    """Modeled wall time of one backward-overlapped step.
+
+    The hidden ``overlap_fraction`` of the reduce-scatter leg rides
+    behind backward compute (bounded by the compute itself); the exposed
+    remainder, the trailing allgather, and the extra per-bucket ring
+    latencies pay in full. With one bucket (or p ≤ 1) this reduces to
+    ``compute + reduce_scatter_time + allgather_time`` — the
+    non-overlapped fused step."""
+    nbytes = sum(bucket_bytes)
+    rs = reduce_scatter_time(nbytes, p, net, wire_dtype)
+    ag = allgather_time(nbytes, p, net, wire_dtype)
+    extra_alpha = max(len(bucket_bytes) - 1, 0) * max(p - 1, 0) * net.alpha
+    hidden = min(overlap_fraction(bucket_bytes, p) * rs, compute_time)
+    return compute_time + (rs - hidden) + ag + extra_alpha
+
+
 def ring_allreduce_time(nbytes: float, p: int, net: NetParams,
                         wire_dtype: "str | None" = None) -> float:
     """β (transfer) pays the wire-dtype ratio; γ (local reduction) stays

@@ -62,6 +62,15 @@ class SyncConfig:
     # full-buffer patterns the codec cannot ride.
     wire_dtype: Optional[str] = None
     fsdp: bool = False  # ZeRO-3: params/opt-state also sharded over 'data'
+    # backward-overlapped bucketed reduce-scatter: the grad fn stages
+    # backprop (Model.overlap_stages) and issues each schedule bucket's
+    # ring reduce-scatter leg as soon as that bucket's grads exist —
+    # while earlier layers are still differentiating — so the wire leg
+    # hides behind backward compute; the fused update then consumes the
+    # bucket-major shard and runs ONE trailing allgather. Requires the
+    # fused flat path + a ring-family method (see validate).
+    overlap: bool = False
+    overlap_buckets: int = 4  # schedule buckets == backward stages
 
     def validate(self, mesh: Optional[Mesh] = None) -> None:
         """Check the config against a mesh BEFORE any step is traced.
@@ -94,6 +103,62 @@ class SyncConfig:
                 f"not one of {RING_METHODS} — set e.g. "
                 "allreduce_method='ring' (psum is XLA-native and tree "
                 "moves full buffers; neither carries the int8/bf16 codec)")
+        if self.overlap:
+            if self.allreduce_method not in RING_METHODS:
+                raise ValueError(
+                    f"overlap=True issues per-bucket ring reduce-scatter "
+                    f"legs mid-backward, but allreduce_method="
+                    f"{self.allreduce_method!r} is not one of "
+                    f"{RING_METHODS} — set e.g. allreduce_method='ring' "
+                    "(psum is one XLA-chosen collective and tree moves "
+                    "full buffers; neither can be split at the schedule-"
+                    "bucket boundaries the backward stages produce)")
+            if not self.fused_update:
+                raise ValueError(
+                    "overlap=True rides the fused flat path — the staged "
+                    "grad fn hands the update ONE bucket-major shard "
+                    "buffer, which only the fused Pallas kernel consumes; "
+                    "set fused_update=True (per-leaf updates would need "
+                    "the full gradient pytree the overlapped step never "
+                    "materializes)")
+            if self.mode != "mpi_sgd":
+                raise ValueError(
+                    f"overlap=True is the mpi_sgd (C=1) gradient leg — "
+                    f"mode={self.mode!r} runs per-client local updates "
+                    "(p=1 geometry, no ring leg to hide); drop overlap "
+                    "or use mode='mpi_sgd'")
+            if self.overlap_buckets < 1:
+                raise ValueError(
+                    f"overlap_buckets={self.overlap_buckets} — need >= 1 "
+                    "(1 = single degenerate bucket, the non-overlapped "
+                    "schedule)")
+            if self.bucket_bytes:
+                raise ValueError(
+                    "overlap=True derives its bucket partition from the "
+                    "backward stages (overlap_buckets), not from byte "
+                    "counts — bucket_bytes splits one monolithic leg into "
+                    "ring schedules and would fight the stage boundaries; "
+                    "set bucket_bytes=None")
+            if self.num_rings > 1:
+                raise ValueError(
+                    f"overlap=True runs each schedule bucket as its own "
+                    f"single-ring leg — the buckets ARE the independent "
+                    f"schedules, so num_rings={self.num_rings} has no "
+                    "slot to ride; set num_rings=1 (TrainSettings."
+                    "sync_config does this automatically)")
+            if self.fsdp:
+                raise ValueError(
+                    "overlap=True assumes replicated params (the staged "
+                    "grad fn re-stages the full param tree per device); "
+                    "fsdp=True shards them over 'data' — pick one")
+            if mesh is not None:
+                raise ValueError(
+                    "overlap=True is collective-explicit (the per-bucket "
+                    "ppermute legs are issued by the traced backward, "
+                    "vmap emulation or shard_map worker programs) — with "
+                    "an ambient mesh GSPMD owns the gradient collectives "
+                    "and would not interleave them; drop the mesh or "
+                    "overlap")
         if mesh is None or self.num_clients <= 1:
             return
         C = self.num_clients

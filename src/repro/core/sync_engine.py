@@ -47,7 +47,9 @@ from repro.core.hierarchy import SyncConfig
 from repro.optim.sgd import (
     FLAT_STATE_STREAMS,
     Optimizer,
+    optstate_sched_init,
     optstate_shard_init,
+    overlap_update,
     scatter_update_gather,
 )
 
@@ -139,18 +141,38 @@ class FlatEngine(SyncEngine):
 
     fused = True
 
+    # backward-overlapped path (SyncConfig.overlap): the schedule over
+    # the STAGED param spec (flatbuf.BucketSchedule, bucket == backward
+    # stage), built at the gradient group's p. None = monolithic leg.
+    schedule: Optional[flatbuf.BucketSchedule] = None
+
     def _num_rings(self) -> int:
         return self.comm.rings_for(self.spec.nbytes)
 
     def init_opt(self, params: Any) -> Any:
         # local (p=1) geometry; device-sharded drivers re-init per device
-        # with optstate_shard_init(hyper, spec, p, ...)
+        # with optstate_shard_init(hyper, spec, p, ...) — or, overlapped,
+        # optstate_sched_init(hyper, schedule) at the device schedule
+        if self.schedule is not None:
+            return optstate_sched_init(self.optimizer.hyper,
+                                       self.schedule.with_p(1))
         return optstate_shard_init(self.optimizer.hyper, self.spec, 1,
                                    self._num_rings())
 
     def update(self, grads: Any, opt_state: Any, params: Any):
         return scatter_update_gather(
             self.spec, grads, params, opt_state,
+            hyper=self.optimizer.hyper, comm=self.comm,
+        )
+
+    def update_overlapped(self, g_shard: Any, staged_params: Any,
+                          opt_state: Any):
+        """The post-backward half of the overlapped step: fused kernel on
+        the bucket-major shard + the ONE trailing allgather. ``g_shard``
+        comes from the staged grad fn (per-bucket reduce-scatter legs
+        already issued mid-backward); returns staged params."""
+        return overlap_update(
+            self.schedule, g_shard, staged_params, opt_state,
             hyper=self.optimizer.hyper, comm=self.comm,
         )
 
@@ -174,8 +196,12 @@ class FlatEngine(SyncEngine):
             buf, streams = opt_state, 1
         # C>1 vmaps the update per client, so each client is p=1 geometry
         p = 1 if num_clients > 1 else self.comm.resolve_size()
-        want = flatbuf.shard_size(self.spec, p, self.sync.num_rings,
-                                  self.sync.bucket_bytes)
+        if self.schedule is not None:
+            # overlapped layout: bucket-major concat of per-bucket chunks
+            want = self.schedule.with_p(p).shard_size
+        else:
+            want = flatbuf.shard_size(self.spec, p, self.sync.num_rings,
+                                      self.sync.bucket_bytes)
         per_client = buf.size // (streams * max(num_clients, 1))
         if per_client != want:
             raise ValueError(
@@ -193,7 +219,9 @@ class FlatEngine(SyncEngine):
 def make_sync_engine(optimizer: Optimizer, sync: SyncConfig, mesh=None, *,
                      comm: Optional[comm_lib.Communicator] = None,
                      axis_name: Optional[str] = None,
-                     spec: Optional[flatbuf.FlatBuffer] = None) -> SyncEngine:
+                     spec: Optional[flatbuf.FlatBuffer] = None,
+                     schedule: Optional[flatbuf.BucketSchedule] = None,
+                     ) -> SyncEngine:
     """Resolve the strategy for (optimizer, sync, mesh) once.
 
     ``comm`` is the gradient group the update leg syncs over; omitted,
@@ -217,6 +245,22 @@ def make_sync_engine(optimizer: Optimizer, sync: SyncConfig, mesh=None, *,
     flat_ex = flat_exchange_active(sync, mesh)
     if fused and spec is None:
         raise ValueError("flat-update engine needs the FlatBuffer spec")
-    cls = FlatEngine if fused else SyncEngine
-    return cls(optimizer, sync, comm=comm, flat_exchange=flat_ex,
-               spec=spec)
+    if sync.overlap and not fused:
+        raise ValueError(
+            "SyncConfig.overlap=True but the fused flat update cannot "
+            "engage for this (optimizer, sync, mesh) — overlap rides the "
+            "fused path only (core.sync_engine.flat_update_supported): "
+            "use momentum SGD / AdaGrad / AdamW with fused_update=True "
+            "and no ambient mesh")
+    if sync.overlap and schedule is None:
+        raise ValueError(
+            "overlap engine needs the BucketSchedule — build it with "
+            "launch.train.overlap_schedule(model, sync, p) from the "
+            "model's staged param spec")
+    if not fused:
+        schedule = None
+    if fused:
+        return FlatEngine(optimizer, sync, comm=comm, flat_exchange=flat_ex,
+                          spec=spec, schedule=schedule)
+    return SyncEngine(optimizer, sync, comm=comm, flat_exchange=flat_ex,
+                      spec=spec)

@@ -164,6 +164,39 @@ def roofline_from_analysis(cost: dict, coll: CollectiveStats, chips: int,
     )
 
 
+def overlap_projection(nbytes: float, p: int, compute_s: float, *,
+                       bucket_bytes: "list[float] | None" = None,
+                       num_buckets: int = 4,
+                       wire_dtype: "str | None" = None,
+                       net=None) -> dict:
+    """Modeled step time with and without the backward-overlapped
+    bucketed reduce-scatter, next to the wire-dtype projection.
+
+    ``nbytes`` is the packed gradient payload (f32 bytes), ``p`` the
+    ring size, ``compute_s`` the per-step compute time the bucket legs
+    hide behind. ``bucket_bytes`` gives the real schedule partition
+    (e.g. from ``flatbuf.BucketSchedule.sizes`` × itemsize); omitted,
+    an even ``num_buckets`` split stands in. Keys: ``overlap_fraction``
+    (structural — cost_model.overlap_fraction), ``step_no_overlap_s``,
+    ``step_overlap_s``, ``hidden_s``, ``speedup``.
+    """
+    from repro.core import cost_model
+
+    net = net or cost_model.tpu_v5e()
+    bb = (list(bucket_bytes) if bucket_bytes
+          else [nbytes / num_buckets] * num_buckets)
+    no = cost_model.overlapped_step_time(compute_s, [nbytes], p, net,
+                                         wire_dtype)
+    ov = cost_model.overlapped_step_time(compute_s, bb, p, net, wire_dtype)
+    return {
+        "overlap_fraction": cost_model.overlap_fraction(bb, p),
+        "step_no_overlap_s": no,
+        "step_overlap_s": ov,
+        "hidden_s": no - ov,
+        "speedup": no / ov if ov else 1.0,
+    }
+
+
 def train_model_flops(param_count: int, active_param_count: int,
                       tokens: int) -> float:
     """6·N·D (N = active params for MoE)."""

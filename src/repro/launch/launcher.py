@@ -47,6 +47,12 @@ class JobSpec:
     # flat optimizer-state stream dtype ("f32" | "bf16" — threaded to
     # --state-dtype; bf16 halves AdaGrad/AdamW state bytes per device)
     state_dtype: str = "f32"
+    # backward-overlapped bucketed reduce-scatter (threaded to --overlap /
+    # --overlap-buckets): each schedule bucket's ring leg is issued while
+    # later layers still differentiate, hiding the wire leg behind
+    # backprop; needs the fused flat path
+    overlap: bool = False
+    overlap_buckets: int = 4
     # deterministic fault schedule every client ships with (core/faults.py
     # string form — threaded to --faults; "" = clean)
     faults: str = ""
@@ -64,6 +70,19 @@ class JobSpec:
         if self.state_dtype not in ("f32", "bf16"):
             raise ValueError(
                 f"state_dtype must be f32/bf16, got {self.state_dtype!r}")
+        if self.overlap and not self.fused_update:
+            raise ValueError(
+                "overlap=True rides the fused flat path — the staged "
+                "backward hands the update one bucket-major shard buffer; "
+                "drop --no-fused-update or drop --overlap")
+        if self.overlap and self.bucket_bytes:
+            raise ValueError(
+                "overlap=True derives its bucket partition from the "
+                "backward stages (overlap_buckets), not byte counts — "
+                "drop --bucket-bytes or --overlap")
+        if self.overlap_buckets < 1:
+            raise ValueError(
+                f"overlap_buckets must be >= 1, got {self.overlap_buckets}")
         if self.num_workers % self.num_clients:
             raise ValueError("#workers must divide evenly into #clients")
         if self.num_servers < 0:
@@ -117,6 +136,9 @@ def build_job(spec: JobSpec) -> dict:
                    if spec.wire_dtype != "f32" else "")
                 + (f" --state-dtype {spec.state_dtype}"
                    if spec.state_dtype != "f32" else "")
+                + (" --overlap" if spec.overlap else "")
+                + (f" --overlap-buckets {spec.overlap_buckets}"
+                   if spec.overlap and spec.overlap_buckets != 4 else "")
                 + (f" --faults '{spec.faults}'" if spec.faults else "")
                 + (f" --barrier-timeout {spec.barrier_timeout:g}"
                    if spec.barrier_timeout else "")
@@ -139,6 +161,8 @@ def build_job(spec: JobSpec) -> dict:
                  "bucket_bytes": spec.bucket_bytes,
                  "wire_dtype": spec.wire_dtype,
                  "state_dtype": spec.state_dtype,
+                 "overlap": spec.overlap,
+                 "overlap_buckets": spec.overlap_buckets,
                  "faults": spec.faults,
                  "barrier_timeout": spec.barrier_timeout},
         "mesh": spec.mesh,
@@ -202,6 +226,11 @@ def main() -> None:  # pragma: no cover
     ap.add_argument("--state-dtype", default="f32",
                     choices=("f32", "bf16"),
                     help="flat optimizer-state stream dtype for every worker")
+    ap.add_argument("--overlap", action="store_true",
+                    help="backward-overlapped bucketed reduce-scatter for "
+                         "every worker (hide the wire leg behind backprop)")
+    ap.add_argument("--overlap-buckets", type=int, default=4,
+                    help="schedule buckets == backward stages")
     ap.add_argument("--faults", default="",
                     help="deterministic fault schedule for every client "
                          "(core/faults.py string form)")
@@ -217,6 +246,8 @@ def main() -> None:  # pragma: no cover
                    bucket_bytes=args.bucket_bytes,
                    wire_dtype=args.wire_dtype,
                    state_dtype=args.state_dtype,
+                   overlap=args.overlap,
+                   overlap_buckets=args.overlap_buckets,
                    faults=args.faults,
                    barrier_timeout=args.barrier_timeout)
     for p in emit_scripts(spec, args.outdir):

@@ -73,9 +73,14 @@ from repro.core.compat import shard_map
 from repro.core.elastic import elastic_exchange_sharded
 from repro.core.hierarchy import SyncConfig, should_elastic_sync
 from repro.core.sync_engine import flat_update_supported, make_sync_engine
-from repro.launch.train import grad_spec, make_grad_fn
+from repro.launch.train import (
+    grad_spec,
+    make_grad_fn,
+    make_overlap_grad_fn,
+    overlap_schedule,
+)
 from repro.models.model import Model
-from repro.optim.sgd import Optimizer, optstate_shard_init
+from repro.optim.sgd import Optimizer, optstate_sched_init, optstate_shard_init
 
 AXIS = "dev"                       # the 1-axis layout's single axis
 POD_AXIS, DATA_AXIS = "pod", "data"  # the 2-axis (hierarchy) layout
@@ -163,7 +168,13 @@ def make_driver_state(model: Model, optimizer: Optimizer, sync: SyncConfig,
     nr = grad_comm.rings_for(spec.nbytes)
     n = world.static_size
     params = model.init(rng)
-    opt0 = optstate_shard_init(optimizer.hyper, spec, gp, nr)
+    if sync.overlap:
+        # overlapped layout: bucket-major concat of per-bucket chunks
+        # over the STAGED spec, at the gradient group's p
+        _, schedule = overlap_schedule(model, sync, gp)
+        opt0 = optstate_sched_init(optimizer.hyper, schedule)
+    else:
+        opt0 = optstate_shard_init(optimizer.hyper, spec, gp, nr)
 
     def stack(tree):
         return jax.tree.map(
@@ -202,13 +213,32 @@ def make_device_step(model: Model, optimizer: Optimizer, sync: SyncConfig,
         world = comm_lib.from_sync(sync, (axis_name,))
     grad_comm, ex_comm = sync_comms(sync, world)
     spec = grad_spec(model)
+    stages = schedule = None
+    if sync.overlap:
+        if microbatch > 1:
+            raise ValueError(
+                "overlap=True with microbatch>1 would re-issue every "
+                "schedule bucket's ring leg per accumulation step (M× "
+                "the wire bytes overlap exists to hide); accumulate "
+                "without overlap, or raise the per-step batch instead")
+        stages, schedule = overlap_schedule(model, sync,
+                                            grad_comm.resolve_size())
     engine = make_sync_engine(optimizer, sync, None, comm=grad_comm,
-                              spec=spec)
-    grad_fn = make_grad_fn(model, microbatch)
+                              spec=spec, schedule=schedule)
+    grad_fn = (make_overlap_grad_fn(model, stages, schedule, grad_comm)
+               if sync.overlap else make_grad_fn(model, microbatch))
 
     def device_step(state, batch):
-        loss, metrics, grads = grad_fn(state["params"], batch)
-        new_p, new_o = engine.update(grads, state["opt"], state["params"])
+        if sync.overlap:
+            loss, metrics, g_shard = grad_fn(state["params"], batch)
+            staged = stages.stage(state["params"])
+            new_staged, new_o = engine.update_overlapped(
+                g_shard, staged, state["opt"])
+            new_p = stages.unstage(new_staged)
+        else:
+            loss, metrics, grads = grad_fn(state["params"], batch)
+            new_p, new_o = engine.update(grads, state["opt"],
+                                         state["params"])
         metrics = {"loss": loss, **metrics}
         metrics = jax.tree.map(world.pmean, metrics)
         return dict(state, params=new_p, opt=new_o,
@@ -439,6 +469,14 @@ def drive(model: Model, optimizer: Optimizer, sync: SyncConfig, batches,
         raise ValueError("pass p= (emulation) or mesh=")
     inj = injector(faults, seed=fault_seed)
     if inj is not None:
+        if sync.overlap:
+            raise ValueError(
+                "drive(faults=...) with SyncConfig.overlap=True is not "
+                "wired: the elastic re-layout "
+                "(membership.reshard_optstate) assumes the monolithic "
+                "ring-major shard geometry, not the bucket-major "
+                "overlapped schedule — run faults without overlap, or "
+                "overlap without faults")
         _check_driver_faults(inj, mesh, p)
     state = make_driver_state(model, optimizer, sync, p, rng)
     if mesh is None:

@@ -90,6 +90,86 @@ def _engine_spec(model: Model, optimizer: Optimizer, sync: SyncConfig,
     return None
 
 
+def overlap_schedule(model: Model, sync: SyncConfig, p: int = 1):
+    """(OverlapStages, BucketSchedule) for the backward-overlapped path.
+
+    The schedule is built ONCE over the STAGED param spec — the FlatBuffer
+    of ``stage(params)``'s stage-subtree tuple, whose leaf order groups
+    each backward stage's params contiguously so every schedule bucket is
+    a leaf-boundary (lane-aligned) slice. ``p`` is the gradient group's
+    shard count (``comm.resolve_size()``; 1 for the local state
+    geometry).
+    """
+    if model.overlap_stages is None:
+        raise ValueError(
+            f"SyncConfig.overlap=True but model {model.cfg.name!r} does "
+            "not publish overlap_stages — the staged-backward hook is "
+            "wired for the decoder family (models/model.py "
+            "_decoder_overlap_stages); run this architecture without "
+            "overlap")
+    stages = model.overlap_stages(sync.overlap_buckets)
+    abstract = jax.eval_shape(model.init, jax.random.key(0))
+    staged = jax.eval_shape(stages.stage, abstract)
+    spec = flatbuf.spec_for(staged)
+    counts = tuple(len(jax.tree_util.tree_leaves(s)) for s in staged)
+    return stages, flatbuf.bucket_schedule(spec, counts, p)
+
+
+def make_overlap_grad_fn(model: Model, stages, schedule,
+                         comm: comm_lib.Communicator) -> Callable:
+    """``(params, batch) -> (loss, metrics, g_shard)`` with the wire leg
+    issued DURING backward.
+
+    Forward runs stage-by-stage under ``jax.vjp`` (recording one pullback
+    per stage); backward then replays the pullbacks in reverse AT TRACE
+    TIME, and bucket ``s``'s ring reduce-scatter is emitted immediately
+    after stage ``s``'s pullback — so in the traced program every
+    bucket's ppermute chain except the first-issued one sits BEFORE
+    later (earlier-layer) backward compute, where the scheduler can
+    overlap wire and math. ``g_shard`` is the bucket-major
+    ``(schedule.shard_size,)`` concat of this device's reduced chunks —
+    feed it to ``FlatEngine.update_overlapped`` / ``optim.sgd.
+    overlap_update``.
+    """
+    S = stages.num_stages
+
+    def grad_fn(params, batch):
+        parts = stages.stage(params)
+        # forward: record one pullback per stage
+        vjps = [None] * S
+        carry = None
+        for s in range(S):
+            fn = stages.fns[s]
+            if S == 1:  # degenerate single bucket: the whole loss_fn
+                loss, vjps[0], metrics = jax.vjp(
+                    lambda p, fn=fn: fn(p, batch), parts[0], has_aux=True)
+            elif s == 0:
+                carry, vjps[0] = jax.vjp(
+                    lambda p, fn=fn: fn(p, batch), parts[0])
+            elif s < S - 1:
+                carry, vjps[s] = jax.vjp(
+                    lambda p, c, fn=fn: fn(p, c, batch), parts[s], carry)
+            else:
+                loss, vjps[s], metrics = jax.vjp(
+                    lambda p, c, fn=fn: fn(p, c, batch), parts[s], carry,
+                    has_aux=True)
+        # backward: reversed stage order (head first, embedding last),
+        # each bucket's reduce-scatter issued as soon as its grads exist
+        shards = [None] * S
+        ct: Any = jnp.ones((), loss.dtype)
+        for s in range(S - 1, -1, -1):
+            if s > 0:
+                gp, ct = vjps[s](ct)
+            else:
+                (gp,) = vjps[0](ct)
+            shards[s] = comm.reduce_scatter_bucket(
+                schedule.pack_bucket(s, gp), schedule, s)
+        g_shard = shards[0] if S == 1 else jnp.concatenate(shards)
+        return loss, metrics, g_shard
+
+    return grad_fn
+
+
 def make_train_state(model: Model, optimizer: Optimizer, sync: SyncConfig,
                      rng: jax.Array | None = None, *, abstract: bool = False,
                      mesh: Mesh | None = None):
@@ -102,8 +182,12 @@ def make_train_state(model: Model, optimizer: Optimizer, sync: SyncConfig,
     ``optim.sgd.optstate_shard_init``.
     """
     rng = jax.random.key(0) if rng is None else rng
+    schedule = None
+    if sync.overlap:
+        _, schedule = overlap_schedule(model, sync, 1)
     engine = make_sync_engine(optimizer, sync, mesh,
-                              spec=_engine_spec(model, optimizer, sync, mesh))
+                              spec=_engine_spec(model, optimizer, sync, mesh),
+                              schedule=schedule)
 
     def build(rng):
         params = model.init(rng)
@@ -234,9 +318,38 @@ def make_train_step(model: Model, optimizer: Optimizer, sync: SyncConfig,
         comm = comm_lib.from_sync(sync, axes)
     elif C > 1:
         comm = comm.local()
+    stages = schedule = None
+    if sync.overlap:
+        sync.validate(mesh)  # overlap guards apply even with no mesh
+        if microbatch > 1:
+            raise ValueError(
+                "overlap=True with microbatch>1 would re-issue every "
+                "schedule bucket's ring leg per accumulation step (M× the "
+                "wire bytes — exactly the traffic overlap exists to "
+                "hide); accumulate without overlap, or raise the per-step "
+                "batch instead")
+        stages, schedule = overlap_schedule(model, sync, comm.resolve_size())
     engine = make_sync_engine(
         optimizer, sync, mesh, comm=comm,
-        spec=_engine_spec(model, optimizer, sync, mesh))
+        spec=_engine_spec(model, optimizer, sync, mesh),
+        schedule=schedule)
+
+    if sync.overlap:
+        ograd_fn = make_overlap_grad_fn(model, stages, schedule, comm)
+
+        def step_overlap(state, batch):
+            engine.check_opt_layout(state["opt"])
+            loss, metrics, g_shard = ograd_fn(state["params"], batch)
+            staged = stages.stage(state["params"])
+            new_staged, new_o = engine.update_overlapped(
+                g_shard, staged, state["opt"])
+            return (
+                {"params": stages.unstage(new_staged), "opt": new_o,
+                 "step": state["step"] + 1},
+                {"loss": loss, **metrics},
+            )
+
+        return step_overlap  # overlap is mpi_sgd / C=1 (validate)
 
     # the gradient accumulator is a while-loop carry: without an explicit
     # constraint GSPMD replicates it (measured: +32 GB/dev on qwen3-4b),
@@ -390,6 +503,15 @@ def main() -> None:  # pragma: no cover (CLI driver; see tests/test_launch.py)
                     choices=("f32", "bf16"),
                     help="flat optimizer-state stream dtype (bf16 halves "
                          "AdaGrad/AdamW state bytes per device)")
+    ap.add_argument("--overlap", action="store_true", default=False,
+                    help="backward-overlapped bucketed reduce-scatter: "
+                         "stage backprop and issue each schedule bucket's "
+                         "ring leg while earlier layers still "
+                         "differentiate (forces a ring allreduce and "
+                         "num_rings=1)")
+    ap.add_argument("--overlap-buckets", type=int, default=4,
+                    help="schedule buckets == backward stages "
+                         "(1 = degenerate non-overlapped schedule)")
     ap.add_argument("--allreduce", default=None,
                     choices=("psum", "ring", "multi_ring", "tree",
                              "scatter_gather"),
@@ -409,7 +531,7 @@ def main() -> None:  # pragma: no cover (CLI driver; see tests/test_launch.py)
     args = ap.parse_args()
 
     method = args.allreduce or (
-        "psum" if args.wire_dtype == "f32" else "ring")
+        "psum" if args.wire_dtype == "f32" and not args.overlap else "ring")
     settings = TrainSettings(lr=args.lr, momentum=args.momentum,
                              optimizer_name=args.optimizer,
                              weight_decay=args.weight_decay,
@@ -419,6 +541,8 @@ def main() -> None:  # pragma: no cover (CLI driver; see tests/test_launch.py)
                              allreduce_method=method,
                              wire_dtype=args.wire_dtype,
                              state_dtype=args.state_dtype,
+                             overlap=args.overlap,
+                             overlap_buckets=args.overlap_buckets,
                              faults=args.faults,
                              barrier_timeout=args.barrier_timeout)
     settings.fault_schedule()  # parse errors surface before any compute
@@ -438,6 +562,8 @@ def main() -> None:  # pragma: no cover (CLI driver; see tests/test_launch.py)
           f"bucket_bytes={settings.bucket_bytes} "
           f"wire_dtype={settings.wire_dtype} "
           f"state_dtype={settings.state_dtype} "
+          f"overlap={settings.overlap} "
+          f"overlap_buckets={settings.overlap_buckets} "
           f"faults={settings.faults!r} "
           f"barrier_timeout={settings.barrier_timeout}", flush=True)
     _, hist = train_loop(model, optimizer, sync, None, pipe.epoch(0),

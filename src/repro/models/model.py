@@ -53,6 +53,38 @@ class Model:
     init_cache: Callable
     serve_step: Callable
     input_specs: Callable
+    # backward-overlap staging (optional): overlap_stages(num_buckets) ->
+    # OverlapStages splitting loss_fn into a chain of stages whose param
+    # subtrees become the reduce-scatter schedule buckets. None = the
+    # family has no staged form yet (overlap is rejected with a pointer).
+    overlap_stages: "Callable | None" = None
+
+
+@dataclass(frozen=True)
+class OverlapStages:
+    """``loss_fn`` as a chain of stages for backward-overlapped sync.
+
+    ``stage(params)`` splits the param tree into per-stage subtrees
+    (tuple, forward order); ``fns[0](p0, batch)`` produces the first
+    carry and ``fns[s](ps, carry, batch)`` the next, with the LAST stage
+    returning ``(loss, metrics)`` — composing all stages reproduces
+    ``loss_fn`` exactly (same ops, same order). ``unstage(tuple)``
+    inverts ``stage``. A leaf used by several stages (the tied embedding:
+    token lookup in stage 0, the logits einsum in the head) is a stage
+    param of ONLY its earliest stage and its VALUE rides the carry to
+    later stages — so each leaf lives in exactly one schedule bucket,
+    and its full gradient is complete exactly when its owning stage's
+    vjp runs (the carried value's cotangent flows back through the
+    intermediate stages' pass-throughs).
+    """
+
+    stage: Callable
+    fns: tuple
+    unstage: Callable
+
+    @property
+    def num_stages(self) -> int:
+        return len(self.fns)
 
 
 def _embed_init(key, cfg: ModelConfig, dtype):
@@ -197,7 +229,85 @@ def _build_decoder(cfg: ModelConfig, dtype) -> Model:
     def input_specs(shape: InputShape):
         return _decoder_specs(cfg, shape, dtype)
 
-    return Model(cfg, init, loss_fn, forward, init_cache, serve_step, input_specs)
+    return Model(cfg, init, loss_fn, forward, init_cache, serve_step,
+                 input_specs,
+                 overlap_stages=_decoder_overlap_stages(cfg, loss_fn))
+
+
+def _decoder_overlap_stages(cfg: ModelConfig, loss_fn) -> Callable:
+    """Stage factory for the decoder family (dense / moe / vlm):
+    [embed] + k layer slices + [head], where k = num_buckets - 2 clamped
+    to [1, num_layers] (uneven last slice allowed — ceil split). Each
+    stage replays exactly the ops ``loss_fn`` runs over that span, so
+    the composed chain is bit-identical to the monolithic loss. With
+    tied embeddings the embedding is stage 0's param and its VALUE rides
+    the carry to the head's logits einsum (see ``OverlapStages``)."""
+    n_img = cfg.num_image_tokens
+
+    def factory(num_buckets: int) -> OverlapStages:
+        if num_buckets <= 1:
+            # degenerate single-bucket schedule: the whole loss is one
+            # stage, the one reduce-scatter leg simply trails backward
+            return OverlapStages(stage=lambda p: (p,),
+                                 fns=(lambda p0, batch: loss_fn(p0, batch),),
+                                 unstage=lambda parts: parts[0])
+        k = min(cfg.num_layers, max(1, int(num_buckets) - 2))
+        base, rem = divmod(cfg.num_layers, k)
+        slices, lo = [], 0
+        for i in range(k):
+            hi = lo + base + (1 if i < rem else 0)
+            slices.append((lo, hi))
+            lo = hi
+
+        def stage(p):
+            head = {"final_norm": p["final_norm"]}
+            if not cfg.tie_embeddings:
+                head["lm_head"] = p["lm_head"]
+            return (({"embedding": p["embedding"]},)
+                    + tuple(jax.tree.map(lambda a: a[lo:hi], p["layers"])
+                            for lo, hi in slices)
+                    + (head,))
+
+        def unstage(parts):
+            p = {"embedding": parts[0]["embedding"],
+                 "layers": jax.tree.map(
+                     lambda *xs: jnp.concatenate(xs, axis=0)
+                     if len(xs) > 1 else xs[0], *parts[1:-1]),
+                 "final_norm": parts[-1]["final_norm"]}
+            if not cfg.tie_embeddings:
+                p["lm_head"] = parts[-1]["lm_head"]
+            return p
+
+        def embed_fn(p0, batch):
+            x = _embed(p0, batch["tokens"], cfg)
+            if n_img:
+                x = jnp.concatenate(
+                    [batch["image_embeds"].astype(x.dtype), x], axis=1)
+            carry = {"x": x, "aux": jnp.zeros((), jnp.float32)}
+            if cfg.tie_embeddings:
+                carry["emb"] = p0["embedding"]
+            return carry
+
+        def layer_fn(ps, carry, batch):
+            h, a = apply_stack(ps, carry["x"], cfg, prefix_len=n_img)
+            out = dict(carry)
+            out["x"] = h
+            out["aux"] = carry["aux"] + a
+            return out
+
+        def head_fn(ph, carry, batch):
+            h = rms_norm(carry["x"], ph["final_norm"], cfg.norm_eps)
+            if n_img:
+                h = h[:, n_img:]
+            pl = ({"embedding": carry["emb"]} if cfg.tie_embeddings
+                  else {"lm_head": ph["lm_head"]})
+            xent = _sequence_xent(pl, h, batch["labels"], cfg)
+            return xent + carry["aux"], {"xent": xent, "aux": carry["aux"]}
+
+        fns = (embed_fn,) + (layer_fn,) * k + (head_fn,)
+        return OverlapStages(stage=stage, fns=fns, unstage=unstage)
+
+    return factory
 
 
 def _decoder_specs(cfg: ModelConfig, shape: InputShape, dtype):

@@ -359,6 +359,92 @@ def scatter_update_gather(spec: flatbuf.FlatBuffer, grads: Any, params: Any,
     return spec.unpack(new_pbuf[:spec.size]), new_state
 
 
+def optstate_sched_init(hyper, schedule, state_dtypes=None) -> Any:
+    """``optstate_shard_init`` for the overlapped (schedule-bucketed)
+    layout: the per-device state length is ``schedule.shard_size`` — the
+    bucket-major concat of single-ring per-bucket chunks — instead of
+    the monolithic ``flatbuf.shard_size`` geometry."""
+    name = _flat_name(hyper)
+    sd = state_stream_dtype(hyper, state_dtypes)
+    n = schedule.shard_size
+    k = FLAT_STATE_STREAMS[name]
+    if name == "adamw":
+        return {"mv": jnp.zeros((k, n), sd),
+                "t": jnp.zeros((), jnp.int32)}
+    return jnp.zeros((n,), sd)
+
+
+def overlap_update(schedule, g_shard: jax.Array, staged_params: Any,
+                   opt_state: Any, *,
+                   hyper: Mapping,
+                   comm=None,
+                   num_rings: Optional[int] = None,
+                   bucket_bytes: int | None = None,
+                   wire_dtype: Optional[str] = None,
+                   mean: bool = True,
+                   interpret: bool | None = None) -> tuple[Any, Any]:
+    """The update half of the backward-overlapped step.
+
+    The grad fn already issued each schedule bucket's reduce-scatter leg
+    mid-backward (``Communicator.reduce_scatter_bucket``) and handed us
+    ``g_shard``: the bucket-major ``(schedule.shard_size,)`` concat of
+    this device's fully-reduced per-bucket chunks. This function runs
+    what is left after backward finishes:
+
+      1. select this device's matching param shard from the packed
+         staged params (``shard_select_sched`` — static, no comm)
+      2. ONE fused optimizer Pallas grid over the whole shard (the
+         buckets share the kernel launch; only the WIRE was bucketed)
+      3. the ONE trailing allgather of the updated shard
+         (``allgather_sched``), re-stitched to the packed layout
+
+    ``staged_params`` is the stage-subtree tuple ``Model.overlap_stages``
+    produced — the SAME staging the schedule was built from; the return
+    is ``(new_staged_params, new_opt_state)`` (caller ``unstage``s).
+    ``comm`` carries the whole policy: explicit ``num_rings`` /
+    ``bucket_bytes`` / ``wire_dtype`` arguments are rejected here just
+    like in ``scatter_update_gather`` — the schedule already fixed the
+    bucket geometry and mixing knobs would desync it from the state
+    layout.
+    """
+    from repro.core import comm as _comm
+    from repro.kernels.common import use_interpret
+
+    if num_rings is not None or bucket_bytes is not None \
+            or wire_dtype is not None:
+        raise ValueError(
+            "overlap_update: the bucket/ring/wire policy lives on the "
+            "communicator and the BucketSchedule — set wire_dtype on the "
+            "comm (Communicator.with_policy) and the bucket split via "
+            "overlap_buckets, not as arguments; explicit knobs here "
+            "would desync the wire legs from the schedule layout")
+    comm = _comm.LOCAL if comm is None else comm
+    name = _flat_name(hyper)
+    p = comm.resolve_size()
+    if p != schedule.p:
+        raise ValueError(
+            f"schedule was built for p={schedule.p} shards but the "
+            f"communicator spans {p} — rebuild the BucketSchedule with "
+            f"the gradient group's size (bucket_schedule(spec, counts, "
+            f"p={p}))")
+
+    pbuf = schedule.spec.pack(staged_params)
+    p_shard = comm.shard_select_sched(pbuf, schedule)
+    if mean:
+        g_shard = g_shard / p
+    wd = hyper.get("weight_decay", 0.0) or 0.0
+    if name == "sgd" and wd:
+        g_shard = g_shard + wd * p_shard
+
+    if interpret is None:
+        interpret = use_interpret()
+    new_p_shard, new_state = _fused_shard_update(
+        name, hyper, p_shard, opt_state, g_shard, interpret)
+
+    new_pbuf = comm.allgather_sched(new_p_shard, schedule)
+    return schedule.spec.unpack(new_pbuf), new_state
+
+
 def _flat_optimizer(hyper: dict, spec: flatbuf.FlatBuffer,
                     num_rings: int, bucket_bytes: int | None) -> Optimizer:
     """Drop-in ``Optimizer`` whose update is the fused flat-buffer kernel

@@ -1,0 +1,464 @@
+"""Backward-overlapped bucketed reduce-scatter (SyncConfig.overlap).
+
+The contract under test, in layers:
+
+  * the staged chain-VJP produces BIT-IDENTICAL gradients to the
+    monolithic ``value_and_grad`` (same ops, same order — including the
+    tied-embedding carry and remat'd layers), so bucketing the wire leg
+    never changes the math;
+  * the full overlapped step equals the non-overlapped fused flat step
+    across the whole p∈{1,2,8} × wire∈{f32,bf16,int8} matrix — bit-for-
+    bit where the arithmetic forces it (p=1; f32 two-term folds at p=2),
+    within the codec's rounding band elsewhere — and equals a trailing-
+    bucketed same-schedule reference bit-for-bit at p=8 for EVERY wire
+    dtype (isolating the staged VJP from fold-order/ownership effects);
+  * the TRACED program realizes the overlap structurally: per-bucket
+    ppermute chains sit before the last backward-compute eqn at the top
+    level of the jaxpr, in exactly the fraction the cost model claims;
+  * the guard rails reject every configuration the schedule cannot
+    honor (non-ring methods, unfused path, explicit bucket knobs, ...).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import TrainSettings, get_config, reduced
+from repro.core import collectives as C
+from repro.core import comm as comm_lib
+from repro.core import cost_model
+from repro.core import flatbuf as F
+from repro.core.hierarchy import SyncConfig
+from repro.core.sync_engine import (
+    make_sync_engine,
+    optstate_sched_init,
+    overlap_update,
+)
+from repro.launch import shard_driver as SD
+from repro.launch.train import (
+    make_grad_fn,
+    make_overlap_grad_fn,
+    make_train_state,
+    make_train_step,
+    overlap_schedule,
+)
+from repro.models.model import build_model
+from repro.optim.sgd import adamw, sgd
+
+AXIS = "ring"
+
+
+@pytest.fixture(scope="module")
+def model():
+    return build_model(reduced(get_config("qwen2-0.5b")))
+
+
+def _sync(overlap=True, wire=None, buckets=4, **kw):
+    base = dict(mode="mpi_sgd", allreduce_method="ring", num_rings=1,
+                wire_dtype=wire, overlap=overlap, overlap_buckets=buckets)
+    base.update(kw)
+    return SyncConfig(**base)
+
+
+def _batch(B=8, S=16, seed=0):
+    k = jax.random.key(seed)
+    toks = jax.random.randint(k, (B, S), 0, 1024)
+    return {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1)}
+
+
+def _bits_equal(a, b):
+    jax.tree.map(
+        lambda x, y: np.testing.assert_array_equal(
+            np.asarray(x), np.asarray(y)), a, b)
+
+
+# --------------------------------------------------------------------------
+# Schedule substrate
+# --------------------------------------------------------------------------
+
+def test_schedule_tiles_spec_on_the_grid(model):
+    stages, sched = overlap_schedule(model, _sync(), 8)
+    grid = F.edge_grid()
+    assert sched.num_buckets == 4 and stages.num_stages == 4
+    assert sched.starts[0] == 0
+    assert sum(sched.sizes) == sched.spec.size
+    for s, n in zip(sched.starts, sched.sizes):
+        assert s % grid == 0 and (s + n) % grid == 0
+    assert sched.shard_size == sum(sched.chunks)
+    assert sched.shard_offsets == tuple(
+        sum(sched.chunks[:b]) for b in range(sched.num_buckets))
+    for b in range(sched.num_buckets):
+        assert sched.bucket_padded(b) == 8 * sched.chunks[b] >= sched.sizes[b]
+
+
+def test_schedule_with_p_round_trips(model):
+    _, sched = overlap_schedule(model, _sync(), 8)
+    assert sched.with_p(8) is sched
+    back = sched.with_p(1).with_p(8)
+    assert back == sched
+    # p=1 geometry: chunks are the bucket extents themselves (grid-aligned)
+    assert sched.with_p(1).shard_size == sched.spec.size
+
+
+def test_schedule_builder_rejects_bad_partitions():
+    tree = {"a": jnp.zeros((256,)), "b": jnp.zeros((512,)),
+            "c": jnp.zeros((128,))}
+    spec = F.spec_for(tree)
+    with pytest.raises(ValueError, match="tile the packed buffer"):
+        F.bucket_schedule(spec, (1, 1), 2)
+    with pytest.raises(ValueError, match="at least one leaf"):
+        F.bucket_schedule(spec, (2, 0, 1), 2)
+    with pytest.raises(ValueError, match=">= 0"):
+        F.align_edge(-1)
+    assert F.align_edge(1) == F.edge_grid()
+    assert F.align_edge(0) == 0
+
+
+def test_pack_bucket_rejects_mismatched_stage_tree(model):
+    _, sched = overlap_schedule(model, _sync(), 2)
+    with pytest.raises(ValueError, match="same overlap_stages split"):
+        sched.pack_bucket(0, {"extra": jnp.zeros(4), "leaf": jnp.zeros(4)})
+
+
+# --------------------------------------------------------------------------
+# The staged chain-VJP vs the monolithic gradient — the tentpole's math
+# --------------------------------------------------------------------------
+
+def test_staged_grads_bit_identical_to_monolithic(model):
+    """Replaying the loss as a stage chain (tied embedding riding the
+    carry, remat'd scanned layers) must give the SAME bits as one
+    ``value_and_grad`` — p=1 (LOCAL comm), so ``g_shard`` IS the packed
+    staged-gradient buffer with no collective in the way."""
+    sync = _sync()
+    stages, sched = overlap_schedule(model, sync, 1)
+    gfn = make_overlap_grad_fn(model, stages, sched, comm_lib.LOCAL)
+    params = model.init(jax.random.key(0))
+    batch = _batch()
+
+    loss_o, metrics_o, g_shard = jax.jit(gfn)(params, batch)
+    loss_m, _, grads = jax.jit(make_grad_fn(model))(params, batch)
+    packed = sched.spec.pack(stages.stage(grads))
+
+    assert float(loss_o) == float(loss_m)
+    _bits_equal(g_shard, packed)
+
+
+# --------------------------------------------------------------------------
+# Full-step equivalence matrix: p × wire dtype
+# --------------------------------------------------------------------------
+
+# equivalence band per (p, wire) cell vs the NON-overlapped flat path.
+# Bitwise where the math forces it: p=1 has no ring hops at all, and f32
+# p=2 folds are two-term commutative sums. With a wire dtype at p>=2 the
+# bucketed partition reassigns chunk ownership, so a DIFFERENT one of the
+# fold terms gets wire-rounded — agreement is then bounded by the codec's
+# rounding, not bitwise (the p=8 trailing-reference test below pins the
+# staged VJP itself to the bit). f32 at p>=3 differs only by ring fold
+# reassociation (ulp-level).
+def _band(p, wire):
+    if p == 1 or (p == 2 and wire is None):
+        return None  # bitwise
+    if wire is None:
+        return dict(loss_rel=1e-6, rtol=1e-5, atol=1e-6)
+    # bf16's 8 mantissa bits and int8's per-block scale both round the
+    # wire terms at ~0.4% relative — the bands are the same order
+    return dict(loss_rel=2e-3, rtol=1e-2, atol=2e-3)  # bf16 / int8
+
+
+@pytest.mark.parametrize("wire", [None, "bf16", "int8"])
+@pytest.mark.parametrize("p", [1, 2, 8])
+def test_overlap_step_matrix_vs_flat_path(model, p, wire):
+    """The full p × wire equivalence matrix against the non-overlapped
+    fused flat step: same losses and same parameters within the band the
+    arithmetic admits (see ``_band``)."""
+    band = _band(p, wire)
+    opt = sgd(0.1, momentum=0.9)
+    batch = SD.shard_batch(_batch(B=8), p)
+    s_o = SD.make_driver_state(model, opt, _sync(wire=wire), p,
+                               jax.random.key(1))
+    s_m = SD.make_driver_state(model, opt, _sync(False, wire=wire), p,
+                               jax.random.key(1))
+    step_o = jax.jit(SD.make_emulated_step(model, opt, _sync(wire=wire), p))
+    step_m = jax.jit(SD.make_emulated_step(model, opt,
+                                           _sync(False, wire=wire), p))
+    for _ in range(2):
+        s_o, m_o = step_o(s_o, batch)
+        s_m, m_m = step_m(s_m, batch)
+        if band is None:
+            assert float(m_o["loss"]) == float(m_m["loss"])
+        else:
+            assert float(m_o["loss"]) == pytest.approx(
+                float(m_m["loss"]), rel=band["loss_rel"])
+    if band is None:
+        _bits_equal(s_o["params"], s_m["params"])
+    else:
+        jax.tree.map(
+            lambda x, y: np.testing.assert_allclose(
+                np.asarray(x), np.asarray(y),
+                rtol=band["rtol"], atol=band["atol"]),
+            s_o["params"], s_m["params"])
+
+
+@pytest.mark.parametrize("wire", [None, "bf16", "int8"])
+def test_overlap_step_matches_trailing_reference_at_p8(model, wire):
+    """p=8: bit-identical to a reference that computes the MONOLITHIC
+    gradient and then runs the SAME schedule's bucket legs trailing
+    backward — isolating the staged-VJP claim from ring fold order
+    (which differs vs the monolithic partition for p≥3)."""
+    p = 8
+    opt = adamw(3e-3, eps=1e-5)
+    hyper = opt.hyper
+    sync = _sync(wire=wire)
+    stages, sched = overlap_schedule(model, sync, p)
+    comm = comm_lib.Communicator.world((AXIS,), (p,), method="ring",
+                                       wire_dtype=wire)
+    gfn_o = make_overlap_grad_fn(model, stages, sched, comm)
+    grad_fn = make_grad_fn(model)
+
+    def finish(params, opt_state, g_shard):
+        staged = stages.stage(params)
+        new_staged, new_opt = overlap_update(
+            sched, g_shard, staged, opt_state, hyper=hyper, comm=comm)
+        return stages.unstage(new_staged), new_opt
+
+    def dev_overlap(pb, ax):
+        (params, opt_state), batch = pb
+        loss, _, g_shard = gfn_o(params, batch)
+        return finish(params, opt_state, g_shard) + (loss,)
+
+    def dev_trailing(pb, ax):
+        (params, opt_state), batch = pb
+        loss, _, grads = grad_fn(params, batch)
+        gstaged = stages.stage(grads)
+        g_shard = jnp.concatenate([
+            comm.reduce_scatter_bucket(sched.pack_bucket(b, gstaged[b]),
+                                       sched, b)
+            for b in range(sched.num_buckets)])
+        return finish(params, opt_state, g_shard) + (loss,)
+
+    params = model.init(jax.random.key(0))
+    stacked_p = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (p,) + x.shape), params)
+    opt0 = optstate_sched_init(hyper, sched)
+    stacked_o = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (p,) + x.shape), opt0)
+    sbatch = SD.shard_batch(_batch(B=8), p)
+
+    out_o = jax.jit(lambda pb: C.emulate(dev_overlap, pb))(
+        ((stacked_p, stacked_o), sbatch))
+    out_t = jax.jit(lambda pb: C.emulate(dev_trailing, pb))(
+        ((stacked_p, stacked_o), sbatch))
+    _bits_equal(out_o, out_t)
+
+
+def test_uneven_last_bucket(model):
+    """num_layers=3 with 4 buckets: the ceil split gives layer slices of
+    2 and 1 — the schedule must tile anyway and the step stays
+    bit-identical to the monolithic path at p=2."""
+    cfg = dataclasses.replace(reduced(get_config("qwen2-0.5b")),
+                              num_layers=3)
+    m3 = build_model(cfg)
+    stages, sched = overlap_schedule(m3, _sync(), 2)
+    assert stages.num_stages == 4
+    # uneven: the two layer-slice buckets cover different extents
+    assert sched.sizes[1] != sched.sizes[2]
+    assert sum(sched.sizes) == sched.spec.size
+
+    opt = sgd(0.1, momentum=0.9)
+    batch = SD.shard_batch(_batch(B=4), 2)
+    s_o = SD.make_driver_state(m3, opt, _sync(), 2, jax.random.key(1))
+    s_m = SD.make_driver_state(m3, opt, _sync(False), 2, jax.random.key(1))
+    s_o, m_o = jax.jit(SD.make_emulated_step(m3, opt, _sync(), 2))(s_o, batch)
+    s_m, m_m = jax.jit(SD.make_emulated_step(m3, opt, _sync(False), 2))(
+        s_m, batch)
+    assert float(m_o["loss"]) == float(m_m["loss"])
+    _bits_equal(s_o["params"], s_m["params"])
+
+
+def test_single_bucket_degenerate(model):
+    """overlap_buckets=1: the whole loss is one stage, the one leg simply
+    trails backward — still the fused bucketed machinery, zero overlap."""
+    stages, sched = overlap_schedule(model, _sync(buckets=1), 2)
+    assert stages.num_stages == 1 and sched.num_buckets == 1
+    assert cost_model.overlap_fraction([sched.sizes[0] * 4], 2) == 0.0
+
+    opt = sgd(0.1, momentum=0.9)
+    batch = SD.shard_batch(_batch(B=4), 2)
+    sync1 = _sync(buckets=1)
+    s_o = SD.make_driver_state(model, opt, sync1, 2, jax.random.key(1))
+    s_m = SD.make_driver_state(model, opt, _sync(False), 2,
+                               jax.random.key(1))
+    s_o, m_o = jax.jit(SD.make_emulated_step(model, opt, sync1, 2))(
+        s_o, batch)
+    s_m, m_m = jax.jit(SD.make_emulated_step(model, opt, _sync(False), 2))(
+        s_m, batch)
+    assert float(m_o["loss"]) == float(m_m["loss"])
+    _bits_equal(s_o["params"], s_m["params"])
+
+
+def test_two_axis_pod_data_driver(model):
+    """2-axis (2,2) pod×data geometry: the overlapped step runs with
+    nested per-axis bucket legs and matches the 2-axis monolithic flat
+    path to fp-reassociation tolerance (total p=4 ≥ 3)."""
+    geom = (2, 2)
+    opt = sgd(0.1, momentum=0.9)
+    batch = SD.shard_batch(_batch(B=8), 4)
+    s_o = SD.make_driver_state(model, opt, _sync(), geom, jax.random.key(1))
+    s_m = SD.make_driver_state(model, opt, _sync(False), geom,
+                               jax.random.key(1))
+    step_o = jax.jit(SD.make_emulated_step(model, opt, _sync(), geom))
+    step_m = jax.jit(SD.make_emulated_step(model, opt, _sync(False), geom))
+    for _ in range(2):
+        s_o, m_o = step_o(s_o, batch)
+        s_m, m_m = step_m(s_m, batch)
+        assert float(m_o["loss"]) == pytest.approx(float(m_m["loss"]),
+                                                   rel=1e-6)
+    jax.tree.map(
+        lambda x, y: np.testing.assert_allclose(
+            np.asarray(x), np.asarray(y), rtol=1e-5, atol=1e-6),
+        s_o["params"], s_m["params"])
+    # device opt state carries the schedule geometry at total p=4
+    _, sched4 = overlap_schedule(model, _sync(), 4)
+    assert s_o["opt"].shape == (4, sched4.shard_size)
+
+
+# --------------------------------------------------------------------------
+# Structural: the traced program actually interleaves wire with backward
+# --------------------------------------------------------------------------
+
+_COMPUTE = {"dot_general", "conv_general_dilated", "scan", "scatter-add",
+            "remat", "remat2", "checkpoint", "custom_vjp_call",
+            "custom_vjp_call_jaxpr"}
+
+
+def test_traced_program_interleaves_ppermute_with_backward(model):
+    """Top-level eqn order of the staged grad fn IS the issue order: all
+    but the last-issued bucket's ring chain must sit before the final
+    backward-compute eqn (the embedding pullback), and the hidden
+    fraction must equal the cost model's structural claim exactly."""
+    p = 4
+    sync = _sync()
+    stages, sched = overlap_schedule(model, sync, p)
+    comm = comm_lib.Communicator.world((AXIS,), (p,), method="ring")
+    gfn = make_overlap_grad_fn(model, stages, sched, comm)
+    params = model.init(jax.random.key(0))
+    closed = jax.make_jaxpr(gfn, axis_env=[(AXIS, p)])(params, _batch(B=4))
+
+    pp, last_compute = [], -1
+    for i, eqn in enumerate(closed.jaxpr.eqns):
+        if eqn.primitive.name == "ppermute":
+            pp.append((i, sum(v.aval.size * v.aval.dtype.itemsize
+                              for v in eqn.invars)))
+        elif eqn.primitive.name in _COMPUTE:
+            last_compute = i
+    assert len(pp) == sched.num_buckets * (p - 1)
+    before = [nb for i, nb in pp if i < last_compute]
+    after = [nb for i, nb in pp if i > last_compute]
+    # three buckets' legs interleave with backward; the last-issued
+    # (embedding) leg necessarily trails it
+    assert len(before) == (sched.num_buckets - 1) * (p - 1)
+    assert len(after) == p - 1
+    measured = sum(before) / (sum(before) + sum(after))
+    modeled = cost_model.overlap_fraction(
+        [n * 4 for n in sched.sizes], p)
+    assert measured == pytest.approx(modeled, abs=1e-12)
+
+
+# --------------------------------------------------------------------------
+# Guard rails
+# --------------------------------------------------------------------------
+
+def test_sync_config_overlap_guards():
+    with pytest.raises(ValueError, match="ring"):
+        _sync(allreduce_method="psum").validate()
+    with pytest.raises(ValueError, match="fused"):
+        _sync(fused_update=False).validate()
+    with pytest.raises(ValueError, match="mpi_sgd"):
+        dataclasses.replace(_sync(), mode="mpi_esgd").validate()
+    with pytest.raises(ValueError, match="overlap_buckets"):
+        _sync(buckets=0).validate()
+    with pytest.raises(ValueError, match="bucket_bytes"):
+        _sync(bucket_bytes=1 << 20).validate()
+    with pytest.raises(ValueError, match="num_rings"):
+        _sync(num_rings=2).validate()
+    with pytest.raises(ValueError, match="fsdp"):
+        _sync(fsdp=True).validate()
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]), (AXIS,))
+    with pytest.raises(ValueError, match="GSPMD"):
+        _sync().validate(mesh)
+    # a clean overlap config passes
+    _sync().validate()
+
+
+def test_train_settings_force_single_ring():
+    ts = TrainSettings(allreduce_method="ring", num_rings=4, overlap=True)
+    assert ts.sync_config().num_rings == 1
+    assert ts.sync_config().overlap and ts.sync_config().overlap_buckets == 4
+    ts_off = TrainSettings(allreduce_method="ring", num_rings=4)
+    assert ts_off.sync_config().num_rings == 4
+
+
+def test_overlap_update_rejects_knobs_and_wrong_p(model):
+    stages, sched = overlap_schedule(model, _sync(), 1)
+    params = model.init(jax.random.key(0))
+    staged = stages.stage(params)
+    g = jnp.zeros((sched.shard_size,))
+    state = optstate_sched_init(sgd(0.1, momentum=0.9).hyper, sched)
+    hyper = sgd(0.1, momentum=0.9).hyper
+    with pytest.raises(ValueError, match="communicator"):
+        overlap_update(sched, g, staged, state, hyper=hyper,
+                       wire_dtype="bf16")
+    with pytest.raises(ValueError, match="gradient group"):
+        overlap_update(sched, g, staged, state, hyper=hyper,
+                       comm=comm_lib.Communicator.world((AXIS,), (2,),
+                                                        method="ring"))
+    # the clean p=1 call round-trips
+    new_staged, _ = overlap_update(sched, g, staged, state, hyper=hyper)
+    assert jax.tree_util.tree_structure(new_staged) == \
+        jax.tree_util.tree_structure(staged)
+
+
+def test_make_train_step_overlap_guards(model):
+    opt = sgd(0.1, momentum=0.9)
+    with pytest.raises(ValueError, match="microbatch"):
+        make_train_step(model, opt, _sync(), None, microbatch=2)
+    bare = dataclasses.replace(model, overlap_stages=None)
+    with pytest.raises(ValueError, match="overlap_stages"):
+        overlap_schedule(bare, _sync(), 1)
+    spec = overlap_schedule(model, _sync(), 1)[1].spec
+    with pytest.raises(ValueError, match="overlap_schedule"):
+        make_sync_engine(opt, _sync(), None, spec=spec, schedule=None)
+
+
+def test_jobspec_overlap_guards():
+    from repro.launch.launcher import JobSpec, build_job
+
+    spec = JobSpec(4, 1, 1, "qwen2-0.5b", "train_4k", overlap=True)
+    job = build_job(spec)
+    assert "--overlap" in job["clients"][0]["launch_cmd"]
+    assert job["sync"]["overlap"] is True
+    with pytest.raises(ValueError, match="fused"):
+        dataclasses.replace(spec, fused_update=False).validate()
+    with pytest.raises(ValueError, match="bucket"):
+        dataclasses.replace(spec, bucket_bytes=1 << 20).validate()
+    with pytest.raises(ValueError, match="overlap_buckets"):
+        dataclasses.replace(spec, overlap_buckets=0).validate()
+
+
+def test_drive_rejects_faults_with_overlap(model):
+    opt = sgd(0.1, momentum=0.9)
+    with pytest.raises(ValueError, match="elastic re-layout"):
+        SD.drive(model, opt, _sync(), [_batch(B=4)], p=2,
+                 faults="kill@1:unit=1")
+
+
+def test_train_state_overlap_opt_geometry(model):
+    """make_train_state with overlap carries the LOCAL (p=1) schedule
+    state: one full-length stream laid out bucket-major (== spec.size)."""
+    opt = sgd(0.1, momentum=0.9)
+    s = make_train_state(model, opt, _sync(), jax.random.key(0))
+    _, sched = overlap_schedule(model, _sync(), 1)
+    assert s["opt"].shape == (sched.shard_size,)
+    assert sched.shard_size == sched.spec.size
