@@ -16,7 +16,9 @@ import jax.numpy as jnp
 
 from benchmarks.common import emit, timeit
 from repro.core import collectives as C
+from repro.core import comm as comm_lib
 from repro.core import cost_model
+from repro.core.comm import CollectivePolicy
 
 P = 8
 SIZES_MB = [4, 16, 64]
@@ -67,13 +69,19 @@ def run() -> None:
         for i in range(32)
     }
 
+    grp_ring = comm_lib.Communicator.from_axis_name("ring")
+    grp_leaf = comm_lib.Communicator.from_axis_name(
+        "ring", policy=CollectivePolicy(method="per_leaf"))
+
     @jax.jit
     def fused(t):
-        return C.emulate(C.tensor_allreduce, t, method="ring")
+        return jax.vmap(lambda d: C.tensor_allreduce(d, grp_ring),
+                        axis_name="ring")(t)
 
     @jax.jit
     def per_leaf(t):
-        return C.emulate(C.tensor_allreduce, t, method="per_leaf")
+        return jax.vmap(lambda d: C.tensor_allreduce(d, grp_leaf),
+                        axis_name="ring")(t)
 
     us_f = timeit(fused, tree, iters=3)
     us_l = timeit(per_leaf, tree, iters=3)

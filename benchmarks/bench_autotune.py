@@ -1,0 +1,128 @@
+"""Policy autotuner gate: the α-β-γ ranking must reproduce measurement.
+
+The autotuner (``launch/autotune.py``) claims its cost-model scores ARE
+the measured byte counts — that is what lets ``--policy auto`` pick a
+policy without running a sweep. This bench closes the loop against the
+BENCH_*.json files the other harnesses just emitted:
+
+  * predicted full-step bytes (ring reduce-scatter + allgather, per wire
+    dtype) vs BENCH_wire's traced ppermute bytes — ratio 1.0
+  * predicted elastic-exchange bytes vs BENCH_wire's elastic leg — 1.0
+  * cost_model.overlap_fraction on the REAL schedule bucket extents
+    (reconstructed from BENCH_overlap's per-bucket leg bytes) vs the
+    fraction measured from traced eqn order — 1.0
+  * the headline: ``autotune`` at the bench geometry must choose a
+    policy whose modeled bytes/step EQUALS the best measured bytes/step
+    across BENCH_fused_step + BENCH_wire — the ISSUE's acceptance gate
+  * grid bookkeeping: every candidate is either ranked or pruned, and
+    the chosen policy itself is gated against the committed baseline
+
+Every gated quantity is a size-invariant ratio or count, so the
+quick-mode CI run (which regenerates the upstream BENCH files at a
+smaller payload) compares cleanly. Writes BENCH_autotune.json.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit
+from repro.core import cost_model
+from repro.core.comm import CollectivePolicy
+from repro.launch.autotune import (
+    autotune,
+    enumerate_policies,
+    format_table,
+    fused_step_compute_s,
+    policy_bytes_per_step,
+)
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _read(name: str) -> dict:
+    with open(os.path.join(ROOT, name)) as f:
+        return json.load(f)
+
+
+def run() -> None:
+    wire = _read("BENCH_wire.json")
+    fused = _read("BENCH_fused_step.json")
+    overlap = _read("BENCH_overlap.json")
+
+    p = wire["grad"]["p"]
+    nbytes = float(wire["grad"]["payload_bytes"])
+
+    # -- 1. predicted vs measured full-step bytes, per wire dtype -----------
+    pred_full, ratio_full = {}, {}
+    for wd, measured in wire["grad"]["full_step_bytes_per_dev"].items():
+        pol = CollectivePolicy(method="ring",
+                               wire_dtype=None if wd == "f32" else wd)
+        pred = policy_bytes_per_step(pol, nbytes, p)
+        pred_full[wd] = pred
+        ratio_full[wd] = pred / measured
+        emit(f"autotune/predicted_full_step_{wd}", pred,
+             f"measured={measured};ratio={ratio_full[wd]:.6f}")
+
+    # -- 2. predicted vs measured elastic-exchange bytes --------------------
+    el = wire["elastic"]
+    el_nbytes = float(el["payload_bytes"])
+    ratio_elastic = {}
+    for wd, measured in el["exchange_bytes_per_dev"].items():
+        pol = CollectivePolicy(method="ring",
+                               wire_dtype=None if wd == "f32" else wd)
+        ratio_elastic[wd] = (
+            policy_bytes_per_step(pol, el_nbytes, el["p"]) / measured)
+        emit(f"autotune/predicted_elastic_{wd}",
+             ratio_elastic[wd] * measured,
+             f"measured={measured};ratio={ratio_elastic[wd]:.6f}")
+
+    # -- 3. overlap fraction on the real schedule's bucket extents ----------
+    # bench_overlap records the per-bucket reduce-scatter LEG bytes; the
+    # bucket payloads they came from are leg·p/(p−1) (exact: every extent
+    # divides p·LANE at this geometry)
+    po = overlap["p"]
+    legs = overlap["bucket_leg_bytes_per_dev"]["per_bucket"]
+    bucket_payload = [b * po / (po - 1) for b in legs]
+    frac_pred = cost_model.overlap_fraction(bucket_payload, po)
+    frac_meas = overlap["overlap_fraction"]["measured"]
+    emit("autotune/overlap_fraction", frac_pred * 1e6,
+         f"measured={frac_meas:.6f};ratio={frac_pred / frac_meas:.6f}")
+
+    # -- 4. the headline gate: the chosen policy == the measured best -------
+    result = autotune(nbytes=nbytes, p=p,
+                      compute_s=fused_step_compute_s(nbytes))
+    measured_best = min(
+        min(wire["grad"]["full_step_bytes_per_dev"].values()),
+        min(fused["wire_bytes_per_dev"].values()))
+    best_ratio = result.chosen.bytes_per_step / measured_best
+    emit("autotune/chosen", result.chosen.step_time_s * 1e6,
+         f"policy={result.chosen.policy.to_dict()};"
+         f"bytes={result.chosen.bytes_per_step:.0f};"
+         f"measured_best={measured_best};ratio={best_ratio:.6f}")
+
+    grid = enumerate_policies()
+    out = {
+        "p": p,
+        "payload_bytes": nbytes,
+        "predicted_full_step_bytes_per_dev": pred_full,
+        "predicted_vs_measured": {
+            "full_step": ratio_full,
+            "elastic_exchange": ratio_elastic,
+            "overlap_fraction": frac_pred / frac_meas,
+            "predicted_best_vs_measured_best": best_ratio,
+        },
+        "grid": {"size": len(grid), "ranked": len(result.ranked),
+                 "pruned": len(result.pruned)},
+        "chosen": result.chosen.to_dict(),
+        "top5": [s.to_dict() for s in result.ranked[:5]],
+        "table": format_table(result, top=5),
+    }
+    path = os.path.join(ROOT, "BENCH_autotune.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"# wrote {path}")
+
+
+if __name__ == "__main__":
+    run()

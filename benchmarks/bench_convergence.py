@@ -14,6 +14,7 @@ import jax.numpy as jnp
 from benchmarks.common import emit
 from repro.core import cost_model
 from repro.core.algorithms import AlgoConfig, run as run_algo
+from repro.core.comm import CollectivePolicy
 from repro.data.pipeline import DataConfig, ImagePipeline
 
 # PS over TCP vs MPI over IB — same transports as bench_epoch_time
@@ -60,7 +61,8 @@ def _cfg(mode, net, clients, wire_dtype=None):
         mode=mode, num_workers=12, num_clients=clients, num_servers=2,
         lr=0.005, momentum=0.9, epochs=4, steps_per_epoch=25,
         compute_time=0.45, jitter=0.2, model_bytes=100e6, net=net, seed=0,
-        wire_dtype=wire_dtype)
+        policy=CollectivePolicy(method="multi_ring", num_rings=2,
+                                wire_dtype=wire_dtype))
 
 
 def run() -> None:
@@ -109,8 +111,11 @@ def run_wire(wire_dtype: str) -> None:
     for mode, clients in (("mpi_sgd", 2), ("mpi_esgd", 2)):
         base_cfg = _cfg(mode, MPI_IB, clients)
         hb = run_algo(base_cfg, init_fn, grad_fn, eval_fn, make_pipe)
-        hw = run_algo(dataclasses.replace(base_cfg, wire_dtype=wire_dtype),
-                      init_fn, grad_fn, eval_fn, make_pipe)
+        hw = run_algo(
+            dataclasses.replace(
+                base_cfg,
+                policy=base_cfg.policy.replace(wire_dtype=wire_dtype)),
+            init_fn, grad_fn, eval_fn, make_pipe)
         emit(f"convergence/wire_{wire_dtype}_{mode}", hw.epoch_time * 1e6,
              f"final_acc={hw.metrics[-1]:.3f};f32_acc={hb.metrics[-1]:.3f};"
              f"delta={hw.metrics[-1] - hb.metrics[-1]:+.3f};"

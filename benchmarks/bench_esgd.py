@@ -102,8 +102,9 @@ def run() -> None:
     h1 = run_algo(_cfg("mpi_esgd", MPI_IB, 2, 1), init_fn, grad_fn, eval_fn,
                   make_pipe)
     for wd in ("int8", "bf16"):
-        cfgq = dataclasses.replace(_cfg("mpi_esgd", MPI_IB, 2, 1),
-                                   wire_dtype=wd)
+        base = _cfg("mpi_esgd", MPI_IB, 2, 1)
+        cfgq = dataclasses.replace(
+            base, policy=base.policy.replace(wire_dtype=wd))
         hq = run_algo(cfgq, init_fn, grad_fn, eval_fn, make_pipe)
         from repro.core.cost_model import wire_ratio
 
@@ -139,7 +140,7 @@ def run_hierarchy_accounting(P: int = 2, D: int = 4, num_leaves: int = 24,
     Writes BENCH_hierarchy.json.
     """
     from repro.core import comm as comm_lib, flatbuf as F
-    from repro.core.comm import sync_comms
+    from repro.core.comm import CollectivePolicy, sync_comms
     from repro.core.elastic import elastic_exchange_sharded
     from repro.core.hierarchy import SyncConfig
     from repro.optim.sgd import momentum_shard_init, scatter_update_gather
@@ -159,7 +160,8 @@ def run_hierarchy_accounting(P: int = 2, D: int = 4, num_leaves: int = 24,
             spec, g, p_, m, 0.1, 0.9, comm=grad_comm)[0]
 
     # -- mpi_esgd: data-leg update + pod-leg exchange -----------------------
-    sync = SyncConfig(mode="mpi_esgd", num_clients=P, allreduce_method="ring")
+    sync = SyncConfig(mode="mpi_esgd", num_clients=P,
+                      policy=CollectivePolicy(method="ring", num_rings=2))
     world = comm_lib.from_sync(sync, ("pod", "data"), (P, D))
     grad_comm, ex_comm = sync_comms(sync, world)
     esgd_update = ppermute_bytes_by_axis(
@@ -170,7 +172,8 @@ def run_hierarchy_accounting(P: int = 2, D: int = 4, num_leaves: int = 24,
         tree, tree, axis_env=env2)
 
     # -- mpi_sgd: hierarchical 2-axis group vs the 1-axis ring --------------
-    sgd_sync = SyncConfig(mode="mpi_sgd", allreduce_method="ring")
+    sgd_sync = SyncConfig(mode="mpi_sgd",
+                          policy=CollectivePolicy(method="ring", num_rings=2))
     world_sgd = comm_lib.from_sync(sgd_sync, ("pod", "data"), (P, D))
     sgd2 = ppermute_bytes_by_axis(
         update_prog(world_sgd, P * D), tree, tree, axis_env=env2)
@@ -230,7 +233,7 @@ def run_wire_exchange_accounting(p: int = 8, num_leaves: int = 24,
     geometry-exact (WIRE_BLOCK divides every lane-aligned chunk)."""
     from benchmarks.bench_fused_step import merge_wire_json
     from repro.core import flatbuf as F
-    from repro.core.comm import Communicator
+    from repro.core.comm import CollectivePolicy, Communicator
     from repro.core.elastic import elastic_exchange_sharded
 
     if leaf is None:
@@ -242,8 +245,9 @@ def run_wire_exchange_accounting(p: int = 8, num_leaves: int = 24,
 
     legs = {}
     for wire in (None, "bf16", "int8"):
-        comm = Communicator.world(("pod",), (p,), method="ring",
-                                  wire_dtype=wire)
+        comm = Communicator.world(
+            ("pod",), (p,),
+            policy=CollectivePolicy(method="ring", wire_dtype=wire))
         legs[wire or "f32"] = ppermute_bytes(
             lambda w, c: elastic_exchange_sharded(spec, w, c, alpha,
                                                   comm=comm),

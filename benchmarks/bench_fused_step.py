@@ -52,8 +52,10 @@ from benchmarks.common import (
     timeit,
 )
 from repro.core import collectives as C
+from repro.core import comm as comm_lib
 from repro.core import cost_model
 from repro.core import flatbuf as F
+from repro.core.comm import CollectivePolicy
 from repro.optim.sgd import (
     FLAT_STATE_STREAMS,
     adagrad,
@@ -68,6 +70,13 @@ P = 8
 NUM_LEAVES = 24
 LEAF = 2048 if QUICK else 16384   # ~1.5 MB of f32 gradient across 24 leaves
 AXIS = "ring"
+
+# the three sync groups the paths run over (policy rides the group)
+GRP_PER_LEAF = comm_lib.Communicator.from_axis_name(
+    AXIS, policy=CollectivePolicy(method="per_leaf"))
+GRP_MULTI_RING = comm_lib.Communicator.from_axis_name(
+    AXIS, policy=CollectivePolicy(method="multi_ring", num_rings=2))
+GRP_RING = comm_lib.Communicator.from_axis_name(AXIS)
 
 
 def ppermute_bytes(fn, *args) -> int:
@@ -102,15 +111,18 @@ def run() -> None:
     # -- path 1: per-leaf allreduce + per-leaf update -----------------------
     @jax.jit
     def per_leaf(g, p_, s):
-        synced = C.emulate(C.tensor_allreduce, g, method="per_leaf",
-                           mean=True)
+        synced = jax.vmap(
+            lambda t: C.tensor_allreduce(t, GRP_PER_LEAF, mean=True),
+            axis_name=AXIS)(g)
         return jax.vmap(opt.update)(synced, s, p_)
 
     # -- path 2: fused flat-buffer allreduce + per-leaf update --------------
     @jax.jit
     def fused_allreduce(g, p_, s):
-        synced = C.emulate(C.tensor_allreduce, g, method="multi_ring",
-                           mean=True, spec=spec)
+        synced = jax.vmap(
+            lambda t: C.tensor_allreduce(t, GRP_MULTI_RING, mean=True,
+                                         spec=spec),
+            axis_name=AXIS)(g)
         return jax.vmap(opt.update)(synced, s, p_)
 
     # -- path 3: reduce-scatter -> fused shard update -> allgather ----------
@@ -118,7 +130,7 @@ def run() -> None:
     def sug(g, p_, m):
         def dev(gd, pd, md):
             return scatter_update_gather(spec, gd, pd, md, lr, mu,
-                                         axis_name=AXIS)
+                                         comm=GRP_RING)
         return jax.vmap(dev, axis_name=AXIS)(g, p_, m)
 
     us_leaf = timeit(per_leaf, grads, stacked_params, stacked_opt, iters=3)
@@ -132,16 +144,15 @@ def run() -> None:
     m1 = mom_shard[0]
 
     def dev_per_leaf(g, p_, s):
-        synced = C.tensor_allreduce(g, AXIS, method="per_leaf", mean=True)
+        synced = C.tensor_allreduce(g, GRP_PER_LEAF, mean=True)
         return opt.update(synced, s, p_)
 
     def dev_fused(g, p_, s):
-        synced = C.tensor_allreduce(g, AXIS, method="multi_ring", mean=True,
-                                    spec=spec)
+        synced = C.tensor_allreduce(g, GRP_MULTI_RING, mean=True, spec=spec)
         return opt.update(synced, s, p_)
 
     def dev_sug(g, p_, m):
-        return scatter_update_gather(spec, g, p_, m, lr, mu, axis_name=AXIS)
+        return scatter_update_gather(spec, g, p_, m, lr, mu, comm=GRP_RING)
 
     by_leaf = ppermute_bytes(dev_per_leaf, g1, params, opt_state)
     by_fused = ppermute_bytes(dev_fused, g1, params, opt_state)
@@ -240,15 +251,16 @@ def run_optim_accounting() -> None:
 
         @jax.jit
         def leaf_path(g, p_, s, _opt=leaf_opt):
-            synced = C.emulate(C.tensor_allreduce, g, method="per_leaf",
-                               mean=True)
+            synced = jax.vmap(
+                lambda t: C.tensor_allreduce(t, GRP_PER_LEAF, mean=True),
+                axis_name=AXIS)(g)
             return jax.vmap(_opt.update)(synced, s, p_)
 
         @jax.jit
         def flat_path(g, p_, s, _h=hyper):
             def dev(gd, pd, sd):
                 return scatter_update_gather(spec, gd, pd, sd, hyper=_h,
-                                             axis_name=AXIS)
+                                             comm=GRP_RING)
             return jax.vmap(dev, axis_name=AXIS)(g, p_, s)
 
         us_leaf = timeit(leaf_path, grads, stacked_p, stacked_s, iters=3)
@@ -256,13 +268,12 @@ def run_optim_accounting() -> None:
 
         # per-device program structure + wire bytes under an abstract axis
         def dev_leaf(g, p_, s, _opt=leaf_opt):
-            synced = C.tensor_allreduce(g, AXIS, method="per_leaf",
-                                        mean=True)
+            synced = C.tensor_allreduce(g, GRP_PER_LEAF, mean=True)
             return _opt.update(synced, s, p_)
 
         def dev_flat(g, p_, s, _h=hyper):
             return scatter_update_gather(spec, g, p_, s, hyper=_h,
-                                         axis_name=AXIS)
+                                         comm=GRP_RING)
 
         f1 = jax.tree.map(lambda x: x[0], stacked_f)
         prims_leaf = [n for n, _ in jaxpr_primitives(
@@ -361,12 +372,14 @@ def run_wire_accounting() -> None:
     WIRES = (None, "bf16", "int8")
 
     def comm1(wire):
-        return comm_lib.Communicator.world((AXIS,), (P,), method="ring",
-                                           wire_dtype=wire)
+        return comm_lib.Communicator.world(
+            (AXIS,), (P,),
+            policy=CollectivePolicy(method="ring", wire_dtype=wire))
 
     def comm2(wire):
-        return comm_lib.Communicator.world(("pod", "data"), (2, P // 2),
-                                           method="ring", wire_dtype=wire)
+        return comm_lib.Communicator.world(
+            ("pod", "data"), (2, P // 2),
+            policy=CollectivePolicy(method="ring", wire_dtype=wire))
 
     # -- gradient leg (reduce-scatter) + param leg (allgather), 1-axis ------
     grad_leg, param_leg, grad_leg_2ax = {}, {}, {}

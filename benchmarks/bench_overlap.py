@@ -45,6 +45,7 @@ from repro.configs.base import get_config, reduced
 from repro.core import collectives as C
 from repro.core import comm as comm_lib
 from repro.core import cost_model
+from repro.core.comm import CollectivePolicy
 from repro.core.hierarchy import SyncConfig
 from repro.launch.analysis import overlap_projection
 from repro.launch.train import make_overlap_grad_fn, overlap_schedule
@@ -79,9 +80,10 @@ def _batch(b=B, s=S, seed=0):
 
 
 def _sync(p_unused=None):
-    return SyncConfig(mode="mpi_sgd", allreduce_method="ring", num_rings=1,
-                      fused_update=True, overlap=True,
-                      overlap_buckets=BUCKETS)
+    return SyncConfig(mode="mpi_sgd", fused_update=True,
+                      policy=CollectivePolicy(method="ring", num_rings=1,
+                                              overlap=True,
+                                              overlap_buckets=BUCKETS))
 
 
 def measured_overlap(grad_fn, params, batch, p: int) -> dict:
@@ -110,7 +112,8 @@ def measured_overlap(grad_fn, params, batch, p: int) -> dict:
 def run() -> None:
     model = _model()
     sync = _sync()
-    comm = comm_lib.Communicator.world((AXIS,), (P,), method="ring")
+    comm = comm_lib.Communicator.world(
+        (AXIS,), (P,), policy=CollectivePolicy(method="ring"))
     stages, schedule = overlap_schedule(model, sync, P)
     spec = schedule.spec
     params = model.init(jax.random.key(0))
@@ -137,8 +140,9 @@ def run() -> None:
     # -- 3. wire-dtype composition: the codec ratio survives bucketing ------
     wire_ratio = {}
     for wd in ("bf16", "int8"):
-        cw = comm_lib.Communicator.world((AXIS,), (P,), method="ring",
-                                         wire_dtype=wd)
+        cw = comm_lib.Communicator.world(
+            (AXIS,), (P,),
+            policy=CollectivePolicy(method="ring", wire_dtype=wd))
         total = sum(
             ppermute_bytes(
                 lambda seg, _b=b, _c=cw: _c.reduce_scatter_bucket(
@@ -157,7 +161,8 @@ def run() -> None:
     # CPU vmap emulation cannot overlap, so this just proves the staged
     # trace is not slower to execute than the monolithic one) --------------
     p2 = 2
-    comm2 = comm_lib.Communicator.world((AXIS,), (p2,), method="ring")
+    comm2 = comm_lib.Communicator.world(
+        (AXIS,), (p2,), policy=CollectivePolicy(method="ring"))
     stages2, sched2 = overlap_schedule(model, sync, p2)
     gfn2 = make_overlap_grad_fn(model, stages2, sched2, comm2)
     stacked_p = jax.tree.map(

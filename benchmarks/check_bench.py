@@ -36,6 +36,14 @@ only the structural quantities the papers' claims rest on:
                           fraction, RS ppermute count vs the schedule's
                           num_buckets·(p−1), and the codec ratios on the
                           bucketed legs (int8 <= 0.30, bf16 <= 0.50)
+  BENCH_autotune.json     policy autotuner: predicted-vs-measured byte
+                          ratios per wire dtype (full step + elastic
+                          leg, 1.0 hard), the overlap fraction on the
+                          real bucket extents (1.0 hard), the chosen
+                          policy's bytes/step vs the measured best
+                          (1.0 hard — the ``--policy auto`` acceptance
+                          gate), grid/ranked/pruned counts, and the
+                          chosen policy itself vs the baseline
 """
 from __future__ import annotations
 
@@ -57,6 +65,7 @@ REQUIRED = (
     "BENCH_wire.json",
     "BENCH_faults.json",
     "BENCH_overlap.json",
+    "BENCH_autotune.json",
 )
 
 
@@ -235,6 +244,38 @@ def check(baseline_dir: str, current_dir: str) -> int:
                     base["wire_ratio_vs_f32"][wd])
             c.bound(f"overlap.wire_ratio.{wd}",
                     cur["wire_ratio_vs_f32"][wd], limit)
+
+    base = _load(baseline_dir, "BENCH_autotune.json")
+    cur = _load(current_dir, "BENCH_autotune.json")
+    if base and cur:
+        # the cost model IS the measurement — every predicted/measured
+        # ratio is exact by construction, so gate against the literal 1.0
+        pv = cur["predicted_vs_measured"]
+        for wd in ("f32", "bf16", "int8"):
+            c.ratio(f"autotune.predicted_full_step.{wd}",
+                    pv["full_step"][wd], 1.0)
+            c.ratio(f"autotune.predicted_elastic.{wd}",
+                    pv["elastic_exchange"][wd], 1.0)
+        c.ratio("autotune.overlap_fraction", pv["overlap_fraction"], 1.0)
+        # the ISSUE acceptance gate: --policy auto selects the policy
+        # whose modeled bytes/step equals the measured best
+        c.ratio("autotune.best_vs_measured_best",
+                pv["predicted_best_vs_measured_best"], 1.0)
+        c.count("autotune.grid_size", cur["grid"]["size"],
+                base["grid"]["size"])
+        c.count("autotune.ranked", cur["grid"]["ranked"],
+                base["grid"]["ranked"])
+        c.count("autotune.pruned", cur["grid"]["pruned"],
+                base["grid"]["pruned"])
+        # the winner itself must not drift between runs — a different
+        # chosen policy at the same geometry is a ranking regression
+        c.checked += 1
+        if cur["chosen"]["policy"] != base["chosen"]["policy"]:
+            c.failures.append(
+                "autotune.chosen: policy changed "
+                f"{base['chosen']['policy']} -> {cur['chosen']['policy']}")
+        else:
+            print(f"ok autotune.chosen: {cur['chosen']['policy']}")
 
     if c.checked == 0 and not c.failures:
         print("error: no BENCH_*.json pairs found to compare",

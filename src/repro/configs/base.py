@@ -16,8 +16,15 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-from dataclasses import dataclass, field
+from dataclasses import InitVar, dataclass, field
 from typing import Optional, Tuple
+
+from repro.core.comm import CollectivePolicy, filter_mirrors, resolve_policy
+
+#: the flat-field defaults TrainSettings historically shipped (wire_dtype
+#: "f32" is the flag-spelling of the plain wire) — the base point the
+#: deprecation shim resolves non-default flat kwargs against
+_TRAIN_BASE = CollectivePolicy(method="psum", num_rings=2)
 
 VOCAB_PAD = 256  # pad vocab so 16-way model axis always divides embeddings
 
@@ -175,7 +182,15 @@ class InputShape:
 
 @dataclass(frozen=True)
 class TrainSettings:
-    """Run settings: what a job spec ships alongside the architecture."""
+    """Run settings: what a job spec ships alongside the architecture.
+
+    The collective policy — allreduce method, ring count, bucketing, wire
+    protocol, overlap — is ONE ``CollectivePolicy``: pass ``policy=`` and
+    read ``.policy``. The flat fields remain as mirrors of the resolved
+    policy for one release (the ``comm.resolve_policy`` shim warns when
+    they change it); ``sync_config()`` lowers the policy object straight
+    into ``SyncConfig(policy=...)`` so the two layers cannot drift.
+    """
 
     lr: float = 0.1
     momentum: float = 0.9
@@ -223,6 +238,41 @@ class TrainSettings:
     # arrival before the PS barrier releases with the survivor group
     # (None blocks forever — required for kill/drop fault schedules)
     barrier_timeout: Optional[float] = None
+    # internal bookkeeping: the policy the mirror knobs were backfilled
+    # from (dataclasses.replace passes it back so __post_init__ can tell
+    # an explicitly changed mirror from one restating the previous
+    # policy). Never pass it yourself.
+    policy_src: Optional[CollectivePolicy] = field(
+        default=None, repr=False, compare=False)
+    # -- the ONE policy field (canonical; the flat knobs above mirror it) --
+    policy: InitVar[Optional[CollectivePolicy]] = None
+
+    def __post_init__(self, policy: Optional[CollectivePolicy]) -> None:
+        defaults = {"method": "psum", "num_rings": 2, "bucket_bytes": None,
+                    "wire_dtype": "f32", "overlap": False,
+                    "overlap_buckets": 4}
+        flat = {
+            "method": self.allreduce_method, "num_rings": self.num_rings,
+            "bucket_bytes": self.bucket_bytes, "wire_dtype": self.wire_dtype,
+            "overlap": self.overlap, "overlap_buckets": self.overlap_buckets,
+        }
+        # only knobs the caller moved off the field defaults (or, on a
+        # replace() round-trip, off the previous policy) count as "passed"
+        flat = filter_mirrors(flat, defaults=defaults,
+                              prior=self.policy_src)
+        if policy is None and flat.get("overlap"):
+            # historical lowering: overlap forces a single ring schedule
+            flat["num_rings"] = 1
+        pol = resolve_policy(policy, flat, base=_TRAIN_BASE,
+                             where="TrainSettings")
+        object.__setattr__(self, "policy", pol)
+        object.__setattr__(self, "policy_src", pol)
+        object.__setattr__(self, "allreduce_method", pol.method)
+        object.__setattr__(self, "num_rings", pol.num_rings)
+        object.__setattr__(self, "bucket_bytes", pol.bucket_bytes)
+        object.__setattr__(self, "wire_dtype", pol.wire_dtype or "f32")
+        object.__setattr__(self, "overlap", pol.overlap)
+        object.__setattr__(self, "overlap_buckets", pol.overlap_buckets)
 
     def fault_schedule(self, seed: int = 0):
         """The parsed core.faults.FaultSchedule (None when clean)."""
@@ -236,13 +286,8 @@ class TrainSettings:
         return SyncConfig(
             mode=self.sync_mode, num_clients=self.num_clients,
             esgd_alpha=self.esgd_alpha, esgd_interval=self.esgd_interval,
-            allreduce_method=self.allreduce_method,
-            num_rings=1 if self.overlap else self.num_rings,
             fused_update=self.fused_update, flat_exchange=self.flat_exchange,
-            bucket_bytes=self.bucket_bytes,
-            wire_dtype=None if self.wire_dtype == "f32" else self.wire_dtype,
-            fsdp=self.fsdp,
-            overlap=self.overlap, overlap_buckets=self.overlap_buckets,
+            fsdp=self.fsdp, policy=self.policy,
         )
 
     def _state_dtype(self):

@@ -17,7 +17,7 @@ genuine.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import InitVar, dataclass, field
 from typing import Any, Callable, Optional
 
 import jax
@@ -26,7 +26,8 @@ import numpy as np
 
 from repro.core import cost_model, flatbuf
 from repro.core.client import group_workers
-from repro.core.comm import Communicator
+from repro.core.comm import (CollectivePolicy, Communicator,
+                             filter_mirrors, resolve_policy)
 from repro.core.elastic import elastic_client_packed, elastic_client_update
 from repro.core.faults import FaultInjector, delivery_time, injector
 from repro.core.kvstore import KVStore
@@ -43,6 +44,11 @@ from repro.optim.sgd import (
 )
 
 MODES = ("dist_sgd", "mpi_sgd", "dist_asgd", "mpi_asgd", "dist_esgd", "mpi_esgd")
+
+#: the flat-field defaults AlgoConfig historically shipped (the simulated
+#: worker group always ran 2 rings) — the base point the deprecation shim
+#: resolves non-default flat kwargs against
+_ALGO_BASE = CollectivePolicy(method="multi_ring", num_rings=2)
 
 
 @dataclass(frozen=True)
@@ -62,9 +68,10 @@ class AlgoConfig:
     model_bytes: float = 100e6    # resnet-50 ~ 25M params fp32
     seed: int = 0
     net: cost_model.NetParams = field(default_factory=cost_model.testbed)
+    # deprecated flat mirror of ``policy.method``
     allreduce_method: str = "multi_ring"
-    # deprecated: int8 on the PS-push leg only — the scope it always
-    # had; use wire_dtype="int8" for the full wire protocol
+    # removed: was int8 on the PS-push leg only; wire_dtype="int8" is the
+    # one compression knob now (hard error below)
     compress_push: bool = False
     # beyond-paper low-precision wire protocol: applied to the intra-client
     # collective hops (via the worker group's Communicator policy) AND the
@@ -103,47 +110,59 @@ class AlgoConfig:
     # doubling backoff starting at push_backoff seconds
     push_retries: int = 2
     push_backoff: float = 0.05
+    # internal bookkeeping: the policy the mirror knobs were backfilled
+    # from (dataclasses.replace passes it back so __post_init__ can tell
+    # an explicitly changed mirror from one restating the previous
+    # policy). Never pass it yourself.
+    policy_src: Optional[CollectivePolicy] = field(
+        default=None, repr=False, compare=False)
+    # -- the ONE policy field (canonical; the flat knobs mirror it) --------
+    policy: InitVar[Optional[CollectivePolicy]] = None
 
-    def __post_init__(self):
-        if self.overlap and self.allreduce_method not in (
-                "ring", "multi_ring", "scatter_gather"):
-            raise ValueError(
-                f"overlap=True issues per-bucket ring reduce-scatter legs "
-                f"mid-backward, but allreduce_method="
-                f"{self.allreduce_method!r} is not ring-family — set e.g. "
-                "allreduce_method='ring' (psum/tree cannot be split at "
-                "the schedule-bucket boundaries)")
+    def __post_init__(self, policy: Optional[CollectivePolicy] = None):
         if self.compress_push:
-            import warnings
-
-            warnings.warn(
-                "AlgoConfig(compress_push=True) is deprecated — it is the "
-                "int8 wire: pass wire_dtype='int8' instead",
-                DeprecationWarning, stacklevel=3)
-            if self.wire_dtype not in (None, "int8"):
-                raise ValueError(
-                    f"compress_push=True IS wire_dtype='int8' but "
-                    f"wire_dtype={self.wire_dtype!r} was also set — drop "
-                    "the deprecated flag")
+            raise ValueError(
+                "AlgoConfig(compress_push=True) was removed — it is the "
+                "int8 wire: pass wire_dtype='int8' instead (one "
+                "compression knob, shared between the PS push leg and "
+                "the collective hops)")
+        defaults = {"method": "multi_ring", "bucket_bytes": None,
+                    "wire_dtype": None, "overlap": False,
+                    "overlap_buckets": 4}
+        flat = {
+            "method": self.allreduce_method,
+            "bucket_bytes": self.bucket_bytes, "wire_dtype": self.wire_dtype,
+            "overlap": self.overlap, "overlap_buckets": self.overlap_buckets,
+        }
+        # only knobs the caller moved off the field defaults (or, on a
+        # replace() round-trip, off the previous policy) count as "passed"
+        flat = filter_mirrors(flat, defaults=defaults,
+                              prior=self.policy_src)
+        if policy is None and flat.get("overlap"):
+            # overlap runs a single ring schedule (policy.validate)
+            flat["num_rings"] = 1
+        pol = resolve_policy(policy, flat, base=_ALGO_BASE,
+                             where="AlgoConfig")
+        pol.validate(where="AlgoConfig")
+        object.__setattr__(self, "policy", pol)
+        object.__setattr__(self, "policy_src", pol)
+        object.__setattr__(self, "allreduce_method", pol.method)
+        object.__setattr__(self, "bucket_bytes", pol.bucket_bytes)
+        object.__setattr__(self, "wire_dtype", pol.wire_dtype)
+        object.__setattr__(self, "overlap", pol.overlap)
+        object.__setattr__(self, "overlap_buckets", pol.overlap_buckets)
 
     @property
     def collective_wire_dtype(self) -> Optional[str]:
         """Wire dtype of the intra-client collective hops (None =
-        full-precision). Only the NEW ``wire_dtype`` knob reaches the
-        hops — the deprecated ``compress_push`` alias stays scoped to
-        the PS leg it always compressed, so old configs keep their
-        exact behavior (e.g. psum + compress_push must not start
-        raising, and intra-client sums must not silently gain
-        quantization noise)."""
-        return None if self.wire_dtype == "f32" else self.wire_dtype
+        full-precision) — ``policy.wire``."""
+        return self.policy.wire
 
     @property
     def effective_wire_dtype(self) -> Optional[str]:
-        """Wire dtype of the PS push leg (KVStore wire), with the
-        ``compress_push`` deprecation resolved to int8."""
-        if self.compress_push:
-            return "int8"
-        return self.collective_wire_dtype
+        """Wire dtype of the PS push leg (KVStore wire) — the same one
+        knob as the collective hops since ``compress_push`` was removed."""
+        return self.policy.wire
 
     @property
     def effective_clients(self) -> int:
@@ -181,10 +200,7 @@ def _worker_group(cfg: AlgoConfig) -> Communicator:
     MPI-communicator-in-KVStore group; the runners register it on the
     store and all intra-client sync dispatches through it."""
     return Communicator.world(
-        ("worker",), (cfg.workers_per_client,),
-        method=cfg.allreduce_method, num_rings=2,
-        bucket_bytes=cfg.bucket_bytes,
-        wire_dtype=cfg.collective_wire_dtype)
+        ("worker",), (cfg.workers_per_client,), policy=cfg.policy)
 
 
 def _member_grads(grad_fn: GradFn, params,
@@ -272,8 +288,9 @@ def _client_membership(cfg: AlgoConfig, C: int) -> Membership:
     so every epoch change re-splits a real Communicator (the group a
     deployment would MPI_Comm_split over the survivors)."""
     return Membership(
-        C, Communicator.world(("client",), (C,),
-                              method=cfg.allreduce_method))
+        C, Communicator.world(
+            ("client",), (C,),
+            policy=CollectivePolicy(method=cfg.policy.method)))
 
 
 def run(cfg: AlgoConfig, init_fn: Callable[[jax.Array], Any], grad_fn: GradFn,

@@ -393,15 +393,15 @@ def sched_reassemble(gathered: jax.Array, schedule) -> jax.Array:
 #
 # The canonical spelling is ``Communicator.tensor_allreduce`` /
 # ``Communicator.pushpull`` (core/comm.py): the group object owns the
-# method/rings/bucketing policy. The free functions below remain as
-# adapters for the deprecated ``axis_name=`` string signature.
+# whole ``CollectivePolicy``. The free functions below only accept a
+# Communicator now — the ``axis_name=`` string form is a hard error.
 
 def _as_group(axis_name_or_comm, method, num_rings, bucket_bytes=None,
               wire_dtype=None, *, where: str):
-    """Shim: a Communicator passes through (explicit policy knobs
-    alongside it are rejected — the policy lives on the group, matching
-    ``scatter_update_gather``'s contract); an axis-name string becomes a
-    trace-time-resolved group behind a DeprecationWarning."""
+    """A Communicator passes through (explicit policy knobs alongside it
+    are rejected — the policy lives on the group, matching
+    ``scatter_update_gather``'s contract); the removed axis-name string
+    form raises, naming ``Communicator.from_axis_name``."""
     from repro.core import comm as _comm
 
     if isinstance(axis_name_or_comm, _comm.Communicator):
@@ -412,12 +412,7 @@ def _as_group(axis_name_or_comm, method, num_rings, bucket_bytes=None,
                 "lives on the group — set method/num_rings/wire_dtype "
                 "there (Communicator.with_policy), not as arguments")
         return axis_name_or_comm
-    _comm._deprecated_axis_name(where)
-    return _comm.Communicator.from_axis_name(
-        axis_name_or_comm, method=method or "ring",
-        num_rings=2 if num_rings is None else num_rings,
-        bucket_bytes=bucket_bytes,
-        wire_dtype=check_wire_dtype(wire_dtype, where=where))
+    _comm._axis_name_removed(where)
 
 
 def tensor_allreduce(tree: Any, axis_name: "str | Any",
@@ -428,13 +423,13 @@ def tensor_allreduce(tree: Any, axis_name: "str | Any",
                      spec: flatbuf.FlatBuffer | None = None) -> Any:
     """Allreduce a whole pytree as ONE fused buffer (tensor collective).
 
-    ``axis_name`` may be a ``core.comm.Communicator`` (canonical — the
-    policy lives on the group, and explicit ``method``/``num_rings``
-    arguments are rejected) or the deprecated bare axis-name string
-    (where ``method`` defaults to "ring" and ``num_rings`` to 2). The
-    flat-buffer spec is memoized per tree structure (``spec_for``) or
-    passed in by callers that built it once at setup time — either way
-    there is no per-step re-flatten/concatenate.
+    ``axis_name`` must be a ``core.comm.Communicator`` (the policy lives
+    on the group, and explicit ``method``/``num_rings`` arguments are
+    rejected); the removed bare-string form raises, naming
+    ``Communicator.from_axis_name``. The flat-buffer spec is memoized
+    per tree structure (``spec_for``) or passed in by callers that built
+    it once at setup time — either way there is no per-step
+    re-flatten/concatenate.
     """
     group = _as_group(axis_name_or_comm=axis_name, method=method,
                       num_rings=num_rings, wire_dtype=wire_dtype,
@@ -452,8 +447,8 @@ def tensor_pushpull(tree: Any, axis_name: "str | Any", *, fused: bool = True,
     default ring); ``fused=False`` is push (reduce-to-master) + pull
     (broadcast) — two binomial-tree phases like ZPush + ZPull, which IS
     the communication pattern, so ``method`` must be left unset (or
-    "tree") there. ``axis_name`` may be a ``Communicator`` (canonical)
-    or the deprecated bare string."""
+    "tree") there. ``axis_name`` must be a ``Communicator``; the removed
+    bare-string form raises."""
     if not fused and method not in (None, "tree"):
         raise ValueError(
             f"method={method!r} is only meaningful for fused=True; the "

@@ -34,11 +34,17 @@ single-axis geometry, with the same final shard size — so one
 ``Communicator`` spanning both axes IS the C=1 pure-MPI mode on a 2-axis
 mesh.
 
-Everything below the config layer speaks ``Communicator``;
-``core.hierarchy.SyncConfig`` keeps its fields as the *construction
-recipe* (see ``from_sync``). Bare ``axis_name=`` string signatures on
-the old entry points keep working through ``Communicator.from_axis_name``
-behind a ``DeprecationWarning``.
+Everything below the config layer speaks ``Communicator``. The
+collective policy itself is one value type — ``CollectivePolicy`` —
+that Communicator, SyncConfig, TrainSettings, AlgoConfig and JobSpec
+all carry as a single field: one definition of validity
+(``CollectivePolicy.validate``), one inheritance path (``replace`` on
+axes/sizes keeps the policy, so split/complement/local/resized inherit
+it for free). The old flat kwargs (``method=`` / ``num_rings=`` /
+``bucket_bytes=`` / ``wire_dtype=`` / ``overlap=``) survive for one
+release behind the single ``resolve_policy`` shim. Bare ``axis_name=``
+string signatures on the old entry points were removed — build the
+group with ``Communicator.from_axis_name`` and pass ``comm=``.
 """
 from __future__ import annotations
 
@@ -55,13 +61,186 @@ from repro.core import flatbuf
 from repro.core.compat import axis_size as _axis_size
 
 
-def _deprecated_axis_name(where: str) -> None:
+def _axis_name_removed(where: str) -> None:
+    raise ValueError(
+        f"{where}: the deprecated axis_name= string form was removed — "
+        "build the group explicitly with Communicator.from_axis_name("
+        "axis_name) (or Communicator.world(axes, sizes).split(...)) and "
+        "pass comm= instead")
+
+
+#: the one set of policy knob names, in canonical order — the flat-kwarg
+#: shim and the config-layer mirrors both key off this tuple
+_POLICY_FIELDS = ("method", "num_rings", "bucket_bytes", "wire_dtype",
+                  "overlap", "overlap_buckets")
+
+
+@dataclass(frozen=True)
+class CollectivePolicy:
+    """One point in the collective-policy space, as a value.
+
+    Every layer that used to carry the five loose knobs — Communicator,
+    SyncConfig, TrainSettings, AlgoConfig, JobSpec — carries ONE of
+    these instead. ``validate()`` is the single definition of which
+    points are legal (the autotuner's pruner calls it too), and because
+    the policy rides ``Communicator.policy`` as one field, every
+    ``split``/``complement``/``local``/``resized`` inherits it through
+    a single ``dataclasses.replace`` path.
+
+    Frozen and hashable: Communicator is a jit static argument
+    (``_emulated_reduce``), so the policy must hash with it.
+    """
+
+    method: str = "ring"
+    num_rings: int = 1
+    bucket_bytes: Optional[int] = None
+    # low-precision wire protocol: None/"f32" (full precision), "bf16"
+    # (cast per hop), "int8" (codes + per-bucket scales per hop)
+    wire_dtype: Optional[str] = None
+    # backward-overlapped bucketed reduce-scatter (PR 7): schedule the
+    # gradient leg per layer-keyed bucket inside the backward DAG
+    overlap: bool = False
+    overlap_buckets: int = 4
+
+    @property
+    def wire(self) -> Optional[str]:
+        """Normalized wire dtype (None for the full-precision "f32")."""
+        from repro.core import collectives as C
+
+        return C.check_wire_dtype(self.wire_dtype, where="CollectivePolicy")
+
+    def replace(self, **kw) -> "CollectivePolicy":
+        return replace(self, **kw)
+
+    def validate(self, *, where: str = "CollectivePolicy"
+                 ) -> "CollectivePolicy":
+        """THE definition of a valid policy point. Every config layer's
+        ``validate`` delegates the policy-level checks here, and the
+        autotuner prunes its search space by calling this per candidate."""
+        from repro.core import collectives as C
+
+        if self.method not in C._METHODS:
+            raise ValueError(
+                f"{where}: allreduce_method (policy.method) must be one "
+                f"of {C._METHODS}, got {self.method!r}")
+        wire = C.check_wire_dtype(self.wire_dtype, where=where)
+        if wire is not None and self.method not in C.RING_METHODS:
+            raise ValueError(
+                f"{where}: wire_dtype={self.wire_dtype!r} rides the "
+                f"explicit ring hops of {C.RING_METHODS}; "
+                f"method={self.method!r} has no wire to quantize")
+        if self.num_rings < 1:
+            raise ValueError(
+                f"{where}: num_rings must be >= 1, got {self.num_rings}")
+        if self.bucket_bytes is not None and self.bucket_bytes <= 0:
+            raise ValueError(
+                f"{where}: bucket_bytes must be positive, "
+                f"got {self.bucket_bytes}")
+        if self.overlap_buckets < 1:
+            raise ValueError(
+                f"{where}: overlap_buckets must be >= 1, "
+                f"got {self.overlap_buckets}")
+        if self.overlap:
+            if self.method not in C.RING_METHODS:
+                raise ValueError(
+                    f"{where}: overlap schedules per-bucket ring "
+                    f"reduce-scatters — method must be one of "
+                    f"{C.RING_METHODS}, got {self.method!r}")
+            if self.bucket_bytes is not None:
+                raise ValueError(
+                    f"{where}: overlap buckets come from the layer-keyed "
+                    "schedule — bucket_bytes does not compose with "
+                    "overlap (byte-budget bucketing is a ROADMAP item)")
+            if self.num_rings != 1:
+                raise ValueError(
+                    f"{where}: overlap already pipelines the buckets — "
+                    f"num_rings must be 1, got {self.num_rings}")
+        return self
+
+    def require_plain_wire(self, what: str) -> None:
+        """Raise if this policy quantizes the wire but the dispatched
+        collective has no explicit ring hops to carry the codec."""
+        from repro.core import collectives as C
+
+        if self.wire is not None:
+            raise ValueError(
+                f"wire_dtype={self.wire_dtype!r} only rides the explicit "
+                f"ring hops (methods {C.RING_METHODS}), "
+                f"but this group dispatches {what} — drop the wire_dtype "
+                "or pick a ring-family method")
+
+    def to_dict(self) -> dict:
+        return {k: getattr(self, k) for k in _POLICY_FIELDS}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "CollectivePolicy":
+        unknown = set(d) - set(_POLICY_FIELDS)
+        if unknown:
+            raise ValueError(
+                f"unknown CollectivePolicy fields {sorted(unknown)}; "
+                f"valid: {_POLICY_FIELDS}")
+        return cls(**d)
+
+
+def _norm_flat(key: str, value):
+    # the config layers' string spelling of "no wire protocol"
+    if key == "wire_dtype" and value == "f32":
+        return None
+    # JobSpec's flag spelling of "no byte-bucketing"
+    if key == "bucket_bytes" and value == 0:
+        return None
+    return value
+
+
+def filter_mirrors(flat: dict, *, defaults: dict,
+                   prior: Optional["CollectivePolicy"]) -> dict:
+    """Drop mirror-field values that are NOT caller input.
+
+    The config layers keep the old flat knobs as real fields mirroring
+    ``policy``, so ``dataclasses.replace`` re-inits with every mirror
+    populated. ``prior`` is the policy the mirrors were backfilled from
+    (the layer's ``policy_src`` bookkeeping field, which ``replace``
+    passes back): entries restating it are derived state — only entries
+    the caller moved off it are policy input. On fresh construction
+    (``prior`` is None) the reference point is the layer's field
+    ``defaults`` instead."""
+    ref = ({k: getattr(prior, k) for k in flat} if prior is not None
+           else defaults)
+    return {k: v for k, v in flat.items()
+            if _norm_flat(k, v) != _norm_flat(k, ref[k])}
+
+
+def resolve_policy(policy: Optional[CollectivePolicy], flat: dict, *,
+                   base: Optional[CollectivePolicy] = None,
+                   where: str = "CollectivePolicy") -> CollectivePolicy:
+    """THE flat-kwargs deprecation shim — the one place the old loose
+    knobs (``method=`` / ``num_rings=`` / ``bucket_bytes=`` /
+    ``wire_dtype=`` / ``overlap=`` / ``overlap_buckets=``) still turn
+    into a policy, for one release.
+
+    ``flat`` holds the knobs a caller passed explicitly. Entries that
+    merely restate the resolved policy (``base`` overridden by
+    ``policy``) pass silently — that keeps mirror fields and
+    ``dataclasses.replace`` round-trips quiet. Entries that CHANGE the
+    policy emit one ``DeprecationWarning`` naming ``CollectivePolicy``.
+    """
+    unknown = set(flat) - set(_POLICY_FIELDS)
+    if unknown:
+        raise TypeError(
+            f"{where}: unknown policy kwargs {sorted(unknown)}; "
+            f"valid: {_POLICY_FIELDS} (or policy=CollectivePolicy(...))")
+    pol = policy if policy is not None else (
+        base if base is not None else CollectivePolicy())
+    changed = {k: _norm_flat(k, v) for k, v in flat.items()
+               if _norm_flat(k, v) != _norm_flat(k, getattr(pol, k))}
+    if not changed:
+        return pol
     warnings.warn(
-        f"{where}: passing a bare axis_name string (plus method knobs) is "
-        "deprecated — build a repro.core.comm.Communicator (e.g. "
-        "Communicator.from_axis_name(...) or Communicator.world(...).split(...)) "
-        "and pass comm= instead",
+        f"{where}: flat policy kwargs ({', '.join(sorted(changed))}) are "
+        "deprecated — pass policy=repro.core.comm.CollectivePolicy(...) "
+        "(one field, one validate()) instead",
         DeprecationWarning, stacklevel=3)
+    return replace(pol, **changed)
 
 
 @dataclass(frozen=True)
@@ -78,20 +257,37 @@ class Communicator:
 
     axes: tuple[str, ...] = ()
     sizes: Optional[tuple[int, ...]] = None
-    method: str = "ring"
-    num_rings: int = 1
-    bucket_bytes: Optional[int] = None
-    # low-precision wire protocol: None/"f32" (full precision), "bf16"
-    # (cast per hop), "int8" (codes + per-bucket scales per hop); part of
-    # the collective policy, so splits/complements inherit it and every
-    # level of a hierarchical collective quantizes its own hops
-    wire_dtype: Optional[str] = None
+    # the whole collective policy as ONE field — splits/complements/
+    # locals/resizes inherit it through replace(axes=..., sizes=...), and
+    # every level of a hierarchical collective quantizes its own hops
+    policy: CollectivePolicy = CollectivePolicy()
+
+    # -- policy views (the old flat fields, read-only) ----------------------
+    @property
+    def method(self) -> str:
+        return self.policy.method
+
+    @property
+    def num_rings(self) -> int:
+        return self.policy.num_rings
+
+    @property
+    def bucket_bytes(self) -> Optional[int]:
+        return self.policy.bucket_bytes
+
+    @property
+    def wire_dtype(self) -> Optional[str]:
+        return self.policy.wire_dtype
 
     # -- construction -------------------------------------------------------
     @classmethod
-    def world(cls, axes, sizes=None, *, mesh=None, **policy) -> "Communicator":
+    def world(cls, axes, sizes=None, *, mesh=None,
+              policy: Optional[CollectivePolicy] = None,
+              **flat) -> "Communicator":
         """The top-level group. Pass explicit ``sizes`` (emulation) or a
-        ``mesh`` whose ``mesh.shape`` carries them."""
+        ``mesh`` whose ``mesh.shape`` carries them; the collective
+        policy rides ``policy=`` (flat knobs shim through
+        ``resolve_policy`` for one release)."""
         axes = tuple(axes)
         if mesh is not None:
             missing = [a for a in axes if a not in mesh.shape]
@@ -104,17 +300,22 @@ class Communicator:
             sizes = tuple(int(s) for s in sizes)
             if len(sizes) != len(axes):
                 raise ValueError(f"{len(axes)} axes but {len(sizes)} sizes")
-        return cls(axes=axes, sizes=sizes, **policy)
+        pol = resolve_policy(policy, flat, where="Communicator.world")
+        return cls(axes=axes, sizes=sizes, policy=pol)
 
     @classmethod
-    def from_axis_name(cls, axis_name, **policy) -> "Communicator":
-        """Adapter for the deprecated ``axis_name=`` string signatures:
-        ``None`` is the trivial group, a string (or tuple of strings) is
-        a group with trace-time-resolved sizes."""
+    def from_axis_name(cls, axis_name, *,
+                       policy: Optional[CollectivePolicy] = None,
+                       **flat) -> "Communicator":
+        """Build a group from a bare axis name: ``None`` is the trivial
+        group, a string (or tuple of strings) is a group with
+        trace-time-resolved sizes. This is the named replacement for the
+        removed ``axis_name=`` string signatures."""
+        pol = resolve_policy(policy, flat, where="Communicator.from_axis_name")
         if axis_name is None:
-            return cls(axes=(), sizes=(), **policy)
+            return cls(axes=(), sizes=(), policy=pol)
         axes = (axis_name,) if isinstance(axis_name, str) else tuple(axis_name)
-        return cls(axes=axes, sizes=None, **policy)
+        return cls(axes=axes, sizes=None, policy=pol)
 
     def split(self, *axes: str) -> "Communicator":
         """Carve the sub-communicator spanning ``axes`` — the
@@ -172,8 +373,16 @@ class Communicator:
                       for a, s in zip(self.axes, self.sizes))
         return replace(self, sizes=sizes)
 
-    def with_policy(self, **kw) -> "Communicator":
-        return replace(self, **kw)
+    def with_policy(self, policy: Optional[CollectivePolicy] = None,
+                    **kw) -> "Communicator":
+        """Same group, new policy: a whole ``CollectivePolicy`` or field
+        overrides (canonical sugar, e.g. ``with_policy(wire_dtype="int8")``)."""
+        if policy is not None:
+            if kw:
+                raise TypeError(
+                    "with_policy: pass policy= or field overrides, not both")
+            return replace(self, policy=policy)
+        return replace(self, policy=self.policy.replace(**kw))
 
     # -- geometry -----------------------------------------------------------
     @property
@@ -218,15 +427,10 @@ class Communicator:
         """Normalized wire dtype (None for the full-precision "f32")."""
         from repro.core import collectives as C
 
-        return C.check_wire_dtype(self.wire_dtype, where="Communicator")
+        return C.check_wire_dtype(self.policy.wire_dtype, where="Communicator")
 
     def _require_plain_wire(self, what: str) -> None:
-        if self.wire is not None:
-            raise ValueError(
-                f"wire_dtype={self.wire_dtype!r} only rides the explicit "
-                f"ring hops (methods {('ring', 'multi_ring', 'scatter_gather')}), "
-                f"but this group dispatches {what} — drop the wire_dtype "
-                "or pick a ring-family method")
+        self.policy.require_plain_wire(what)
 
     def rings_for(self, nbytes: int) -> int:
         """The policy's effective ring count for an ``nbytes`` buffer
@@ -468,14 +672,16 @@ LOCAL = Communicator()
 
 def from_sync(sync, axes=(), sizes=None, *, mesh=None) -> Communicator:
     """Build a communicator from a ``SyncConfig`` recipe: the config's
-    ``allreduce_method`` / ``num_rings`` / ``bucket_bytes`` /
-    ``wire_dtype`` become the group's collective policy. This is the ONE
-    place config knobs turn into a Communicator — everything below
-    speaks the object."""
-    return Communicator.world(
-        axes, sizes, mesh=mesh, method=sync.allreduce_method,
-        num_rings=sync.num_rings, bucket_bytes=sync.bucket_bytes,
-        wire_dtype=getattr(sync, "wire_dtype", None))
+    resolved ``CollectivePolicy`` becomes the group's policy verbatim —
+    ONE inheritance path from config through every split/complement/
+    local below it."""
+    pol = getattr(sync, "policy", None)
+    if pol is None:  # duck-typed recipe without the resolved field
+        pol = CollectivePolicy(
+            method=sync.allreduce_method, num_rings=sync.num_rings,
+            bucket_bytes=sync.bucket_bytes,
+            wire_dtype=getattr(sync, "wire_dtype", None))
+    return Communicator.world(axes, sizes, mesh=mesh, policy=pol)
 
 
 def sync_comms(sync, world: Communicator

@@ -29,7 +29,6 @@ Two substrates implement the exchange:
 """
 from __future__ import annotations
 
-import warnings
 from functools import partial
 from typing import Any, Optional
 
@@ -150,22 +149,13 @@ def elastic_exchange_packed(params: Any, center: Any, alpha,
 
     ``wire_dtype`` ("bf16"/"int8") runs the packed w buffer through the
     wire roundtrip first — the PS-push wire form — so the exchange sees
-    exactly what a compressed push delivers. ``compress=True`` is the
-    deprecated spelling of ``wire_dtype="int8"`` (same contract as
-    ``KVStore(compress_push=)``: warns, and conflicts are an error,
-    never a silent override).
+    exactly what a compressed push delivers. The removed ``compress=True``
+    alias is a hard error: it WAS ``wire_dtype="int8"``.
     """
     if compress:
-        warnings.warn(
-            "elastic_exchange_packed(compress=True) is deprecated — it "
-            "is the int8 wire: pass wire_dtype='int8' instead",
-            DeprecationWarning, stacklevel=2)
-        if wire_dtype not in (None, "int8"):
-            raise ValueError(
-                f"compress=True IS wire_dtype='int8' but "
-                f"wire_dtype={wire_dtype!r} was also passed — drop the "
-                "deprecated flag")
-        wire_dtype = "int8"
+        raise ValueError(
+            "elastic_exchange_packed(compress=True) was removed — it is "
+            "the int8 wire: pass wire_dtype='int8' instead")
     return _elastic_exchange_packed(params, center, alpha,
                                     wire_dtype=wire_dtype)
 
@@ -209,8 +199,10 @@ def wire_packed(tree: Any, wire_dtype: Optional[str] = "int8") -> Any:
 
 
 def quantize_packed(tree: Any) -> Any:
-    """Back-compat spelling of the int8 packed wire roundtrip."""
-    return wire_packed(tree, "int8")
+    """Removed alias of the int8 packed wire roundtrip."""
+    raise ValueError(
+        "quantize_packed was removed — it is the int8 wire: call "
+        "wire_packed(tree, wire_dtype='int8') instead")
 
 
 @jax.jit
@@ -276,23 +268,21 @@ def elastic_exchange_sharded(spec: flatbuf.FlatBuffer, params: Any,
     center shards ride the compressed wire, hp accumulation per hop).
     A trivial group (or axis of size 1)
     degenerates to the local exchange: both kernels over the whole
-    buffer, no collective. The deprecated ``axis_name=`` string keeps
-    working via ``Communicator.from_axis_name`` (DeprecationWarning;
-    ``axis_name=None`` stays the quiet local form).
-    Returns ``(new_params, new_center)``, both full trees.
+    buffer, no collective. The old ``axis_name=`` string spelling was
+    removed — build the group with ``Communicator.from_axis_name`` and
+    pass ``comm=``. Returns ``(new_params, new_center)``, both full
+    trees.
     """
     from repro.core import comm as _comm
     from repro.kernels.fused_elastic.fused_elastic import (
         elastic_center_flat, elastic_client_diff_flat)
 
+    if axis_name is not None:
+        _comm._axis_name_removed("elastic_exchange_sharded")
     if comm is None:
-        if axis_name is not None:
-            _comm._deprecated_axis_name("elastic_exchange_sharded")
-        comm = _comm.Communicator.from_axis_name(
-            axis_name, num_rings=num_rings, bucket_bytes=bucket_bytes,
-            wire_dtype=wire_dtype)
-    elif axis_name is not None:
-        raise ValueError("pass comm= or the deprecated axis_name=, not both")
+        comm = _comm.LOCAL.with_policy(
+            num_rings=num_rings,
+            bucket_bytes=bucket_bytes, wire_dtype=wire_dtype)
     elif num_rings != 1 or bucket_bytes is not None or wire_dtype is not None:
         raise ValueError(
             "with comm= the ring/wire policy lives on the communicator — "

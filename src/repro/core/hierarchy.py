@@ -17,22 +17,40 @@ binds it to the real mesh.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass
+from dataclasses import InitVar, dataclass
 from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core.comm import CollectivePolicy, filter_mirrors, resolve_policy
+
+#: the flat-field defaults SyncConfig historically shipped — the base
+#: point the deprecation shim resolves non-default flat kwargs against
+_SYNC_BASE = CollectivePolicy(method="psum", num_rings=2)
+
 
 @dataclass(frozen=True)
 class SyncConfig:
-    """Production gradient-sync mode (the lowerable subset of MODES)."""
+    """Production gradient-sync mode (the lowerable subset of MODES).
+
+    The collective policy — allreduce method, ring count, bucketing,
+    wire protocol, overlap — is ONE ``CollectivePolicy``: pass it as
+    ``policy=`` and read it back as ``.policy``. The old flat fields
+    remain as mirrors of the resolved policy for one release (writing
+    them routes through the single ``comm.resolve_policy`` shim, which
+    warns whenever they change the policy), so ``cfg.allreduce_method``
+    keeps reading and ``dataclasses.replace(cfg, wire_dtype=...)`` keeps
+    working while callers migrate to
+    ``replace(cfg, policy=cfg.policy.replace(...))``.
+    """
 
     mode: str = "mpi_sgd"       # "mpi_sgd" | "mpi_esgd"
     num_clients: int = 1        # C; >1 requires a "pod" axis of that size
     esgd_alpha: float = 0.5
     esgd_interval: int = 64
+    # -- deprecated flat mirrors of ``policy`` (one release) ---------------
     # which collective implements the intra-client tensor allreduce:
     # "psum" (XLA-native), "ring"/"multi_ring"/"tree" (paper-faithful), or
     # "scatter_gather" (the separable halves the fused step runs between)
@@ -71,6 +89,36 @@ class SyncConfig:
     # fused flat path + a ring-family method (see validate).
     overlap: bool = False
     overlap_buckets: int = 4  # schedule buckets == backward stages
+    # internal bookkeeping: the policy the mirrors above were backfilled
+    # from. ``dataclasses.replace`` passes it back, letting __post_init__
+    # tell a mirror the caller actually changed from one merely restating
+    # the previous policy. Never pass it yourself.
+    policy_src: Optional[CollectivePolicy] = dataclasses.field(
+        default=None, repr=False, compare=False)
+    # -- the ONE policy field (canonical; mirrors derive from it) ----------
+    policy: InitVar[Optional[CollectivePolicy]] = None
+
+    def __post_init__(self, policy: Optional[CollectivePolicy]) -> None:
+        flat = {
+            "method": self.allreduce_method, "num_rings": self.num_rings,
+            "bucket_bytes": self.bucket_bytes, "wire_dtype": self.wire_dtype,
+            "overlap": self.overlap, "overlap_buckets": self.overlap_buckets,
+        }
+        # only knobs the caller moved off the legacy defaults (or, on a
+        # replace() round-trip, off the previous policy) count as "passed"
+        flat = filter_mirrors(
+            flat, defaults={k: getattr(_SYNC_BASE, k) for k in flat},
+            prior=self.policy_src)
+        pol = resolve_policy(policy, flat, base=_SYNC_BASE,
+                             where="SyncConfig")
+        object.__setattr__(self, "policy", pol)
+        object.__setattr__(self, "policy_src", pol)
+        object.__setattr__(self, "allreduce_method", pol.method)
+        object.__setattr__(self, "num_rings", pol.num_rings)
+        object.__setattr__(self, "bucket_bytes", pol.bucket_bytes)
+        object.__setattr__(self, "wire_dtype", pol.wire_dtype)
+        object.__setattr__(self, "overlap", pol.overlap)
+        object.__setattr__(self, "overlap_buckets", pol.overlap_buckets)
 
     def validate(self, mesh: Optional[Mesh] = None) -> None:
         """Check the config against a mesh BEFORE any step is traced.
@@ -83,36 +131,11 @@ class SyncConfig:
         """
         if self.mode not in ("mpi_sgd", "mpi_esgd"):
             raise ValueError(f"lowerable modes are mpi_sgd/mpi_esgd, got {self.mode}")
-        from repro.core.collectives import _METHODS
-
-        if self.allreduce_method not in _METHODS:
-            raise ValueError(
-                f"allreduce_method={self.allreduce_method!r} is not one of "
-                f"{_METHODS} — SyncConfig is the construction recipe for "
-                "core.comm.Communicator, which only dispatches these")
-        from repro.core.collectives import (
-            RING_METHODS,
-            check_wire_dtype,
-        )
-
-        wire = check_wire_dtype(self.wire_dtype, where="SyncConfig")
-        if wire is not None and self.allreduce_method not in RING_METHODS:
-            raise ValueError(
-                f"wire_dtype={self.wire_dtype!r} rides the explicit ring "
-                f"hops, but allreduce_method={self.allreduce_method!r} is "
-                f"not one of {RING_METHODS} — set e.g. "
-                "allreduce_method='ring' (psum is XLA-native and tree "
-                "moves full buffers; neither carries the int8/bf16 codec)")
+        # the policy-level guards (method membership, wire ⇒ ring-family,
+        # overlap ⇒ ring + single-ring + no byte-bucketing) live in ONE
+        # place now; only the layer-specific checks remain below
+        self.policy.validate(where="SyncConfig")
         if self.overlap:
-            if self.allreduce_method not in RING_METHODS:
-                raise ValueError(
-                    f"overlap=True issues per-bucket ring reduce-scatter "
-                    f"legs mid-backward, but allreduce_method="
-                    f"{self.allreduce_method!r} is not one of "
-                    f"{RING_METHODS} — set e.g. allreduce_method='ring' "
-                    "(psum is one XLA-chosen collective and tree moves "
-                    "full buffers; neither can be split at the schedule-"
-                    "bucket boundaries the backward stages produce)")
             if not self.fused_update:
                 raise ValueError(
                     "overlap=True rides the fused flat path — the staged "
@@ -127,25 +150,6 @@ class SyncConfig:
                     f"mode={self.mode!r} runs per-client local updates "
                     "(p=1 geometry, no ring leg to hide); drop overlap "
                     "or use mode='mpi_sgd'")
-            if self.overlap_buckets < 1:
-                raise ValueError(
-                    f"overlap_buckets={self.overlap_buckets} — need >= 1 "
-                    "(1 = single degenerate bucket, the non-overlapped "
-                    "schedule)")
-            if self.bucket_bytes:
-                raise ValueError(
-                    "overlap=True derives its bucket partition from the "
-                    "backward stages (overlap_buckets), not from byte "
-                    "counts — bucket_bytes splits one monolithic leg into "
-                    "ring schedules and would fight the stage boundaries; "
-                    "set bucket_bytes=None")
-            if self.num_rings > 1:
-                raise ValueError(
-                    f"overlap=True runs each schedule bucket as its own "
-                    f"single-ring leg — the buckets ARE the independent "
-                    f"schedules, so num_rings={self.num_rings} has no "
-                    "slot to ride; set num_rings=1 (TrainSettings."
-                    "sync_config does this automatically)")
             if self.fsdp:
                 raise ValueError(
                     "overlap=True assumes replicated params (the staged "

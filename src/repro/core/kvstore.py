@@ -37,7 +37,6 @@ pushes quantize that single packed buffer instead of per-leaf codes.
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from dataclasses import dataclass, field
 from typing import Any, Callable, Optional
 
@@ -109,17 +108,10 @@ class KVStore:
         if kv_type not in VALID_TYPES:
             raise ValueError(f"kv_type must be one of {VALID_TYPES}")
         if compress_push:
-            warnings.warn(
-                "KVStore(compress_push=True) is deprecated — it is the "
+            raise ValueError(
+                "KVStore(compress_push=True) was removed — it is the "
                 "int8 wire: pass wire_dtype='int8' instead (one "
-                "compression knob, shared with the collective legs)",
-                DeprecationWarning, stacklevel=2)
-            if wire_dtype not in (None, "int8"):
-                raise ValueError(
-                    f"compress_push=True IS wire_dtype='int8' but "
-                    f"wire_dtype={wire_dtype!r} was also passed — drop "
-                    "the deprecated flag")
-            wire_dtype = "int8"
+                "compression knob, shared with the collective legs)")
         self.kv_type = kv_type
         self.num_workers = num_workers
         self.num_servers = max(num_servers, 1)

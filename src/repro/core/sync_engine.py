@@ -226,21 +226,16 @@ def make_sync_engine(optimizer: Optimizer, sync: SyncConfig, mesh=None, *,
 
     ``comm`` is the gradient group the update leg syncs over; omitted,
     it is built from the SyncConfig recipe (trivial group — the local /
-    per-client geometry). The deprecated ``axis_name=`` string keeps
-    working via ``Communicator.from_axis_name``. ``spec`` (the
-    param-tree FlatBuffer) is required whenever a flat leg engages;
-    callers that might need it build it with ``launch.train.grad_spec``.
+    per-client geometry). The old ``axis_name=`` string spelling was
+    removed — build the group with ``Communicator.from_axis_name`` and
+    pass ``comm=``. ``spec`` (the param-tree FlatBuffer) is required
+    whenever a flat leg engages; callers that might need it build it
+    with ``launch.train.grad_spec``.
     """
+    if axis_name is not None:
+        comm_lib._axis_name_removed("make_sync_engine")
     if comm is None:
-        if axis_name is not None:
-            comm_lib._deprecated_axis_name("make_sync_engine")
-            comm = comm_lib.Communicator.from_axis_name(
-                axis_name, method=sync.allreduce_method,
-                num_rings=sync.num_rings, bucket_bytes=sync.bucket_bytes)
-        else:
-            comm = comm_lib.from_sync(sync)
-    elif axis_name is not None:
-        raise ValueError("pass comm= or the deprecated axis_name=, not both")
+        comm = comm_lib.from_sync(sync)
     fused = flat_update_supported(optimizer, sync, mesh)
     flat_ex = flat_exchange_active(sync, mesh)
     if fused and spec is None:

@@ -1,0 +1,253 @@
+"""Policy autotuner: rank the collective-policy space with the cost model.
+
+The paper hand-picks its sync configuration per experiment; Shi et al.
+(arXiv:1711.05979) show an α-β-γ performance model can rank such
+configurations ahead of time. Ours already matches every measured
+BENCH_*.json byte count exactly (bench_fused_step / bench_wire /
+bench_overlap gate the per-leg bytes against ``core.cost_model``), so the
+search layer is: enumerate the ``CollectivePolicy`` grid, prune every
+candidate the ONE ``CollectivePolicy.validate()`` rejects (the guard
+message becomes the prune reason — invalid points are ranked out, not
+crashed on), score the survivors with ``cost_model`` (per-device wire
+bytes of the gradient + param legs, modeled step wall time) and pick the
+fastest. ``launch/train.py --policy auto`` and the launcher run this at
+startup; ``benchmarks/bench_autotune.py`` gates the predicted-best
+against the measured-best bytes/step.
+
+Scoring conventions (matching the fused sharded step the drivers run):
+
+  ring-family   reduce-scatter + allgather, wire-scaled β
+                (``grad_leg_bytes`` + ``param_leg_bytes``)
+  psum          XLA lowers to the same ring pattern at full precision
+  tree          2·ceil(log2 p) full-buffer hops
+  per_leaf      ring bytes + one collective launch per leaf (α each)
+  overlap       ``overlapped_step_time``: the hidden reduce-scatter
+                fraction rides behind backward compute
+
+``compute_s`` is the per-step compute the overlap candidates hide their
+wire leg behind; pass 0.0 to rank on pure communication.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.core import cost_model
+from repro.core.collectives import RING_METHODS, _METHODS
+from repro.core.comm import CollectivePolicy
+from repro.launch.analysis import HBM_BW, PEAK_FLOPS, train_model_flops
+
+#: deterministic tie-break order among equal-time, equal-byte candidates:
+#: prefer the plain single ring (fewest moving parts), then the fancier
+#: ring variants, then the XLA-native / reference methods
+_METHOD_PREF = ("ring", "multi_ring", "scatter_gather", "psum", "tree",
+                "per_leaf")
+
+#: wire preference on exact ties (cheaper wire first is already decided
+#: by bytes; this only orders the impossible exact-tie case)
+_WIRE_PREF = (None, "bf16", "int8")
+
+#: byte-bucketing grid point (4 MiB — flatbuf's overlap-free bucketed
+#: schedules); modeled identically to the monolithic leg, enumerated so
+#: the overlap ⇒ no-byte-bucketing guard shows up as a pruned candidate
+_BUCKET_CHOICES = (None, 4 << 20)
+
+
+@dataclass(frozen=True)
+class ScoredPolicy:
+    """One valid candidate with its cost-model score."""
+
+    policy: CollectivePolicy
+    bytes_per_step: float    # per-device wire bytes, grad + param legs
+    step_time_s: float       # modeled wall time of one step
+    overlap_fraction: float  # structural hidden fraction (0 = none)
+
+    def to_dict(self) -> dict:
+        return {"policy": self.policy.to_dict(),
+                "bytes_per_step": self.bytes_per_step,
+                "step_time_s": self.step_time_s,
+                "overlap_fraction": self.overlap_fraction}
+
+
+@dataclass(frozen=True)
+class PrunedPolicy:
+    """One grid point ``CollectivePolicy.validate()`` rejected."""
+
+    policy: CollectivePolicy
+    reason: str
+
+    def to_dict(self) -> dict:
+        return {"policy": self.policy.to_dict(), "reason": self.reason}
+
+
+@dataclass(frozen=True)
+class AutotuneResult:
+    chosen: ScoredPolicy
+    ranked: tuple            # every valid candidate, best first
+    pruned: tuple            # every invalid grid point with its guard
+    nbytes: float            # f32 gradient payload the scores assume
+    p: int                   # ring size (devices per client)
+    compute_s: float         # per-step compute the overlap legs hide in
+
+    def to_dict(self) -> dict:
+        return {
+            "chosen": self.chosen.to_dict(),
+            "ranked": [s.to_dict() for s in self.ranked],
+            "pruned": [s.to_dict() for s in self.pruned],
+            "nbytes": self.nbytes, "p": self.p, "compute_s": self.compute_s,
+        }
+
+
+def enumerate_policies() -> list[CollectivePolicy]:
+    """The full candidate grid, valid and invalid alike.
+
+    Every method × ring count (multi_ring explores 2 and 4 rings) ×
+    wire dtype × overlap × byte-bucketing point. Pruning happens in
+    ``autotune`` via ``CollectivePolicy.validate()`` so each guard is
+    exercised by at least one grid point.
+    """
+    grid = []
+    for method in _METHODS:
+        ring_counts = (2, 4) if method == "multi_ring" else (1,)
+        for num_rings in ring_counts:
+            for wire in (None, "bf16", "int8"):
+                for overlap in (False, True):
+                    for bucket in _BUCKET_CHOICES:
+                        grid.append(CollectivePolicy(
+                            method=method, num_rings=num_rings,
+                            bucket_bytes=bucket, wire_dtype=wire,
+                            overlap=overlap))
+    return grid
+
+
+def policy_bytes_per_step(policy: CollectivePolicy, nbytes: float,
+                          p: int) -> float:
+    """Per-device wire bytes of one synchronized step under ``policy``.
+
+    Ring-family methods run the wire-scaled reduce-scatter + allgather
+    halves (``cost_model.grad_leg_bytes`` / ``param_leg_bytes`` — the
+    quantities bench_fused_step / bench_wire measure from the jaxpr);
+    psum and per_leaf move the same ring bytes at full precision; tree
+    pays 2·ceil(log2 p) full-buffer hops.
+    """
+    if p <= 1:
+        return 0.0
+    if policy.method == "tree":
+        return 2 * math.ceil(math.log2(p)) * nbytes
+    wire = policy.wire if policy.method in RING_METHODS else None
+    return (cost_model.grad_leg_bytes(nbytes, p, wire)
+            + cost_model.param_leg_bytes(nbytes, p, wire))
+
+
+def score_policy(policy: CollectivePolicy, *, nbytes: float, p: int,
+                 compute_s: float = 0.0,
+                 net: Optional[cost_model.NetParams] = None,
+                 num_leaves: int = 64) -> ScoredPolicy:
+    """Cost-model score of one VALID policy (callers prune first)."""
+    net = net or cost_model.tpu_v5e()
+    wire = policy.wire if policy.method in RING_METHODS else None
+    frac = 0.0
+    if policy.overlap:
+        bb = [nbytes / policy.overlap_buckets] * policy.overlap_buckets
+        time_s = cost_model.overlapped_step_time(compute_s, bb, p, net, wire)
+        frac = cost_model.overlap_fraction(bb, p)
+    elif policy.method == "per_leaf":
+        # the per-leaf reference pays one collective launch per leaf on
+        # top of the same ring wire bytes
+        time_s = (compute_s + cost_model.ring_allreduce_time(nbytes, p, net)
+                  + num_leaves * max(p - 1, 0) * net.alpha)
+    else:
+        time_s = compute_s + cost_model.allreduce_time(
+            nbytes, p, net, policy.method, policy.num_rings, wire)
+    return ScoredPolicy(policy=policy,
+                        bytes_per_step=policy_bytes_per_step(
+                            policy, nbytes, p),
+                        step_time_s=time_s, overlap_fraction=frac)
+
+
+def _rank_key(s: ScoredPolicy):
+    pol = s.policy
+    return (s.step_time_s, s.bytes_per_step,
+            _METHOD_PREF.index(pol.method), pol.num_rings,
+            _WIRE_PREF.index(pol.wire), pol.overlap,
+            pol.bucket_bytes or 0)
+
+
+def autotune(*, nbytes: float, p: int, compute_s: float = 0.0,
+             net: Optional[cost_model.NetParams] = None,
+             num_leaves: int = 64) -> AutotuneResult:
+    """Enumerate → prune → score → rank the policy space.
+
+    ``nbytes`` is the packed f32 gradient payload (the FlatBuffer size),
+    ``p`` the devices one client syncs over, ``compute_s`` the per-step
+    compute time. Returns every valid candidate ranked fastest-first
+    (ties broken deterministically by bytes, then method preference),
+    plus every pruned grid point with the ``validate()`` message that
+    rejected it.
+    """
+    if p < 1:
+        raise ValueError(f"autotune needs p >= 1 devices, got {p}")
+    if nbytes <= 0:
+        raise ValueError(f"autotune needs a positive payload, got {nbytes}")
+    scored, pruned = [], []
+    for pol in enumerate_policies():
+        try:
+            pol.validate(where="autotune")
+        except ValueError as e:
+            pruned.append(PrunedPolicy(policy=pol, reason=str(e)))
+            continue
+        scored.append(score_policy(pol, nbytes=nbytes, p=p,
+                                   compute_s=compute_s, net=net,
+                                   num_leaves=num_leaves))
+    ranked = tuple(sorted(scored, key=_rank_key))
+    return AutotuneResult(chosen=ranked[0], ranked=ranked,
+                          pruned=tuple(pruned), nbytes=nbytes, p=p,
+                          compute_s=compute_s)
+
+
+def fused_step_compute_s(nbytes: float) -> float:
+    """Deterministic per-step compute estimate for geometries where only
+    the payload is known (the bench harness): the fused update's HBM
+    roofline — ~5 full passes over the packed buffer (grad read, param
+    read+write, momentum read+write) at ``analysis.HBM_BW``."""
+    return 5.0 * nbytes / HBM_BW
+
+
+def compute_s_for_model(cfg, tokens_per_step: int, p: int) -> float:
+    """Per-device per-step compute time of a real model config on the
+    roofline: ``6·N·D`` training FLOPs over ``p`` chips at peak."""
+    flops = train_model_flops(cfg.param_count(), cfg.active_param_count(),
+                              tokens_per_step)
+    return flops / (p * PEAK_FLOPS)
+
+
+def autotune_for_model(cfg, *, p: int, tokens_per_step: int,
+                       net: Optional[cost_model.NetParams] = None,
+                       ) -> AutotuneResult:
+    """``autotune`` for a real ModelConfig: payload = f32 param bytes,
+    compute from the 6·N·D roofline at ``p`` chips."""
+    nbytes = 4.0 * cfg.param_count()
+    return autotune(nbytes=nbytes, p=p,
+                    compute_s=compute_s_for_model(cfg, tokens_per_step, p),
+                    net=net)
+
+
+def format_table(result: AutotuneResult, top: int = 5) -> str:
+    """Markdown ranking table (README's "Choosing a policy" section)."""
+    lines = [
+        "| # | method | rings | wire | overlap | bucket | bytes/step"
+        " | step time |",
+        "|---|--------|-------|------|---------|--------|-----------:"
+        "|----------:|",
+    ]
+    for i, s in enumerate(result.ranked[:top], 1):
+        pol = s.policy
+        bucket = (f"{pol.bucket_bytes >> 20} MiB" if pol.bucket_bytes
+                  else "—")
+        lines.append(
+            f"| {i} | {pol.method} | {pol.num_rings} "
+            f"| {pol.wire_dtype or 'f32'} "
+            f"| {'yes' if pol.overlap else 'no'} | {bucket} "
+            f"| {s.bytes_per_step:,.0f} | {s.step_time_s * 1e6:,.1f} µs |")
+    return "\n".join(lines)

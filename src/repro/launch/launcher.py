@@ -15,9 +15,11 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
-from dataclasses import dataclass, field
+from dataclasses import InitVar, dataclass, field
+from typing import Optional
 
 from repro.core.client import group_workers
+from repro.core.comm import CollectivePolicy, filter_mirrors, resolve_policy
 
 
 @dataclass(frozen=True)
@@ -44,6 +46,11 @@ class JobSpec:
     # ("f32" = full precision; "bf16"/"int8" compress the gradient,
     # param and elastic legs — threaded to --wire-dtype)
     wire_dtype: str = "f32"
+    # intra-client collective every worker runs ("" = derive the way the
+    # worker CLI does: psum, or ring when the wire/overlap needs explicit
+    # hops — threaded to --allreduce when it differs from that derivation)
+    allreduce_method: str = ""
+    num_rings: int = 0          # 0 = worker default (2; overlap forces 1)
     # flat optimizer-state stream dtype ("f32" | "bf16" — threaded to
     # --state-dtype; bf16 halves AdaGrad/AdamW state bytes per device)
     state_dtype: str = "f32"
@@ -59,14 +66,55 @@ class JobSpec:
     # sync-barrier degradation timeout in seconds (threaded to
     # --barrier-timeout; kill/drop schedules need it)
     barrier_timeout: float = 0.0  # 0 = block forever
+    # internal bookkeeping: the policy the mirror knobs were backfilled
+    # from (dataclasses.replace passes it back so __post_init__ can tell
+    # an explicitly changed mirror from one restating the previous
+    # policy). Never pass it yourself.
+    policy_src: Optional[CollectivePolicy] = field(
+        default=None, repr=False, compare=False)
+    # -- the ONE policy field (canonical; the flat knobs mirror it) --------
+    policy: InitVar[Optional[CollectivePolicy]] = None
+
+    def __post_init__(self, policy: Optional[CollectivePolicy] = None):
+        flat = {
+            "method": self.allreduce_method, "num_rings": self.num_rings,
+            "bucket_bytes": self.bucket_bytes, "wire_dtype": self.wire_dtype,
+            "overlap": self.overlap, "overlap_buckets": self.overlap_buckets,
+        }
+        # only knobs the caller moved off the flag sentinels (or, on a
+        # replace() round-trip, off the previous policy) count as "passed"
+        flat = filter_mirrors(
+            flat, defaults={"method": "", "num_rings": 0, "bucket_bytes": 0,
+                            "wire_dtype": "f32", "overlap": False,
+                            "overlap_buckets": 4},
+            prior=self.policy_src)
+        # the worker-CLI derivation: psum unless the wire/overlap needs
+        # explicit ring hops; two rings unless overlap pins one schedule
+        base = CollectivePolicy(
+            method=("ring" if (self.wire_dtype != "f32" or self.overlap)
+                    else "psum"),
+            num_rings=2)
+        if policy is None and flat.get("overlap"):
+            # historical lowering: overlap forces a single ring schedule
+            flat["num_rings"] = 1
+        pol = resolve_policy(policy, flat, base=base, where="JobSpec")
+        object.__setattr__(self, "policy", pol)
+        object.__setattr__(self, "policy_src", pol)
+        object.__setattr__(self, "allreduce_method", pol.method)
+        object.__setattr__(self, "num_rings", pol.num_rings)
+        object.__setattr__(self, "bucket_bytes", pol.bucket_bytes or 0)
+        object.__setattr__(self, "wire_dtype", pol.wire_dtype or "f32")
+        object.__setattr__(self, "overlap", pol.overlap)
+        object.__setattr__(self, "overlap_buckets", pol.overlap_buckets)
 
     def validate(self) -> None:
         if self.optimizer not in ("sgd", "adagrad", "adamw"):
             raise ValueError(
                 f"optimizer must be sgd/adagrad/adamw, got {self.optimizer!r}")
-        if self.wire_dtype not in ("f32", "bf16", "int8"):
-            raise ValueError(
-                f"wire_dtype must be f32/bf16/int8, got {self.wire_dtype!r}")
+        # the collective-policy guards (method/wire membership, wire ⇒
+        # ring-family, overlap ⇒ ring + single-ring + no byte-bucketing,
+        # overlap_buckets >= 1) live in ONE place
+        self.policy.validate(where="JobSpec")
         if self.state_dtype not in ("f32", "bf16"):
             raise ValueError(
                 f"state_dtype must be f32/bf16, got {self.state_dtype!r}")
@@ -75,14 +123,6 @@ class JobSpec:
                 "overlap=True rides the fused flat path — the staged "
                 "backward hands the update one bucket-major shard buffer; "
                 "drop --no-fused-update or drop --overlap")
-        if self.overlap and self.bucket_bytes:
-            raise ValueError(
-                "overlap=True derives its bucket partition from the "
-                "backward stages (overlap_buckets), not byte counts — "
-                "drop --bucket-bytes or --overlap")
-        if self.overlap_buckets < 1:
-            raise ValueError(
-                f"overlap_buckets must be >= 1, got {self.overlap_buckets}")
         if self.num_workers % self.num_clients:
             raise ValueError("#workers must divide evenly into #clients")
         if self.num_servers < 0:
@@ -108,6 +148,11 @@ def build_job(spec: JobSpec) -> dict:
     spec.validate()
     idents = group_workers(spec.num_workers, spec.num_clients)
     per_client = spec.num_workers // spec.num_clients
+    # flags the worker CLI would derive on its own stay off the command
+    # line; only a policy that differs needs explicit --allreduce/--num-rings
+    derived_method = ("ring" if (spec.wire_dtype != "f32" or spec.overlap)
+                      else "psum")
+    derived_rings = 1 if spec.overlap else 2
     clients = []
     for c in range(spec.num_clients):
         members = [w for w in idents if w.mpi.client == c]
@@ -134,6 +179,10 @@ def build_job(spec: JobSpec) -> dict:
                    if spec.bucket_bytes else "")
                 + (f" --wire-dtype {spec.wire_dtype}"
                    if spec.wire_dtype != "f32" else "")
+                + (f" --allreduce {spec.allreduce_method}"
+                   if spec.allreduce_method != derived_method else "")
+                + (f" --num-rings {spec.num_rings}"
+                   if spec.num_rings != derived_rings else "")
                 + (f" --state-dtype {spec.state_dtype}"
                    if spec.state_dtype != "f32" else "")
                 + (" --overlap" if spec.overlap else "")
@@ -163,6 +212,7 @@ def build_job(spec: JobSpec) -> dict:
                  "state_dtype": spec.state_dtype,
                  "overlap": spec.overlap,
                  "overlap_buckets": spec.overlap_buckets,
+                 "policy": spec.policy.to_dict(),
                  "faults": spec.faults,
                  "barrier_timeout": spec.barrier_timeout},
         "mesh": spec.mesh,
@@ -223,6 +273,19 @@ def main() -> None:  # pragma: no cover
     ap.add_argument("--wire-dtype", default="f32",
                     choices=("f32", "bf16", "int8"),
                     help="low-precision wire protocol for every worker")
+    ap.add_argument("--allreduce", default="",
+                    choices=("", "psum", "ring", "multi_ring", "tree",
+                             "scatter_gather"),
+                    help="intra-client collective ('' = derive like the "
+                         "worker CLI: psum, or ring under wire/overlap)")
+    ap.add_argument("--num-rings", type=int, default=0,
+                    help="concurrent rings for ring-family methods "
+                         "(0 = worker default)")
+    ap.add_argument("--policy", default=None, choices=("auto",),
+                    help="'auto' ranks the collective-policy space with "
+                         "the cost model (launch.autotune) at this job's "
+                         "geometry and threads the fastest valid policy "
+                         "into every client's launch command")
     ap.add_argument("--state-dtype", default="f32",
                     choices=("f32", "bf16"),
                     help="flat optimizer-state stream dtype for every worker")
@@ -238,18 +301,41 @@ def main() -> None:  # pragma: no cover
                     help="sync-barrier degradation timeout in seconds "
                          "(0 = block forever)")
     args = ap.parse_args()
+    if args.policy == "auto":
+        from repro.configs.base import INPUT_SHAPES, get_config
+        from repro.launch.autotune import autotune_for_model, format_table
+
+        cfg = get_config(args.arch)
+        shape = INPUT_SHAPES.get(args.shape)
+        tokens = (shape.seq_len * shape.global_batch if shape is not None
+                  else 1 << 20)
+        per_client = max(args.workers // max(args.clients, 1), 1)
+        result = autotune_for_model(cfg, p=per_client,
+                                    tokens_per_step=tokens)
+        pol = result.chosen.policy
+        print(f"# --policy auto: {len(result.ranked)} valid / "
+              f"{len(result.pruned)} pruned at p={per_client}")
+        print(format_table(result))
+    else:
+        pol = CollectivePolicy(
+            method=(args.allreduce
+                    or ("ring" if (args.wire_dtype != "f32" or args.overlap)
+                        else "psum")),
+            num_rings=(args.num_rings
+                       or (1 if args.overlap else 2)),
+            bucket_bytes=args.bucket_bytes or None,
+            wire_dtype=(None if args.wire_dtype == "f32"
+                        else args.wire_dtype),
+            overlap=args.overlap, overlap_buckets=args.overlap_buckets)
     spec = JobSpec(args.workers, args.servers, args.clients, args.arch,
                    args.shape, args.mesh,
                    optimizer=args.optimizer,
                    fused_update=not args.no_fused_update,
                    flat_exchange=not args.no_flat_exchange,
-                   bucket_bytes=args.bucket_bytes,
-                   wire_dtype=args.wire_dtype,
                    state_dtype=args.state_dtype,
-                   overlap=args.overlap,
-                   overlap_buckets=args.overlap_buckets,
                    faults=args.faults,
-                   barrier_timeout=args.barrier_timeout)
+                   barrier_timeout=args.barrier_timeout,
+                   policy=pol)
     for p in emit_scripts(spec, args.outdir):
         print(p)
 

@@ -517,6 +517,18 @@ def main() -> None:  # pragma: no cover (CLI driver; see tests/test_launch.py)
                              "scatter_gather"),
                     help="intra-client collective (default: psum, or ring "
                          "when --wire-dtype is low-precision)")
+    ap.add_argument("--num-rings", type=int, default=0,
+                    help="concurrent rings for ring-family methods "
+                         "(0 = default: 2, or 1 under --overlap)")
+    ap.add_argument("--policy", default=None, choices=("auto",),
+                    help="'auto' ranks the collective-policy space with "
+                         "the cost model (launch.autotune) and runs the "
+                         "fastest valid policy, overriding the flat "
+                         "--allreduce/--num-rings/--wire-dtype/--overlap "
+                         "knobs")
+    ap.add_argument("--tune-p", type=int, default=8,
+                    help="devices per client --policy auto scores the "
+                         "candidates at (the job geometry)")
     ap.add_argument("--faults", default="",
                     help="deterministic fault schedule (core/faults.py "
                          "string form, e.g. 'kill@12:unit=1'); validated "
@@ -530,25 +542,47 @@ def main() -> None:  # pragma: no cover (CLI driver; see tests/test_launch.py)
                     help="full architecture (default: reduced smoke config)")
     args = ap.parse_args()
 
-    method = args.allreduce or (
-        "psum" if args.wire_dtype == "f32" and not args.overlap else "ring")
+    from repro.core.comm import CollectivePolicy
+
+    cfg = get_config(args.arch)
+    if not args.full_size:
+        cfg = reduced(cfg)
+    if args.policy == "auto":
+        from repro.configs.base import INPUT_SHAPES
+        from repro.launch.autotune import autotune_for_model, format_table
+
+        shape = INPUT_SHAPES.get(args.shape)
+        tokens = (shape.seq_len * shape.global_batch if shape is not None
+                  else 1 << 20)
+        result = autotune_for_model(cfg, p=args.tune_p,
+                                    tokens_per_step=tokens)
+        pol = result.chosen.policy
+        print(f"[train] --policy auto: ranked "
+              f"{len(result.ranked)} valid / {len(result.pruned)} pruned "
+              f"candidates at p={result.p}, "
+              f"payload={result.nbytes:.0f} B", flush=True)
+        print(format_table(result), flush=True)
+    else:
+        method = args.allreduce or (
+            "psum" if args.wire_dtype == "f32" and not args.overlap
+            else "ring")
+        pol = CollectivePolicy(
+            method=method,
+            num_rings=1 if args.overlap else (args.num_rings or 2),
+            bucket_bytes=args.bucket_bytes or None,
+            wire_dtype=(None if args.wire_dtype == "f32"
+                        else args.wire_dtype),
+            overlap=args.overlap, overlap_buckets=args.overlap_buckets)
     settings = TrainSettings(lr=args.lr, momentum=args.momentum,
                              optimizer_name=args.optimizer,
                              weight_decay=args.weight_decay,
                              fused_update=args.fused_update,
                              flat_exchange=args.flat_exchange,
-                             bucket_bytes=args.bucket_bytes or None,
-                             allreduce_method=method,
-                             wire_dtype=args.wire_dtype,
+                             policy=pol,
                              state_dtype=args.state_dtype,
-                             overlap=args.overlap,
-                             overlap_buckets=args.overlap_buckets,
                              faults=args.faults,
                              barrier_timeout=args.barrier_timeout)
     settings.fault_schedule()  # parse errors surface before any compute
-    cfg = get_config(args.arch)
-    if not args.full_size:
-        cfg = reduced(cfg)
     model = build_model(cfg)
     sync = settings.sync_config()
     optimizer = settings.optimizer()

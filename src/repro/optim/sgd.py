@@ -290,10 +290,9 @@ def scatter_update_gather(spec: flatbuf.FlatBuffer, grads: Any, params: Any,
     bit-identical). A trivial communicator
     (or one whose axes have size 1) degenerates to the local fused
     update: no collective, one Pallas grid over the whole buffer — still
-    a win over O(num_leaves) per-leaf updates. The old
-    ``axis_name=``/``num_rings=``/``bucket_bytes=`` spelling keeps
-    working via ``Communicator.from_axis_name`` (DeprecationWarning for
-    a bare string; ``axis_name=None`` stays the quiet local form).
+    a win over O(num_leaves) per-leaf updates. The old ``axis_name=``
+    string spelling was removed — build the group with
+    ``Communicator.from_axis_name`` and pass ``comm=``.
 
     Returns ``(new_params_tree, new_opt_state_shard)``.
     """
@@ -311,14 +310,12 @@ def scatter_update_gather(spec: flatbuf.FlatBuffer, grads: Any, params: Any,
             "move them there")
     name = _flat_name(hyper)
 
+    if axis_name is not None:
+        _comm._axis_name_removed("scatter_update_gather")
     if comm is None:
-        if axis_name is not None:
-            _comm._deprecated_axis_name("scatter_update_gather")
-        comm = _comm.Communicator.from_axis_name(
-            axis_name, num_rings=num_rings, bucket_bytes=bucket_bytes,
-            wire_dtype=wire_dtype)
-    elif axis_name is not None:
-        raise ValueError("pass comm= or the deprecated axis_name=, not both")
+        comm = _comm.LOCAL.with_policy(
+            num_rings=num_rings,
+            bucket_bytes=bucket_bytes, wire_dtype=wire_dtype)
     elif num_rings != 1 or bucket_bytes is not None or wire_dtype is not None:
         raise ValueError(
             "with comm= the ring/wire policy lives on the communicator — "
@@ -453,7 +450,8 @@ def _flat_optimizer(hyper: dict, spec: flatbuf.FlatBuffer,
     from repro.core import comm as _comm
 
     nr = flatbuf.effective_rings(spec.nbytes, num_rings, bucket_bytes)
-    local = _comm.Communicator(axes=(), sizes=(), num_rings=nr)
+    local = _comm.Communicator(
+        axes=(), sizes=(), policy=_comm.CollectivePolicy(num_rings=nr))
 
     def init(params):
         return optstate_shard_init(hyper, spec, 1, nr)

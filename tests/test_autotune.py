@@ -1,0 +1,216 @@
+"""Policy autotuner: the cost-model ranking must reproduce the measured
+BENCH_*.json byte counts, every ``CollectivePolicy.validate()`` guard
+must show up as a pruned candidate (not a crash), and the ONE policy
+field must round-trip through every config layer — including the flat
+deprecation shim."""
+import dataclasses
+import json
+import pathlib
+
+import pytest
+
+from repro.core.comm import CollectivePolicy, resolve_policy
+from repro.launch.autotune import (
+    autotune,
+    autotune_for_model,
+    enumerate_policies,
+    format_table,
+    fused_step_compute_s,
+    policy_bytes_per_step,
+)
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+# the geometry every BENCH_*.json measures: 8 devices, the reduced
+# qwen2-0.5b packed f32 gradient payload
+P = 8
+NBYTES = 1572864
+
+
+def _bench(name):
+    path = ROOT / name
+    if not path.exists():
+        pytest.skip(f"{name} not generated (run benchmarks/)")
+    return json.loads(path.read_text())
+
+
+# --------------------------------------------------------------------------
+# predicted bytes/step == measured bytes/step, per wire dtype
+# --------------------------------------------------------------------------
+
+def test_predicted_bytes_match_measured_wire_bench():
+    """The scorer's bytes/step for a plain ring must equal the traced
+    per-device wire bytes in BENCH_wire.json for every wire dtype."""
+    measured = _bench("BENCH_wire.json")["grad"]["full_step_bytes_per_dev"]
+    for wire, want in measured.items():
+        pol = CollectivePolicy(
+            method="ring", wire_dtype=None if wire == "f32" else wire)
+        assert policy_bytes_per_step(pol, NBYTES, P) == want
+
+
+def test_autotune_chooses_measured_best_at_bench_geometry():
+    """ISSUE acceptance: at the default bench geometry the chosen policy's
+    modeled bytes/step equals the best measured bytes/step across
+    BENCH_fused_step / BENCH_wire / BENCH_overlap."""
+    wire = _bench("BENCH_wire.json")
+    fused = _bench("BENCH_fused_step.json")
+    measured = set(wire["grad"]["full_step_bytes_per_dev"].values())
+    measured |= set(fused["wire_bytes_per_dev"].values())
+    result = autotune(nbytes=NBYTES, p=P,
+                      compute_s=fused_step_compute_s(NBYTES))
+    assert result.chosen.bytes_per_step == min(measured)
+    # and the winner is the int8 ring — the cheapest measured wire
+    assert result.chosen.policy.method in ("ring", "multi_ring",
+                                           "scatter_gather")
+    assert result.chosen.policy.wire == "int8"
+
+
+def test_ranking_orders_wire_dtypes_like_measurements():
+    """Among plain single-ring candidates the predicted order must be
+    int8 < bf16 < f32 — the measured ratio ordering in BENCH_wire."""
+    result = autotune(nbytes=NBYTES, p=P)
+    ring = [s for s in result.ranked
+            if s.policy.method == "ring" and not s.policy.overlap
+            and s.policy.bucket_bytes is None]
+    wires = [s.policy.wire for s in ring]
+    assert wires == ["int8", "bf16", None]
+
+
+def test_overlap_wins_when_compute_hides_the_wire():
+    """With abundant backward compute and a large payload the overlapped
+    int8 ring must beat every non-overlapped candidate (the hidden
+    fraction is free; the extra per-bucket launch latency is noise)."""
+    result = autotune(nbytes=float(1 << 30), p=P, compute_s=1.0)
+    assert result.chosen.policy.overlap
+    assert result.chosen.policy.wire == "int8"
+    assert result.chosen.policy.num_rings == 1
+    assert result.chosen.overlap_fraction > 0.5
+
+
+def test_autotune_for_model_picks_overlapped_int8_ring():
+    """A real model config (compute-heavy) selects the overlapped int8
+    ring, and its bytes/step still equals the measured-best wire ratio."""
+    from repro.configs.base import get_config
+
+    cfg = get_config("qwen3-4b")
+    result = autotune_for_model(cfg, p=P, tokens_per_step=1 << 20)
+    pol = result.chosen.policy
+    assert pol.method == "ring" and pol.wire == "int8" and pol.overlap
+    ratio = _bench("BENCH_wire.json")["grad"]["ratio_vs_f32"]["int8"]
+    full_f32 = 2 * (P - 1) / P * result.nbytes
+    assert result.chosen.bytes_per_step == pytest.approx(full_f32 * ratio)
+
+
+# --------------------------------------------------------------------------
+# pruning coverage: every validate() guard appears as a pruned candidate
+# --------------------------------------------------------------------------
+
+def test_every_guard_prunes_at_least_one_candidate():
+    result = autotune(nbytes=NBYTES, p=P)
+    reasons = [pr.reason for pr in result.pruned]
+    for needle in (
+        "rides the explicit ring hops",      # wire on psum/tree/per_leaf
+        "overlap schedules per-bucket",      # overlap off the ring family
+        "num_rings must be 1",               # overlap x multi_ring
+        "bucket_bytes does not compose with overlap",
+    ):
+        assert any(needle in r for r in reasons), needle
+
+
+def test_grid_partitions_into_ranked_plus_pruned():
+    result = autotune(nbytes=NBYTES, p=P)
+    grid = enumerate_policies()
+    assert len(result.ranked) + len(result.pruned) == len(grid)
+    assert len(result.ranked) > 0 and len(result.pruned) > 0
+    # pruned candidates never appear in the ranking
+    pruned = {pr.policy for pr in result.pruned}
+    assert not pruned & {s.policy for s in result.ranked}
+    # every survivor actually validates
+    for s in result.ranked:
+        s.policy.validate()
+
+
+def test_format_table_lists_the_chosen_policy_first():
+    result = autotune(nbytes=NBYTES, p=P,
+                      compute_s=fused_step_compute_s(NBYTES))
+    table = format_table(result, top=5)
+    lines = table.splitlines()
+    assert lines[0].startswith("| # | method")
+    first = lines[2]
+    assert f"| {result.chosen.policy.method} |" in first
+    assert (result.chosen.policy.wire_dtype or "f32") in first
+
+
+def test_autotune_rejects_degenerate_geometry():
+    with pytest.raises(ValueError, match="p >= 1"):
+        autotune(nbytes=NBYTES, p=0)
+    with pytest.raises(ValueError, match="positive payload"):
+        autotune(nbytes=0, p=P)
+
+
+# --------------------------------------------------------------------------
+# CollectivePolicy round-trip through every config layer
+# --------------------------------------------------------------------------
+
+POL = CollectivePolicy(method="ring", num_rings=1, wire_dtype="int8",
+                       overlap=True, overlap_buckets=6)
+
+
+def test_policy_round_trips_through_sync_config():
+    from repro.core.hierarchy import SyncConfig
+
+    sc = SyncConfig(mode="mpi_sgd", policy=POL)
+    assert sc.policy == POL
+    # mirrors derive from the one field
+    assert sc.allreduce_method == "ring" and sc.wire_dtype == "int8"
+    assert sc.overlap and sc.overlap_buckets == 6 and sc.num_rings == 1
+    # replace() on a mirror re-resolves into a consistent policy (the
+    # mirror write routes through the deprecation shim)
+    with pytest.warns(DeprecationWarning, match="CollectivePolicy"):
+        sc2 = dataclasses.replace(sc, overlap=False)
+    assert sc2.policy == POL.replace(overlap=False)
+    # the documented migration path is silent: stale mirrors restating
+    # the previous policy must not override the new one
+    import warnings as W
+    with W.catch_warnings():
+        W.simplefilter("error")
+        sc3 = dataclasses.replace(sc, policy=sc.policy.replace(overlap=False))
+    assert sc3.policy == POL.replace(overlap=False)
+
+
+def test_policy_round_trips_through_train_settings_to_jobspec():
+    from repro.configs.base import TrainSettings
+    from repro.launch.launcher import JobSpec
+
+    ts = TrainSettings(policy=POL)
+    assert ts.policy == POL
+    assert ts.sync_config().policy == POL  # lowered as ONE field
+
+    spec = JobSpec(8, 2, 2, "qwen3-4b", "train_4k", policy=POL)
+    assert spec.policy == POL
+    spec.validate()
+    # the job dict ships the policy losslessly
+    assert CollectivePolicy.from_dict(POL.to_dict()) == POL
+
+
+def test_flat_kwargs_shim_warns_once_and_resolves():
+    from repro.configs.base import TrainSettings
+
+    with pytest.warns(DeprecationWarning, match="CollectivePolicy"):
+        ts = TrainSettings(allreduce_method="ring", wire_dtype="int8")
+    assert ts.policy == CollectivePolicy(method="ring", num_rings=2,
+                                         wire_dtype="int8")
+    # restating the resolved policy through the mirrors stays silent
+    import warnings as W
+    with W.catch_warnings():
+        W.simplefilter("error")
+        resolve_policy(None, {"method": "ring", "wire_dtype": "int8"},
+                       base=ts.policy)
+
+
+def test_policy_dict_round_trip_rejects_unknown_fields():
+    d = POL.to_dict()
+    assert CollectivePolicy.from_dict(d) == POL
+    d["rings"] = 3
+    with pytest.raises(ValueError, match="unknown CollectivePolicy"):
+        CollectivePolicy.from_dict(d)

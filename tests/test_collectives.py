@@ -7,6 +7,7 @@ import pytest
 from _hyp import given, settings, st
 
 from repro.core import collectives as C
+from repro.core.comm import CollectivePolicy, Communicator
 
 METHODS = ["ring", "multi_ring", "tree", "psum"]
 
@@ -68,8 +69,15 @@ def test_tensor_allreduce_fused_equals_per_leaf():
         "a": jax.random.normal(jax.random.key(3), (p, 6, 5)),
         "b": {"c": jax.random.normal(jax.random.key(4), (p, 13))},
     }
-    fused = C.emulate(C.tensor_allreduce, tree, method="multi_ring")
-    leafwise = C.emulate(C.tensor_allreduce, tree, method="per_leaf")
+    grp_fused = Communicator.world(
+        ("ring",), (p,),
+        policy=CollectivePolicy(method="multi_ring", num_rings=2))
+    grp_leaf = Communicator.world(
+        ("ring",), (p,), policy=CollectivePolicy(method="per_leaf"))
+    fused = jax.vmap(lambda t: C.tensor_allreduce(t, grp_fused),
+                     axis_name="ring")(tree)
+    leafwise = jax.vmap(lambda t: C.tensor_allreduce(t, grp_leaf),
+                        axis_name="ring")(tree)
     jax.tree.map(
         lambda f, l: np.testing.assert_allclose(f, l, rtol=2e-5, atol=2e-5),
         fused, leafwise)
@@ -78,8 +86,11 @@ def test_tensor_allreduce_fused_equals_per_leaf():
 def test_pushpull_fused_equals_unfused():
     p = 4
     tree = {"g": jax.random.normal(jax.random.key(5), (p, 50))}
-    fused = C.emulate(C.tensor_pushpull, tree, fused=True)
-    unfused = C.emulate(C.tensor_pushpull, tree, fused=False)
+    grp = Communicator.world(("ring",), (p,))
+    fused = jax.vmap(lambda t: C.tensor_pushpull(t, grp, fused=True),
+                     axis_name="ring")(tree)
+    unfused = jax.vmap(lambda t: C.tensor_pushpull(t, grp, fused=False),
+                       axis_name="ring")(tree)
     np.testing.assert_allclose(fused["g"], unfused["g"], rtol=2e-5, atol=2e-5)
     want = jnp.broadcast_to(jnp.mean(tree["g"], 0), (p, 50))
     np.testing.assert_allclose(fused["g"], want, rtol=2e-5, atol=2e-5)

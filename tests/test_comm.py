@@ -176,90 +176,74 @@ def test_trivial_comm_everything_is_identity():
 
 
 def test_rings_policy_resolution():
-    c = CM.Communicator(num_rings=2, bucket_bytes=1024)
+    c = CM.Communicator(policy=CM.CollectivePolicy(num_rings=2,
+                                                   bucket_bytes=1024))
     assert c.rings_for(8 * 1024) == 8  # bucketing wins
     assert c.rings_for(1024) == 2      # explicit ring count wins
 
 
 # ---------------------------------------------------------------------------
-# deprecation shims: axis_name strings keep working, loudly
+# axis_name strings were removed: hard error naming the comm= replacement
 # ---------------------------------------------------------------------------
 
 def _deprecations(rec):
     return [r for r in rec if issubclass(r.category, DeprecationWarning)]
 
 
-def test_tensor_allreduce_axis_name_shim():
+def test_tensor_allreduce_axis_name_removed():
     tree = _tree(5)
     stacked = _stack(tree, 4)
-    with warnings.catch_warnings(record=True) as rec:
-        warnings.simplefilter("always")
-        old = C.emulate(C.tensor_allreduce, stacked, method="multi_ring")
-    assert _deprecations(rec)
-    group = CM.Communicator.world(("ring",), (4,), method="multi_ring",
-                                  num_rings=2)
+    with pytest.raises(ValueError, match="Communicator.from_axis_name"):
+        C.emulate(C.tensor_allreduce, stacked, method="multi_ring")
+    # the comm= spelling is the one path
+    group = CM.Communicator.world(
+        ("ring",), (4,),
+        policy=CM.CollectivePolicy(method="multi_ring", num_rings=2))
     new = group.emulate_reduce(stacked)
+    want = jax.tree.map(lambda l: jnp.broadcast_to(jnp.sum(l, 0), l.shape),
+                        stacked)
     jax.tree.map(lambda x, y: np.testing.assert_allclose(x, y, rtol=2e-5,
                                                          atol=2e-5),
-                 old, new)
+                 new, want)
 
 
-def test_tensor_pushpull_axis_name_shim():
+def test_tensor_pushpull_axis_name_removed():
     tree = _tree(6)
     stacked = _stack(tree, 2)
-    with warnings.catch_warnings(record=True) as rec:
-        warnings.simplefilter("always")
-        out = C.emulate(C.tensor_pushpull, stacked, fused=False)
-    assert _deprecations(rec)
+    with pytest.raises(ValueError, match="Communicator.from_axis_name"):
+        C.emulate(C.tensor_pushpull, stacked, fused=False)
+    group = CM.Communicator.world(("ring",), (2,))
+    out = jax.vmap(lambda t: C.tensor_pushpull(t, group, fused=False),
+                   axis_name="ring")(stacked)
     want = jax.tree.map(lambda l: jnp.mean(l, 0), stacked)
     jax.tree.map(lambda x, y: np.testing.assert_allclose(
         x[0], y, rtol=2e-5, atol=2e-5), out, want)
     # fused=False still rejects a non-tree method
     with pytest.raises(ValueError, match="only meaningful"):
-        C.tensor_pushpull(tree, "ring", fused=False, method="multi_ring")
+        C.tensor_pushpull(tree, group, fused=False, method="multi_ring")
 
 
-def test_scatter_update_gather_axis_name_shim():
+def test_scatter_update_gather_axis_name_removed():
     from repro.optim.sgd import momentum_shard_init, scatter_update_gather
 
     tree = _tree(7, leaves=3, n=257)
     spec = F.spec_for(tree)
-    p = 2
-    stacked_g = _stack(tree, p)
-    stacked_p = jax.tree.map(lambda l: jnp.stack([l] * p), tree)
-
-    def dev_old(g, pp, m):
-        with warnings.catch_warnings(record=True) as rec:
-            warnings.simplefilter("always")
-            out = scatter_update_gather(spec, g, pp, m, 0.1, 0.9,
-                                        axis_name="d")
-        assert _deprecations(rec)
-        return out
-
-    group = CM.Communicator.world(("d",), (p,))
-
-    def dev_new(g, pp, m):
-        return scatter_update_gather(spec, g, pp, m, 0.1, 0.9, comm=group)
-
-    m0 = jnp.stack([momentum_shard_init(spec, p)] * p)
-    old_p, old_m = jax.vmap(dev_old, axis_name="d")(stacked_g, stacked_p, m0)
-    new_p, new_m = jax.vmap(dev_new, axis_name="d")(stacked_g, stacked_p, m0)
-    jax.tree.map(lambda x, y: np.testing.assert_allclose(x, y, rtol=1e-6),
-                 old_p, new_p)
-    np.testing.assert_allclose(old_m, new_m, rtol=1e-6)
+    with pytest.raises(ValueError, match="Communicator.from_axis_name"):
+        scatter_update_gather(spec, tree, tree, momentum_shard_init(spec),
+                              0.1, 0.9, axis_name="d")
 
 
-def test_scatter_update_gather_rejects_both_comm_and_axis_name():
+def test_scatter_update_gather_rejects_comm_with_axis_name():
     from repro.optim.sgd import momentum_shard_init, scatter_update_gather
 
     tree = _tree(8, leaves=2, n=129)
     spec = F.spec_for(tree)
-    with pytest.raises(ValueError, match="not both"):
+    with pytest.raises(ValueError, match="Communicator.from_axis_name"):
         scatter_update_gather(spec, tree, tree, momentum_shard_init(spec),
                               0.1, 0.9, comm=CM.LOCAL, axis_name="d")
 
 
-def test_elastic_exchange_sharded_axis_name_shim():
+def test_elastic_exchange_sharded_axis_name_removed():
     from repro.core.elastic import elastic_exchange_sharded
 
     tree = _tree(9, leaves=3, n=257)
@@ -269,19 +253,20 @@ def test_elastic_exchange_sharded_axis_name_shim():
     sw = _stack(tree, p)
     sc = jax.tree.map(lambda l: jnp.stack([l] * p), center)
 
-    def old(w, c):
-        with warnings.catch_warnings(record=True) as rec:
-            warnings.simplefilter("always")
-            out = elastic_exchange_sharded(spec, w, c, 0.25, axis_name="d")
-        assert _deprecations(rec)
-        return out
+    with pytest.raises(ValueError, match="Communicator.from_axis_name"):
+        elastic_exchange_sharded(spec, tree, center, 0.25, axis_name="d")
 
     group = CM.Communicator.world(("d",), (p,))
     new = lambda w, c: elastic_exchange_sharded(spec, w, c, 0.25, comm=group)
-    ow, oc = jax.vmap(old, axis_name="d")(sw, sc)
     nw, nc = jax.vmap(new, axis_name="d")(sw, sc)
-    jax.tree.map(lambda x, y: np.testing.assert_allclose(x, y, rtol=1e-6),
-                 (ow, oc), (nw, nc))
+    # eq. 2/3: every member pulls toward the center it sees, and the
+    # exchanged center is identical across members
+    jax.tree.map(lambda l: np.testing.assert_allclose(l[0], l[1], rtol=1e-6),
+                 nc)
+    jax.tree.map(
+        lambda got, w, c: np.testing.assert_allclose(
+            got, w - 0.25 * (w - c), rtol=1e-5, atol=1e-6),
+        nw, sw, sc)
 
 
 def test_canonical_paths_stay_quiet():

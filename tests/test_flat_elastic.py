@@ -11,6 +11,7 @@ import numpy as np
 import pytest
 
 from repro.core import flatbuf as F
+from repro.core.comm import CollectivePolicy, Communicator
 from repro.core.elastic import (
     elastic_exchange,
     elastic_exchange_multiclient,
@@ -114,10 +115,11 @@ def test_sharded_exchange_matches_multiclient(p, num_rings, bucket_bytes):
         lambda l: jnp.broadcast_to(l[None], (p,) + l.shape), c)
     alpha = 0.5 / p
 
+    comm = Communicator.from_axis_name(AXIS, policy=CollectivePolicy(
+        num_rings=num_rings, bucket_bytes=bucket_bytes))
     fn = jax.vmap(
         lambda wp, cp: elastic_exchange_sharded(
-            spec, wp, cp, alpha, axis_name=AXIS,
-            num_rings=num_rings, bucket_bytes=bucket_bytes),
+            spec, wp, cp, alpha, comm=comm),
         axis_name=AXIS)
     new_W, new_C = fn(W, stacked_c)
     want_W, want_c = elastic_exchange_multiclient(W, c, alpha)
@@ -137,7 +139,7 @@ def test_sharded_exchange_bf16(p=4):
         lambda l: jnp.broadcast_to(l[None], (p,) + l.shape), c)
     fn = jax.vmap(
         lambda wp, cp: elastic_exchange_sharded(
-            spec, wp, cp, 0.1, axis_name=AXIS),
+            spec, wp, cp, 0.1, comm=Communicator.from_axis_name(AXIS)),
         axis_name=AXIS)
     new_W, new_C = fn(W, stacked_c)
     want_W, want_c = elastic_exchange_multiclient(W, c, 0.1)
@@ -152,12 +154,12 @@ def test_sharded_exchange_bf16(p=4):
 # --------------------------------------------------------------------------
 
 def test_compressed_packed_exchange_tolerance():
-    """compress=True quantizes the packed w buffer (the PS-push wire
+    """wire_dtype="int8" quantizes the packed w buffer (the PS-push wire
     form): the exchange must stay within the per-block absmax/127 error
     envelope of the exact exchange."""
     w, c = _tree(12), _tree(13)
     exact = elastic_exchange_packed(w, c, 0.5)
-    quant = elastic_exchange_packed(w, c, 0.5, compress=True)
+    quant = elastic_exchange_packed(w, c, 0.5, wire_dtype="int8")
     # max quantization error per value is scale/2 <= absmax/254; alpha
     # scales it into the outputs. Normal(0,1) leaves -> absmax ~< 4.
     leaves = jax.tree_util.tree_leaves(w)
@@ -199,7 +201,7 @@ def test_kvstore_compressed_flat_push_quantizes_per_push():
     pushes = [_tree(19), _tree(20)]
     out = {}
     for flat in (True, False):
-        kv = KVStore.create("dist_sync", num_workers=2, compress_push=True,
+        kv = KVStore.create("dist_sync", num_workers=2, wire_dtype="int8",
                             flat_exchange=flat)
         kv.init("centers", c0)
         kv.set_elastic(0.4)
@@ -211,7 +213,7 @@ def test_kvstore_compressed_flat_push_quantizes_per_push():
     # compressed wire really is smaller than raw, for the packed form too
     assert out[True][1] < out[True][2]
     # tiny-tree regression: payload-based accounting, not padded size
-    kv = KVStore.create("dist_async", num_workers=1, compress_push=True)
+    kv = KVStore.create("dist_async", num_workers=1, wire_dtype="int8")
     kv.init("c", jnp.zeros(2))
     kv.set_elastic(0.5)
     kv.push("c", jnp.ones(2))

@@ -13,6 +13,7 @@ import pytest
 
 from _hyp import given, settings, st
 from repro.core import flatbuf as F
+from repro.core.comm import CollectivePolicy, Communicator
 from repro.kernels.fused_optim.fused_optim import adagrad_flat, adamw_flat
 from repro.kernels.fused_optim.ops import adagrad_fused, adamw_fused
 from repro.kernels.fused_optim.ref import adagrad_ref, adamw_ref
@@ -149,10 +150,11 @@ def _fused_steps(spec, hyper, params, grads_per_dev, steps, p, *,
     stacked_p = jax.tree.map(
         lambda x: jnp.broadcast_to(x[None], (p,) + x.shape), params)
 
+    comm = Communicator.from_axis_name(AXIS, policy=CollectivePolicy(
+        num_rings=num_rings, bucket_bytes=bucket_bytes))
+
     def dev_step(g, pp, s_):
-        return scatter_update_gather(
-            spec, g, pp, s_, hyper=hyper, axis_name=AXIS,
-            num_rings=num_rings, bucket_bytes=bucket_bytes)
+        return scatter_update_gather(spec, g, pp, s_, hyper=hyper, comm=comm)
 
     step = jax.vmap(dev_step, axis_name=AXIS)
     for s in range(steps):

@@ -10,6 +10,7 @@ import pytest
 from _hyp import given, settings, st
 from repro.core import collectives as C
 from repro.core import flatbuf as F
+from repro.core.comm import CollectivePolicy, Communicator
 from repro.optim.sgd import momentum_shard_init, scatter_update_gather, sgd
 
 AXIS = "ring"
@@ -118,10 +119,12 @@ def _fused_steps(spec, params, grads_per_dev, lr, mu, steps, p, *,
     stacked_p = jax.tree.map(
         lambda x: jnp.broadcast_to(x[None], (p,) + x.shape), params)
 
+    comm = Communicator.from_axis_name(AXIS, policy=CollectivePolicy(
+        num_rings=num_rings, bucket_bytes=bucket_bytes))
+
     def dev_step(g, pp, m):
         return scatter_update_gather(
-            spec, g, pp, m, jnp.float32(lr), jnp.float32(mu),
-            axis_name=AXIS, num_rings=num_rings, bucket_bytes=bucket_bytes)
+            spec, g, pp, m, jnp.float32(lr), jnp.float32(mu), comm=comm)
 
     step = jax.vmap(dev_step, axis_name=AXIS)
     for s in range(steps):
@@ -223,10 +226,12 @@ def test_multi_ring_reduce_scatter_allgather_roundtrip(p, nr):
 
 def test_pushpull_unfused_rejects_ring_method():
     tree = {"g": jax.random.normal(jax.random.key(5), (4, 50))}
-    with pytest.raises(ValueError):
-        C.emulate(C.tensor_pushpull, tree, fused=False, method="multi_ring")
-    # tree (the actual unfused pattern) and None are accepted
-    out = C.emulate(C.tensor_pushpull, tree, fused=False, method="tree")
+    group = Communicator.world(("ring",), (4,))
+    with pytest.raises(ValueError, match="only meaningful"):
+        C.tensor_pushpull(tree, group, fused=False, method="multi_ring")
+    # the unfused path IS tree push + tree pull; no method argument
+    out = jax.vmap(lambda t: C.tensor_pushpull(t, group, fused=False),
+                   axis_name="ring")(tree)
     want = jnp.broadcast_to(jnp.mean(tree["g"], 0), (4, 50))
     np.testing.assert_allclose(out["g"], want, rtol=2e-5, atol=2e-5)
 

@@ -58,7 +58,7 @@ def test_compress_pytree_roundtrip_and_ratio():
 def test_kvstore_compressed_push_counts_bytes():
     from repro.core.kvstore import KVStore
 
-    kv = KVStore.create("dist_async", num_workers=1, compress_push=True)
+    kv = KVStore.create("dist_async", num_workers=1, wire_dtype="int8")
     kv.init("w", jnp.zeros((QBLOCK * 4,), jnp.float32))
     kv.set_elastic(0.5)
     kv.push("w", jnp.ones((QBLOCK * 4,), jnp.float32))
@@ -107,6 +107,6 @@ def test_esgd_converges_with_compressed_pushes():
     cfg = AlgoConfig(mode="mpi_esgd", num_workers=4, num_clients=2,
                      num_servers=1, lr=0.05, epochs=2, steps_per_epoch=10,
                      esgd_interval=4, compute_time=0.1, model_bytes=1e6,
-                     compress_push=True)
+                     wire_dtype="int8")
     h = run(cfg, init_fn, grad_fn, eval_fn, make_pipe)
     assert h.metrics[-1] > 0.5

@@ -265,26 +265,18 @@ def test_wire_policy_inherited_through_split():
     assert w.with_policy(wire_dtype=None).wire_dtype is None
 
 
-def test_kvstore_compress_push_is_deprecated_int8_alias():
+def test_kvstore_compress_push_removed():
     from repro.core.kvstore import KVStore
 
     n = 4 * WIRE_BLOCK
-    with pytest.warns(DeprecationWarning, match="wire_dtype"):
-        kv_old = KVStore.create("dist_async", num_workers=1,
-                                compress_push=True)
-    kv_new = KVStore.create("dist_async", num_workers=1, wire_dtype="int8")
-    assert kv_old.wire_dtype == "int8" and kv_old.compress_push
-    for kv in (kv_old, kv_new):
-        kv.init("w", jnp.zeros((n,), jnp.float32))
-        kv.set_elastic(0.5)
-        kv.push("w", jnp.full((n,), 2.0, jnp.float32))
-    np.testing.assert_array_equal(np.asarray(kv_old.value("w")),
-                                  np.asarray(kv_new.value("w")))
-    assert kv_old.pushed_bytes == kv_new.pushed_bytes == wire_nbytes(n)
-    with pytest.warns(DeprecationWarning):
-        with pytest.raises(ValueError, match="compress_push"):
-            KVStore.create("dist_async", compress_push=True,
-                           wire_dtype="bf16")
+    with pytest.raises(ValueError, match="compress_push.*int8"):
+        KVStore.create("dist_async", num_workers=1, compress_push=True)
+    kv = KVStore.create("dist_async", num_workers=1, wire_dtype="int8")
+    assert kv.wire_dtype == "int8" and kv.compress_push  # derived view
+    kv.init("w", jnp.zeros((n,), jnp.float32))
+    kv.set_elastic(0.5)
+    kv.push("w", jnp.full((n,), 2.0, jnp.float32))
+    assert kv.pushed_bytes == wire_nbytes(n)
 
 
 def test_kvstore_bf16_wire():
@@ -301,34 +293,23 @@ def test_kvstore_bf16_wire():
         np.asarray(x.astype(jnp.bfloat16).astype(jnp.float32)))
 
 
-def test_algo_config_compress_push_deprecated():
+def test_algo_config_compress_push_removed():
     from repro.core.algorithms import AlgoConfig, _worker_group
 
-    with pytest.warns(DeprecationWarning, match="wire_dtype"):
-        cfg = AlgoConfig(mode="mpi_esgd", compress_push=True)
-    assert cfg.effective_wire_dtype == "int8"
-    # the deprecated alias stays scoped to the PS leg it always
-    # compressed: the intra-client hops keep the f32 wire (old
-    # compress_push runs must not silently gain quantization noise, and
-    # a non-ring allreduce_method must keep working)
-    assert cfg.collective_wire_dtype is None
-    assert _worker_group(cfg).wire_dtype is None
-    with pytest.warns(DeprecationWarning):
-        cfg_psum = AlgoConfig(mode="mpi_sgd", compress_push=True,
-                              allreduce_method="psum", num_workers=4,
-                              num_clients=2)
-    x = jnp.ones((2, 8))
-    np.testing.assert_allclose(  # psum + compress_push still collective-ok
-        np.asarray(_worker_group(cfg_psum).emulate_reduce(x)),
-        np.full((2, 8), 2.0))
+    with pytest.raises(ValueError, match="compress_push.*int8"):
+        AlgoConfig(mode="mpi_esgd", compress_push=True)
     assert AlgoConfig(mode="mpi_sgd").effective_wire_dtype is None
-    full = AlgoConfig(mode="mpi_sgd", wire_dtype="bf16")
+    with pytest.warns(DeprecationWarning, match="policy"):
+        full = AlgoConfig(mode="mpi_sgd", wire_dtype="bf16")
+    # ONE knob: the PS leg and the collective hops share the wire dtype
     assert full.effective_wire_dtype == "bf16"
-    assert full.collective_wire_dtype == "bf16"  # the NEW knob goes wide
-    with pytest.warns(DeprecationWarning):
-        with pytest.raises(ValueError, match="compress_push"):
-            AlgoConfig(mode="mpi_esgd", compress_push=True,
-                       wire_dtype="bf16")
+    assert full.collective_wire_dtype == "bf16"
+    assert full.policy.wire_dtype == "bf16"
+    assert _worker_group(full).wire_dtype == "bf16"
+    x = jnp.ones((2, 8))
+    np.testing.assert_allclose(
+        np.asarray(_worker_group(full).emulate_reduce(x)),
+        np.full((2, 8), 2.0), rtol=1e-2)
 
 
 def test_train_settings_and_jobspec_thread_wire_dtype():
@@ -465,19 +446,16 @@ def test_sgd_bf16_momentum_stays_bf16():
                    for l in jax.tree_util.tree_leaves(st))
 
 
-def test_elastic_exchange_packed_compress_deprecated():
+def test_elastic_exchange_packed_compress_removed():
     from repro.core.elastic import elastic_exchange_packed
 
     w, c = _tree(5), _tree(6)
-    with pytest.warns(DeprecationWarning, match="wire_dtype"):
-        old_w, old_c = elastic_exchange_packed(w, c, 0.4, compress=True)
+    with pytest.raises(ValueError, match="compress=True.*int8"):
+        elastic_exchange_packed(w, c, 0.4, compress=True)
+    # the one spelling that remains
     new_w, new_c = elastic_exchange_packed(w, c, 0.4, wire_dtype="int8")
-    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
-        np.asarray(a), np.asarray(b)), (old_w, old_c), (new_w, new_c))
-    with pytest.warns(DeprecationWarning):
-        with pytest.raises(ValueError, match="compress=True"):
-            elastic_exchange_packed(w, c, 0.4, compress=True,
-                                    wire_dtype="bf16")
+    assert jax.tree_util.tree_structure(new_w) == \
+        jax.tree_util.tree_structure(w)
 
 
 def test_per_leaf_bf16_state_matches_flat_bf16_state():
