@@ -1,0 +1,177 @@
+"""Transport smoke: the socket-backed PS tier vs the in-process laws.
+
+Runs dist_sgd and dist_esgd as REAL OS processes (launch/run_local.py
+spawns the launcher-emitted scripts; 2 servers x 4 workers full-size)
+and writes BENCH_transport.json for check_bench.py:
+
+  bytes_vs_model   measured per-push/per-pull SOCKET payload bytes per
+                   wire dtype vs cost_model.ps_wire_nbytes — ratio
+                   gated at exactly 1.0 (the cost model must price the
+                   real wire, not an idealization); counted on BOTH
+                   sides (worker RemoteKVStore and server frame
+                   handler), which must agree byte-for-byte
+  bitexact         dist_sgd loss curves: tcp == loopback at every wire
+                   dtype, and tcp == the in-process simulation
+                   (algorithms.run) at f32 — 1.0 iff bit-identical
+                   (the sync barrier sums the same f32 values in the
+                   same unit order regardless of substrate)
+  esgd             dist_esgd epoch-mean loss over real processes vs the
+                   in-process run — |delta| gated at 0.01 (exchange
+                   ordering is racy across processes; the elastic rule
+                   must not care)
+  chaos            a straggler sleeping past barrier_timeout: the
+                   degraded release fires (gated), the straggler is
+                   evicted and re-joins on its next push (gated), and
+                   the measured release latency ~= barrier_timeout
+                   (reported, not gated — wall clock)
+
+REPRO_BENCH_QUICK=1 shrinks to 1 server x 2 workers; every gated
+quantity is structural (exact ratios and bit-identity flags), so the
+committed full-size baseline compares cleanly against quick CI runs.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from repro.core import cost_model
+from repro.core.algorithms import AlgoConfig, run as run_algo
+from repro.core.comm import CollectivePolicy
+from repro.launch.run_local import run_job
+from repro.net.problem import build_problem
+
+QUICK = os.environ.get("REPRO_BENCH_QUICK", "") not in ("", "0")
+
+SERVERS = 1 if QUICK else 2
+WORKERS = 2 if QUICK else 4
+STEPS = 3 if QUICK else 4
+N_VALUES = 2048  # the logreg8 FlatBuffer spec.size (padded leaves)
+
+
+def _algo(**kw):
+    base = dict(mode="dist_sgd", num_workers=WORKERS, num_clients=WORKERS,
+                num_servers=SERVERS, lr=0.05, epochs=1,
+                steps_per_epoch=STEPS, seed=0, compute_time=0.0,
+                jitter=0.0)
+    base.update(kw)
+    return AlgoConfig(**base)
+
+
+def _inprocess(algo):
+    prob = build_problem("logreg8")
+    return run_algo(algo, prob.init_fn, prob.grad_fn, prob.eval_fn,
+                    prob.make_pipeline)
+
+
+def _worker_push_bytes(res) -> float:
+    pushed = sum(w["kv"]["pushed_bytes"] for w in res.per_worker.values())
+    count = sum(w["kv"]["push_count"] for w in res.per_worker.values())
+    return pushed / count
+
+
+def _server_push_bytes(res) -> float:
+    pushed = sum(st["bytes"]["push_in"] for st in res.server_stats.values())
+    return pushed / (WORKERS * STEPS)
+
+
+def bench_dist_sgd() -> dict:
+    out: dict = {"bytes_vs_model": {}, "bitexact_tcp_vs_loopback": {},
+                 "losses": {}}
+    for wd in (None, "bf16", "int8"):
+        name = wd or "f32"
+        algo = _algo(policy=CollectivePolicy(wire_dtype=wd))
+        tcp = run_job(algo, transport="tcp", timeout=200.0)
+        lb = run_job(algo, transport="loopback", timeout=200.0)
+        assert all(rc == 0 for rc in tcp.exit_codes.values()), tcp.exit_codes
+        model = cost_model.ps_wire_nbytes(N_VALUES, wd)
+        worker_side = _worker_push_bytes(tcp)
+        server_side = _server_push_bytes(tcp)
+        out["bytes_vs_model"][name] = {
+            "measured_push_payload": worker_side,
+            "server_push_in_per_step": server_side,
+            "model": model,
+            "ratio": worker_side / model,
+            "server_ratio": server_side / model,
+        }
+        exact = (tcp.losses == lb.losses and tcp.metrics == lb.metrics)
+        out["bitexact_tcp_vs_loopback"][name] = 1.0 if exact else 0.0
+        out["losses"][name] = tcp.losses
+        print(f"dist_sgd {name}: push payload {worker_side:.0f}B "
+              f"(model {model}B), tcp==loopback bitexact={exact}",
+              flush=True)
+        if wd is None:
+            hist = _inprocess(algo)
+            exact = (tcp.losses == hist.losses
+                     and tcp.metrics == hist.metrics)
+            out["bitexact_tcp_vs_inprocess_f32"] = 1.0 if exact else 0.0
+            out["inprocess_losses"] = hist.losses
+            print(f"dist_sgd f32: tcp==in-process bitexact={exact}",
+                  flush=True)
+    return out
+
+
+def bench_dist_esgd() -> dict:
+    steps = 2 * STEPS  # two exchange rounds at interval=STEPS
+    algo = _algo(mode="dist_esgd", steps_per_epoch=steps,
+                 esgd_interval=STEPS, compute_time=0.01)
+    tcp = run_job(algo, transport="tcp", timeout=200.0)
+    assert all(rc == 0 for rc in tcp.exit_codes.values()), tcp.exit_codes
+    hist = _inprocess(algo)
+    epoch_mean = float(np.mean(tcp.losses))
+    delta = abs(epoch_mean - hist.losses[-1])
+    print(f"dist_esgd: tcp epoch-mean {epoch_mean:.6f} vs in-process "
+          f"{hist.losses[-1]:.6f} (|delta| {delta:.2e})", flush=True)
+    return {
+        "tcp_epoch_mean_loss": epoch_mean,
+        "inprocess_epoch_mean_loss": hist.losses[-1],
+        "epoch_mean_abs_delta": delta,
+        "exchanges": sum(w.get("exchanges", 0)
+                         for w in tcp.per_worker.values()),
+    }
+
+
+def bench_chaos() -> dict:
+    """One worker straggles 4x past a 0.8s barrier: degraded release,
+    eviction, re-join on its late push."""
+    timeout = 0.8
+    algo = _algo(steps_per_epoch=STEPS, compute_time=0.4,
+                 barrier_timeout=timeout,
+                 faults="straggle@1:unit=1:factor=5")
+    res = run_job(algo, transport="tcp", timeout=200.0)
+    latencies = [lat for st in res.server_stats.values()
+                 for lat in st.get("degraded_latencies", [])]
+    kinds = [e["kind"] for st in res.server_stats.values()
+             for e in st.get("membership_history", [])]
+    rejoined = "fail" in kinds and "join" in kinds
+    print(f"chaos: degraded_syncs={res.degraded_syncs} "
+          f"release latencies={['%.2fs' % l for l in latencies]} "
+          f"rejoined={rejoined} live={res.live}", flush=True)
+    return {
+        "barrier_timeout_s": timeout,
+        "degraded_fired": 1.0 if res.degraded_syncs >= 1 else 0.0,
+        "degraded_syncs": res.degraded_syncs,
+        "release_latency_s": latencies,
+        "evicted_and_rejoined": 1.0 if rejoined else 0.0,
+        "membership_epochs": res.membership_epochs,
+        "live_at_end": res.live,
+        "completed_steps": len(res.losses),
+    }
+
+
+def main() -> None:
+    out = {
+        "config": {"quick": QUICK, "servers": SERVERS, "workers": WORKERS,
+                   "steps": STEPS, "n_values": N_VALUES},
+        "dist_sgd": bench_dist_sgd(),
+        "dist_esgd": bench_dist_esgd(),
+        "chaos": bench_chaos(),
+    }
+    with open("BENCH_transport.json", "w") as f:
+        json.dump(out, f, indent=2)
+    print("wrote BENCH_transport.json", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -66,6 +66,7 @@ REQUIRED = (
     "BENCH_faults.json",
     "BENCH_overlap.json",
     "BENCH_autotune.json",
+    "BENCH_transport.json",
 )
 
 
@@ -276,6 +277,33 @@ def check(baseline_dir: str, current_dir: str) -> int:
                 f"{base['chosen']['policy']} -> {cur['chosen']['policy']}")
         else:
             print(f"ok autotune.chosen: {cur['chosen']['policy']}")
+
+    base = _load(baseline_dir, "BENCH_transport.json")
+    cur = _load(current_dir, "BENCH_transport.json")
+    if base and cur:
+        # socket bytes ARE the cost model's PS-leg prediction — exact by
+        # construction on both the worker and server side of the wire
+        for wd in ("f32", "bf16", "int8"):
+            b = cur["dist_sgd"]["bytes_vs_model"][wd]
+            c.ratio(f"transport.bytes_vs_model.{wd}", b["ratio"], 1.0)
+            c.ratio(f"transport.server_bytes_vs_model.{wd}",
+                    b["server_ratio"], 1.0)
+            # the multi-process loss curve IS the simulation's, bit for
+            # bit, at every wire dtype
+            c.ratio(f"transport.bitexact_tcp_vs_loopback.{wd}",
+                    cur["dist_sgd"]["bitexact_tcp_vs_loopback"][wd], 1.0)
+        c.ratio("transport.bitexact_tcp_vs_inprocess.f32",
+                cur["dist_sgd"]["bitexact_tcp_vs_inprocess_f32"], 1.0)
+        # exchange ordering is racy across real processes; the elastic
+        # rule must not care (the ISSUE acceptance bound)
+        c.bound("transport.esgd.epoch_mean_abs_delta",
+                cur["dist_esgd"]["epoch_mean_abs_delta"], 0.01)
+        # chaos: the real-clock degraded release fired and the evicted
+        # straggler re-joined on its next push
+        c.ratio("transport.chaos.degraded_fired",
+                cur["chaos"]["degraded_fired"], 1.0)
+        c.ratio("transport.chaos.evicted_and_rejoined",
+                cur["chaos"]["evicted_and_rejoined"], 1.0)
 
     if c.checked == 0 and not c.failures:
         print("error: no BENCH_*.json pairs found to compare",

@@ -87,6 +87,32 @@ def ps_push_bytes(nbytes: float, wire_dtype: "str | None" = None) -> float:
     return wire_bytes(nbytes, wire_dtype)
 
 
+def ps_wire_nbytes(n_values: int, wire_dtype: "str | None" = None) -> int:
+    """EXACT PS-leg payload bytes of one push/pull of ``n_values`` f32
+    values over the socket transport (net/wire.py's encode_buffer):
+
+      f32   4n
+      bf16  2n
+      int8  n_pad + n_pad/128 * 4   (codes + one f32 scale per
+                                     WIRE_BLOCK=128 bucket, n padded up
+                                     to whole buckets)
+
+    For WIRE_BLOCK-aligned n — every FlatBuffer spec.size is, since
+    specs pad to LANE*SUBLANE — this equals ``ps_push_bytes(4n, wd)``
+    exactly; BENCH_transport gates measured socket bytes against it."""
+    if wire_dtype in (None, "f32"):
+        return 4 * n_values
+    if wire_dtype == "bf16":
+        return 2 * n_values
+    if wire_dtype == "int8":
+        from repro.kernels.quant_bucket.quant_bucket import WIRE_BLOCK
+
+        n_pad = -(-n_values // WIRE_BLOCK) * WIRE_BLOCK
+        return n_pad + (n_pad // WIRE_BLOCK) * 4
+    raise ValueError(f"wire_dtype must be None/f32/bf16/int8, "
+                     f"got {wire_dtype!r}")
+
+
 def reshard_leg_bytes(state_nbytes: float, p_old: int,
                       survivors: "int | None" = None,
                       wire_dtype: "str | None" = None) -> float:

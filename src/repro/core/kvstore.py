@@ -155,11 +155,6 @@ class KVStore:
         self.group_sync_count: dict[Any, int] = {}
 
     @property
-    def compress_push(self) -> bool:
-        """Deprecated alias: whether the PS wire is the int8 codec."""
-        return self.wire_dtype == "int8"
-
-    @property
     def expected_pushers(self) -> int:
         """Pushers the sync barrier waits for: the static client/worker
         count, degraded to the live-member count when an elastic
@@ -490,8 +485,15 @@ class KVStore:
         return list(self._values)
 
     def server_of(self, key: Any) -> int:
-        """Key placement across the server shards (hash partitioning)."""
-        return hash(key) % self.num_servers
+        """Key placement across the server shards (hash partitioning).
+
+        crc32 of the key string, NOT ``hash()``: Python salts str hashes
+        per process, and the socket transport needs every worker process
+        to route a key to the same shard (net/remote_kv.py mirrors this
+        exact rule)."""
+        import zlib
+
+        return zlib.crc32(str(key).encode()) % self.num_servers
 
     def bytes_per_server_per_sync(self, key: Any) -> int:
         """Ingress bytes one server receives per global sync of this key —

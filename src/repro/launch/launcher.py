@@ -66,6 +66,14 @@ class JobSpec:
     # sync-barrier degradation timeout in seconds (threaded to
     # --barrier-timeout; kill/drop schedules need it)
     barrier_timeout: float = 0.0  # 0 = block forever
+    # how the PS tier is reached: "loopback" keeps the in-process
+    # simulation (mpirun-style client commands); "tcp" emits one OS
+    # process per worker plus real net/kvserver.py processes, all
+    # finding each other through the rendezvous at scheduler_host:port
+    transport: str = "loopback"
+    # the algorithm mode a transport job runs (net/worker.py loop);
+    # required for tcp, ignored for loopback ("" = in-process default)
+    mode: str = ""
     # internal bookkeeping: the policy the mirror knobs were backfilled
     # from (dataclasses.replace passes it back so __post_init__ can tell
     # an explicitly changed mirror from one restating the previous
@@ -142,6 +150,27 @@ class JobSpec:
                     "release it (see KVStore.barrier_timeout)")
         if self.barrier_timeout < 0:
             raise ValueError("barrier_timeout must be >= 0 (0 = none)")
+        if self.transport not in ("loopback", "tcp"):
+            raise ValueError(
+                f"transport must be loopback/tcp, got {self.transport!r}")
+        if self.transport == "tcp":
+            if self.mode not in ("dist_sgd", "dist_esgd"):
+                raise ValueError(
+                    "transport='tcp' runs the net/worker.py loop, which "
+                    "covers dist_sgd and dist_esgd — got mode="
+                    f"{self.mode!r} (async/mpi modes stay in-process; "
+                    "see ROADMAP)")
+            if self.num_workers != self.num_clients:
+                raise ValueError(
+                    "transport='tcp' launches one OS process per worker "
+                    "(workers_per_client == 1): set num_clients == "
+                    f"num_workers (got {self.num_clients} clients for "
+                    f"{self.num_workers} workers)")
+            if self.num_servers < 1:
+                raise ValueError(
+                    "transport='tcp' is the PS tier over sockets — it "
+                    "needs num_servers >= 1 (pure-MPI pushpull has no "
+                    "server process to connect to)")
 
 
 def build_job(spec: JobSpec) -> dict:
@@ -153,9 +182,36 @@ def build_job(spec: JobSpec) -> dict:
     derived_method = ("ring" if (spec.wire_dtype != "f32" or spec.overlap)
                       else "psum")
     derived_rings = 1 if spec.overlap else 2
+    rdzv = f"{spec.scheduler_host}:{spec.scheduler_port}"
     clients = []
     for c in range(spec.num_clients):
         members = [w for w in idents if w.mpi.client == c]
+        if spec.transport == "tcp":
+            # one OS process per worker (per_client == 1): no mpirun,
+            # the rendezvous hands out identities and server addresses
+            launch_cmd = (
+                f"python -m repro.launch.train "
+                f"--transport tcp --rendezvous {rdzv} "
+                f"--mode {spec.mode} "
+                f"--client {c} --num-clients {spec.num_clients}"
+                + (f" --wire-dtype {spec.wire_dtype}"
+                   if spec.wire_dtype != "f32" else "")
+                + (f" --faults '{spec.faults}'" if spec.faults else "")
+                + (f" --barrier-timeout {spec.barrier_timeout:g}"
+                   if spec.barrier_timeout else "")
+            )
+            clients.append({
+                "client_id": c,
+                "pod_slice": f"pod{c}" if spec.num_clients > 1 else "pod0",
+                "master_ps_rank": members[0].ps.rank,
+                "workers": [
+                    {"ps_rank": m.ps.rank, "mpi_rank": m.mpi.rank,
+                     "host": f"tpu-host-{m.ps.rank}"}
+                    for m in members
+                ],
+                "launch_cmd": launch_cmd,
+            })
+            continue
         clients.append({
             "client_id": c,
             "pod_slice": f"pod{c}" if spec.num_clients > 1 else "pod0",
@@ -193,15 +249,24 @@ def build_job(spec: JobSpec) -> dict:
                    if spec.barrier_timeout else "")
             ),
         })
+    scheduler_cmd = ("python -m repro.net.rendezvous"
+                     if spec.transport == "tcp"
+                     else "python -m repro.launch.scheduler")
     return {
         "scheduler": {
             "host": spec.scheduler_host, "port": spec.scheduler_port,
-            "launch_cmd": "python -m repro.launch.scheduler",
+            "launch_cmd": scheduler_cmd,
         },
         "servers": [
-            {"ps_rank": s, "host": f"ps-host-{s}"}
+            {"ps_rank": s, "host": f"ps-host-{s}",
+             **({"launch_cmd":
+                 f"python -m repro.net.kvserver --rank {s} "
+                 f"--rendezvous {rdzv}"}
+                if spec.transport == "tcp" else {})}
             for s in range(spec.num_servers)
         ],
+        "transport": spec.transport,
+        "algo_mode": spec.mode,
         "clients": clients,
         "mode": "pure_mpi" if spec.num_servers == 0 else "hybrid_ps_mpi",
         "sync": {"optimizer": spec.optimizer,
@@ -221,6 +286,18 @@ def build_job(spec: JobSpec) -> dict:
     }
 
 
+def _script_body(cmd: str, *, rdzv: str, role: str, rank: int) -> str:
+    """One launch script: the rendezvous env triple (exactly once each)
+    then the command. The env vars are how a process started by ANY
+    cluster scheduler finds its job — the command-line flags are just
+    overrides."""
+    return ("#!/bin/sh\n"
+            f"export REPRO_RDZV_ADDR={rdzv}\n"
+            f"export REPRO_ROLE={role}\n"
+            f"export REPRO_RANK={rank}\n"
+            + cmd + "\n")
+
+
 def emit_scripts(spec: JobSpec, outdir: str) -> list[str]:
     job = build_job(spec)
     os.makedirs(outdir, exist_ok=True)
@@ -229,16 +306,28 @@ def emit_scripts(spec: JobSpec, outdir: str) -> list[str]:
     with open(spec_path, "w") as f:
         json.dump(job, f, indent=2)
     paths.append(spec_path)
+    rdzv = f"{spec.scheduler_host}:{spec.scheduler_port}"
 
     launch_all = ["#!/bin/sh", "# generated by repro.launch.launcher", ""]
-    launch_all.append(f"# scheduler first (listens for worker/server connects)")
+    launch_all.append("# scheduler first (listens for worker/server connects)")
     launch_all.append(f"{job['scheduler']['launch_cmd']} &")
     for s in job["servers"]:
-        launch_all.append(f"ssh {s['host']} python -m repro.launch.server &")
+        if spec.transport == "tcp":
+            path = os.path.join(outdir, f"server_{s['ps_rank']}.sh")
+            with open(path, "w") as f:
+                f.write(_script_body(s["launch_cmd"], rdzv=rdzv,
+                                     role="server", rank=s["ps_rank"]))
+            os.chmod(path, 0o755)
+            paths.append(path)
+            launch_all.append(f"sh {path} &")
+        else:
+            launch_all.append(
+                f"ssh {s['host']} python -m repro.launch.server &")
     for c in job["clients"]:
         path = os.path.join(outdir, f"client_{c['client_id']}.sh")
         with open(path, "w") as f:
-            f.write("#!/bin/sh\n" + c["launch_cmd"] + "\n")
+            f.write(_script_body(c["launch_cmd"], rdzv=rdzv, role="worker",
+                                 rank=c["client_id"]))
         os.chmod(path, 0o755)
         paths.append(path)
         launch_all.append(f"sh {path} &  # bsub analogue: one job per client")
@@ -249,6 +338,41 @@ def emit_scripts(spec: JobSpec, outdir: str) -> list[str]:
     os.chmod(all_path, 0o755)
     paths.append(all_path)
     return paths
+
+
+def parse_script(path: str) -> dict:
+    """Parse an emitted client/server script back into its facts: the
+    env triple and the command's flags. The round-trip test (and
+    launch/run_local.py, which spawns scripts rather than re-deriving
+    commands) rely on this staying in sync with ``emit_scripts``."""
+    import shlex
+
+    env: dict[str, str] = {}
+    cmd = ""
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line.startswith("export "):
+                k, _, v = line[len("export "):].partition("=")
+                env[k] = v
+            elif line and not line.startswith("#"):
+                cmd = line
+    flags: dict[str, str] = {}
+    toks = shlex.split(cmd)
+    for i, tok in enumerate(toks):
+        if tok.startswith("--"):
+            val = (toks[i + 1]
+                   if i + 1 < len(toks) and not toks[i + 1].startswith("--")
+                   else "")
+            flags[tok[2:]] = val
+    return {
+        "rdzv_addr": env.get("REPRO_RDZV_ADDR"),
+        "role": env.get("REPRO_ROLE"),
+        "rank": int(env["REPRO_RANK"]) if "REPRO_RANK" in env else None,
+        "env": env,
+        "cmd": cmd,
+        "flags": flags,
+    }
 
 
 def main() -> None:  # pragma: no cover

@@ -1,0 +1,330 @@
+"""Run a transport job as REAL OS processes on localhost.
+
+``run_job(algo)`` is the multi-process twin of ``algorithms.run(cfg)``:
+
+  tcp       builds the JobSpec, ``emit_scripts`` materializes one shell
+            script per server and per worker, and each script is spawned
+            with ``/bin/sh`` as its own OS process — the processes find
+            each other through an in-process rendezvous served at the
+            spec's scheduler address, exactly as a cluster scheduler
+            would run the emitted scripts. Worker metrics come back
+            through ``outdir/metrics_worker_<rank>.json``.
+  loopback  the same rendezvous/KVServer/worker code paths on the
+            loopback transport (threads, no sockets) — the bit-exact
+            in-process reference the tcp loss curves are gated against.
+
+The aggregated ``JobResult`` mirrors algorithms.History where it can
+(per-step mean worker loss in client order, per-epoch metrics) and adds
+the transport-side accounting (exit codes, server stats, socket bytes).
+"""
+from __future__ import annotations
+
+import json
+import os
+import socket
+import subprocess
+import sys
+import tempfile
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import numpy as np
+
+
+@dataclass
+class JobResult:
+    transport: str
+    losses: list = field(default_factory=list)    # per-step mean over workers
+    metrics: list = field(default_factory=list)   # per-epoch (worker 0)
+    final_loss: Optional[float] = None
+    per_worker: dict = field(default_factory=dict)
+    server_stats: dict = field(default_factory=dict)
+    exit_codes: dict = field(default_factory=dict)
+    degraded_syncs: int = 0
+    late_pushes: int = 0
+    membership_epochs: int = 0
+    live: list = field(default_factory=list)
+    script_paths: list = field(default_factory=list)
+    outdir: str = ""
+
+
+def free_port() -> int:
+    s = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    s.bind(("127.0.0.1", 0))
+    port = s.getsockname()[1]
+    s.close()
+    return port
+
+
+def _make_spec(algo, *, transport: str, port: int):
+    from repro.launch.launcher import JobSpec
+
+    from repro.core.faults import as_schedule
+
+    sched = as_schedule(algo.faults, seed=algo.seed)
+    return JobSpec(
+        algo.num_workers, algo.num_servers, algo.effective_clients,
+        "qwen3-4b", "train_4k",
+        scheduler_host="127.0.0.1", scheduler_port=port,
+        faults=sched.format() if sched is not None else "",
+        barrier_timeout=algo.barrier_timeout or 0.0,
+        transport=transport, mode=algo.mode, policy=algo.policy)
+
+
+def _aggregate(result: JobResult, worker_out: dict[int, dict]) -> None:
+    """History-shaped curves from per-worker records: per-step mean loss
+    over the workers that computed that step (client order), worker 0's
+    per-epoch metrics (every replica's params are identical on clean
+    sync runs, so the choice only matters after a kill)."""
+    result.per_worker = worker_out
+    by_step: dict[int, list] = {}
+    for rank in sorted(worker_out):
+        rec = worker_out[rank]
+        for gstep, loss in zip(rec.get("gsteps", []),
+                               rec.get("losses", [])):
+            by_step.setdefault(int(gstep), []).append(loss)
+    result.losses = [float(np.mean(by_step[s])) for s in sorted(by_step)]
+    for rank in sorted(worker_out):
+        if worker_out[rank].get("metrics"):
+            result.metrics = [float(m)
+                              for m in worker_out[rank]["metrics"]]
+            break
+    if result.losses:
+        result.final_loss = result.losses[-1]
+
+
+def _fold_server_stats(result: JobResult, stats: dict[int, dict]) -> None:
+    result.server_stats = stats
+    for st in stats.values():
+        result.degraded_syncs += int(st.get("degraded_syncs", 0))
+        result.late_pushes += int(st.get("late_pushes", 0))
+        if int(st.get("membership_epoch", 0)) >= result.membership_epochs:
+            result.membership_epochs = int(st.get("membership_epoch", 0))
+            result.live = list(st.get("live", []))
+
+
+def run_job(algo, *, transport: str = "tcp", problem: str = "logreg8",
+            outdir: Optional[str] = None, timeout: float = 240.0,
+            keep_servers: bool = False) -> JobResult:
+    if transport == "tcp":
+        return _run_tcp(algo, problem=problem, outdir=outdir,
+                        timeout=timeout)
+    if transport == "loopback":
+        return _run_loopback(algo, problem=problem, timeout=timeout,
+                             keep_servers=keep_servers)
+    raise ValueError(f"transport must be tcp/loopback, got {transport!r}")
+
+
+# ---------------------------------------------------------------------------
+# tcp: real processes from emitted scripts
+# ---------------------------------------------------------------------------
+
+def _child_env() -> dict:
+    import repro
+
+    src = os.path.dirname(os.path.dirname(os.path.abspath(repro.__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    return env
+
+
+def _run_tcp(algo, *, problem: str, outdir: Optional[str],
+             timeout: float) -> JobResult:
+    from repro.launch.launcher import emit_scripts
+    from repro.net.rendezvous import Rendezvous, algo_to_dict
+    from repro.net.transport import TcpTransport
+
+    outdir = outdir or tempfile.mkdtemp(prefix="repro_tcp_")
+    os.makedirs(outdir, exist_ok=True)
+    port = free_port()
+    spec = _make_spec(algo, transport="tcp", port=port)
+    paths = emit_scripts(spec, outdir)
+    result = JobResult(transport="tcp", script_paths=paths, outdir=outdir)
+
+    rdzv = Rendezvous(
+        num_workers=algo.num_workers, num_servers=algo.num_servers,
+        num_clients=algo.effective_clients, algo=algo_to_dict(algo),
+        problem=problem, outdir=outdir, transport="tcp")
+    tr = TcpTransport()
+    rdzv_server = tr.serve(rdzv.handle, "127.0.0.1", port)
+    env = _child_env()
+    procs: dict[str, subprocess.Popen] = {}
+    logs = []
+    try:
+        scripts = ([p for p in paths if "server_" in os.path.basename(p)]
+                   + [p for p in paths if "client_" in os.path.basename(p)])
+        for path in scripts:
+            name = os.path.splitext(os.path.basename(path))[0]
+            log = open(os.path.join(outdir, f"{name}.log"), "wb")
+            logs.append(log)
+            procs[name] = subprocess.Popen(
+                ["/bin/sh", path], env=env, cwd=outdir,
+                stdout=log, stderr=subprocess.STDOUT)
+        deadline = time.monotonic() + timeout
+        workers = {n: p for n, p in procs.items()
+                   if n.startswith("client_")}
+        for name, proc in workers.items():
+            left = max(0.5, deadline - time.monotonic())
+            try:
+                proc.wait(timeout=left)
+            except subprocess.TimeoutExpired:
+                proc.kill()
+                proc.wait(timeout=5.0)
+        # workers are done: read server stats over a fresh connection,
+        # then tell the server processes to exit
+        stats: dict[int, dict] = {}
+        for rank, addr in sorted(rdzv.server_addrs.items()):
+            try:
+                conn = tr.connect(addr, timeout=5.0)
+                st, _ = conn.request("stats")
+                stats[rank] = st
+                conn.request("shutdown")
+                conn.close()
+            except OSError:
+                stats[rank] = {"error": "unreachable"}
+        _fold_server_stats(result, stats)
+        for name, proc in procs.items():
+            if name.startswith("server_"):
+                try:
+                    proc.wait(timeout=10.0)
+                except subprocess.TimeoutExpired:
+                    proc.kill()
+                    proc.wait(timeout=5.0)
+            result.exit_codes[name] = proc.returncode
+    finally:
+        for proc in procs.values():
+            if proc.poll() is None:
+                proc.kill()
+        for log in logs:
+            log.close()
+        rdzv_server.close()
+    worker_out: dict[int, dict] = {}
+    for rank in range(algo.num_workers):
+        path = os.path.join(outdir, f"metrics_worker_{rank}.json")
+        if os.path.exists(path):
+            with open(path) as f:
+                worker_out[rank] = json.load(f)
+    _aggregate(result, worker_out)
+    return result
+
+
+# ---------------------------------------------------------------------------
+# loopback: same code paths, threads instead of processes
+# ---------------------------------------------------------------------------
+
+def _run_loopback(algo, *, problem: str, timeout: float,
+                  keep_servers: bool) -> JobResult:
+    from repro.net.kvserver import KVServer
+    from repro.net.rendezvous import (Rendezvous, algo_from_dict,
+                                      algo_to_dict, join_rendezvous)
+    from repro.net.transport import LoopbackTransport
+    from repro.net.worker import WorkerKilled, run_worker
+
+    result = JobResult(transport="loopback")
+    tr = LoopbackTransport()
+    rdzv = Rendezvous(
+        num_workers=algo.num_workers, num_servers=algo.num_servers,
+        num_clients=algo.effective_clients, algo=algo_to_dict(algo),
+        problem=problem, outdir="", transport="loopback")
+    rdzv_server = tr.serve(rdzv.handle, "127.0.0.1", 0)
+    cfg = algo_from_dict(algo_to_dict(algo))
+    kvs, kv_servers = [], []
+    for rank in range(algo.num_servers):
+        srv = KVServer(cfg, rank=rank)
+        server = tr.serve(srv.handle)
+        conn = tr.connect(rdzv_server.addr)
+        join_rendezvous(conn, "server", rank, addr=server.addr)
+        kvs.append(srv)
+        kv_servers.append(server)
+
+    worker_out: dict[int, dict] = {}
+    errors: dict[int, BaseException] = {}
+
+    def run_one(rank: int) -> None:
+        def killed() -> None:
+            raise WorkerKilled(rank)
+
+        try:
+            worker_out[rank] = run_worker(
+                rank=rank, rendezvous_addr=rdzv_server.addr,
+                transport="loopback", on_kill=killed)
+        except WorkerKilled:
+            worker_out[rank] = {"killed": True, "losses": [], "gsteps": [],
+                                "metrics": []}
+        except BaseException as e:  # noqa: BLE001 - surfaced below
+            errors[rank] = e
+
+    threads = [threading.Thread(target=run_one, args=(rank,), daemon=True)
+               for rank in range(algo.num_workers)]
+    for t in threads:
+        t.start()
+    deadline = time.monotonic() + timeout
+    for t in threads:
+        t.join(max(0.5, deadline - time.monotonic()))
+    stats = {}
+    for rank, srv in enumerate(kvs):
+        st, _ = srv.handle("stats", {}, b"")
+        stats[rank] = st
+    _fold_server_stats(result, stats)
+    if not keep_servers:
+        for server in kv_servers:
+            server.close()
+        rdzv_server.close()
+    if errors:
+        rank, err = sorted(errors.items())[0]
+        raise RuntimeError(f"loopback worker {rank} failed: {err!r}") from err
+    for rank in range(algo.num_workers):
+        result.exit_codes[f"client_{rank}"] = (
+            0 if rank in worker_out and "killed" not in worker_out[rank]
+            else -9 if rank in worker_out else None)
+    _aggregate(result, worker_out)
+    return result
+
+
+def main() -> None:  # pragma: no cover - CLI wrapper over run_job
+    import argparse
+
+    from repro.core.algorithms import AlgoConfig
+
+    ap = argparse.ArgumentParser(
+        description="run a transport job as local OS processes")
+    ap.add_argument("--mode", default="dist_sgd",
+                    choices=("dist_sgd", "dist_esgd"))
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--servers", type=int, default=2)
+    ap.add_argument("--transport", default="tcp",
+                    choices=("tcp", "loopback"))
+    ap.add_argument("--epochs", type=int, default=1)
+    ap.add_argument("--steps", type=int, default=4)
+    ap.add_argument("--lr", type=float, default=0.05)
+    ap.add_argument("--wire-dtype", default="f32",
+                    choices=("f32", "bf16", "int8"))
+    ap.add_argument("--faults", default="")
+    ap.add_argument("--barrier-timeout", type=float, default=0.0)
+    ap.add_argument("--outdir", default=None)
+    ap.add_argument("--timeout", type=float, default=240.0)
+    args = ap.parse_args()
+    algo = AlgoConfig(
+        mode=args.mode, num_workers=args.workers,
+        num_clients=args.workers, num_servers=args.servers,
+        lr=args.lr, epochs=args.epochs, steps_per_epoch=args.steps,
+        seed=0, wire_dtype=(None if args.wire_dtype == "f32"
+                            else args.wire_dtype),
+        faults=args.faults or None,
+        barrier_timeout=args.barrier_timeout or None)
+    res = run_job(algo, transport=args.transport, outdir=args.outdir,
+                  timeout=args.timeout)
+    print(json.dumps({
+        "transport": res.transport, "losses": res.losses,
+        "metrics": res.metrics, "final_loss": res.final_loss,
+        "exit_codes": res.exit_codes,
+        "degraded_syncs": res.degraded_syncs,
+        "membership_epochs": res.membership_epochs, "live": res.live,
+    }, indent=2))
+
+
+if __name__ == "__main__":  # pragma: no cover
+    main()

@@ -463,6 +463,7 @@ def main() -> None:  # pragma: no cover (CLI driver; see tests/test_launch.py)
     configs.base.TrainSettings.
     """
     import argparse
+    import os
 
     from repro.configs.base import TrainSettings, get_config, reduced
     from repro.data.pipeline import DataConfig, TokenPipeline
@@ -540,7 +541,53 @@ def main() -> None:  # pragma: no cover (CLI driver; see tests/test_launch.py)
                          "need it)")
     ap.add_argument("--full-size", action="store_true",
                     help="full architecture (default: reduced smoke config)")
+    ap.add_argument("--transport", default="loopback",
+                    choices=("loopback", "tcp"),
+                    help="'tcp' makes this process a real transport worker: "
+                         "it joins the rendezvous, gets its identity, and "
+                         "runs net/worker.py's loop against the socket PS "
+                         "tier ('loopback' keeps the standalone in-process "
+                         "reproduction below)")
+    ap.add_argument("--rendezvous",
+                    default=os.environ.get("REPRO_RDZV_ADDR"),
+                    help="rendezvous host:port for --transport tcp "
+                         "(default: $REPRO_RDZV_ADDR from the emitted "
+                         "script)")
+    ap.add_argument("--mode", default="",
+                    help="transport algorithm mode (dist_sgd / dist_esgd); "
+                         "the job config from the rendezvous is "
+                         "authoritative, this is recorded for the spec")
+    ap.add_argument("--problem", default="logreg8",
+                    help="transport training problem (net/problem.py)")
     args = ap.parse_args()
+
+    if args.transport == "tcp":
+        import json as _json
+
+        from repro.net.worker import _jsonable, run_worker
+
+        if not args.rendezvous:
+            ap.error("--transport tcp needs --rendezvous (or "
+                     "REPRO_RDZV_ADDR in the environment)")
+        rank = int(os.environ.get("REPRO_RANK", args.client))
+        out = run_worker(rank=rank, rendezvous_addr=args.rendezvous,
+                         transport="tcp")
+        from repro.net.transport import connect_with_retry, transport_for
+
+        conn = connect_with_retry(transport_for("tcp"), args.rendezvous)
+        config, _ = conn.request("config")
+        conn.close()
+        outdir = config.get("outdir")
+        if outdir:
+            path = os.path.join(outdir, f"metrics_worker_{rank}.json")
+            with open(path, "w") as f:
+                _json.dump(_jsonable(out), f, indent=2)
+        print(f"[train] transport worker {rank} done: "
+              f"{len(out.get('losses', []))} steps, "
+              f"final loss "
+              f"{out['losses'][-1] if out.get('losses') else None}",
+              flush=True)
+        return
 
     from repro.core.comm import CollectivePolicy
 

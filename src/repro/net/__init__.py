@@ -1,0 +1,36 @@
+"""Real multi-process transport for the PS tier (paper §4.1).
+
+Every mode in core/algorithms.py simulates the parameter-server tier
+in-process. This package backs the SAME KVStore/Membership semantics
+with actual inter-process communication on localhost:
+
+  wire.py        length-prefixed binary frames (JSON header + payload)
+                 and the PS-leg payload codec: the FlatBuffer-packed f32
+                 buffer encoded per wire dtype (f32 raw / bf16 cast /
+                 int8 codes+scales from kernels/quant_bucket), so the
+                 socket carries exactly ``cost_model.ps_wire_nbytes``
+  transport.py   the Transport abstraction: ``TcpTransport`` (real
+                 sockets, one thread per connection) and
+                 ``LoopbackTransport`` (same frames, same codec, no
+                 sockets — the in-process reference)
+  rendezvous.py  the scheduler process: joining servers publish their
+                 address, joining workers get their PS + MPI identity
+                 (core/client.py's launcher grouping) and the job
+                 config; publishes the epoch'd live set
+  kvserver.py    the server process: the UNTOUCHED core/kvstore.py
+                 server rules on packed buffers, plus the transport-side
+                 round buffering that makes the sync barrier, PR 6's
+                 barrier_timeout degraded release, and membership-epoch
+                 shrink/rejoin work over real sockets
+  remote_kv.py   the worker-side endpoint: push/pull/pushpull/barrier/
+                 register_group RPCs with the faults.py retry/backoff
+                 policy applied to real deliveries
+  worker.py      the per-process worker loop for dist_sgd / dist_esgd,
+                 bit-compatible with core/algorithms.py's in-process
+                 math (same grads, same barrier sum order, same update)
+  problem.py     the shared train problem, so in-process and
+                 multi-process runs compare the exact same functions
+
+``launch/run_local.py`` spawns the launcher's emitted scripts as real OS
+subprocesses and collects the per-worker metrics.
+"""

@@ -1,0 +1,385 @@
+"""The PS server process: core/kvstore.py's server rules over a Transport.
+
+The KVStore itself is UNTOUCHED — it runs here on single-leaf values (the
+FlatBuffer-packed f32 buffer every worker ships), and every server rule
+(sync-barrier assign, async optimize, elastic) is linear/pointwise, so
+operating in the packed domain is exactly the in-process math.
+
+What this module adds is the *transport half* of the barrier semantics:
+
+  rounds        sync pushes buffer per (key, step) round; when the live
+                roster has all arrived they feed the KVStore in ascending
+                unit order — the SAME order the in-process simulation
+                pushes in, so the f32 barrier sum is bit-identical
+  degraded      a blocking pull that reaches ``first_arrival +
+                barrier_timeout`` (real seconds here) releases the round
+                with the survivor subset via ``kv.pull(now=...)`` — the
+                KVStore's own PR-6 degraded release, now driven by the
+                wall clock
+  membership    units missing from a degraded round are evicted
+                (``Membership.fail`` — epoch bump, expected_pushers
+                shrinks); a push from an evicted unit re-joins it at the
+                next epoch (a recovered straggler announces itself by
+                pushing)
+  consistency   every pull of a round returns the same summed value and
+                the same ``count``, so every worker — including one whose
+                own push was discarded — applies the same update and the
+                replicas stay bit-identical
+
+Ops: init, push, pull, pushpull, elastic_exchange, value, barrier,
+register_group, set_elastic, set_optimizer, stats, shutdown.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Optional
+
+import numpy as np
+
+from repro.core.kvstore import KVStore
+from repro.core.membership import Membership
+from repro.net import wire
+
+
+class _Round:
+    """One sync-barrier round of one key: who arrived, when it opened."""
+
+    __slots__ = ("arrived", "first_mono", "done", "count", "degraded",
+                 "released_mono")
+
+    def __init__(self, first_mono: float):
+        self.arrived: dict[int, np.ndarray] = {}
+        self.first_mono = first_mono
+        self.done = False
+        self.count = 0
+        self.degraded = False
+        self.released_mono: Optional[float] = None
+
+
+class KVServer:
+    """One PS server shard: transport handler around one KVStore."""
+
+    def __init__(self, cfg, *, rank: int = 0, clock=time.monotonic):
+        import jax.numpy as jnp  # noqa: F401 - fail early if jax missing
+
+        self.cfg = cfg
+        self.rank = rank
+        self.clock = clock
+        self.wire_dtype = cfg.effective_wire_dtype
+        C = cfg.effective_clients
+        kv_type = {
+            "dist_sgd": "dist_sync", "mpi_sgd": "sync_mpi",
+            "dist_asgd": "dist_async", "mpi_asgd": "async_mpi",
+            "dist_esgd": "dist_async", "mpi_esgd": "async_mpi",
+        }[cfg.mode]
+        self.kv = KVStore.create(
+            kv_type, num_workers=cfg.num_workers,
+            num_servers=cfg.num_servers, num_clients=C,
+            flat_exchange=cfg.flat_exchange,
+            barrier_timeout=cfg.barrier_timeout)
+        if cfg.mode.endswith("esgd"):
+            self.kv.set_elastic(cfg.esgd_alpha)
+        self.membership = Membership(C)
+        self.kv.attach_membership(self.membership)
+        self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)
+        self._rounds: dict[tuple[Any, int], _Round] = {}
+        self._barriers: dict[str, _Round] = {}
+        self.bytes = {"push_in": 0, "pull_out": 0,
+                      "exchange_in": 0, "exchange_out": 0}
+        self.degraded_latencies: list[float] = []
+        self.shutdown = threading.Event()
+
+    # -- helpers -------------------------------------------------------------
+    def _round(self, key: Any, step: int) -> _Round:
+        r = self._rounds.get((key, step))
+        if r is None:
+            r = self._rounds[(key, step)] = _Round(self.clock())
+        return r
+
+    def _rejoin(self, unit: int) -> None:
+        """A push from an evicted unit is its re-entry announcement."""
+        if not self.membership.is_live(unit):
+            self.membership.join(unit)
+
+    def _release(self, key: Any, step: int, *, degraded: bool) -> None:
+        """Feed the round's pushes to the KVStore in ascending unit order
+        (the in-process simulation's ``for c in range(C)`` order — the
+        f32 sum is bit-identical) and let its barrier/degraded logic run.
+        Units missing from a degraded round are evicted."""
+        import jax.numpy as jnp
+
+        r = self._rounds[(key, step)]
+        for u in sorted(r.arrived):
+            self.kv.push(key, jnp.asarray(r.arrived[u]), at=0.0, unit=u)
+        if degraded:
+            # forces the store's own short release (degraded_syncs++)
+            self.kv.pull(key, now=(self.kv.barrier_timeout or 0.0) + 1.0)
+        r.done = True
+        r.degraded = degraded
+        r.count = self.kv.last_barrier_count or len(r.arrived)
+        r.released_mono = self.clock()
+        if degraded:
+            self.degraded_latencies.append(r.released_mono - r.first_mono)
+            for u in list(self.membership.live):
+                if u not in r.arrived and self.membership.live_count > 1:
+                    self.membership.fail(u)
+        self._cond.notify_all()
+
+    def _deadline(self, r: _Round) -> Optional[float]:
+        if self.kv.barrier_timeout is None:
+            return None
+        return r.first_mono + self.kv.barrier_timeout
+
+    def _decode(self, meta: dict, payload: bytes) -> np.ndarray:
+        return np.ascontiguousarray(wire.decode_buffer(meta, payload))
+
+    def _encode_value(self, key: Any) -> tuple[dict, bytes]:
+        return wire.encode_buffer(np.asarray(self.kv.value(key)),
+                                  self.wire_dtype)
+
+    def _pull_info(self, r: Optional[_Round], key: Any = None) -> dict:
+        return {
+            "count": (r.count if r is not None
+                      else self.kv.push_count.get(key, 0)),
+            "degraded": bool(r.degraded) if r is not None else False,
+            "epoch": self.membership.epoch,
+            "live": list(self.membership.live),
+        }
+
+    # -- the handler ---------------------------------------------------------
+    def handle(self, op: str, meta: dict, payload: bytes):
+        if op == "init":
+            return self._op_init(meta, payload)
+        if op == "push":
+            return self._op_push(meta, payload)
+        if op == "pull":
+            return self._op_pull(meta)
+        if op == "pushpull":
+            self._op_push(meta, payload)
+            return self._op_pull(meta)
+        if op == "elastic_exchange":
+            return self._op_exchange(meta, payload)
+        if op == "value":
+            with self._lock:
+                vmeta, vpayload = wire.encode_buffer(
+                    np.asarray(self.kv.value(meta["key"])), None)
+            return vmeta, vpayload
+        if op == "barrier":
+            return self._op_barrier(meta)
+        if op == "register_group":
+            return self._op_register_group(meta)
+        if op == "set_elastic":
+            with self._lock:
+                self.kv.set_elastic(float(meta["alpha"]))
+            return {}, b""
+        if op == "set_optimizer":
+            return self._op_set_optimizer(meta)
+        if op == "stats":
+            return self._op_stats()
+        if op == "shutdown":
+            self.shutdown.set()
+            return {}, b""
+        raise ValueError(f"unknown kvserver op {op!r}")
+
+    # -- ops -----------------------------------------------------------------
+    def _op_init(self, meta: dict, payload: bytes):
+        import jax.numpy as jnp
+
+        key = meta["key"]
+        buf = jnp.asarray(self._decode(meta, payload))
+        with self._lock:
+            if key in self.kv.keys():
+                return {"existing": True}, b""  # idempotent re-init
+            self.kv.init(key, buf)
+        return {"existing": False}, b""
+
+    def _op_push(self, meta: dict, payload: bytes):
+        import jax.numpy as jnp
+
+        key, unit = meta["key"], int(meta["unit"])
+        step = int(meta.get("step", 0))
+        buf = self._decode(meta, payload)
+        with self._cond:
+            self.bytes["push_in"] += len(payload)
+            self._rejoin(unit)
+            if not self.kv.is_sync:
+                self.kv.push(key, jnp.asarray(buf), unit=unit)
+                return {"applied": True, "late": False}, b""
+            r = self._round(key, step)
+            if r.done:
+                self.kv.late_pushes += 1
+                return {"applied": False, "late": True}, b""
+            r.arrived[unit] = buf
+            if len(r.arrived) >= self.kv.expected_pushers:
+                self._release(key, step, degraded=False)
+            return {"applied": True, "late": False}, b""
+
+    def _op_pull(self, meta: dict):
+        key = meta["key"]
+        step = int(meta.get("step", 0))
+        with self._cond:
+            if not self.kv.is_sync:
+                vmeta, vpayload = self._encode_value(key)
+                self.bytes["pull_out"] += len(vpayload)
+                info = self._pull_info(None, key)
+                return dict(vmeta, **info), vpayload
+            r = self._round(key, step)
+            while not r.done and not self.shutdown.is_set():
+                deadline = self._deadline(r)
+                if deadline is None:
+                    self._cond.wait(0.1)
+                    continue
+                nowm = self.clock()
+                if nowm >= deadline:
+                    if r.arrived:
+                        self._release(key, step, degraded=True)
+                    else:
+                        # every push of the round was lost: no update,
+                        # the round just burned the timeout
+                        r.done = True
+                        r.degraded = True
+                        r.count = 0
+                        r.released_mono = nowm
+                        self._cond.notify_all()
+                    break
+                self._cond.wait(min(0.05, deadline - nowm))
+            info = self._pull_info(r)
+            if r.count == 0:
+                return dict(info, shape=[], wire="f32"), b""
+            vmeta, vpayload = self._encode_value(key)
+            self.bytes["pull_out"] += len(vpayload)
+            return dict(vmeta, **info), vpayload
+
+    def _op_exchange(self, meta: dict, payload: bytes):
+        """Atomic elastic exchange: return the pre-push center and apply
+        Elastic1 under one lock — the in-process ``old = kv.value();
+        kv.push()`` pair without a pull/push race between workers."""
+        import jax.numpy as jnp
+
+        key, unit = meta["key"], int(meta.get("unit", 0))
+        buf = self._decode(meta, payload)
+        with self._lock:
+            self.bytes["exchange_in"] += len(payload)
+            old = np.asarray(self.kv.value(key))
+            self.kv.push(key, jnp.asarray(buf), unit=unit)
+        vmeta, vpayload = wire.encode_buffer(old, self.wire_dtype)
+        self.bytes["exchange_out"] += len(vpayload)
+        return dict(vmeta, epoch=self.membership.epoch,
+                    live=list(self.membership.live)), vpayload
+
+    def _op_barrier(self, meta: dict):
+        """A named one-shot barrier over the live roster, honoring the
+        same timeout/degraded policy as the data barrier."""
+        name, unit = meta["name"], int(meta["unit"])
+        with self._cond:
+            b = self._barriers.get(name)
+            if b is None:
+                b = self._barriers[name] = _Round(self.clock())
+            if not b.done:
+                b.arrived[unit] = np.zeros(0)
+                if len(b.arrived) >= self.kv.expected_pushers:
+                    b.done = True
+                    b.count = len(b.arrived)
+                    self._cond.notify_all()
+            while not b.done and not self.shutdown.is_set():
+                deadline = self._deadline(b)
+                if deadline is not None and self.clock() >= deadline:
+                    b.done = True
+                    b.degraded = True
+                    b.count = len(b.arrived)
+                    self._cond.notify_all()
+                    break
+                self._cond.wait(0.05 if deadline is None
+                                else min(0.05, deadline - self.clock()))
+            return {"count": b.count, "degraded": b.degraded}, b""
+
+    def _op_register_group(self, meta: dict):
+        from repro.core.comm import Communicator
+
+        axes = tuple(meta.get("axes", ("worker",)))
+        sizes = tuple(int(s) for s in meta.get("sizes", (1,)))
+        with self._lock:
+            self.kv.register_group(
+                meta["gid"], Communicator.world(axes, sizes))
+        return {"size": int(np.prod(sizes))}, b""
+
+    def _op_set_optimizer(self, meta: dict):
+        from repro.optim.sgd import adagrad, adamw, sgd
+
+        name = meta.get("name", "sgd")
+        lr = float(meta.get("lr", 0.1))
+        make = {"sgd": lambda: sgd(lr, float(meta.get("momentum", 0.0))),
+                "adagrad": lambda: adagrad(lr),
+                "adamw": lambda: adamw(lr)}.get(name)
+        if make is None:
+            raise ValueError(f"optimizer must be sgd/adagrad/adamw, "
+                             f"got {name!r}")
+        with self._lock:
+            self.kv.set_optimizer(make(),
+                                  rescale=float(meta.get("rescale", 1.0)))
+        return {}, b""
+
+    def _op_stats(self):
+        with self._lock:
+            return {
+                "rank": self.rank,
+                "degraded_syncs": self.kv.degraded_syncs,
+                "late_pushes": self.kv.late_pushes,
+                "last_barrier_count": self.kv.last_barrier_count,
+                "push_count": dict(self.kv.push_count),
+                "membership_epoch": self.membership.epoch,
+                "live": list(self.membership.live),
+                "membership_history": [
+                    {"epoch": e.epoch, "kind": e.kind, "member": e.member,
+                     "live": list(e.live)}
+                    for e in self.membership.history],
+                "bytes": dict(self.bytes),
+                "degraded_latencies": list(self.degraded_latencies),
+                "keys": [str(k) for k in self.kv.keys()],
+            }, b""
+
+
+def main() -> None:  # pragma: no cover - process entry, tested via run_local
+    import argparse
+    import json
+    import os
+
+    from repro.net.rendezvous import algo_from_dict, join_rendezvous
+    from repro.net.transport import connect_with_retry, transport_for
+
+    ap = argparse.ArgumentParser(description="PS server process")
+    ap.add_argument("--rendezvous",
+                    default=os.environ.get("REPRO_RDZV_ADDR"),
+                    help="host:port of the rendezvous (or REPRO_RDZV_ADDR)")
+    ap.add_argument("--rank", type=int,
+                    default=int(os.environ.get("REPRO_RANK", "0")))
+    ap.add_argument("--transport", default="tcp")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--max-seconds", type=float, default=600.0)
+    args = ap.parse_args()
+    if not args.rendezvous:
+        ap.error("--rendezvous (or REPRO_RDZV_ADDR) is required")
+    transport = transport_for(args.transport)
+    conn = connect_with_retry(transport, args.rendezvous)
+    config, _ = conn.request("config")
+    cfg = algo_from_dict(config["algo"])
+    srv = KVServer(cfg, rank=args.rank)
+    server = transport.serve(srv.handle, host=args.host, port=0)
+    join_rendezvous(conn, "server", args.rank, addr=server.addr)
+    deadline = time.monotonic() + args.max_seconds
+    while not srv.shutdown.is_set() and time.monotonic() < deadline:
+        srv.shutdown.wait(0.2)
+    stats, _ = srv.handle("stats", {}, b"")
+    outdir = config.get("outdir")
+    if outdir:
+        path = os.path.join(outdir, f"metrics_server_{args.rank}.json")
+        with open(path, "w") as f:
+            json.dump(stats, f, indent=2)
+    server.close()
+    conn.close()
+
+
+if __name__ == "__main__":  # pragma: no cover
+    main()

@@ -1,0 +1,64 @@
+"""The shared training problem for multi-process runs.
+
+Every process (and the in-process reference run) must build the SAME
+init/grad/eval/pipeline functions for the bit-exactness gates to mean
+anything, so they live here — logistic regression on the synthetic
+image pipeline, the same problem tests/test_algorithms.py trains.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple
+
+
+class Problem(NamedTuple):
+    name: str
+    init_fn: Callable[[Any], Any]
+    grad_fn: Callable[[Any, Any], Any]
+    eval_fn: Callable[[Any], float]
+    make_pipeline: Callable[[int], Any]
+
+
+@functools.lru_cache(maxsize=None)
+def build_problem(name: str = "logreg8") -> Problem:
+    if name != "logreg8":
+        raise ValueError(f"unknown problem {name!r} (have: logreg8)")
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.data.pipeline import DataConfig, ImagePipeline
+
+    D, NCLS = 8 * 8 * 3, 10
+
+    def init_fn(key):
+        return {"w": jax.random.normal(key, (D, NCLS)) * 0.01,
+                "b": jnp.zeros((NCLS,))}
+
+    def _loss(params, batch):
+        x = batch["images"].reshape(batch["images"].shape[0], -1)
+        logits = x @ params["w"] + params["b"]
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, batch["labels"][:, None], 1)[:, 0]
+        return jnp.mean(lse - gold)
+
+    grad_fn = jax.jit(jax.value_and_grad(_loss))
+
+    test_pipe = ImagePipeline(
+        DataConfig(seed=0, batch_size=256, steps_per_epoch=1, shard=12345),
+        image_size=8)
+    test_batch = test_pipe.batch_at(999, 0)
+
+    def eval_fn(params):
+        x = test_batch["images"].reshape(256, -1)
+        logits = x @ params["w"] + params["b"]
+        return float(jnp.mean(
+            (jnp.argmax(logits, -1)
+             == test_batch["labels"]).astype(jnp.float32)))
+
+    def make_pipeline(w):
+        return ImagePipeline(
+            DataConfig(seed=0, batch_size=16, steps_per_epoch=10, shard=w),
+            image_size=8)
+
+    return Problem(name, init_fn, grad_fn, eval_fn, make_pipeline)

@@ -1,0 +1,224 @@
+"""The worker's KVStore endpoint: core/kvstore.py's client API over a
+Transport connection per server shard.
+
+Key routing uses ``stable_server_of`` (crc32 — `hash()` is salted per
+process, so the in-process ``KVStore.server_of`` rule is mirrored with a
+seed-free hash both sides agree on).
+
+Values cross the wire as FlatBuffer-packed f32 buffers encoded per wire
+dtype (net/wire.py), so each push/pull payload is exactly
+``cost_model.ps_wire_nbytes(spec.size, wire_dtype)`` bytes.
+
+Fault semantics mirror ``core/faults.delivery_time``: a push attempt the
+schedule drops is retried after ``backoff * 2**attempt`` REAL seconds (the
+in-process simulation adds the same amount of virtual time); a push whose
+every attempt drops is LOST — the worker proceeds to pull and the
+server's barrier_timeout covers the hole.
+"""
+from __future__ import annotations
+
+import time
+import zlib
+from typing import Any, Optional
+
+import numpy as np
+
+from repro.core import flatbuf
+from repro.net import wire
+from repro.net.transport import Connection
+
+
+def stable_server_of(key: Any, num_servers: int) -> int:
+    """Process-stable key -> server shard (crc32, not salted hash())."""
+    return zlib.crc32(str(key).encode()) % max(num_servers, 1)
+
+
+class RemoteKVStore:
+    """Client endpoint over one Connection per server shard."""
+
+    def __init__(self, conns: dict[int, Connection], *,
+                 wire_dtype: Optional[str] = None, injector=None,
+                 push_retries: int = 2, push_backoff: float = 0.05,
+                 sleep=time.sleep):
+        if not conns:
+            raise ValueError("RemoteKVStore needs at least one connection")
+        self.conns = dict(conns)
+        self.num_servers = len(self.conns)
+        self.wire_dtype = wire_dtype
+        self.injector = injector
+        self.push_retries = push_retries
+        self.push_backoff = push_backoff
+        self.sleep = sleep
+        self._specs: dict[Any, flatbuf.FlatBuffer] = {}
+        self.pushed_bytes = 0
+        self.pulled_bytes = 0
+        self.push_count = 0
+        self.pushes_lost = 0
+        self.push_delay_s = 0.0
+
+    # -- plumbing ------------------------------------------------------------
+    def _conn(self, key: Any) -> Connection:
+        rank = stable_server_of(key, self.num_servers)
+        return self.conns[sorted(self.conns)[rank]]
+
+    def _spec(self, key: Any, tree: Any = None) -> flatbuf.FlatBuffer:
+        spec = self._specs.get(key)
+        if spec is None:
+            if tree is None:
+                raise KeyError(f"key {key!r} has no registered spec")
+            spec = self._specs[key] = flatbuf.spec_for(tree)
+        return spec
+
+    def _pack(self, key: Any, tree: Any) -> np.ndarray:
+        import jax
+
+        spec = self._spec(key, tree)
+        leaves = jax.tree_util.tree_leaves(tree)
+        if len(leaves) == 1 and getattr(leaves[0], "ndim", None) == 1 \
+                and leaves[0].shape[0] == spec.size:
+            return np.asarray(leaves[0], dtype=np.float32)
+        return np.asarray(spec.pack(tree), dtype=np.float32)
+
+    def _unpack(self, key: Any, buf: np.ndarray) -> Any:
+        import jax.numpy as jnp
+
+        spec = self._specs[key]
+        return spec.unpack(jnp.asarray(buf, dtype=jnp.float32))
+
+    def register(self, key: Any, tree: Any) -> flatbuf.FlatBuffer:
+        """Pin the key's FlatBuffer spec (pack/unpack layout)."""
+        return self._spec(key, tree)
+
+    # -- RPCs ----------------------------------------------------------------
+    def init(self, key: Any, tree: Any) -> bool:
+        """Init the key server-side (exact f32; idempotent across
+        workers — the first init wins, as with in-process worker 0)."""
+        buf = self._pack(key, tree)
+        meta, payload = wire.encode_buffer(buf, None)
+        reply, _ = self._conn(key).request(
+            "init", dict(meta, key=key), payload)
+        return not reply.get("existing", False)
+
+    def _should_drop(self, unit: int, step: int, attempt: int) -> bool:
+        inj = self.injector
+        return bool(inj is not None
+                    and inj.should_drop(unit, step, attempt=attempt))
+
+    def push(self, key: Any, tree: Any, *, step: int = 0,
+             unit: int = 0) -> bool:
+        """Push with the faults.delivery_time retry policy over real
+        time. Returns False if every attempt dropped (push LOST)."""
+        buf = self._pack(key, tree)
+        meta, payload = wire.encode_buffer(buf, self.wire_dtype)
+        meta = dict(meta, key=key, unit=unit, step=step)
+        for attempt in range(1 + self.push_retries):
+            if self._should_drop(unit, step, attempt):
+                delay = self.push_backoff * (2 ** attempt)
+                self.push_delay_s += delay
+                self.sleep(delay)
+                continue
+            reply, _ = self._conn(key).request("push", meta, payload)
+            self.push_count += 1
+            self.pushed_bytes += len(payload)
+            return not reply.get("late", False)
+        self.pushes_lost += 1
+        return False
+
+    def pull(self, key: Any, *, step: int = 0,
+             unit: int = 0) -> tuple[Any, dict]:
+        """Blocking pull of the round's value. Returns ``(tree, info)``;
+        ``tree`` is None when the round released empty (count == 0 —
+        every push was lost; the worker skips the update, as the
+        in-process all-lost round does)."""
+        reply, payload = self._conn(key).request(
+            "pull", {"key": key, "step": step, "unit": unit})
+        info = {k: reply.get(k) for k in
+                ("count", "degraded", "epoch", "live")}
+        if not payload or info["count"] == 0:
+            return None, info
+        self.pulled_bytes += len(payload)
+        buf = wire.decode_buffer(reply, payload)
+        return self._unpack(key, buf), info
+
+    def pushpull(self, key: Any, tree: Any, *, step: int = 0,
+                 unit: int = 0) -> tuple[Any, dict]:
+        buf = self._pack(key, tree)
+        meta, payload = wire.encode_buffer(buf, self.wire_dtype)
+        meta = dict(meta, key=key, unit=unit, step=step)
+        reply, rpayload = self._conn(key).request("pushpull", meta, payload)
+        self.push_count += 1
+        self.pushed_bytes += len(payload)
+        info = {k: reply.get(k) for k in
+                ("count", "degraded", "epoch", "live")}
+        if not rpayload or info["count"] == 0:
+            return None, info
+        self.pulled_bytes += len(rpayload)
+        return self._unpack(key, wire.decode_buffer(reply, rpayload)), info
+
+    def elastic_exchange(self, key: Any, tree: Any, *, step: int = 0,
+                         unit: int = 0) -> tuple[Any, dict]:
+        """Atomic old-center-out / Elastic1-in (the esgd interval's
+        ``old = kv.value(); kv.push()`` pair). Same loss/retry policy as
+        push; a lost exchange returns (None, info) and the worker skips
+        the elastic step (its next interval catches up)."""
+        buf = self._pack(key, tree)
+        meta, payload = wire.encode_buffer(buf, self.wire_dtype)
+        meta = dict(meta, key=key, unit=unit, step=step)
+        for attempt in range(1 + self.push_retries):
+            if self._should_drop(unit, step, attempt):
+                delay = self.push_backoff * (2 ** attempt)
+                self.push_delay_s += delay
+                self.sleep(delay)
+                continue
+            reply, rpayload = self._conn(key).request(
+                "elastic_exchange", meta, payload)
+            self.push_count += 1
+            self.pushed_bytes += len(payload)
+            self.pulled_bytes += len(rpayload)
+            info = {k: reply.get(k) for k in ("epoch", "live")}
+            return self._unpack(key, wire.decode_buffer(reply, rpayload)), \
+                info
+        self.pushes_lost += 1
+        return None, {"epoch": None, "live": None}
+
+    def value(self, key: Any) -> Any:
+        """Exact f32 server value (no wire quantization) — used for
+        eval-time center reads and debugging."""
+        reply, payload = self._conn(key).request("value", {"key": key})
+        return self._unpack(key, wire.decode_buffer(reply, payload))
+
+    def barrier(self, name: str, *, unit: int = 0) -> dict:
+        """Named barrier on server 0 over the live roster."""
+        reply, _ = self.conns[sorted(self.conns)[0]].request(
+            "barrier", {"name": name, "unit": unit})
+        return reply
+
+    def register_group(self, gid: Any, axes, sizes) -> None:
+        for rank in sorted(self.conns):
+            self.conns[rank].request(
+                "register_group",
+                {"gid": gid, "axes": list(axes), "sizes": list(sizes)})
+
+    def set_elastic(self, alpha: float) -> None:
+        for rank in sorted(self.conns):
+            self.conns[rank].request("set_elastic", {"alpha": alpha})
+
+    def server_stats(self) -> dict[int, dict]:
+        out = {}
+        for rank in sorted(self.conns):
+            reply, _ = self.conns[rank].request("stats")
+            out[rank] = reply
+        return out
+
+    def stats(self) -> dict:
+        return {
+            "pushed_bytes": self.pushed_bytes,
+            "pulled_bytes": self.pulled_bytes,
+            "push_count": self.push_count,
+            "pushes_lost": self.pushes_lost,
+            "push_delay_s": self.push_delay_s,
+        }
+
+    def close(self) -> None:
+        for conn in self.conns.values():
+            conn.close()

@@ -1,0 +1,147 @@
+"""Frame + payload codec for the socket-backed PS tier.
+
+A frame is::
+
+    MAGIC(4) | header_len u32 | payload_len u32 | header JSON | payload
+
+both length fields big-endian. The header is a small JSON dict carrying
+the op name and metadata; the payload is the tensor bytes.
+
+Payloads are FlatBuffer-packed f32 buffers (core/flatbuf.py) encoded per
+wire dtype with the SAME codec the in-process collectives use
+(kernels/quant_bucket):
+
+  f32   raw little-endian f32             4n bytes
+  bf16  bfloat16 cast (ml_dtypes)          2n bytes
+  int8  wire_encode codes + per-128 f32    n + ceil(n/128)*4 bytes
+        scales (WIRE_BLOCK buckets)
+
+so the bytes on the socket equal ``cost_model.ps_wire_nbytes(n, wd)``
+exactly — and, since every spec.size is a multiple of WIRE_BLOCK, equal
+``cost_model.ps_push_bytes(4n, wd)`` too. The bench gates on the match.
+"""
+from __future__ import annotations
+
+import json
+import struct
+from typing import Callable, Optional
+
+import numpy as np
+
+MAGIC = b"RKV1"
+_HEAD = struct.Struct("!4sII")
+
+#: wire bytes of one int8 scale bucket (kernels/quant_bucket.WIRE_BLOCK)
+WIRE_BLOCK = 128
+
+
+class WireError(RuntimeError):
+    """Malformed frame (bad magic, truncated stream, bad header)."""
+
+
+def encode_frame(op: str, meta: Optional[dict] = None,
+                 payload: bytes = b"") -> bytes:
+    header = dict(meta or {})
+    header["op"] = op
+    hbytes = json.dumps(header, separators=(",", ":")).encode()
+    return _HEAD.pack(MAGIC, len(hbytes), len(payload)) + hbytes + payload
+
+
+def decode_frame(data: bytes) -> tuple[str, dict, bytes]:
+    """Inverse of ``encode_frame`` for an in-memory frame."""
+    if len(data) < _HEAD.size:
+        raise WireError(f"frame truncated: {len(data)} bytes")
+    magic, hlen, plen = _HEAD.unpack_from(data)
+    if magic != MAGIC:
+        raise WireError(f"bad magic {magic!r}")
+    if len(data) != _HEAD.size + hlen + plen:
+        raise WireError(
+            f"frame length mismatch: header says {_HEAD.size + hlen + plen},"
+            f" got {len(data)}")
+    header = json.loads(data[_HEAD.size:_HEAD.size + hlen])
+    op = header.pop("op")
+    return op, header, data[_HEAD.size + hlen:]
+
+
+def read_frame(read_exact: Callable[[int], bytes]) -> tuple[str, dict, bytes]:
+    """Read one frame from a stream via ``read_exact(n) -> n bytes``."""
+    head = read_exact(_HEAD.size)
+    magic, hlen, plen = _HEAD.unpack(head)
+    if magic != MAGIC:
+        raise WireError(f"bad magic {magic!r}")
+    header = json.loads(read_exact(hlen))
+    op = header.pop("op")
+    return op, header, read_exact(plen)
+
+
+# ---------------------------------------------------------------------------
+# Payload codec: packed f32 buffer <-> wire bytes per wire dtype
+# ---------------------------------------------------------------------------
+
+def _bf16():
+    import ml_dtypes
+
+    return ml_dtypes.bfloat16
+
+
+def encode_buffer(buf, wire_dtype: Optional[str] = None) -> tuple[dict, bytes]:
+    """Encode a packed f32 buffer (any shape) into (meta, payload).
+
+    The int8 form flattens, quantizes with the in-process wire codec
+    (one f32 scale per WIRE_BLOCK bucket — the same bucket-for-bucket
+    math as the quantized ring hops), and ships codes then scales.
+    """
+    arr = np.asarray(buf, dtype=np.float32)
+    meta = {"shape": list(arr.shape), "wire": wire_dtype or "f32"}
+    if wire_dtype in (None, "f32"):
+        return meta, arr.tobytes()
+    if wire_dtype == "bf16":
+        return meta, np.ascontiguousarray(arr.astype(_bf16())).tobytes()
+    if wire_dtype == "int8":
+        import jax.numpy as jnp
+
+        from repro.kernels.quant_bucket.quant_bucket import wire_encode
+
+        codes, scales = wire_encode(jnp.asarray(arr.reshape(-1)))
+        return meta, (np.asarray(codes).tobytes()
+                      + np.asarray(scales, dtype=np.float32).tobytes())
+    raise ValueError(f"wire_dtype must be None/f32/bf16/int8, "
+                     f"got {wire_dtype!r}")
+
+
+def decode_buffer(meta: dict, payload: bytes) -> np.ndarray:
+    """Inverse of ``encode_buffer``: the receiver's f32 view."""
+    shape = tuple(meta["shape"])
+    n = int(np.prod(shape)) if shape else 1
+    wire = meta.get("wire", "f32")
+    if wire == "f32":
+        return np.frombuffer(payload, np.float32, n).reshape(shape)
+    if wire == "bf16":
+        return np.frombuffer(payload, _bf16(), n).astype(
+            np.float32).reshape(shape)
+    if wire == "int8":
+        import jax.numpy as jnp
+
+        from repro.kernels.quant_bucket.quant_bucket import wire_decode
+
+        n_pad = -(-n // WIRE_BLOCK) * WIRE_BLOCK
+        codes = np.frombuffer(payload, np.int8, n_pad)
+        scales = np.frombuffer(payload[n_pad:], np.float32,
+                               n_pad // WIRE_BLOCK)
+        out = wire_decode(jnp.asarray(codes), jnp.asarray(scales), n)
+        return np.asarray(out, dtype=np.float32).reshape(shape)
+    raise ValueError(f"unknown wire form {wire!r} in frame header")
+
+
+def payload_nbytes(n_values: int, wire_dtype: Optional[str] = None) -> int:
+    """Exact payload bytes ``encode_buffer`` emits for ``n_values`` f32
+    values — the quantity ``cost_model.ps_wire_nbytes`` predicts."""
+    if wire_dtype in (None, "f32"):
+        return 4 * n_values
+    if wire_dtype == "bf16":
+        return 2 * n_values
+    if wire_dtype == "int8":
+        n_pad = -(-n_values // WIRE_BLOCK) * WIRE_BLOCK
+        return n_pad + (n_pad // WIRE_BLOCK) * 4
+    raise ValueError(f"wire_dtype must be None/f32/bf16/int8, "
+                     f"got {wire_dtype!r}")

@@ -1,0 +1,252 @@
+"""The per-process worker loop for dist_sgd / dist_esgd over a Transport.
+
+Parity with core/algorithms.py is the contract, so the loop reuses the
+in-process building blocks verbatim — ``_member_grads`` / ``_client_grad``
+for gradients, ``_make_opt`` for the update rule, the elastic client
+update for esgd — and only replaces the simulated KVStore calls with
+RemoteKVStore RPCs:
+
+  dist_sgd   compute grads -> push(grads) -> blocking pull of the round's
+             SUM -> divide by ``count * workers_per_client`` (the same
+             rescale the in-process faulted runner uses; on full rounds
+             count == num_workers, so the clean run divides by exactly
+             the in-process ``num_workers``) -> opt.update
+  dist_esgd  local SGD; every ``esgd_interval`` iterations an atomic
+             elastic_exchange (old center out, Elastic1 in) and the
+             Elastic2 client update
+
+Faults run REAL here: ``kill`` SIGKILLs the process mid-run (the
+server's barrier_timeout is the failure detector), ``straggle``/``delay``
+sleep wall-clock seconds, ``drop`` rides RemoteKVStore's retry/backoff.
+"""
+from __future__ import annotations
+
+import os
+import signal
+import time
+from typing import Any, Callable, Optional
+
+import numpy as np
+
+
+class WorkerKilled(Exception):
+    """Raised instead of SIGKILL when the worker runs in a thread."""
+
+
+def _sigkill() -> None:  # pragma: no cover - by design unreachable after
+    os.kill(os.getpid(), signal.SIGKILL)
+
+
+def run_worker(*, rank: int, rendezvous_addr: str, transport: str = "tcp",
+               on_kill: Optional[Callable[[], None]] = None,
+               rdzv_conn=None) -> dict:
+    """Join the rendezvous, run the assigned mode, return the metrics
+    dict (also written to ``outdir/metrics_worker_<rank>.json`` by
+    ``main``). ``on_kill`` fires when the fault schedule kills this
+    worker (default: real SIGKILL; loopback threads raise instead)."""
+    from repro.core.faults import injector
+    from repro.net.problem import build_problem
+    from repro.net.remote_kv import RemoteKVStore
+    from repro.net.rendezvous import (algo_from_dict, join_rendezvous,
+                                      wait_servers)
+    from repro.net.transport import connect_with_retry, transport_for
+
+    tr = transport_for(transport)
+    conn = rdzv_conn or connect_with_retry(tr, rendezvous_addr)
+    reply = join_rendezvous(conn, "worker", rank)
+    config = reply["config"]
+    cfg = algo_from_dict(config["algo"])
+    if cfg.workers_per_client != 1:
+        raise ValueError(
+            "transport workers are one process per worker: "
+            "num_clients must equal num_workers "
+            f"(got {cfg.num_clients} clients / {cfg.num_workers} workers)")
+    prob = build_problem(config.get("problem", "logreg8"))
+    addrs = wait_servers(conn)
+    conns = {r: connect_with_retry(tr, a) for r, a in addrs.items()}
+    inj = injector(cfg.faults, seed=cfg.seed)
+    rkv = RemoteKVStore(conns, wire_dtype=cfg.effective_wire_dtype,
+                        injector=inj, push_retries=cfg.push_retries,
+                        push_backoff=cfg.push_backoff)
+    kill = on_kill or _sigkill
+    try:
+        if cfg.mode == "dist_sgd":
+            out = _run_dist_sgd(cfg, prob, rkv, conn, rank, inj, kill)
+        elif cfg.mode == "dist_esgd":
+            out = _run_dist_esgd(cfg, prob, rkv, conn, rank, inj, kill)
+        else:
+            raise ValueError(
+                f"transport mode must be dist_sgd/dist_esgd, got "
+                f"{cfg.mode!r} (async/mpi modes stay in-process for now)")
+        out["rank"] = rank
+        out["ps"] = reply.get("ps")
+        out["mpi"] = reply.get("mpi")
+        out["kv"] = rkv.stats()
+        return out
+    finally:
+        try:
+            conn.request("leave", {"rank": rank})
+        except Exception:  # noqa: BLE001 - rendezvous may already be gone
+            pass
+        rkv.close()
+
+
+def _init_key(cfg, prob, rkv, conn, rank: int, key: str, tree: Any) -> None:
+    """Worker 0 inits the key server-side and raises the rendezvous
+    flag; everyone else pins the local spec and waits for the flag."""
+    rkv.register(key, tree)
+    if rank == 0:
+        rkv.init(key, tree)
+        rkv.register_group(0, ("worker",), (cfg.workers_per_client,))
+        conn.request("set_flag", {"name": f"init:{key}"})
+    else:
+        conn.request("wait_flag", {"name": f"init:{key}", "timeout": 120.0})
+
+
+def _straggle_sleep(inj, unit: int, gstep: int, compute_time: float) -> None:
+    if inj is None:
+        return
+    extra = ((inj.straggle_factor(unit, gstep) - 1.0) * compute_time
+             + inj.delay(unit, gstep))
+    if extra > 0:
+        time.sleep(extra)
+
+
+def _run_dist_sgd(cfg, prob, rkv, conn, rank, inj, kill) -> dict:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.algorithms import _make_opt, _member_grads
+
+    params = prob.init_fn(jax.random.key(cfg.seed))
+    _init_key(cfg, prob, rkv, conn, rank, "grads",
+              jax.tree.map(jnp.zeros_like, params))
+    pipeline = prob.make_pipeline(rank)
+    opt = _make_opt(cfg, params)
+    opt_state = opt.init(params)
+    wpc = cfg.workers_per_client
+
+    losses: list[float] = []
+    gsteps: list[int] = []
+    metrics: list[float] = []
+    degraded_seen = 0
+    for epoch in range(cfg.epochs):
+        for step in range(cfg.steps_per_epoch):
+            gstep = epoch * cfg.steps_per_epoch + step
+            if inj is not None and inj.is_killed(rank, gstep):
+                kill()
+                return {"killed_at": gstep, "losses": losses,
+                        "gsteps": gsteps, "metrics": metrics}
+            batches = [pipeline.batch_at(epoch, step)]
+            loss, stacked = _member_grads(prob.grad_fn, params, batches)
+            if inj is not None:
+                stacked = inj.corrupt(stacked, rank, gstep)
+            g = jax.tree.map(lambda l: l[0], stacked)
+            _straggle_sleep(inj, rank, gstep, cfg.compute_time)
+            rkv.push("grads", g, step=gstep, unit=rank)
+            total, info = rkv.pull("grads", step=gstep, unit=rank)
+            if info.get("degraded"):
+                degraded_seen += 1
+            if total is not None and info["count"]:
+                k = info["count"]
+                mean_g = jax.tree.map(lambda x: x / (k * wpc), total)
+                params, opt_state = opt.update(mean_g, opt_state, params)
+            losses.append(loss)
+            gsteps.append(gstep)
+        metrics.append(prob.eval_fn(params))
+    return {"losses": losses, "gsteps": gsteps, "metrics": metrics,
+            "degraded_seen": degraded_seen}
+
+
+def _run_dist_esgd(cfg, prob, rkv, conn, rank, inj, kill) -> dict:
+    import jax
+
+    from repro.core.algorithms import _client_grad, _make_opt, _worker_group
+    from repro.core.elastic import (elastic_client_packed,
+                                    elastic_client_update)
+
+    params0 = prob.init_fn(jax.random.key(cfg.seed))
+    _init_key(cfg, prob, rkv, conn, rank, "centers", params0)
+    pipeline = prob.make_pipeline(rank)
+    group = _worker_group(cfg)
+    opt = _make_opt(cfg, params0)
+    params = params0
+    opt_state = opt.init(params0)
+
+    losses: list[float] = []
+    gsteps: list[int] = []
+    metrics: list[float] = []
+    exchanges = 0
+    for it in range(cfg.epochs * cfg.steps_per_epoch):
+        if inj is not None and inj.is_killed(rank, it):
+            kill()
+            return {"killed_at": it, "losses": losses, "gsteps": gsteps,
+                    "metrics": metrics, "exchanges": exchanges}
+        epoch = min(it // cfg.steps_per_epoch, cfg.epochs - 1)
+        step = it % cfg.steps_per_epoch
+        batches = [pipeline.batch_at(epoch, step)]
+        loss, g = _client_grad(prob.grad_fn, params, batches, group)
+        if it % cfg.esgd_interval == 0:
+            pushed = params
+            if inj is not None:
+                pushed = inj.corrupt(pushed, rank, it)
+            _straggle_sleep(inj, rank, it, cfg.compute_time)
+            old_center, _info = rkv.elastic_exchange(
+                "centers", pushed, step=it, unit=rank)
+            if old_center is not None:
+                exchanges += 1
+                if cfg.flat_exchange:
+                    params = elastic_client_packed(
+                        params, old_center, cfg.esgd_alpha)
+                else:
+                    params = elastic_client_update(
+                        params, old_center, cfg.esgd_alpha)
+        params, opt_state = opt.update(g, opt_state, params)
+        losses.append(loss)
+        gsteps.append(it)
+        if step == cfg.steps_per_epoch - 1:
+            metrics.append(prob.eval_fn(rkv.value("centers")))
+    return {"losses": losses, "gsteps": gsteps, "metrics": metrics,
+            "exchanges": exchanges,
+            "final_center_metric": float(metrics[-1]) if metrics else None}
+
+
+def main() -> None:  # pragma: no cover - process entry, tested via run_local
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser(description="transport worker process")
+    ap.add_argument("--rendezvous",
+                    default=os.environ.get("REPRO_RDZV_ADDR"))
+    ap.add_argument("--rank", type=int,
+                    default=int(os.environ.get("REPRO_RANK", "0")))
+    ap.add_argument("--transport", default="tcp")
+    args = ap.parse_args()
+    if not args.rendezvous:
+        ap.error("--rendezvous (or REPRO_RDZV_ADDR) is required")
+    out = run_worker(rank=args.rank, rendezvous_addr=args.rendezvous,
+                     transport=args.transport)
+    from repro.net.transport import connect_with_retry, transport_for
+
+    conn = connect_with_retry(transport_for(args.transport), args.rendezvous)
+    config, _ = conn.request("config")
+    conn.close()
+    outdir = config.get("outdir")
+    if outdir:
+        path = os.path.join(outdir, f"metrics_worker_{args.rank}.json")
+        with open(path, "w") as f:
+            json.dump(_jsonable(out), f, indent=2)
+
+
+def _jsonable(obj: Any) -> Any:
+    if isinstance(obj, dict):
+        return {str(k): _jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v) for v in obj]
+    if isinstance(obj, (np.floating, np.integer)):
+        return obj.item()
+    return obj
+
+
+if __name__ == "__main__":  # pragma: no cover
+    main()

@@ -46,6 +46,58 @@ def test_emit_scripts(tmp_path):
     assert os.access(tmp_path / "launch_all.sh", os.X_OK)
 
 
+def test_emit_scripts_tcp_roundtrip(tmp_path):
+    """Satellite: every emitted script parses back to the facts that
+    produced it — parse_script is how run_local spawns scripts without
+    re-deriving commands, so the round-trip must stay exact."""
+    from repro.launch.launcher import parse_script
+
+    spec = JobSpec(4, 2, 4, "qwen3-4b", "train_4k",
+                   scheduler_host="127.0.0.1", scheduler_port=9191,
+                   transport="tcp", mode="dist_sgd",
+                   faults="kill@2:unit=1", barrier_timeout=1.5)
+    paths = emit_scripts(spec, str(tmp_path))
+    names = {os.path.basename(p) for p in paths}
+    assert {"server_0.sh", "server_1.sh", "client_0.sh", "client_1.sh",
+            "client_2.sh", "client_3.sh"} <= names
+    scripts = [p for p in paths if p.endswith(".sh")
+               and os.path.basename(p) != "launch_all.sh"]
+    assert len(scripts) == 6
+    for path in scripts:
+        base = os.path.basename(path)
+        # the rendezvous env triple appears EXACTLY once per script
+        text = open(path).read()
+        for var in ("REPRO_RDZV_ADDR", "REPRO_ROLE", "REPRO_RANK"):
+            assert text.count(f"export {var}=") == 1, (base, var)
+        got = parse_script(path)
+        assert got["rdzv_addr"] == "127.0.0.1:9191"
+        role, _, rank = base[:-len(".sh")].rpartition("_")
+        assert got["role"] == {"server": "server", "client": "worker"}[role]
+        assert got["rank"] == int(rank)
+        if role == "server":
+            assert got["flags"]["rank"] == rank
+            assert got["flags"]["rendezvous"] == "127.0.0.1:9191"
+            assert "repro.net.kvserver" in got["cmd"]
+        else:
+            assert "repro.launch.train" in got["cmd"]
+            assert got["flags"]["transport"] == "tcp"
+            assert got["flags"]["mode"] == "dist_sgd"
+            assert got["flags"]["client"] == rank
+            assert got["flags"]["faults"] == "kill@2:unit=1"
+            assert got["flags"]["barrier-timeout"] == "1.5"
+
+
+def test_job_spec_tcp_validation():
+    # tcp requires a transport-capable mode and one process per worker
+    with pytest.raises(ValueError, match="mode"):
+        build_job(JobSpec(4, 2, 4, "a", "s", transport="tcp"))
+    with pytest.raises(ValueError, match="num_clients"):
+        build_job(JobSpec(4, 2, 2, "a", "s", transport="tcp",
+                          mode="dist_sgd"))
+    with pytest.raises(ValueError, match="transport"):
+        build_job(JobSpec(4, 2, 2, "a", "s", transport="carrier-pigeon"))
+
+
 @pytest.mark.slow
 def test_worker_entry_point_runs_launcher_cmd():
     """The command shape build_job emits (python -m repro.launch.train

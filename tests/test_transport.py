@@ -1,0 +1,329 @@
+"""The socket-backed PS tier (net/): frames, codec, transports,
+rendezvous, and the multi-process dist_sgd / dist_esgd runs.
+
+Unmarked tests are fast in-process units (loopback transport, no
+subprocesses). ``transport``-marked tests spawn REAL OS processes from
+launcher-emitted scripts and belong to the transport-smoke CI tier.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import cost_model
+from repro.core.algorithms import AlgoConfig, run
+from repro.net import wire
+from repro.net.transport import (LoopbackTransport, RemoteError,
+                                 TcpTransport, transport_for)
+
+jax = pytest.importorskip("jax")
+
+
+# ---------------------------------------------------------------------------
+# frames + payload codec
+# ---------------------------------------------------------------------------
+
+def test_frame_roundtrip():
+    frame = wire.encode_frame("push", {"key": "grads", "unit": 3},
+                              b"\x01\x02\x03")
+    op, meta, payload = wire.decode_frame(frame)
+    assert op == "push"
+    assert meta == {"key": "grads", "unit": 3}
+    assert payload == b"\x01\x02\x03"
+
+
+def test_frame_rejects_bad_magic_and_truncation():
+    frame = wire.encode_frame("x", {}, b"abc")
+    with pytest.raises(wire.WireError, match="magic"):
+        wire.decode_frame(b"XXXX" + frame[4:])
+    with pytest.raises(wire.WireError):
+        wire.decode_frame(frame[:-1])
+
+
+@pytest.mark.parametrize("wd", [None, "f32", "bf16", "int8"])
+def test_buffer_codec_roundtrip(wd):
+    rng = np.random.default_rng(0)
+    buf = rng.normal(size=(2048,)).astype(np.float32)
+    meta, payload = wire.encode_buffer(buf, wd)
+    assert len(payload) == wire.payload_nbytes(2048, wd)
+    out = wire.decode_buffer(meta, payload)
+    if wd in (None, "f32"):
+        np.testing.assert_array_equal(out, buf)
+    elif wd == "bf16":
+        import ml_dtypes
+
+        np.testing.assert_array_equal(
+            out, buf.astype(ml_dtypes.bfloat16).astype(np.float32))
+    else:
+        # the int8 path must be the in-process wire codec bit-for-bit
+        import jax.numpy as jnp
+
+        from repro.kernels.quant_bucket.quant_bucket import (wire_decode,
+                                                             wire_encode)
+
+        codes, scales = wire_encode(jnp.asarray(buf))
+        ref = np.asarray(wire_decode(codes, scales, 2048))
+        np.testing.assert_array_equal(out, ref)
+
+
+@pytest.mark.parametrize("wd", [None, "bf16", "int8"])
+def test_payload_bytes_match_cost_model(wd):
+    """The socket payload is exactly what the cost model predicts for
+    the PS leg — and, for WIRE_BLOCK-aligned sizes (every FlatBuffer
+    spec.size), exactly ``ps_push_bytes`` of the f32 byte count."""
+    for n in (128, 1024, 2048, 4096):
+        got = wire.payload_nbytes(n, wd)
+        assert got == cost_model.ps_wire_nbytes(n, wd)
+        assert got == int(cost_model.ps_push_bytes(4 * n, wd))
+
+
+def test_ps_wire_nbytes_int8_unaligned():
+    # 130 values -> 2 buckets of 128: 256 codes + 2 scales
+    assert cost_model.ps_wire_nbytes(130, "int8") == 256 + 8
+
+
+# ---------------------------------------------------------------------------
+# transports
+# ---------------------------------------------------------------------------
+
+def _echo(op, meta, payload):
+    return dict(meta, op_seen=op), payload[::-1]
+
+
+@pytest.mark.parametrize("name", ["tcp", "loopback"])
+def test_transport_request_response(name):
+    tr = transport_for(name)
+    server = tr.serve(_echo)
+    conn = tr.connect(server.addr)
+    meta, payload = conn.request("ping", {"x": 1}, b"abc")
+    assert meta["op_seen"] == "ping" and meta["x"] == 1
+    assert payload == b"cba"
+    conn.close()
+    server.close()
+
+
+@pytest.mark.parametrize("name", ["tcp", "loopback"])
+def test_transport_remote_error(name):
+    def boom(op, meta, payload):
+        raise ValueError("no such key")
+
+    tr = transport_for(name)
+    server = tr.serve(boom)
+    conn = tr.connect(server.addr)
+    with pytest.raises(RemoteError, match="no such key"):
+        conn.request("pull", {})
+    conn.close()
+    server.close()
+
+
+def test_loopback_byte_accounting_matches_tcp():
+    """Loopback requests round-trip the same frames as tcp, so the
+    client-side byte counters agree — the precondition for gating tcp
+    socket bytes against the loopback reference."""
+    payload = b"z" * 1000
+    counts = {}
+    for name in ("tcp", "loopback"):
+        tr = transport_for(name)
+        server = tr.serve(_echo)
+        conn = tr.connect(server.addr)
+        conn.request("op", {"k": "v"}, payload)
+        counts[name] = (conn.bytes_sent, conn.bytes_received)
+        conn.close()
+        server.close()
+    assert counts["tcp"] == counts["loopback"]
+
+
+# ---------------------------------------------------------------------------
+# rendezvous
+# ---------------------------------------------------------------------------
+
+def _mini_algo(**kw):
+    base = dict(mode="dist_sgd", num_workers=2, num_clients=2,
+                num_servers=1, lr=0.05, epochs=1, steps_per_epoch=2,
+                seed=0, compute_time=0.0, jitter=0.0)
+    base.update(kw)
+    return AlgoConfig(**base)
+
+
+def test_algo_dict_roundtrip():
+    from repro.net.rendezvous import algo_from_dict, algo_to_dict
+
+    cfg = _mini_algo(faults="kill@2:unit=1", barrier_timeout=1.5)
+    d = json.loads(json.dumps(algo_to_dict(cfg)))  # through real JSON
+    back = algo_from_dict(d)
+    assert back.mode == cfg.mode
+    assert back.num_workers == cfg.num_workers
+    assert back.barrier_timeout == cfg.barrier_timeout
+    assert back.policy == cfg.policy
+    from repro.core.faults import as_schedule
+
+    assert (as_schedule(back.faults, seed=0).format()
+            == as_schedule(cfg.faults, seed=0).format())
+
+
+def test_rendezvous_assigns_launcher_identities():
+    from repro.core.client import group_workers
+    from repro.net.rendezvous import Rendezvous, algo_to_dict
+
+    cfg = _mini_algo(num_workers=4, num_clients=4)
+    rdzv = Rendezvous(num_workers=4, num_servers=1, num_clients=4,
+                      algo=algo_to_dict(cfg))
+    idents = group_workers(4, 4)
+    for rank in (2, 0, 3, 1):  # join out of order
+        rep, _ = rdzv.handle("join", {"role": "worker", "rank": rank}, b"")
+        assert rep["ps"]["rank"] == idents[rank].ps.rank
+        assert rep["mpi"]["client"] == idents[rank].mpi.client
+    # the table is keyed by the WorkerIdentity values themselves
+    assert set(rdzv.table) == set(idents)
+    rep, _ = rdzv.handle("live", {}, b"")
+    assert rep["live"] == [0, 1, 2, 3] and rep["epoch"] == 4
+    rdzv.handle("leave", {"rank": 2}, b"")
+    rep, _ = rdzv.handle("live", {}, b"")
+    assert rep["live"] == [0, 1, 3] and rep["epoch"] == 5
+
+
+def test_rendezvous_rejects_bad_ranks():
+    from repro.net.rendezvous import Rendezvous
+
+    rdzv = Rendezvous(num_workers=2, num_servers=1, num_clients=2, algo={})
+    with pytest.raises(ValueError, match="worker rank"):
+        rdzv.handle("join", {"role": "worker", "rank": 7}, b"")
+    with pytest.raises(ValueError, match="server rank"):
+        rdzv.handle("join", {"role": "server", "rank": 1, "addr": "x"}, b"")
+
+
+def test_stable_server_of_matches_kvstore():
+    from repro.core.kvstore import KVStore
+    from repro.net.remote_kv import stable_server_of
+
+    kv = KVStore.create("dist_sync", num_workers=4, num_servers=3)
+    for key in ("grads", "centers", "w", 7):
+        assert stable_server_of(key, 3) == kv.server_of(key)
+
+
+# ---------------------------------------------------------------------------
+# loopback end-to-end: the bit-exact reference
+# ---------------------------------------------------------------------------
+
+def _problem():
+    from repro.net.problem import build_problem
+
+    return build_problem("logreg8")
+
+
+def test_loopback_dist_sgd_bit_identical_to_inprocess():
+    """The whole point of the transport design: the same pushes, summed
+    in the same unit order, divided by the same count — the multi-
+    process loss curve IS the simulation's, bit for bit."""
+    from repro.launch.run_local import run_job
+
+    algo = _mini_algo(steps_per_epoch=4)
+    prob = _problem()
+    hist = run(algo, prob.init_fn, prob.grad_fn, prob.eval_fn,
+               prob.make_pipeline)
+    res = run_job(algo, transport="loopback", timeout=120.0)
+    assert res.losses == hist.losses
+    assert res.metrics == hist.metrics
+    assert res.degraded_syncs == 0
+    assert all(rc == 0 for rc in res.exit_codes.values())
+
+
+def test_loopback_degraded_release_and_rejoin():
+    """A straggler sleeping past barrier_timeout: the round releases
+    short (degraded_syncs), the Membership evicts the straggler, and its
+    NEXT push re-joins it — live count recovers."""
+    from repro.launch.run_local import run_job
+
+    algo = _mini_algo(
+        num_workers=2, num_clients=2, steps_per_epoch=4,
+        compute_time=0.4, barrier_timeout=0.9,
+        faults="straggle@1:unit=1:factor=5")  # 1.6s extra > 0.9s timeout
+    res = run_job(algo, transport="loopback", timeout=120.0)
+    assert res.degraded_syncs >= 1
+    st = res.server_stats[0]
+    kinds = [e["kind"] for e in st["membership_history"]]
+    assert "fail" in kinds and "join" in kinds  # evicted, then re-joined
+    assert st["live"] == [0, 1]                 # recovered by the end
+    assert len(res.losses) == 4                 # training completed
+
+
+def test_loopback_wire_dtypes_pay_cost_model_bytes():
+    from repro.core.comm import CollectivePolicy
+    from repro.launch.run_local import run_job
+
+    for wd, ratio in ((None, 1.0), ("bf16", 0.5), ("int8", 33 / 128)):
+        algo = _mini_algo(steps_per_epoch=2,
+                          policy=CollectivePolicy(wire_dtype=wd))
+        res = run_job(algo, transport="loopback", timeout=120.0)
+        kv = res.per_worker[0]["kv"]
+        per_push = kv["pushed_bytes"] / kv["push_count"]
+        assert per_push == cost_model.ps_wire_nbytes(2048, wd)
+        assert per_push == pytest.approx(8192 * ratio)
+
+
+# ---------------------------------------------------------------------------
+# tcp: real OS processes (transport-smoke tier)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.transport
+def test_tcp_dist_sgd_bit_identical_across_processes(tmp_path):
+    """1 server + 2 workers as REAL processes spawned from the emitted
+    scripts: the loss curve is bit-identical to the in-process
+    simulation at the same seed/config."""
+    from repro.launch.run_local import run_job
+
+    algo = _mini_algo(steps_per_epoch=4)
+    prob = _problem()
+    hist = run(algo, prob.init_fn, prob.grad_fn, prob.eval_fn,
+               prob.make_pipeline)
+    res = run_job(algo, transport="tcp", outdir=str(tmp_path),
+                  timeout=150.0)
+    assert all(rc == 0 for rc in res.exit_codes.values()), res.exit_codes
+    assert res.losses == hist.losses
+    assert res.metrics == hist.metrics
+    # the scripts it ran are launcher-emitted and parse back
+    names = {os.path.basename(p) for p in res.script_paths}
+    assert {"server_0.sh", "client_0.sh", "client_1.sh"} <= names
+
+
+@pytest.mark.transport
+def test_tcp_kill_chaos_degrades_and_completes(tmp_path):
+    """SIGKILL a worker process mid-run (fault schedule kill@2): the
+    survivor's barrier degrades after barrier_timeout, the membership
+    epoch shrinks the live set, and training completes."""
+    from repro.launch.run_local import run_job
+
+    algo = _mini_algo(
+        steps_per_epoch=6, faults="kill@2:unit=1", barrier_timeout=1.5)
+    res = run_job(algo, transport="tcp", outdir=str(tmp_path),
+                  timeout=150.0)
+    assert res.exit_codes["client_0"] == 0
+    # /bin/sh reports the SIGKILLed python as 128+9
+    assert res.exit_codes["client_1"] == 137
+    assert res.degraded_syncs >= 1
+    assert res.membership_epochs >= 1
+    assert res.live == [0]
+    assert len(res.losses) == 6          # the survivor finished the run
+    # a SIGKILLed process writes no metrics file; the survivor does
+    assert 0 in res.per_worker and 1 not in res.per_worker
+
+
+@pytest.mark.transport
+def test_tcp_dist_esgd_matches_inprocess_loss(tmp_path):
+    """dist_esgd over real processes: same per-epoch mean loss as the
+    in-process AsyncEngine run within ±0.01 (event order differs)."""
+    from repro.launch.run_local import run_job
+
+    algo = _mini_algo(mode="dist_esgd", steps_per_epoch=8,
+                      esgd_interval=4, compute_time=0.01)
+    prob = _problem()
+    hist = run(algo, prob.init_fn, prob.grad_fn, prob.eval_fn,
+               prob.make_pipeline)
+    res = run_job(algo, transport="tcp", outdir=str(tmp_path),
+                  timeout=150.0)
+    assert all(rc == 0 for rc in res.exit_codes.values()), res.exit_codes
+    assert res.losses, "no worker losses collected"
+    epoch_mean = float(np.mean(res.losses))
+    assert abs(epoch_mean - hist.losses[-1]) <= 0.01
+    assert abs(res.metrics[-1] - hist.metrics[-1]) <= 0.05
