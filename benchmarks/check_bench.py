@@ -44,6 +44,15 @@ only the structural quantities the papers' claims rest on:
                           (1.0 hard — the ``--policy auto`` acceptance
                           gate), grid/ranked/pruned counts, and the
                           chosen policy itself vs the baseline
+  BENCH_recovery.json     crash recovery: kill+respawn loss curve
+                          bit-identical to fault-free (1.0, hard) with
+                          zero degraded syncs, the respawn's restore
+                          payload vs cost_model.restore_leg_bytes
+                          (1.0, hard), the killed KV server restoring
+                          its durable snapshot with zero lost rounds,
+                          the esgd kill+respawn epoch-mean delta
+                          (<= 0.01), and the mid-run join's re-shard
+                          moved_bytes vs join_reshard_bytes (1.0, hard)
 """
 from __future__ import annotations
 
@@ -67,6 +76,7 @@ REQUIRED = (
     "BENCH_overlap.json",
     "BENCH_autotune.json",
     "BENCH_transport.json",
+    "BENCH_recovery.json",
 )
 
 
@@ -304,6 +314,46 @@ def check(baseline_dir: str, current_dir: str) -> int:
                 cur["chaos"]["degraded_fired"], 1.0)
         c.ratio("transport.chaos.evicted_and_rejoined",
                 cur["chaos"]["evicted_and_rejoined"], 1.0)
+
+    base = _load(baseline_dir, "BENCH_recovery.json")
+    cur = _load(current_dir, "BENCH_recovery.json")
+    if base and cur:
+        # the ISSUE acceptance gates: a SIGKILLed worker respawns,
+        # restores its parked PS state and replays the killed round —
+        # the merged curve is the fault-free curve, bit for bit, with
+        # no degraded release ever firing
+        kr = cur["kill_respawn"]
+        c.ratio("recovery.kill_respawn.bitexact",
+                kr["bitexact_vs_fault_free"], 1.0)
+        c.count("recovery.kill_respawn.respawns", kr["respawns"],
+                base["kill_respawn"]["respawns"])
+        c.count("recovery.kill_respawn.degraded_syncs",
+                kr["degraded_syncs"], 0)
+        # the restore payload IS the cost model's restore leg — exact
+        c.ratio("recovery.kill_respawn.restore_bytes_vs_model",
+                kr["restore_bytes"]["ratio"], 1.0)
+        # the killed KV server restores the latest durable snapshot and
+        # loses ZERO released rounds while workers ride the retry path
+        sr = cur["server_restore"]
+        c.ratio("recovery.server_restore.bitexact",
+                sr["bitexact_vs_fault_free"], 1.0)
+        c.ratio("recovery.server_restore.restored_from_checkpoint",
+                sr["restored_from_checkpoint"], 1.0)
+        c.count("recovery.server_restore.lost_rounds",
+                sr["lost_rounds"], 0)
+        c.count("recovery.server_restore.degraded_syncs",
+                sr["degraded_syncs"], 0)
+        # elastic exchange ordering is racy across processes; the rule
+        # must not care that one member died and came back
+        c.bound("recovery.esgd.epoch_mean_abs_delta",
+                cur["esgd"]["epoch_mean_abs_delta"], 0.01)
+        # the mid-run join: drive() grows p=4 -> 5 and the re-shard
+        # moves exactly the bytes the cost model predicts
+        jr = cur["join_reshard"]
+        c.ratio("recovery.join_reshard.grew_to_five",
+                jr["grew_to_five"], 1.0)
+        c.ratio("recovery.join_reshard.moved_vs_model",
+                jr["moved_vs_model_ratio"], 1.0)
 
     if c.checked == 0 and not c.failures:
         print("error: no BENCH_*.json pairs found to compare",

@@ -1,19 +1,41 @@
-"""Pytree checkpointing to .npz: flat path->array encoding, restores exact
-tree structure and dtypes. Atomic write (tmp + rename) so a killed job
-never leaves a torn checkpoint — the PS task model assumes restartability
-(the paper leans on LSF auto-restart for fault recovery, §8).
+"""Pytree + packed-buffer checkpointing to .npz.
+
+Two families share one atomic-write core (tmp + os.replace, so a killed
+job never leaves a torn checkpoint — the PS task model assumes
+restartability; the paper leans on LSF auto-restart for fault
+recovery, §8):
+
+  save_checkpoint / restore_checkpoint
+      pytrees as flat path->array npz, exact structure and dtypes back
+      (bf16 widened losslessly to f32 on disk).
+
+  save_packed / restore_packed
+      named packed buffers (the FlatBuffer f32 params / optimizer-state
+      / per-round sums a KV server snapshots — net/kvserver.py) plus a
+      JSON meta dict, no pytree structure required.
+
+``latest_checkpoint`` scans a directory for the newest *complete*
+``ckpt_<step>.npz``: leftover ``*.tmp*`` files from a crash mid-write
+are never considered, and a torn/corrupt newest file is skipped in
+favor of the last one that still loads — the restore path of the
+crash-recovery story (launch/supervisor.py).
 """
 from __future__ import annotations
 
 import json
 import os
+import re
 import tempfile
-from typing import Any
+from typing import Any, Optional
 
 import jax
 import numpy as np
 
 _SEP = "/"
+
+#: server snapshot filename stem: ckpt_<step>.npz
+CKPT_PREFIX = "ckpt_"
+_CKPT_RE = re.compile(r"^ckpt_(\d+)\.npz$")
 
 
 def _flatten(tree: Any) -> dict[str, np.ndarray]:
@@ -37,22 +59,26 @@ def _path_str(entry) -> str:
     return f"n:{entry}"
 
 
-def save_checkpoint(path: str, tree: Any, *, step: int = 0,
-                    metadata: dict | None = None) -> None:
-    flat = _flatten(tree)
-    treedef = jax.tree_util.tree_structure(tree)
-    meta = {"step": step, "treedef": str(treedef), **(metadata or {})}
+def _atomic_savez(path: str, arrays: dict[str, np.ndarray],
+                  meta: dict) -> None:
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".", suffix=".tmp")
     os.close(fd)
     try:
-        np.savez(tmp, __meta__=json.dumps(meta), **flat)
+        np.savez(tmp, __meta__=json.dumps(meta), **arrays)
         # np.savez appends .npz to the filename it's given
         os.replace(tmp + ".npz" if os.path.exists(tmp + ".npz") else tmp, path)
     finally:
         for cand in (tmp, tmp + ".npz"):
             if os.path.exists(cand):
                 os.remove(cand)
+
+
+def save_checkpoint(path: str, tree: Any, *, step: int = 0,
+                    metadata: dict | None = None) -> None:
+    treedef = jax.tree_util.tree_structure(tree)
+    meta = {"step": step, "treedef": str(treedef), **(metadata or {})}
+    _atomic_savez(path, _flatten(tree), meta)
 
 
 def restore_checkpoint(path: str, like: Any) -> tuple[Any, dict]:
@@ -79,3 +105,52 @@ def restore_checkpoint(path: str, like: Any) -> tuple[Any, dict]:
         jax.tree_util.tree_structure(like), new_leaves
     )
     return tree, meta
+
+
+# ---------------------------------------------------------------------------
+# Packed-buffer snapshots (KV server durability) + discovery
+# ---------------------------------------------------------------------------
+
+def checkpoint_path(dirname: str, step: int) -> str:
+    return os.path.join(dirname, f"{CKPT_PREFIX}{step}.npz")
+
+
+def save_packed(path: str, arrays: dict[str, np.ndarray], *, step: int = 0,
+                metadata: dict | None = None) -> None:
+    """Atomically write named packed buffers + JSON metadata. Array names
+    are free-form strings (the server uses ``kv:<key>``,
+    ``state:<unit>:<section>``, ``round:<key>:<step>`` namespaces)."""
+    meta = {"step": step, "packed": True, **(metadata or {})}
+    _atomic_savez(path, {k: np.asarray(v) for k, v in arrays.items()}, meta)
+
+
+def restore_packed(path: str) -> tuple[dict[str, np.ndarray], dict]:
+    """Inverse of ``save_packed``. Raises on a torn/corrupt file (zipfile
+    or JSON errors) — ``latest_checkpoint`` turns that into a skip."""
+    with np.load(path, allow_pickle=False) as data:
+        meta = json.loads(str(data["__meta__"]))
+        arrays = {k: data[k] for k in data.files if k != "__meta__"}
+    return arrays, meta
+
+
+def latest_checkpoint(dirname: str) -> Optional[str]:
+    """Newest complete ``ckpt_<step>.npz`` under ``dirname``, or None.
+
+    Crash-mid-write safe: ``*.tmp*`` leftovers never match the name
+    pattern, and a file that fails to load (torn zip, bad meta) is
+    skipped in favor of the next-newest complete snapshot.
+    """
+    if not os.path.isdir(dirname):
+        return None
+    found = []
+    for name in os.listdir(dirname):
+        m = _CKPT_RE.match(name)
+        if m:
+            found.append((int(m.group(1)), os.path.join(dirname, name)))
+    for _, path in sorted(found, reverse=True):
+        try:
+            restore_packed(path)
+        except Exception:
+            continue
+        return path
+    return None

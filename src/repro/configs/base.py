@@ -238,6 +238,11 @@ class TrainSettings:
     # arrival before the PS barrier releases with the survivor group
     # (None blocks forever — required for kill/drop fault schedules)
     barrier_timeout: Optional[float] = None
+    # crash recovery: durable checkpoint cadence in steps (0 = none)
+    # and the checkpoint path to restore params/opt-state/step from
+    # before stepping ("" = fresh init) — launch/train.py threads both
+    checkpoint_every: int = 0
+    restore: str = ""
     # internal bookkeeping: the policy the mirror knobs were backfilled
     # from (dataclasses.replace passes it back so __post_init__ can tell
     # an explicitly changed mirror from one restating the previous

@@ -110,6 +110,18 @@ class AlgoConfig:
     # doubling backoff starting at push_backoff seconds
     push_retries: int = 2
     push_backoff: float = 0.05
+    # crash recovery (transport tier, launch/supervisor.py): durable KV
+    # checkpoint cadence in releasing steps (0 = no snapshots; also the
+    # worker's state-parking cadence), the per-unit supervised-respawn
+    # budget with its first backoff, and a SEPARATE fault schedule the
+    # server tier evaluates (kill@step:unit=R self-kills server R after
+    # it releases that step — after the snapshot, before any reply).
+    # The in-process simulation ignores all four (restart@ events are
+    # likewise launcher-only; see core/faults.py)
+    checkpoint_every: int = 0
+    restarts: int = 0
+    restart_backoff: float = 0.05
+    server_faults: Any = None
     # internal bookkeeping: the policy the mirror knobs were backfilled
     # from (dataclasses.replace passes it back so __post_init__ can tell
     # an explicitly changed mirror from one restating the previous

@@ -151,6 +151,45 @@ def reconfig_time(state_nbytes: float, p_old: int, p_new: int,
     return resplit_time(p_new, net) + moved * net.beta
 
 
+def restore_leg_bytes(n_values: int) -> int:
+    """EXACT payload bytes of one parked-state restore leg: a respawned
+    worker's ``get_state`` pull of ``n_values`` f32 values. Resume must
+    be bit-identical, so state parking bypasses the wire codec (always
+    4 bytes/value, no bf16/int8 option — net/remote_kv.py counts the
+    pull as ``state_bytes_in``). BENCH_recovery gates the measured
+    counter against this."""
+    return 4 * int(n_values)
+
+
+def join_reshard_bytes(state_nbytes: float, p_old: int,
+                       survivors: "int | None" = None,
+                       wire_dtype: "str | None" = None) -> float:
+    """Per-survivor wire bytes of admitting a joiner into
+    1/p_old-sharded optimizer state: a grow is a reshard in which EVERY
+    old shard survives — reconstruct from the s = p_old shards, then
+    re-slice at the grown count. This is exactly the ``moved_bytes``
+    ``membership.reshard_optstate`` reports for the join
+    (bench_recovery.py gates the match)."""
+    return reshard_leg_bytes(state_nbytes, p_old, survivors, wire_dtype)
+
+
+def recovery_time(restore_nbytes: float, respawn_delay: float,
+                  p_old: int, p_new: int, net: NetParams,
+                  state_nbytes: float = 0.0,
+                  survivors: "int | None" = None,
+                  wire_dtype: "str | None" = None) -> float:
+    """Wall-clock overhead of one crash recovery: the supervisor's
+    respawn gap, the respawn's state-restore pull (exact-f32 bytes ×
+    β), and — when sharded state must re-lay-out (a join/eviction, or
+    any nonzero ``state_nbytes``) — the re-split agreement plus the
+    survivor allgather (``reconfig_time``)."""
+    t = float(respawn_delay) + restore_nbytes * net.beta
+    if p_old != p_new or state_nbytes:
+        t += reconfig_time(state_nbytes, p_old, p_new, net,
+                           survivors=survivors, wire_dtype=wire_dtype)
+    return t
+
+
 def reduce_scatter_time(nbytes: float, p: int, net: NetParams,
                         wire_dtype: "str | None" = None) -> float:
     """One ring reduce-scatter leg: the allreduce's first half — (p−1)

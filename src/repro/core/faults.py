@@ -28,11 +28,31 @@ Fault kinds (``FaultEvent.kind``):
             pushed value at ``step``
   kill      the unit is dead from ``step`` on (membership failure — see
             core/membership.py for the re-split/re-shard that follows)
+  restart   the unit is *authorized to come back*: the supervisor
+            (launch/supervisor.py) respawns the dead process after
+            ``delay`` seconds without charging the restart budget, and
+            the shard driver (launch/shard_driver.py) re-joins the unit
+            at ``step`` (growing the layout if it was never live).
+            ``delay`` rides the ``factor`` field (default 0.0).
+
+Kills are **generation-indexed**: a respawned process is spawn
+generation a (its REPRO_ATTEMPT), and ``is_killed(unit, step, attempt=a)``
+consults the (a+1)-th scheduled kill for that unit — so generation 0
+dies at the first kill event, its respawn survives it (and dies at the
+second, if scheduled), and ``kill@3:unit=1;kill@5:unit=1`` under a
+restart budget of 1 deterministically exhausts the budget. ``attempt=0``
+is the default and preserves the PR 6 single-kill semantics.
+
+The in-process six-mode simulation (core/algorithms.py) cannot respawn
+a unit — it ignores ``restart`` events (the unit stays dead); only the
+supervised tcp tier (launch/run_local.py) and the shard driver honor
+them.
 
 Schedules parse from a compact string form so they thread through CLI
 flags and job specs unchanged:
 
     "kill@12:unit=1;straggle@0:unit=3:factor=4:duration=20"
+    "kill@2:unit=1;restart@2:unit=1:delay=0.1"
 """
 from __future__ import annotations
 
@@ -41,15 +61,16 @@ from typing import Any, Optional
 
 import numpy as np
 
-KINDS = ("drop", "delay", "corrupt", "straggle", "kill")
+KINDS = ("drop", "delay", "corrupt", "straggle", "kill", "restart")
 
 
 @dataclass(frozen=True)
 class FaultEvent:
-    """One scheduled fault. ``factor`` is the straggle multiplier (×) or
-    the delay (seconds); ``duration`` is in steps (straggle/kill-free
-    kinds ignore it) or delivery attempts (drop); ``sigma`` is the
-    corrupt noise scale."""
+    """One scheduled fault. ``factor`` is the straggle multiplier (×),
+    the delay (seconds), or the restart delay (seconds — spelled
+    ``delay=`` in the string form, default 0.0); ``duration`` is in
+    steps (straggle/kill-free kinds ignore it) or delivery attempts
+    (drop); ``sigma`` is the corrupt noise scale."""
 
     kind: str
     unit: int
@@ -72,6 +93,10 @@ class FaultEvent:
 
     def format(self) -> str:
         out = f"{self.kind}@{self.step}:unit={self.unit}"
+        if self.kind == "restart":
+            if self.factor != 0.0:
+                out += f":delay={self.factor:g}"
+            return out
         if self.factor != 2.0:
             out += f":factor={self.factor:g}"
         if self.duration != 1:
@@ -110,6 +135,8 @@ class FaultSchedule:
                     f"fault event {part!r} lacks '@step' — the form is "
                     "kind@step:unit=U[:factor=F][:duration=D][:sigma=S]")
             kw: dict[str, Any] = {"kind": kind, "step": int(step)}
+            if kind == "restart":
+                kw["factor"] = 0.0      # restart delay defaults to 0 s
             for item in filter(None, rest.split(":")):
                 k, eq, v = item.partition("=")
                 if not eq:
@@ -119,10 +146,12 @@ class FaultSchedule:
                     kw[k] = int(v)
                 elif k in ("factor", "sigma"):
                     kw[k] = float(v)
+                elif k == "delay" and kind == "restart":
+                    kw["factor"] = float(v)
                 else:
                     raise ValueError(
                         f"unknown fault field {k!r} in {part!r}; fields are "
-                        "unit/factor/duration/sigma")
+                        "unit/factor/duration/sigma (delay, for restart)")
             if "unit" not in kw:
                 raise ValueError(f"fault event {part!r} lacks unit=")
             events.append(FaultEvent(**kw))
@@ -158,13 +187,31 @@ class FaultInjector:
         return [e for e in self.schedule.events
                 if e.kind == kind and e.unit == unit]
 
-    def killed_at(self, unit: int) -> Optional[int]:
-        steps = [e.step for e in self._events("kill", unit)]
-        return min(steps) if steps else None
+    def killed_at(self, unit: int, attempt: int = 0) -> Optional[int]:
+        """The step spawn generation ``attempt`` of ``unit`` dies at:
+        the (attempt+1)-th scheduled kill, in step order. None when the
+        schedule runs out of kills — that generation survives."""
+        steps = sorted(e.step for e in self._events("kill", unit))
+        return steps[attempt] if attempt < len(steps) else None
 
-    def is_killed(self, unit: int, step: int) -> bool:
-        at = self.killed_at(unit)
+    def is_killed(self, unit: int, step: int, attempt: int = 0) -> bool:
+        at = self.killed_at(unit, attempt)
         return at is not None and step >= at
+
+    def restart_delay(self, unit: int, attempt: int = 0) -> Optional[float]:
+        """Scheduled-respawn authorization for the death of spawn
+        generation ``attempt``: the (attempt+1)-th restart event's delay
+        (seconds), or None when none is scheduled (the supervisor then
+        falls back to its budget, or gives up)."""
+        events = sorted(self._events("restart", unit), key=lambda e: e.step)
+        return events[attempt].factor if attempt < len(events) else None
+
+    def restart_units(self, step: int) -> tuple[int, ...]:
+        """Units with a restart event at exactly ``step`` — the shard
+        driver's join directives (a restart for a non-live unit joins it
+        mid-run)."""
+        return tuple(sorted({e.unit for e in self.schedule.events
+                             if e.kind == "restart" and e.step == step}))
 
     def should_drop(self, unit: int, step: int, attempt: int = 0) -> bool:
         """Whether delivery ``attempt`` (0-based) of the unit's push at
@@ -220,6 +267,8 @@ class FaultInjector:
             elif e.kind == "kill":
                 if step >= e.step:
                     return True
+            elif e.kind == "restart":
+                continue    # supervisor/driver directive, not a data fault
             elif e.step == step:
                 return True
         return False

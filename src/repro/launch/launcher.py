@@ -74,6 +74,21 @@ class JobSpec:
     # the algorithm mode a transport job runs (net/worker.py loop);
     # required for tcp, ignored for loopback ("" = in-process default)
     mode: str = ""
+    # crash recovery (launch/supervisor.py): per-unit supervised-respawn
+    # budget + first backoff for abnormal exits; restart@ events in the
+    # fault schedule authorize scheduled respawns without charging it
+    restarts: int = 0
+    restart_backoff: float = 0.05
+    # durable KV checkpoint cadence in releasing steps (server-side
+    # snapshots via checkpoint/checkpoint.py; doubles as the workers'
+    # state-parking cadence — threaded to --checkpoint-every; 0 = off)
+    checkpoint_every: int = 0
+    # checkpoint path the in-process train path restores from before
+    # stepping (threaded to --restore; "" = fresh init)
+    restore: str = ""
+    # fault schedule the SERVER tier evaluates (kill@step:unit=R self-
+    # kills server R right after it releases — and snapshots — step)
+    server_faults: str = ""
     # internal bookkeeping: the policy the mirror knobs were backfilled
     # from (dataclasses.replace passes it back so __post_init__ can tell
     # an explicitly changed mirror from one restating the previous
@@ -150,6 +165,38 @@ class JobSpec:
                     "release it (see KVStore.barrier_timeout)")
         if self.barrier_timeout < 0:
             raise ValueError("barrier_timeout must be >= 0 (0 = none)")
+        if self.restarts < 0:
+            raise ValueError("restarts must be >= 0 (0 = no respawn budget)")
+        if self.restart_backoff < 0:
+            raise ValueError("restart_backoff must be >= 0")
+        if self.checkpoint_every < 0:
+            raise ValueError("checkpoint_every must be >= 0 (0 = off)")
+        if self.transport != "tcp":
+            wants_restart = bool(self.restarts) or bool(self.server_faults)
+            if self.faults and not wants_restart:
+                from repro.core.faults import FaultSchedule
+
+                wants_restart = "restart" in FaultSchedule.parse(
+                    self.faults).kinds
+            if wants_restart:
+                raise ValueError(
+                    "restart budgets, restart@ events and server fault "
+                    "schedules need real OS processes the supervisor can "
+                    "respawn — transport='loopback' runs every worker as "
+                    "a thread inside one process, which cannot be "
+                    "SIGKILLed and re-exec'd. Use transport='tcp' "
+                    "(launch/run_local.py spawns the emitted scripts) or "
+                    "drop restarts/server_faults/restart@ events")
+        if self.server_faults:
+            from repro.core.faults import FaultSchedule
+
+            server_sched = FaultSchedule.parse(self.server_faults)
+            if "kill" in server_sched.kinds and self.checkpoint_every < 1:
+                raise ValueError(
+                    "a server kill schedule loses every parked round "
+                    "unless the server snapshots durably first: set "
+                    "checkpoint_every >= 1 so the respawned server can "
+                    "restore_latest() and workers can replay")
         if self.transport not in ("loopback", "tcp"):
             raise ValueError(
                 f"transport must be loopback/tcp, got {self.transport!r}")
@@ -199,6 +246,8 @@ def build_job(spec: JobSpec) -> dict:
                 + (f" --faults '{spec.faults}'" if spec.faults else "")
                 + (f" --barrier-timeout {spec.barrier_timeout:g}"
                    if spec.barrier_timeout else "")
+                + (f" --checkpoint-every {spec.checkpoint_every}"
+                   if spec.checkpoint_every else "")
             )
             clients.append({
                 "client_id": c,
@@ -247,6 +296,9 @@ def build_job(spec: JobSpec) -> dict:
                 + (f" --faults '{spec.faults}'" if spec.faults else "")
                 + (f" --barrier-timeout {spec.barrier_timeout:g}"
                    if spec.barrier_timeout else "")
+                + (f" --checkpoint-every {spec.checkpoint_every}"
+                   if spec.checkpoint_every else "")
+                + (f" --restore {spec.restore}" if spec.restore else "")
             ),
         })
     scheduler_cmd = ("python -m repro.net.rendezvous"
@@ -280,6 +332,11 @@ def build_job(spec: JobSpec) -> dict:
                  "policy": spec.policy.to_dict(),
                  "faults": spec.faults,
                  "barrier_timeout": spec.barrier_timeout},
+        "recovery": {"restarts": spec.restarts,
+                     "restart_backoff": spec.restart_backoff,
+                     "checkpoint_every": spec.checkpoint_every,
+                     "restore": spec.restore,
+                     "server_faults": spec.server_faults},
         "mesh": spec.mesh,
         "total_chips": spec.num_workers * spec.chips_per_worker,
         "spec": dataclasses.asdict(spec),
@@ -424,6 +481,21 @@ def main() -> None:  # pragma: no cover
     ap.add_argument("--barrier-timeout", type=float, default=0.0,
                     help="sync-barrier degradation timeout in seconds "
                          "(0 = block forever)")
+    ap.add_argument("--restarts", type=int, default=0,
+                    help="per-unit supervised-respawn budget for abnormal "
+                         "exits (tcp transport only; 0 = no respawn)")
+    ap.add_argument("--restart-backoff", type=float, default=0.05,
+                    help="first respawn backoff in seconds (doubles per "
+                         "budget-charged respawn)")
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="durable KV checkpoint cadence in steps "
+                         "(0 = no snapshots)")
+    ap.add_argument("--restore", default="",
+                    help="checkpoint path the in-process train path "
+                         "restores from before stepping")
+    ap.add_argument("--server-faults", default="",
+                    help="fault schedule the SERVER tier evaluates "
+                         "(kill@step:unit=R self-kills server R)")
     args = ap.parse_args()
     if args.policy == "auto":
         from repro.configs.base import INPUT_SHAPES, get_config
@@ -459,6 +531,11 @@ def main() -> None:  # pragma: no cover
                    state_dtype=args.state_dtype,
                    faults=args.faults,
                    barrier_timeout=args.barrier_timeout,
+                   restarts=args.restarts,
+                   restart_backoff=args.restart_backoff,
+                   checkpoint_every=args.checkpoint_every,
+                   restore=args.restore,
+                   server_faults=args.server_faults,
                    policy=pol)
     for p in emit_scripts(spec, args.outdir):
         print(p)

@@ -16,6 +16,16 @@
 The aggregated ``JobResult`` mirrors algorithms.History where it can
 (per-step mean worker loss in client order, per-epoch metrics) and adds
 the transport-side accounting (exit codes, server stats, socket bytes).
+
+Crash recovery (PR 10): the tcp path runs under launch/supervisor.py —
+an abnormal exit respawns the unit (schedule- or budget-driven) with
+REPRO_ATTEMPT bumped, the dying generation's partial
+``metrics_worker_<rank>.json`` is stashed as ``.pre<attempt>.json``,
+and ``_collect_worker_metrics`` merges every generation's curve by
+global step (the respawn replays from its parked PS state, so the
+merged dist_sgd curve is bit-identical to the fault-free run). A spent
+restart budget raises ``JobFailed`` carrying the partial JobResult and
+the full per-unit exit-code history.
 """
 from __future__ import annotations
 
@@ -48,6 +58,13 @@ class JobResult:
     live: list = field(default_factory=list)
     script_paths: list = field(default_factory=list)
     outdir: str = ""
+    # supervision accounting (tcp): one record per respawn (unit,
+    # attempt, exit_code, scheduled?, wall-clock gap), final attempt
+    # numbers, exit-code history, and the units whose budget ran out
+    respawns: list = field(default_factory=list)
+    attempts: dict = field(default_factory=dict)
+    exit_history: dict = field(default_factory=dict)
+    exhausted: list = field(default_factory=list)
 
 
 def free_port() -> int:
@@ -64,12 +81,19 @@ def _make_spec(algo, *, transport: str, port: int):
     from repro.core.faults import as_schedule
 
     sched = as_schedule(algo.faults, seed=algo.seed)
+    server_sched = as_schedule(getattr(algo, "server_faults", None),
+                               seed=algo.seed)
     return JobSpec(
         algo.num_workers, algo.num_servers, algo.effective_clients,
         "qwen3-4b", "train_4k",
         scheduler_host="127.0.0.1", scheduler_port=port,
         faults=sched.format() if sched is not None else "",
         barrier_timeout=algo.barrier_timeout or 0.0,
+        restarts=getattr(algo, "restarts", 0),
+        restart_backoff=getattr(algo, "restart_backoff", 0.05),
+        checkpoint_every=getattr(algo, "checkpoint_every", 0),
+        server_faults=(server_sched.format()
+                       if server_sched is not None else ""),
         transport=transport, mode=algo.mode, policy=algo.policy)
 
 
@@ -93,6 +117,62 @@ def _aggregate(result: JobResult, worker_out: dict[int, dict]) -> None:
             break
     if result.losses:
         result.final_loss = result.losses[-1]
+
+
+def _merge_worker_records(recs: list[dict]) -> dict:
+    """Fold one worker's metric pieces (pre-kill partials stashed by the
+    supervisor, oldest first, then the final record) into one curve:
+    losses merge by global step and per-epoch metrics by epoch, with the
+    LATER generation winning ties — a replayed step recomputes the same
+    loss on the sync path, so ties only differ after esgd drift."""
+    by_step: dict[int, float] = {}
+    by_epoch: dict[int, float] = {}
+    for rec in recs:
+        for g, loss in zip(rec.get("gsteps", []), rec.get("losses", [])):
+            by_step[int(g)] = float(loss)
+        epochs = rec.get("metric_epochs")
+        metrics = rec.get("metrics", [])
+        if epochs is None:
+            epochs = list(range(len(metrics)))
+        for e, m in zip(epochs, metrics):
+            by_epoch[int(e)] = float(m)
+    out = dict(recs[-1])
+    out["gsteps"] = sorted(by_step)
+    out["losses"] = [by_step[g] for g in out["gsteps"]]
+    out["metric_epochs"] = sorted(by_epoch)
+    out["metrics"] = [by_epoch[e] for e in out["metric_epochs"]]
+    out["pieces"] = len(recs)
+    return out
+
+
+def _collect_worker_metrics(outdir: str, num_workers: int) -> dict[int, dict]:
+    """Read every generation's metrics file per worker and merge."""
+    worker_out: dict[int, dict] = {}
+    names = set(os.listdir(outdir)) if os.path.isdir(outdir) else set()
+    for rank in range(num_workers):
+        prefix = f"metrics_worker_{rank}.pre"
+        stashed = []
+        for name in names:
+            if name.startswith(prefix) and name.endswith(".json"):
+                try:
+                    stashed.append(
+                        (int(name[len(prefix):-len(".json")]), name))
+                except ValueError:
+                    continue
+        paths = [os.path.join(outdir, n) for _, n in sorted(stashed)]
+        final = os.path.join(outdir, f"metrics_worker_{rank}.json")
+        if os.path.exists(final):
+            paths.append(final)
+        recs = []
+        for path in paths:
+            try:
+                with open(path) as f:
+                    recs.append(json.load(f))
+            except (OSError, ValueError):
+                continue            # torn partial flush: skip the piece
+        if recs:
+            worker_out[rank] = _merge_worker_records(recs)
+    return worker_out
 
 
 def _fold_server_stats(result: JobResult, stats: dict[int, dict]) -> None:
@@ -133,7 +213,9 @@ def _child_env() -> dict:
 
 def _run_tcp(algo, *, problem: str, outdir: Optional[str],
              timeout: float) -> JobResult:
+    from repro.core.faults import injector
     from repro.launch.launcher import emit_scripts
+    from repro.launch.supervisor import JobFailed, RestartPolicy, Supervisor
     from repro.net.rendezvous import Rendezvous, algo_to_dict
     from repro.net.transport import TcpTransport
 
@@ -151,29 +233,59 @@ def _run_tcp(algo, *, problem: str, outdir: Optional[str],
     tr = TcpTransport()
     rdzv_server = tr.serve(rdzv.handle, "127.0.0.1", port)
     env = _child_env()
-    procs: dict[str, subprocess.Popen] = {}
+    all_procs: list[subprocess.Popen] = []
     logs = []
+    script_for: dict[str, str] = {}
+
+    def _spawn_proc(name: str, attempt: int) -> subprocess.Popen:
+        # append mode: a respawn's output lands after its predecessor's
+        log = open(os.path.join(outdir, f"{name}.log"), "ab")
+        logs.append(log)
+        child = dict(env, REPRO_ATTEMPT=str(attempt))
+        proc = subprocess.Popen(
+            ["/bin/sh", script_for[name]], env=child, cwd=outdir,
+            stdout=log, stderr=subprocess.STDOUT)
+        all_procs.append(proc)
+        return proc
+
+    def _stash_metrics(unit) -> None:
+        # keep the dying generation's partial curve for the merged
+        # loss history (the respawn writes a fresh final file)
+        if unit.role != "worker":
+            return
+        src = os.path.join(outdir, f"metrics_worker_{unit.unit}.json")
+        if os.path.exists(src):
+            os.replace(src, os.path.join(
+                outdir,
+                f"metrics_worker_{unit.unit}.pre{unit.attempt}.json"))
+
+    sup = Supervisor(
+        lambda unit: _spawn_proc(unit.name, unit.attempt),
+        policy=RestartPolicy(
+            max_restarts=getattr(algo, "restarts", 0) or 0,
+            backoff=getattr(algo, "restart_backoff", 0.05)),
+        worker_injector=injector(algo.faults, seed=algo.seed),
+        server_injector=injector(getattr(algo, "server_faults", None),
+                                 seed=algo.seed),
+        on_respawn=_stash_metrics)
     try:
         scripts = ([p for p in paths if "server_" in os.path.basename(p)]
                    + [p for p in paths if "client_" in os.path.basename(p)])
         for path in scripts:
             name = os.path.splitext(os.path.basename(path))[0]
-            log = open(os.path.join(outdir, f"{name}.log"), "wb")
-            logs.append(log)
-            procs[name] = subprocess.Popen(
-                ["/bin/sh", path], env=env, cwd=outdir,
-                stdout=log, stderr=subprocess.STDOUT)
-        deadline = time.monotonic() + timeout
-        workers = {n: p for n, p in procs.items()
-                   if n.startswith("client_")}
-        for name, proc in workers.items():
-            left = max(0.5, deadline - time.monotonic())
-            try:
-                proc.wait(timeout=left)
-            except subprocess.TimeoutExpired:
-                proc.kill()
-                proc.wait(timeout=5.0)
-        # workers are done: read server stats over a fresh connection,
+            script_for[name] = path
+            role, _, rank = name.partition("_")
+            sup.register(name, _spawn_proc(name, 0),
+                         role="worker" if role == "client" else "server",
+                         unit=int(rank))
+        report = sup.supervise(timeout=timeout)
+        if report["timed_out"]:
+            for u in sup.units.values():
+                if u.role == "worker" and u.proc.poll() is None:
+                    u.proc.kill()
+                    u.proc.wait(timeout=5.0)
+        # workers are done: read server stats over a fresh connection
+        # (rdzv.server_addrs holds the respawn's re-published address),
         # then tell the server processes to exit
         stats: dict[int, dict] = {}
         for rank, addr in sorted(rdzv.server_addrs.items()):
@@ -186,28 +298,34 @@ def _run_tcp(algo, *, problem: str, outdir: Optional[str],
             except OSError:
                 stats[rank] = {"error": "unreachable"}
         _fold_server_stats(result, stats)
-        for name, proc in procs.items():
-            if name.startswith("server_"):
+        for name, u in sup.units.items():
+            if u.role == "server":
                 try:
-                    proc.wait(timeout=10.0)
+                    u.proc.wait(timeout=10.0)
                 except subprocess.TimeoutExpired:
-                    proc.kill()
-                    proc.wait(timeout=5.0)
-            result.exit_codes[name] = proc.returncode
+                    u.proc.kill()
+                    u.proc.wait(timeout=5.0)
+            result.exit_codes[name] = u.proc.returncode
+        result.respawns = report["respawns"]
+        result.attempts = report["attempts"]
+        result.exit_history = report["exit_history"]
+        result.exhausted = report["exhausted"]
     finally:
-        for proc in procs.values():
+        for proc in all_procs:
             if proc.poll() is None:
                 proc.kill()
         for log in logs:
             log.close()
         rdzv_server.close()
-    worker_out: dict[int, dict] = {}
-    for rank in range(algo.num_workers):
-        path = os.path.join(outdir, f"metrics_worker_{rank}.json")
-        if os.path.exists(path):
-            with open(path) as f:
-                worker_out[rank] = json.load(f)
-    _aggregate(result, worker_out)
+    _aggregate(result, _collect_worker_metrics(outdir, algo.num_workers))
+    if result.exhausted:
+        raise JobFailed(
+            "restart budget exhausted for "
+            f"{', '.join(result.exhausted)} (budget="
+            f"{getattr(algo, 'restarts', 0)}); exit codes: "
+            + "; ".join(f"{n}={result.exit_history.get(n)}"
+                        for n in result.exhausted),
+            result=result)
     return result
 
 
@@ -223,6 +341,9 @@ def _run_loopback(algo, *, problem: str, timeout: float,
     from repro.net.transport import LoopbackTransport
     from repro.net.worker import WorkerKilled, run_worker
 
+    # fail fast with the launcher's actionable message when the config
+    # asks for respawns: threads cannot be SIGKILLed and re-exec'd
+    _make_spec(algo, transport="loopback", port=0).validate()
     result = JobResult(transport="loopback")
     tr = LoopbackTransport()
     rdzv = Rendezvous(
@@ -304,6 +425,13 @@ def main() -> None:  # pragma: no cover - CLI wrapper over run_job
                     choices=("f32", "bf16", "int8"))
     ap.add_argument("--faults", default="")
     ap.add_argument("--barrier-timeout", type=float, default=0.0)
+    ap.add_argument("--restarts", type=int, default=0,
+                    help="per-unit supervised-respawn budget (tcp only)")
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="durable KV checkpoint + state-parking cadence "
+                         "in steps (0 = off)")
+    ap.add_argument("--server-faults", default="",
+                    help="fault schedule the SERVER tier evaluates")
     ap.add_argument("--outdir", default=None)
     ap.add_argument("--timeout", type=float, default=240.0)
     args = ap.parse_args()
@@ -314,7 +442,10 @@ def main() -> None:  # pragma: no cover - CLI wrapper over run_job
         seed=0, wire_dtype=(None if args.wire_dtype == "f32"
                             else args.wire_dtype),
         faults=args.faults or None,
-        barrier_timeout=args.barrier_timeout or None)
+        barrier_timeout=args.barrier_timeout or None,
+        restarts=args.restarts,
+        checkpoint_every=args.checkpoint_every,
+        server_faults=args.server_faults or None)
     res = run_job(algo, transport=args.transport, outdir=args.outdir,
                   timeout=args.timeout)
     print(json.dumps({
@@ -323,6 +454,9 @@ def main() -> None:  # pragma: no cover - CLI wrapper over run_job
         "exit_codes": res.exit_codes,
         "degraded_syncs": res.degraded_syncs,
         "membership_epochs": res.membership_epochs, "live": res.live,
+        "respawns": len(res.respawns),
+        "respawn_gaps_s": [round(r["gap_s"], 4) for r in res.respawns],
+        "attempts": res.attempts,
     }, indent=2))
 
 

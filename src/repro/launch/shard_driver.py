@@ -380,14 +380,15 @@ def _check_driver_faults(inj, mesh, p) -> None:
             "event-driven simulation (core/algorithms.py, "
             "AlgoConfig.faults). The driver serves kill/corrupt.")
     shape, _ = _factorize(p)
-    if "kill" in inj.schedule.kinds and len(shape) == 2:
-        # pod kills need the hierarchical (pod-then-data) shard layout
-        # re-derived, which only the 1-axis ring-major geometry shares
-        # with membership.reshard_optstate today
+    if inj.schedule.kinds & {"kill", "restart"} and len(shape) == 2:
+        # pod kills/joins need the hierarchical (pod-then-data) shard
+        # layout re-derived, which only the 1-axis ring-major geometry
+        # shares with membership.reshard_optstate today
         raise ValueError(
-            "kill faults under the 2-axis pod×data layout are not wired "
-            "— the hierarchical state re-layout is part of the ROADMAP "
-            "'real multi-process transport' item; use the 1-axis layout")
+            "kill/restart faults under the 2-axis pod×data layout are "
+            "not wired — the hierarchical state re-layout is part of "
+            "the ROADMAP 'real multi-process transport' item; use the "
+            "1-axis layout")
 
 
 def _reconfigure(model: Model, optimizer: Optimizer, sync: SyncConfig,
@@ -437,6 +438,69 @@ def _reconfigure(model: Model, optimizer: Optimizer, sync: SyncConfig,
     return state, p_new, step, dict(info, sync=sync)
 
 
+def _rejoin(model: Model, optimizer: Optimizer, sync: SyncConfig,
+            state: dict, p_old: int, joiners: list[int],
+            live: "Membership", *, axis_name: str,
+            microbatch: int) -> tuple[dict, int, Callable, dict]:
+    """Admit ``joiners`` into a 1-axis emulated run mid-stream: a new
+    membership epoch per joiner, the geometry re-split to the grown
+    count, the FlatBuffer optimizer state re-sharded at p_new
+    (membership.reshard_optstate with every old shard surviving —
+    reconstruct from p_old slices, re-slice), and the step re-jitted.
+
+    mpi_sgd: params are replicated, so the joiner's row is a broadcast
+    of row 0 — the emulated analogue of the respawned worker's
+    pull-live-params-from-the-PS. mpi_esgd: the joiner is a NEW client
+    admitted at the current center (the PS hands it w̃) with fresh
+    local optimizer state, and the SyncConfig grows to the new count."""
+    import dataclasses as _dc
+
+    from repro.core.membership import reshard_optstate
+
+    old_ids = list(live.live)
+    for u in joiners:
+        live.join(u)
+    new_ids = list(live.live)
+    p_new = len(new_ids)
+    pos = {u: r for r, u in enumerate(old_ids)}
+    rows = [pos.get(u, -1) for u in new_ids]
+    world = driver_world(sync, p_old, axis_name=axis_name)
+    info: dict = {"p_old": p_old, "p_new": p_new, "moved_bytes": 0.0,
+                  "joined": tuple(joiners),
+                  "survivors": tuple(range(p_old))}
+
+    def expand(tree, fill):
+        return jax.tree.map(
+            lambda l: jnp.stack([l[r] if r >= 0 else fill(l)
+                                 for r in rows]), tree)
+
+    if sync.mode == "mpi_esgd":
+        sync = _dc.replace(sync, num_clients=p_new)
+        state = {
+            "params": jax.tree.map(
+                lambda pl, cl: jnp.stack(
+                    [pl[r] if r >= 0 else cl[0] for r in rows]),
+                state["params"], state["center"]),
+            "opt": expand(state["opt"], lambda l: jnp.zeros_like(l[0])),
+            "step": expand(state["step"], lambda l: l[0]),
+            "center": expand(state["center"], lambda l: l[0]),
+        }
+    else:
+        spec = grad_spec(model)
+        new_opt, rinfo = reshard_optstate(
+            optimizer.hyper, spec, state["opt"], p_old, p_new,
+            survivors=list(range(p_old)), num_rings=world.num_rings,
+            bucket_bytes=world.bucket_bytes)
+        info.update(rinfo)
+        rest = {k: v for k, v in state.items() if k != "opt"}
+        state = {**{k: expand(v, lambda l: l[0]) for k, v in rest.items()},
+                 "opt": new_opt}
+    step = jax.jit(make_emulated_step(model, optimizer, sync, p_new,
+                                      axis_name=axis_name,
+                                      microbatch=microbatch))
+    return state, p_new, step, dict(info, sync=sync)
+
+
 def drive(model: Model, optimizer: Optimizer, sync: SyncConfig, batches,
           *, p: Geometry | None = None, mesh=None, axis_name: str = AXIS,
           rng=None, microbatch: int = 1, log_every: int = 10,
@@ -456,8 +520,16 @@ def drive(model: Model, optimizer: Optimizer, sync: SyncConfig, batches,
     via membership.reshard_optstate, step re-jitted) and a
     ``reconfigure`` entry with the recovery byte/time accounting
     (cost_model.reconfig_time over ``net``) lands in the history;
-    ``corrupt`` adds seeded noise to the device's batch shard. The same
-    schedule replayed is bit-identical.
+    ``restart@s:unit=d`` ADMITS device d before step s when it is not
+    live (a brand-new id grows the run; a previously-killed id
+    rejoins) — the geometry grows to the joined count (``_rejoin``:
+    reshard_optstate at p_new, joiner params pulled from a live row /
+    the center) and a ``join`` entry carries the
+    cost_model.join_reshard_bytes / recovery_time accounting. Kills
+    are generation-indexed: a rejoined unit dies again only at its
+    NEXT kill event. ``corrupt`` adds seeded noise to the device's
+    batch shard. The same schedule replayed is bit-identical; feed
+    batches sized for every geometry the schedule can reach.
     """
     from repro.core import cost_model
     from repro.core.faults import injector
@@ -488,10 +560,35 @@ def drive(model: Model, optimizer: Optimizer, sync: SyncConfig, batches,
     step = jax.jit(step)
     live = (Membership(math.prod(_factorize(p)[0]))
             if inj is not None else None)
+    attempts: dict[int, int] = {}    # unit -> spawn generation
     history = []
     for i, batch in enumerate(batches):
         if inj is not None:
-            dead = [u for u in live.live if inj.is_killed(u, i)]
+            joiners = [u for u in inj.restart_units(i)
+                       if not live.is_live(u)]
+            if joiners:
+                delay = max(inj.restart_delay(u, attempts.get(u, 0)) or 0.0
+                            for u in joiners)
+                for u in joiners:
+                    attempts[u] = attempts.get(u, 0) + 1
+                state, p, step, info = _rejoin(
+                    model, optimizer, sync, state, int(p), joiners, live,
+                    axis_name=axis_name, microbatch=microbatch)
+                sync = info.pop("sync")
+                netp = net or cost_model.testbed()
+                state_nbytes = info.get("state_nbytes", 0.0)
+                entry = {"step": i, "event": "join", **info,
+                         "join_reshard_bytes":
+                             cost_model.join_reshard_bytes(
+                                 state_nbytes, info["p_old"]),
+                         "recovery_time": cost_model.recovery_time(
+                             0.0, delay, info["p_old"], info["p_new"],
+                             netp, state_nbytes=state_nbytes)}
+                history.append(entry)
+                if callback:
+                    callback(entry)
+            dead = [u for u in live.live
+                    if inj.is_killed(u, i, attempts.get(u, 0))]
             if dead:
                 if len(dead) >= live.live_count:
                     raise ValueError(

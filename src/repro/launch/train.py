@@ -434,12 +434,29 @@ def clientize_batch_specs(specs: Any, C: int) -> Any:
 
 def train_loop(model: Model, optimizer: Optimizer, sync: SyncConfig,
                mesh: Mesh, batches, *, rng=None, log_every: int = 10,
-               callback: Optional[Callable] = None):
-    """Concrete training driver (examples / smoke scale)."""
+               callback: Optional[Callable] = None,
+               checkpoint_every: int = 0, checkpoint_dir: str = "",
+               restore: str = ""):
+    """Concrete training driver (examples / smoke scale).
+
+    ``checkpoint_every``/``checkpoint_dir`` write atomic durable
+    checkpoints (checkpoint/checkpoint.py) of the full TrainState every
+    N completed steps; ``restore`` loads one and fast-forwards past the
+    steps it already covers (the data pipeline is deterministic per
+    step, so the resumed curve continues the original).
+    """
+    from repro.checkpoint import checkpoint as ckpt
+
     state = make_train_state(model, optimizer, sync, rng, mesh=mesh)
+    start = 0
+    if restore:
+        state, meta = ckpt.restore_checkpoint(restore, state)
+        start = int(meta.get("step", 0))
     step_fn = jax.jit(make_train_step(model, optimizer, sync, mesh))
     history = []
     for i, batch in enumerate(batches):
+        if i < start:
+            continue            # covered by the restored checkpoint
         state, metrics = step_fn(state, batch)
         if i % log_every == 0:
             entry = {k: float(v) for k, v in metrics.items()}
@@ -447,6 +464,11 @@ def train_loop(model: Model, optimizer: Optimizer, sync: SyncConfig,
             history.append(entry)
             if callback:
                 callback(entry)
+        if (checkpoint_every and checkpoint_dir
+                and (i + 1) % checkpoint_every == 0):
+            ckpt.save_checkpoint(
+                ckpt.checkpoint_path(checkpoint_dir, i + 1), state,
+                step=i + 1)
     return state, history
 
 
@@ -539,6 +561,15 @@ def main() -> None:  # pragma: no cover (CLI driver; see tests/test_launch.py)
                     help="seconds before the sync PS barrier releases "
                          "with the survivor group (kill/drop schedules "
                          "need it)")
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="durable checkpoint cadence in completed steps "
+                         "(0 = off); transport workers park PS state at "
+                         "this cadence instead")
+    ap.add_argument("--checkpoint-dir", default="checkpoints",
+                    help="directory the in-process loop checkpoints into")
+    ap.add_argument("--restore", default="",
+                    help="checkpoint path to restore params/opt-state/"
+                         "step from before stepping")
     ap.add_argument("--full-size", action="store_true",
                     help="full architecture (default: reduced smoke config)")
     ap.add_argument("--transport", default="loopback",
@@ -570,8 +601,9 @@ def main() -> None:  # pragma: no cover (CLI driver; see tests/test_launch.py)
             ap.error("--transport tcp needs --rendezvous (or "
                      "REPRO_RDZV_ADDR in the environment)")
         rank = int(os.environ.get("REPRO_RANK", args.client))
+        attempt = int(os.environ.get("REPRO_ATTEMPT", "0"))
         out = run_worker(rank=rank, rendezvous_addr=args.rendezvous,
-                         transport="tcp")
+                         transport="tcp", attempt=attempt)
         from repro.net.transport import connect_with_retry, transport_for
 
         conn = connect_with_retry(transport_for("tcp"), args.rendezvous)
@@ -628,7 +660,9 @@ def main() -> None:  # pragma: no cover (CLI driver; see tests/test_launch.py)
                              policy=pol,
                              state_dtype=args.state_dtype,
                              faults=args.faults,
-                             barrier_timeout=args.barrier_timeout)
+                             barrier_timeout=args.barrier_timeout,
+                             checkpoint_every=args.checkpoint_every,
+                             restore=args.restore)
     settings.fault_schedule()  # parse errors surface before any compute
     model = build_model(cfg)
     sync = settings.sync_config()
@@ -648,7 +682,10 @@ def main() -> None:  # pragma: no cover (CLI driver; see tests/test_launch.py)
           f"faults={settings.faults!r} "
           f"barrier_timeout={settings.barrier_timeout}", flush=True)
     _, hist = train_loop(model, optimizer, sync, None, pipe.epoch(0),
-                         log_every=max(args.steps // 10, 1))
+                         log_every=max(args.steps // 10, 1),
+                         checkpoint_every=settings.checkpoint_every,
+                         checkpoint_dir=args.checkpoint_dir,
+                         restore=settings.restore)
     for entry in hist:
         print(f"step {entry['step']:4d} loss {entry['loss']:.4f}", flush=True)
     print(f"[train] done: {len(hist)} log points, "

@@ -26,27 +26,59 @@ What this module adds is the *transport half* of the barrier semantics:
                 own push was discarded — applies the same update and the
                 replicas stay bit-identical
 
+Crash durability (PR 10) adds three independent pieces:
+
+  round values   every released round stores its summed value, so a pull
+                 of an OLD round returns that round's sum (not the
+                 current kv value) — the respawned worker's replay reads
+                 history, and late re-pushes after a server restore are
+                 discarded against the recorded round
+  unit state     ``put_state``/``get_state`` park each worker's packed
+                 params + optimizer state (+ step) server-side in exact
+                 f32 — the respawned worker resumes from its own
+                 uploaded state instead of re-initializing
+  snapshots      with ``cfg.checkpoint_every`` set, every N-th sync
+                 release atomically snapshots kv values, round history,
+                 unit state, membership, and counters via
+                 checkpoint.save_packed; a respawned server
+                 ``restore_latest``s before serving. The snapshot runs
+                 *before* any pull of the round is answered, so a worker
+                 whose pull died mid-round safely re-issues its
+                 push+pull pair: either the round is in the snapshot
+                 (re-push discarded as late, pull returns the stored
+                 sum) or it isn't (the round re-forms from everyone's
+                 re-push) — both bit-identical, zero lost rounds.
+
+A ``server_faults`` schedule kills the server itself: at the release of
+a scheduled kill step (generation-indexed by REPRO_ATTEMPT) the process
+self-SIGKILLs after the snapshot and before replying — the hardest
+ordering for the workers, exercised by bench_recovery.
+
 Ops: init, push, pull, pushpull, elastic_exchange, value, barrier,
-register_group, set_elastic, set_optimizer, stats, shutdown.
+register_group, set_elastic, set_optimizer, put_state, get_state,
+snapshot, restore, stats, shutdown.
 """
 from __future__ import annotations
 
 import threading
 import time
-from typing import Any, Optional
+from typing import Any, Callable, Optional
 
 import numpy as np
 
+from repro.checkpoint import checkpoint
+from repro.core.faults import injector
 from repro.core.kvstore import KVStore
 from repro.core.membership import Membership
 from repro.net import wire
 
 
 class _Round:
-    """One sync-barrier round of one key: who arrived, when it opened."""
+    """One sync-barrier round of one key: who arrived, when it opened,
+    and — once released — the summed value it produced."""
 
     __slots__ = ("arrived", "first_mono", "done", "count", "degraded",
-                 "released_mono")
+                 "released_mono", "value")
 
     def __init__(self, first_mono: float):
         self.arrived: dict[int, np.ndarray] = {}
@@ -55,17 +87,26 @@ class _Round:
         self.count = 0
         self.degraded = False
         self.released_mono: Optional[float] = None
+        self.value: Optional[np.ndarray] = None
 
 
 class KVServer:
     """One PS server shard: transport handler around one KVStore."""
 
-    def __init__(self, cfg, *, rank: int = 0, clock=time.monotonic):
+    def __init__(self, cfg, *, rank: int = 0, clock=time.monotonic,
+                 ckpt_dir: Optional[str] = None, attempt: int = 0,
+                 on_kill: Optional[Callable[[], None]] = None):
         import jax.numpy as jnp  # noqa: F401 - fail early if jax missing
 
         self.cfg = cfg
         self.rank = rank
         self.clock = clock
+        self.ckpt_dir = ckpt_dir
+        self.ckpt_every = int(getattr(cfg, "checkpoint_every", 0) or 0)
+        self.attempt = attempt
+        self.on_kill = on_kill
+        self._inj = injector(getattr(cfg, "server_faults", None),
+                             seed=getattr(cfg, "seed", 0))
         self.wire_dtype = cfg.effective_wire_dtype
         C = cfg.effective_clients
         kv_type = {
@@ -86,9 +127,16 @@ class KVServer:
         self._cond = threading.Condition(self._lock)
         self._rounds: dict[tuple[Any, int], _Round] = {}
         self._barriers: dict[str, _Round] = {}
+        # unit -> {"step", "names", "sections": {name: f32 array}}
+        self._state: dict[int, dict] = {}
         self.bytes = {"push_in": 0, "pull_out": 0,
-                      "exchange_in": 0, "exchange_out": 0}
+                      "exchange_in": 0, "exchange_out": 0,
+                      "state_in": 0, "state_out": 0}
         self.degraded_latencies: list[float] = []
+        self.snapshots = 0
+        self.restored_from: Optional[str] = None
+        self.restored_step: Optional[int] = None
+        self._async_ops = 0     # snapshot cadence for the async/esgd path
         self.shutdown = threading.Event()
 
     # -- helpers -------------------------------------------------------------
@@ -120,11 +168,21 @@ class KVServer:
         r.degraded = degraded
         r.count = self.kv.last_barrier_count or len(r.arrived)
         r.released_mono = self.clock()
+        r.value = np.asarray(self.kv.value(key), dtype=np.float32).copy()
         if degraded:
             self.degraded_latencies.append(r.released_mono - r.first_mono)
             for u in list(self.membership.live):
                 if u not in r.arrived and self.membership.live_count > 1:
                     self.membership.fail(u)
+        r.arrived.clear()   # the stored value is the record now
+        # durability point: the snapshot lands BEFORE any pull of this
+        # round is answered, so a worker whose pull dies with us can
+        # always re-issue its push+pull pair against the restore
+        if self.ckpt_every and self.ckpt_dir and step % self.ckpt_every == 0:
+            self._snapshot_locked(step)
+        if (self.on_kill is not None and self._inj is not None
+                and self._inj.is_killed(self.rank, step, self.attempt)):
+            self.on_kill()
         self._cond.notify_all()
 
     def _deadline(self, r: _Round) -> Optional[float]:
@@ -176,6 +234,18 @@ class KVServer:
             return {}, b""
         if op == "set_optimizer":
             return self._op_set_optimizer(meta)
+        if op == "put_state":
+            return self._op_put_state(meta, payload)
+        if op == "get_state":
+            return self._op_get_state(meta)
+        if op == "snapshot":
+            with self._cond:
+                step = int(meta.get("step", self._max_released_step()))
+                path = self._snapshot_locked(step)
+            return {"path": path, "step": step}, b""
+        if op == "restore":
+            info = self.restore_latest()
+            return info or {"restored": False}, b""
         if op == "stats":
             return self._op_stats()
         if op == "shutdown":
@@ -248,7 +318,12 @@ class KVServer:
             info = self._pull_info(r)
             if r.count == 0:
                 return dict(info, shape=[], wire="f32"), b""
-            vmeta, vpayload = self._encode_value(key)
+            # the ROUND's stored sum, not the current kv value: a replayed
+            # pull of an old round must read history (resume-by-replay)
+            if r.value is not None:
+                vmeta, vpayload = wire.encode_buffer(r.value, self.wire_dtype)
+            else:
+                vmeta, vpayload = self._encode_value(key)
             self.bytes["pull_out"] += len(vpayload)
             return dict(vmeta, **info), vpayload
 
@@ -321,6 +396,146 @@ class KVServer:
                                   rescale=float(meta.get("rescale", 1.0)))
         return {}, b""
 
+    # -- durable state: per-unit parking + whole-server snapshots ------------
+    def _op_put_state(self, meta: dict, payload: bytes):
+        """Park one unit's packed params/opt sections (exact f32 — resume
+        must be bit-exact, so the wire codec is bypassed)."""
+        unit, step = int(meta["unit"]), int(meta["step"])
+        names = [str(n) for n in meta["sections"]]
+        sizes = [int(s) for s in meta["sizes"]]
+        arr = np.frombuffer(payload, np.float32)
+        if arr.size != sum(sizes):
+            raise ValueError(
+                f"put_state payload has {arr.size} f32 values but the "
+                f"section table sums to {sum(sizes)}")
+        sections, off = {}, 0
+        for name, size in zip(names, sizes):
+            sections[name] = arr[off:off + size].copy()
+            off += size
+        with self._cond:
+            self.bytes["state_in"] += len(payload)
+            self._state[unit] = {"step": step, "names": names,
+                                 "sections": sections}
+        return {"stored": True, "step": step}, b""
+
+    def _op_get_state(self, meta: dict):
+        unit = int(meta["unit"])
+        with self._cond:
+            st = self._state.get(unit)
+            if st is None:
+                return {"found": False}, b""
+            payload = b"".join(np.asarray(st["sections"][n], np.float32)
+                               .tobytes() for n in st["names"])
+            self.bytes["state_out"] += len(payload)
+            return {"found": True, "step": st["step"],
+                    "sections": list(st["names"]),
+                    "sizes": [int(st["sections"][n].size)
+                              for n in st["names"]]}, payload
+
+    def _max_released_step(self) -> int:
+        done = [s for (_, s), r in self._rounds.items() if r.done]
+        return max(done) if done else 0
+
+    def _snapshot_locked(self, step: int) -> Optional[str]:
+        """Atomic durable snapshot (caller holds the lock): kv values,
+        released-round sums, parked unit state, membership history, and
+        counters. Returns the written path (None without a ckpt_dir)."""
+        if not self.ckpt_dir:
+            return None
+        arrays: dict[str, np.ndarray] = {}
+        keys = list(self.kv.keys())
+        for i, key in enumerate(keys):
+            arrays[f"kv:{i}"] = np.asarray(self.kv.value(key))
+        rounds = []
+        for (key, rstep), r in sorted(self._rounds.items(),
+                                      key=lambda kv: (str(kv[0][0]),
+                                                      kv[0][1])):
+            if not r.done:
+                continue    # partial arrivals re-form from re-pushes
+            if r.value is not None:
+                arrays[f"round:{len(rounds)}"] = r.value
+            rounds.append([key, rstep, r.count, bool(r.degraded),
+                           r.value is not None])
+        state_meta = {}
+        for unit, st in self._state.items():
+            for i, name in enumerate(st["names"]):
+                arrays[f"state:{unit}:{i}"] = st["sections"][name]
+            state_meta[str(unit)] = {"step": st["step"],
+                                     "names": list(st["names"])}
+        meta = {
+            "keys": keys,
+            "rounds": rounds,
+            "state": state_meta,
+            "membership": [[e.kind, e.member]
+                           for e in self.membership.history
+                           if e.kind != "init"],
+            "counters": {
+                "degraded_syncs": self.kv.degraded_syncs,
+                "late_pushes": self.kv.late_pushes,
+                "last_barrier_count": self.kv.last_barrier_count,
+                "push_count": {str(k): v
+                               for k, v in self.kv.push_count.items()},
+            },
+        }
+        path = checkpoint.checkpoint_path(self.ckpt_dir, step)
+        checkpoint.save_packed(path, arrays, step=step, metadata=meta)
+        self.snapshots += 1
+        return path
+
+    def restore_latest(self) -> Optional[dict]:
+        """Load the newest complete snapshot (torn files skipped) and
+        rebuild kv values, round history, unit state, and membership.
+        No-op (returns None) without a ckpt_dir or prior snapshot."""
+        import jax.numpy as jnp
+
+        if not self.ckpt_dir:
+            return None
+        path = checkpoint.latest_checkpoint(self.ckpt_dir)
+        if path is None:
+            return None
+        arrays, meta = checkpoint.restore_packed(path)
+        with self._cond:
+            for i, key in enumerate(meta["keys"]):
+                if key not in self.kv.keys():
+                    self.kv.init(key, jnp.asarray(arrays[f"kv:{i}"]))
+            n_val = 0
+            for key, rstep, count, degraded, has_value in meta["rounds"]:
+                r = _Round(self.clock())
+                r.done = True
+                r.count = int(count)
+                r.degraded = bool(degraded)
+                r.released_mono = self.clock()
+                if has_value:
+                    r.value = np.asarray(arrays[f"round:{n_val}"],
+                                         np.float32)
+                    n_val += 1
+                self._rounds[(key, int(rstep))] = r
+            for unit_s, st in meta["state"].items():
+                unit = int(unit_s)
+                sections = {
+                    name: np.asarray(arrays[f"state:{unit}:{i}"],
+                                     np.float32)
+                    for i, name in enumerate(st["names"])}
+                self._state[unit] = {"step": int(st["step"]),
+                                     "names": list(st["names"]),
+                                     "sections": sections}
+            for kind, member in meta["membership"]:
+                if kind == "join":
+                    if not self.membership.is_live(member):
+                        self.membership.join(member)
+                elif self.membership.is_live(member):
+                    getattr(self.membership, kind)(member)
+            c = meta["counters"]
+            self.kv.degraded_syncs = c["degraded_syncs"]
+            self.kv.late_pushes = c["late_pushes"]
+            self.kv.last_barrier_count = c["last_barrier_count"]
+            for k, v in c["push_count"].items():
+                self.kv.push_count[k] = v
+            self.restored_from = path
+            self.restored_step = int(meta.get("step", 0))
+            self._cond.notify_all()
+        return {"restored": True, "path": path, "step": self.restored_step}
+
     def _op_stats(self):
         with self._lock:
             return {
@@ -338,7 +553,19 @@ class KVServer:
                 "bytes": dict(self.bytes),
                 "degraded_latencies": list(self.degraded_latencies),
                 "keys": [str(k) for k in self.kv.keys()],
+                "snapshots": self.snapshots,
+                "restored_from": self.restored_from,
+                "restored_step": self.restored_step,
+                "attempt": self.attempt,
+                "state_units": sorted(self._state),
             }, b""
+
+
+def _sigkill() -> None:  # pragma: no cover - kills the calling process
+    import os
+    import signal
+
+    os.kill(os.getpid(), signal.SIGKILL)
 
 
 def main() -> None:  # pragma: no cover - process entry, tested via run_local
@@ -361,11 +588,19 @@ def main() -> None:  # pragma: no cover - process entry, tested via run_local
     args = ap.parse_args()
     if not args.rendezvous:
         ap.error("--rendezvous (or REPRO_RDZV_ADDR) is required")
+    attempt = int(os.environ.get("REPRO_ATTEMPT", "0"))
     transport = transport_for(args.transport)
     conn = connect_with_retry(transport, args.rendezvous)
     config, _ = conn.request("config")
     cfg = algo_from_dict(config["algo"])
-    srv = KVServer(cfg, rank=args.rank)
+    outdir = config.get("outdir")
+    ckpt_dir = None
+    if outdir and getattr(cfg, "checkpoint_every", 0):
+        ckpt_dir = os.path.join(outdir, f"ckpt_server_{args.rank}")
+    srv = KVServer(cfg, rank=args.rank, ckpt_dir=ckpt_dir, attempt=attempt,
+                   on_kill=(_sigkill if getattr(cfg, "server_faults", None)
+                            else None))
+    srv.restore_latest()
     server = transport.serve(srv.handle, host=args.host, port=0)
     join_rendezvous(conn, "server", args.rank, addr=server.addr)
     deadline = time.monotonic() + args.max_seconds

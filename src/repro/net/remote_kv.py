@@ -14,12 +14,23 @@ schedule drops is retried after ``backoff * 2**attempt`` REAL seconds (the
 in-process simulation adds the same amount of virtual time); a push whose
 every attempt drops is LOST — the worker proceeds to pull and the
 server's barrier_timeout covers the hole.
+
+Crash recovery (PR 10): an optional ``reconnect`` factory (rank -> fresh
+Connection, typically rendezvous ``wait_servers`` + ``connect_with_retry``
+so a respawned server's NEW address is picked up) lets the client ride a
+server death — ``refresh()`` rebuilds every connection, and the
+state/snapshot RPCs retry through it once. The worker loop retries its
+push+pull *pair* the same way (both must re-issue together for the
+restored round to re-form — see net/kvserver.py's durability notes).
+``put_state``/``get_state`` park exact-f32 packed state server-side; the
+bytes a resume pulls are tracked in ``state_bytes_in`` and equal
+``cost_model.restore_leg_bytes`` exactly.
 """
 from __future__ import annotations
 
 import time
 import zlib
-from typing import Any, Optional
+from typing import Any, Callable, Optional
 
 import numpy as np
 
@@ -39,7 +50,8 @@ class RemoteKVStore:
     def __init__(self, conns: dict[int, Connection], *,
                  wire_dtype: Optional[str] = None, injector=None,
                  push_retries: int = 2, push_backoff: float = 0.05,
-                 sleep=time.sleep):
+                 sleep=time.sleep,
+                 reconnect: Optional[Callable[[int], Connection]] = None):
         if not conns:
             raise ValueError("RemoteKVStore needs at least one connection")
         self.conns = dict(conns)
@@ -49,17 +61,50 @@ class RemoteKVStore:
         self.push_retries = push_retries
         self.push_backoff = push_backoff
         self.sleep = sleep
+        self.reconnect = reconnect
         self._specs: dict[Any, flatbuf.FlatBuffer] = {}
         self.pushed_bytes = 0
         self.pulled_bytes = 0
         self.push_count = 0
         self.pushes_lost = 0
         self.push_delay_s = 0.0
+        self.state_bytes_out = 0
+        self.state_bytes_in = 0
+        self.reconnects = 0
 
     # -- plumbing ------------------------------------------------------------
     def _conn(self, key: Any) -> Connection:
         rank = stable_server_of(key, self.num_servers)
         return self.conns[sorted(self.conns)[rank]]
+
+    def refresh(self) -> None:
+        """Rebuild every server connection via the ``reconnect`` factory
+        (rank -> Connection). The factory re-resolves addresses, so a
+        respawned server's new port is found."""
+        if self.reconnect is None:
+            raise RuntimeError(
+                "RemoteKVStore has no reconnect factory — pass reconnect= "
+                "to ride a server respawn")
+        for rank in sorted(self.conns):
+            try:
+                self.conns[rank].close()
+            except Exception:
+                pass
+            self.conns[rank] = self.reconnect(rank)
+        self.reconnects += 1
+
+    def _request_riding(self, key: Any, op: str, meta: dict,
+                        payload: bytes = b""):
+        """One RPC that survives a single server death mid-flight: on a
+        connection error, refresh and re-issue once (the ops routed here
+        are idempotent server-side)."""
+        try:
+            return self._conn(key).request(op, meta, payload)
+        except (OSError, wire.WireError):
+            if self.reconnect is None:
+                raise
+            self.refresh()
+            return self._conn(key).request(op, meta, payload)
 
     def _spec(self, key: Any, tree: Any = None) -> flatbuf.FlatBuffer:
         spec = self._specs.get(key)
@@ -203,6 +248,60 @@ class RemoteKVStore:
         for rank in sorted(self.conns):
             self.conns[rank].request("set_elastic", {"alpha": alpha})
 
+    # -- durable-state RPCs (crash recovery) ---------------------------------
+    def _state_key(self, unit: int) -> str:
+        """Routing key for a unit's parked state (stable across respawns
+        and independent of the data keys)."""
+        return f"state:{unit}"
+
+    def put_state(self, unit: int, step: int,
+                  sections: dict[str, np.ndarray]) -> dict:
+        """Park this unit's packed state sections server-side in exact
+        f32 (resume must be bit-exact — the wire codec is bypassed)."""
+        names = list(sections)
+        arrays = [np.asarray(sections[n], np.float32).reshape(-1)
+                  for n in names]
+        payload = b"".join(a.tobytes() for a in arrays)
+        meta = {"unit": unit, "step": step, "sections": names,
+                "sizes": [int(a.size) for a in arrays]}
+        reply, _ = self._request_riding(
+            self._state_key(unit), "put_state", meta, payload)
+        self.state_bytes_out += len(payload)
+        return reply
+
+    def get_state(self, unit: int) -> Optional[dict]:
+        """The unit's parked state, or None. Returns ``{"step": int,
+        "sections": {name: f32 array}}``; the payload bytes pulled equal
+        ``cost_model.restore_leg_bytes(sum of section sizes)``."""
+        reply, payload = self._request_riding(
+            self._state_key(unit), "get_state", {"unit": unit})
+        if not reply.get("found"):
+            return None
+        self.state_bytes_in += len(payload)
+        arr = np.frombuffer(payload, np.float32)
+        sections, off = {}, 0
+        for name, size in zip(reply["sections"], reply["sizes"]):
+            sections[name] = arr[off:off + int(size)].copy()
+            off += int(size)
+        return {"step": int(reply["step"]), "sections": sections}
+
+    def snapshot(self, *, step: Optional[int] = None) -> dict[int, dict]:
+        """Force a durable snapshot on every server shard."""
+        meta = {} if step is None else {"step": step}
+        out = {}
+        for rank in sorted(self.conns):
+            reply, _ = self.conns[rank].request("snapshot", dict(meta))
+            out[rank] = reply
+        return out
+
+    def restore(self) -> dict[int, dict]:
+        """Ask every server shard to restore its latest snapshot."""
+        out = {}
+        for rank in sorted(self.conns):
+            reply, _ = self.conns[rank].request("restore")
+            out[rank] = reply
+        return out
+
     def server_stats(self) -> dict[int, dict]:
         out = {}
         for rank in sorted(self.conns):
@@ -217,6 +316,9 @@ class RemoteKVStore:
             "push_count": self.push_count,
             "pushes_lost": self.pushes_lost,
             "push_delay_s": self.push_delay_s,
+            "state_bytes_out": self.state_bytes_out,
+            "state_bytes_in": self.state_bytes_in,
+            "reconnects": self.reconnects,
         }
 
     def close(self) -> None:

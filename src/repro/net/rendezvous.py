@@ -16,8 +16,17 @@ The launcher computes the grouping; this process hands it out. Lifecycle:
   6. joins/leaves advance the epoch'd live set (``live`` op); barrier-
      level failure detection lives in the KV server (net/kvserver.py)
 
+Crash recovery (PR 10): workers report their step via ``progress``; a
+re-join of a rank already in the table (the supervisor's respawn, or a
+push-announced straggler return) is re-admitted at a NEW epoch with a
+``resume`` record carrying the tier's current step — the respawned
+worker then pulls its parked state from the PS (kvserver
+``get_state``) and replays forward instead of re-initializing. A
+server re-join simply replaces its published address, so workers
+riding ``connect_with_retry`` find the respawned server.
+
 Ops: config, join, servers, live, leave, set_flag, wait_flag, workers,
-shutdown.
+progress, shutdown.
 """
 from __future__ import annotations
 
@@ -37,6 +46,7 @@ _ALGO_FIELDS = (
     "compute_time", "jitter", "model_bytes", "seed",
     "optimizer", "fused_update", "flat_exchange", "barrier_timeout",
     "push_retries", "push_backoff",
+    "checkpoint_every", "restarts", "restart_backoff", "server_faults",
 )
 
 
@@ -58,6 +68,8 @@ def algo_from_dict(d: dict):
     kw = {k: v for k, v in d.items() if k in _ALGO_FIELDS or k == "faults"}
     if not kw.get("faults"):
         kw["faults"] = None
+    if not kw.get("server_faults"):
+        kw["server_faults"] = None
     pol = d.get("policy")
     if pol is not None:
         kw["policy"] = CollectivePolicy.from_dict(pol)
@@ -86,6 +98,7 @@ class Rendezvous:
         self._live: set[int] = set()
         self._events: list[dict] = []
         self._flags: set[str] = set()
+        self._progress: dict[int, int] = {}    # rank -> last reported step
         self.shutdown = threading.Event()
         self._cond = threading.Condition()
 
@@ -148,12 +161,23 @@ class Rendezvous:
                     for ident, rec in sorted(
                         self.table.items(), key=lambda kv: kv[0].ps.rank)
                 ]}, b""
+        if op == "progress":
+            rank, step = int(meta["rank"]), int(meta["step"])
+            with self._cond:
+                self._progress[rank] = max(self._progress.get(rank, -1),
+                                           step)
+                return {"step": self._current_step()}, b""
         if op == "shutdown":
             self.shutdown.set()
             with self._cond:
                 self._cond.notify_all()
             return {}, b""
         raise ValueError(f"unknown rendezvous op {op!r}")
+
+    def _current_step(self) -> int:
+        """The tier's current step: the max any worker has reported
+        (-1 before the first report)."""
+        return max(self._progress.values(), default=-1)
 
     def _join(self, meta: dict) -> dict:
         role = meta["role"]
@@ -173,15 +197,22 @@ class Rendezvous:
                 f"worker rank {rank} outside [0, {self.num_workers})")
         ident = self.identities[rank]
         with self._cond:
+            rejoin = ident in self.table
             self.table[ident] = {
                 "ps": dataclasses.asdict(ident.ps),
                 "mpi": dataclasses.asdict(ident.mpi),
             }
             self._live.add(rank)
-            self._bump("join", rank)
+            self._bump("resume" if rejoin else "join", rank)
             rec = self.table[ident]
-        return {"config": self.config, "ps": rec["ps"], "mpi": rec["mpi"],
-                "epoch": self.epoch}
+            out = {"config": self.config, "ps": rec["ps"],
+                   "mpi": rec["mpi"], "epoch": self.epoch}
+            if rejoin:
+                # re-admission at a new epoch: tell the respawn where
+                # the tier is so it can validate its parked-state resume
+                out["resume"] = {"step": self._current_step(),
+                                 "epoch": self.epoch}
+        return out
 
 
 def join_rendezvous(conn: Connection, role: str, rank: int,

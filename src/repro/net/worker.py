@@ -18,6 +18,32 @@ RemoteKVStore RPCs:
 Faults run REAL here: ``kill`` SIGKILLs the process mid-run (the
 server's barrier_timeout is the failure detector), ``straggle``/``delay``
 sleep wall-clock seconds, ``drop`` rides RemoteKVStore's retry/backoff.
+
+Crash recovery (PR 10):
+
+  resume        a respawned process (REPRO_ATTEMPT > 0) re-joins the
+                rendezvous (re-admitted with a ``resume`` record), pulls
+                its parked packed params + optimizer state from the PS
+                (``get_state``) instead of re-initializing, and REPLAYS
+                forward from the parked step: replayed pushes to already-
+                released rounds are discarded as late, replayed pulls
+                return each round's STORED sum (net/kvserver.py), so the
+                catch-up updates are bit-identical — and at the live
+                round its fresh push completes the barrier whole
+  generation    kills are generation-indexed (core/faults.py): spawn a
+                dies at the (a+1)-th scheduled kill, so a respawn is not
+                instantly re-killed by the event that killed its parent
+  state upload  every ``cfg.checkpoint_every`` completed steps the
+                worker parks exact-f32 packed params+opt server-side
+                (``put_state``) — the resume source
+  flush         partial metrics are flushed atomically after EVERY step,
+                so the pre-kill curve survives for run_local's merge
+                (the killed worker's losses come from ITS data shard —
+                the aggregated mean needs them)
+  server death  the push+pull pair (and the esgd exchange) retries
+                through ``RemoteKVStore.refresh`` with addresses
+                re-resolved from the rendezvous, riding a KV server
+                respawn mid-round
 """
 from __future__ import annotations
 
@@ -39,11 +65,15 @@ def _sigkill() -> None:  # pragma: no cover - by design unreachable after
 
 def run_worker(*, rank: int, rendezvous_addr: str, transport: str = "tcp",
                on_kill: Optional[Callable[[], None]] = None,
-               rdzv_conn=None) -> dict:
+               rdzv_conn=None, attempt: int = 0) -> dict:
     """Join the rendezvous, run the assigned mode, return the metrics
     dict (also written to ``outdir/metrics_worker_<rank>.json`` by
     ``main``). ``on_kill`` fires when the fault schedule kills this
-    worker (default: real SIGKILL; loopback threads raise instead)."""
+    worker (default: real SIGKILL; loopback threads raise instead).
+    ``attempt`` is the spawn generation (REPRO_ATTEMPT): respawns resume
+    from their parked server-side state."""
+    import json
+
     from repro.core.faults import injector
     from repro.net.problem import build_problem
     from repro.net.remote_kv import RemoteKVStore
@@ -65,20 +95,52 @@ def run_worker(*, rank: int, rendezvous_addr: str, transport: str = "tcp",
     addrs = wait_servers(conn)
     conns = {r: connect_with_retry(tr, a) for r, a in addrs.items()}
     inj = injector(cfg.faults, seed=cfg.seed)
+
+    def reconnect(server_rank: int):
+        """Fresh connection to a (possibly respawned) server: re-resolve
+        the address from the rendezvous each try — the respawn publishes
+        a NEW port when it re-joins."""
+        deadline = time.monotonic() + 60.0
+        while True:
+            fresh = wait_servers(conn)
+            try:
+                return tr.connect(fresh[server_rank], timeout=2.0)
+            except (ConnectionError, OSError):
+                if time.monotonic() > deadline:
+                    raise
+                time.sleep(0.1)
+
     rkv = RemoteKVStore(conns, wire_dtype=cfg.effective_wire_dtype,
                         injector=inj, push_retries=cfg.push_retries,
-                        push_backoff=cfg.push_backoff)
+                        push_backoff=cfg.push_backoff, reconnect=reconnect)
     kill = on_kill or _sigkill
+
+    flush = None
+    outdir = config.get("outdir")
+    if outdir:
+        path = os.path.join(outdir, f"metrics_worker_{rank}.json")
+
+        def flush(partial: dict) -> None:
+            tmp = path + ".part"
+            with open(tmp, "w") as f:
+                json.dump(_jsonable(dict(partial, rank=rank,
+                                         attempt=attempt)), f)
+            os.replace(tmp, path)
+
     try:
         if cfg.mode == "dist_sgd":
-            out = _run_dist_sgd(cfg, prob, rkv, conn, rank, inj, kill)
+            out = _run_dist_sgd(cfg, prob, rkv, conn, rank, inj, kill,
+                                attempt=attempt, flush=flush)
         elif cfg.mode == "dist_esgd":
-            out = _run_dist_esgd(cfg, prob, rkv, conn, rank, inj, kill)
+            out = _run_dist_esgd(cfg, prob, rkv, conn, rank, inj, kill,
+                                 attempt=attempt, flush=flush)
         else:
             raise ValueError(
                 f"transport mode must be dist_sgd/dist_esgd, got "
                 f"{cfg.mode!r} (async/mpi modes stay in-process for now)")
         out["rank"] = rank
+        out["attempt"] = attempt
+        out["resume"] = reply.get("resume")
         out["ps"] = reply.get("ps")
         out["mpi"] = reply.get("mpi")
         out["kv"] = rkv.stats()
@@ -112,10 +174,66 @@ def _straggle_sleep(inj, unit: int, gstep: int, compute_time: float) -> None:
         time.sleep(extra)
 
 
-def _run_dist_sgd(cfg, prob, rkv, conn, rank, inj, kill) -> dict:
+def _riding(rkv, fn, tries: int = 3):
+    """Run ``fn()`` riding a KV-server respawn: on a connection failure
+    refresh every server connection (addresses re-resolved) and retry.
+    For the sync push+pull PAIR the whole pair must re-issue together —
+    the re-push is either discarded as late (round in the snapshot) or
+    re-forms the restored round; both read the same stored sum."""
+    from repro.net import wire as _wire
+
+    last: Optional[BaseException] = None
+    for _ in range(tries):
+        try:
+            return fn()
+        except (ConnectionError, OSError, _wire.WireError) as e:
+            last = e
+            if rkv.reconnect is None:
+                raise
+            rkv.refresh()
+    assert last is not None
+    raise last
+
+
+def _progress(conn, rank: int, gstep: int) -> None:
+    try:
+        conn.request("progress", {"rank": rank, "step": gstep})
+    except Exception:  # noqa: BLE001 - progress is advisory
+        pass
+
+
+def _park_state(cfg, rkv, rank: int, gstep: int, pspec, ospec,
+                params, opt_state) -> None:
+    """Upload exact-f32 packed params (+ opt state) after completing
+    ``gstep`` — the respawn's resume point."""
+    import numpy as _np
+
+    sections = {"params": _np.asarray(pspec.pack(params), _np.float32)}
+    if ospec is not None:
+        sections["opt"] = _np.asarray(ospec.pack(opt_state), _np.float32)
+    _riding(rkv, lambda: rkv.put_state(rank, gstep, sections))
+
+
+def _unpark_state(rkv, rank: int, pspec, ospec):
+    """The parked (params, opt_state, step) for a respawn, or None."""
+    import jax.numpy as jnp
+
+    st = _riding(rkv, lambda: rkv.get_state(rank))
+    if st is None:
+        return None
+    params = pspec.unpack(jnp.asarray(st["sections"]["params"]))
+    opt_state = None
+    if ospec is not None and "opt" in st["sections"]:
+        opt_state = ospec.unpack(jnp.asarray(st["sections"]["opt"]))
+    return params, opt_state, st["step"]
+
+
+def _run_dist_sgd(cfg, prob, rkv, conn, rank, inj, kill, *,
+                  attempt: int = 0, flush=None) -> dict:
     import jax
     import jax.numpy as jnp
 
+    from repro.core import flatbuf
     from repro.core.algorithms import _make_opt, _member_grads
 
     params = prob.init_fn(jax.random.key(cfg.seed))
@@ -125,42 +243,76 @@ def _run_dist_sgd(cfg, prob, rkv, conn, rank, inj, kill) -> dict:
     opt = _make_opt(cfg, params)
     opt_state = opt.init(params)
     wpc = cfg.workers_per_client
+    pspec = flatbuf.spec_for(params)
+    ospec = (flatbuf.spec_for(opt_state)
+             if jax.tree_util.tree_leaves(opt_state) else None)
+
+    start = 0
+    resumed_from = None
+    if attempt > 0:
+        parked = _unpark_state(rkv, rank, pspec, ospec)
+        if parked is not None:
+            params, parked_opt, parked_step = parked
+            if parked_opt is not None:
+                opt_state = parked_opt
+            start = parked_step + 1
+            resumed_from = parked_step
 
     losses: list[float] = []
     gsteps: list[int] = []
     metrics: list[float] = []
+    metric_epochs: list[int] = []
     degraded_seen = 0
-    for epoch in range(cfg.epochs):
-        for step in range(cfg.steps_per_epoch):
-            gstep = epoch * cfg.steps_per_epoch + step
-            if inj is not None and inj.is_killed(rank, gstep):
-                kill()
-                return {"killed_at": gstep, "losses": losses,
-                        "gsteps": gsteps, "metrics": metrics}
-            batches = [pipeline.batch_at(epoch, step)]
-            loss, stacked = _member_grads(prob.grad_fn, params, batches)
-            if inj is not None:
-                stacked = inj.corrupt(stacked, rank, gstep)
-            g = jax.tree.map(lambda l: l[0], stacked)
-            _straggle_sleep(inj, rank, gstep, cfg.compute_time)
+
+    def partial() -> dict:
+        return {"losses": losses, "gsteps": gsteps, "metrics": metrics,
+                "metric_epochs": metric_epochs,
+                "degraded_seen": degraded_seen,
+                "resumed_from": resumed_from, "partial": True}
+
+    ckpt = int(getattr(cfg, "checkpoint_every", 0) or 0)
+    for gstep in range(start, cfg.epochs * cfg.steps_per_epoch):
+        epoch, step = divmod(gstep, cfg.steps_per_epoch)
+        if inj is not None and inj.is_killed(rank, gstep, attempt):
+            kill()
+            return dict(partial(), killed_at=gstep)
+        batches = [pipeline.batch_at(epoch, step)]
+        loss, stacked = _member_grads(prob.grad_fn, params, batches)
+        if inj is not None:
+            stacked = inj.corrupt(stacked, rank, gstep)
+        g = jax.tree.map(lambda l: l[0], stacked)
+        _straggle_sleep(inj, rank, gstep, cfg.compute_time)
+
+        def pair(g=g, gstep=gstep):
             rkv.push("grads", g, step=gstep, unit=rank)
-            total, info = rkv.pull("grads", step=gstep, unit=rank)
-            if info.get("degraded"):
-                degraded_seen += 1
-            if total is not None and info["count"]:
-                k = info["count"]
-                mean_g = jax.tree.map(lambda x: x / (k * wpc), total)
-                params, opt_state = opt.update(mean_g, opt_state, params)
-            losses.append(loss)
-            gsteps.append(gstep)
-        metrics.append(prob.eval_fn(params))
-    return {"losses": losses, "gsteps": gsteps, "metrics": metrics,
-            "degraded_seen": degraded_seen}
+            return rkv.pull("grads", step=gstep, unit=rank)
+
+        total, info = _riding(rkv, pair)
+        if info.get("degraded"):
+            degraded_seen += 1
+        if total is not None and info["count"]:
+            k = info["count"]
+            mean_g = jax.tree.map(lambda x: x / (k * wpc), total)
+            params, opt_state = opt.update(mean_g, opt_state, params)
+        losses.append(loss)
+        gsteps.append(gstep)
+        if step == cfg.steps_per_epoch - 1:
+            metrics.append(prob.eval_fn(params))
+            metric_epochs.append(epoch)
+        if ckpt and (gstep + 1) % ckpt == 0:
+            _park_state(cfg, rkv, rank, gstep, pspec, ospec,
+                        params, opt_state)
+        _progress(conn, rank, gstep)
+        if flush is not None:
+            flush(partial())
+    return dict(partial(), partial=False)
 
 
-def _run_dist_esgd(cfg, prob, rkv, conn, rank, inj, kill) -> dict:
+def _run_dist_esgd(cfg, prob, rkv, conn, rank, inj, kill, *,
+                   attempt: int = 0, flush=None) -> dict:
     import jax
 
+    from repro.core import flatbuf
     from repro.core.algorithms import _client_grad, _make_opt, _worker_group
     from repro.core.elastic import (elastic_client_packed,
                                     elastic_client_update)
@@ -172,16 +324,37 @@ def _run_dist_esgd(cfg, prob, rkv, conn, rank, inj, kill) -> dict:
     opt = _make_opt(cfg, params0)
     params = params0
     opt_state = opt.init(params0)
+    pspec = flatbuf.spec_for(params0)
+    ospec = (flatbuf.spec_for(opt_state)
+             if jax.tree_util.tree_leaves(opt_state) else None)
+
+    start = 0
+    resumed_from = None
+    if attempt > 0:
+        parked = _unpark_state(rkv, rank, pspec, ospec)
+        if parked is not None:
+            params, parked_opt, parked_step = parked
+            if parked_opt is not None:
+                opt_state = parked_opt
+            start = parked_step + 1
+            resumed_from = parked_step
 
     losses: list[float] = []
     gsteps: list[int] = []
     metrics: list[float] = []
+    metric_epochs: list[int] = []
     exchanges = 0
-    for it in range(cfg.epochs * cfg.steps_per_epoch):
-        if inj is not None and inj.is_killed(rank, it):
+
+    def partial() -> dict:
+        return {"losses": losses, "gsteps": gsteps, "metrics": metrics,
+                "metric_epochs": metric_epochs, "exchanges": exchanges,
+                "resumed_from": resumed_from, "partial": True}
+
+    ckpt = int(getattr(cfg, "checkpoint_every", 0) or 0)
+    for it in range(start, cfg.epochs * cfg.steps_per_epoch):
+        if inj is not None and inj.is_killed(rank, it, attempt):
             kill()
-            return {"killed_at": it, "losses": losses, "gsteps": gsteps,
-                    "metrics": metrics, "exchanges": exchanges}
+            return dict(partial(), killed_at=it)
         epoch = min(it // cfg.steps_per_epoch, cfg.epochs - 1)
         step = it % cfg.steps_per_epoch
         batches = [pipeline.batch_at(epoch, step)]
@@ -191,8 +364,9 @@ def _run_dist_esgd(cfg, prob, rkv, conn, rank, inj, kill) -> dict:
             if inj is not None:
                 pushed = inj.corrupt(pushed, rank, it)
             _straggle_sleep(inj, rank, it, cfg.compute_time)
-            old_center, _info = rkv.elastic_exchange(
-                "centers", pushed, step=it, unit=rank)
+            old_center, _info = _riding(
+                rkv, lambda p=pushed, it=it: rkv.elastic_exchange(
+                    "centers", p, step=it, unit=rank))
             if old_center is not None:
                 exchanges += 1
                 if cfg.flat_exchange:
@@ -205,10 +379,17 @@ def _run_dist_esgd(cfg, prob, rkv, conn, rank, inj, kill) -> dict:
         losses.append(loss)
         gsteps.append(it)
         if step == cfg.steps_per_epoch - 1:
-            metrics.append(prob.eval_fn(rkv.value("centers")))
-    return {"losses": losses, "gsteps": gsteps, "metrics": metrics,
-            "exchanges": exchanges,
-            "final_center_metric": float(metrics[-1]) if metrics else None}
+            metrics.append(prob.eval_fn(
+                _riding(rkv, lambda: rkv.value("centers"))))
+            metric_epochs.append(epoch)
+        if ckpt and (it + 1) % ckpt == 0:
+            _park_state(cfg, rkv, rank, it, pspec, ospec,
+                        params, opt_state)
+        _progress(conn, rank, it)
+        if flush is not None:
+            flush(partial())
+    return dict(partial(), partial=False,
+                final_center_metric=float(metrics[-1]) if metrics else None)
 
 
 def main() -> None:  # pragma: no cover - process entry, tested via run_local
@@ -224,8 +405,9 @@ def main() -> None:  # pragma: no cover - process entry, tested via run_local
     args = ap.parse_args()
     if not args.rendezvous:
         ap.error("--rendezvous (or REPRO_RDZV_ADDR) is required")
+    attempt = int(os.environ.get("REPRO_ATTEMPT", "0"))
     out = run_worker(rank=args.rank, rendezvous_addr=args.rendezvous,
-                     transport=args.transport)
+                     transport=args.transport, attempt=attempt)
     from repro.net.transport import connect_with_retry, transport_for
 
     conn = connect_with_retry(transport_for(args.transport), args.rendezvous)

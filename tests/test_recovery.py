@@ -1,0 +1,497 @@
+"""Crash recovery for the multi-process PS tier: the restart@ fault
+grammar, generation-indexed kills, durable KV snapshots (torn-file
+safety included), the supervisor's scheduled/budget/give-up ladder, the
+metrics merge across spawn generations, and the shard driver's mid-run
+joins.
+
+Unmarked tests are fast in-process units. ``transport``-marked tests
+spawn REAL OS processes and SIGKILL them (the recovery-smoke CI tier);
+the drive() join test rides the multi-device tier with the rest of the
+shard-driver suite.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import cost_model
+from repro.core.algorithms import AlgoConfig
+from repro.core.faults import FaultSchedule, as_schedule, injector
+from repro.launch.supervisor import (JobFailed, RestartPolicy, Supervisor,
+                                     Unit)
+
+jax = pytest.importorskip("jax")
+
+
+# ---------------------------------------------------------------------------
+# restart@ grammar + generation-indexed lookups (core/faults.py)
+# ---------------------------------------------------------------------------
+
+def test_restart_grammar_roundtrip():
+    text = "kill@2:unit=1;restart@2:unit=1:delay=0.1"
+    sched = FaultSchedule.parse(text)
+    assert sched.format() == text
+    assert sched.kinds == {"kill", "restart"}
+    r = [e for e in sched.events if e.kind == "restart"][0]
+    assert r.step == 2 and r.unit == 1 and r.factor == 0.1
+
+
+def test_restart_delay_defaults_to_zero():
+    sched = FaultSchedule.parse("restart@3:unit=4")
+    assert sched.events[0].factor == 0.0
+    assert sched.format() == "restart@3:unit=4"   # no spurious :delay=
+
+
+def test_restart_rejects_delay_on_other_kinds():
+    with pytest.raises(ValueError, match="unknown fault field"):
+        FaultSchedule.parse("kill@2:unit=1:delay=0.1")
+
+
+def test_kills_are_generation_indexed():
+    inj = injector("kill@3:unit=1;kill@5:unit=1;restart@3:unit=1:delay=0.2")
+    # spawn generation 0 dies at the first kill, its respawn at the second
+    assert inj.killed_at(1, attempt=0) == 3
+    assert inj.killed_at(1, attempt=1) == 5
+    assert inj.killed_at(1, attempt=2) is None
+    assert inj.is_killed(1, 3, attempt=0)
+    assert not inj.is_killed(1, 3, attempt=1)
+    assert inj.is_killed(1, 5, attempt=1)
+    # generation 0's death has a scheduled respawn; generation 1's does not
+    assert inj.restart_delay(1, attempt=0) == 0.2
+    assert inj.restart_delay(1, attempt=1) is None
+    # other units are untouched
+    assert inj.killed_at(0) is None and inj.restart_delay(0) is None
+
+
+def test_restart_units_are_join_directives():
+    inj = injector("restart@3:unit=4;restart@3:unit=6;restart@5:unit=4")
+    assert inj.restart_units(3) == (4, 6)
+    assert inj.restart_units(5) == (4,)
+    assert inj.restart_units(0) == ()
+
+
+def test_as_schedule_threads_restart_events():
+    sched = as_schedule("kill@2:unit=1;restart@2:unit=1", seed=0)
+    assert sched is not None and "restart" in sched.kinds
+    assert as_schedule("", seed=0) is None
+
+
+# ---------------------------------------------------------------------------
+# durable snapshots survive crash-mid-write (checkpoint/checkpoint.py)
+# ---------------------------------------------------------------------------
+
+def test_latest_checkpoint_skips_torn_and_tmp_files(tmp_path):
+    from repro.checkpoint import checkpoint as ckpt
+
+    d = str(tmp_path)
+    good = ckpt.checkpoint_path(d, 1)
+    ckpt.save_packed(good, {"kv:0": np.arange(4, dtype=np.float32)}, step=1)
+    # a crash mid-write leaves a torn newest file and a .tmp leftover;
+    # neither may shadow the last complete snapshot
+    with open(ckpt.checkpoint_path(d, 2), "wb") as f:
+        f.write(b"PK\x03\x04 this is not a zip archive")
+    with open(os.path.join(d, "ckpt_3.npz.tmp"), "wb") as f:
+        f.write(b"partial")
+    assert ckpt.latest_checkpoint(d) == good
+    arrays, meta = ckpt.restore_packed(good)
+    np.testing.assert_array_equal(arrays["kv:0"],
+                                  np.arange(4, dtype=np.float32))
+    assert meta["step"] == 1
+
+
+def test_latest_checkpoint_empty_and_missing_dir(tmp_path):
+    from repro.checkpoint import checkpoint as ckpt
+
+    assert ckpt.latest_checkpoint(str(tmp_path)) is None
+    assert ckpt.latest_checkpoint(str(tmp_path / "nope")) is None
+
+
+def _mini_algo(**kw):
+    base = dict(mode="dist_sgd", num_workers=2, num_clients=2,
+                num_servers=1, lr=0.05, epochs=1, steps_per_epoch=2,
+                seed=0, compute_time=0.0, jitter=0.0)
+    base.update(kw)
+    return AlgoConfig(**base)
+
+
+def test_kvserver_snapshot_restore_roundtrip(tmp_path):
+    """A respawned server restores the exact released-round sums and the
+    parked per-unit state from its latest durable snapshot — the replay
+    a riding worker depends on."""
+    from repro.net import wire
+    from repro.net.kvserver import KVServer
+
+    cfg = _mini_algo(checkpoint_every=1)
+    srv = KVServer(cfg, rank=0, ckpt_dir=str(tmp_path))
+    vals = np.zeros(256, dtype=np.float32)
+    meta, payload = wire.encode_buffer(vals, None)
+    srv.handle("init", dict(meta, key="w"), payload)
+    for unit in (0, 1):
+        g = np.full(256, float(unit + 1), dtype=np.float32)
+        gm, gp = wire.encode_buffer(g, None)
+        srv.handle("push", dict(gm, key="w", unit=unit, step=0), gp)
+    # both pushes arrived -> released -> snapshotted (checkpoint_every=1)
+    assert srv.snapshots == 1
+    pm, pp = srv.handle("pull", {"key": "w", "step": 0}, b"")
+    released = wire.decode_buffer(pm, pp)
+    # park unit 1's resume state (exact f32, bypasses the wire codec)
+    parked = np.arange(8, dtype=np.float32)
+    srv.handle("put_state",
+               {"unit": 1, "step": 1, "sections": ["params"],
+                "sizes": [8]}, parked.tobytes())
+    srv.handle("snapshot", {"step": 0}, b"")
+
+    fresh = KVServer(cfg, rank=0, ckpt_dir=str(tmp_path), attempt=1)
+    info, _ = fresh.handle("restore", {}, b"")
+    assert info["restored"] and info["step"] == 0
+    assert fresh.restored_from is not None
+    # the replayed pull of the released round is bit-identical
+    rm, rp = fresh.handle("pull", {"key": "w", "step": 0}, b"")
+    np.testing.assert_array_equal(wire.decode_buffer(rm, rp), released)
+    assert rm["count"] == pm["count"] and not rm["degraded"]
+    # the parked state came back exactly
+    sm, sp = fresh.handle("get_state", {"unit": 1}, b"")
+    assert sm["found"] and sm["step"] == 1 and sm["sections"] == ["params"]
+    np.testing.assert_array_equal(np.frombuffer(sp, np.float32), parked)
+
+
+# ---------------------------------------------------------------------------
+# the supervisor ladder: scheduled -> budget -> give up (launch/supervisor.py)
+# ---------------------------------------------------------------------------
+
+class _FakeProc:
+    """poll() walks a scripted exit-code sequence; None = still running."""
+
+    def __init__(self, codes):
+        self.codes = list(codes)
+
+    def poll(self):
+        return self.codes.pop(0) if self.codes else None
+
+
+def _fake_clock():
+    t = [0.0]
+
+    def clock():
+        t[0] += 0.01
+        return t[0]
+
+    return clock
+
+
+def test_supervisor_scheduled_respawn_spares_budget():
+    slept, spawned = [], []
+
+    def spawn(u):
+        spawned.append(u.attempt)
+        return _FakeProc([0])
+
+    sup = Supervisor(spawn, policy=RestartPolicy(max_restarts=0),
+                     worker_injector=injector(
+                         "kill@2:unit=1;restart@2:unit=1:delay=0.25"),
+                     clock=_fake_clock(), sleep=slept.append)
+    sup.register("client_1", _FakeProc([137]), role="worker", unit=1)
+    report = sup.supervise(timeout=60.0)
+    assert report["respawns"] and report["respawns"][0]["scheduled"]
+    assert report["respawns"][0]["exit_code"] == 137
+    assert 0.25 in slept                        # the scheduled delay
+    assert sup.units["client_1"].used_budget == 0
+    assert report["exhausted"] == [] and report["gave_up"] == []
+    assert report["exit_history"]["client_1"] == [137, 0]
+    assert spawned == [1]                       # respawn IS generation 1
+
+
+def test_supervisor_budget_exhaustion_fails_loudly():
+    sup = Supervisor(lambda u: _FakeProc([137]),
+                     policy=RestartPolicy(max_restarts=1, backoff=0.0),
+                     clock=_fake_clock(), sleep=lambda s: None)
+    sup.register("client_1", _FakeProc([137]), role="worker", unit=1)
+    sup.register("client_0", _FakeProc([0]), role="worker", unit=0)
+    report = sup.supervise(timeout=60.0)
+    assert report["exhausted"] == ["client_1"]
+    assert report["exit_history"]["client_1"] == [137, 137]
+    assert report["exit_history"]["client_0"] == [0]
+    assert sup.units["client_1"].used_budget == 1
+    assert len(report["respawns"]) == 1
+    assert not report["respawns"][0]["scheduled"]
+
+
+def test_supervisor_no_budget_keeps_quiet_eviction():
+    """max_restarts=0 and no schedule: the unit just stays down (PR 9's
+    eviction semantics) — gave_up, but NOT exhausted, so the job does
+    not fail."""
+    sup = Supervisor(lambda u: _FakeProc([0]), policy=RestartPolicy(),
+                     clock=_fake_clock(), sleep=lambda s: None)
+    sup.register("client_1", _FakeProc([137]), role="worker", unit=1)
+    sup.register("client_0", _FakeProc([0]), role="worker", unit=0)
+    report = sup.supervise(timeout=60.0)
+    assert report["gave_up"] == ["client_1"]
+    assert report["exhausted"] == []
+    assert report["respawns"] == []
+
+
+def test_supervisor_backoff_grows_exponentially():
+    pol = RestartPolicy(max_restarts=5, backoff=0.1, backoff_factor=2.0,
+                        max_backoff=0.5)
+    assert [pol.delay(k) for k in range(5)] == [0.1, 0.2, 0.4, 0.5, 0.5]
+
+
+def test_supervisor_respawned_server_is_not_waited_on():
+    """supervise() returns when the WORKERS finish; a respawned server
+    keeps running (it idles until the shutdown RPC)."""
+    server_spawns = []
+
+    def spawn(u):
+        server_spawns.append(u.name)
+        return _FakeProc([])                    # respawn never exits
+
+    sup = Supervisor(spawn, policy=RestartPolicy(),
+                     server_injector=injector(
+                         "kill@1:unit=0;restart@1:unit=0"),
+                     clock=_fake_clock(), sleep=lambda s: None)
+    sup.register("server_0", _FakeProc([137]), role="server", unit=0)
+    sup.register("client_0", _FakeProc([None, None, 0]),
+                 role="worker", unit=0)
+    report = sup.supervise(timeout=60.0)
+    assert server_spawns == ["server_0"]
+    assert report["attempts"]["server_0"] == 1
+    assert not report["timed_out"]
+
+
+def test_jobfailed_carries_partial_result():
+    err = JobFailed("budget gone", result={"losses": [1.0]})
+    assert err.result == {"losses": [1.0]}
+
+
+def test_unit_dataclass_defaults():
+    u = Unit(name="client_0", role="worker", unit=0, proc=None)
+    assert u.attempt == 0 and not u.exhausted and u.exit_codes == []
+
+
+# ---------------------------------------------------------------------------
+# JobSpec validation (launch/launcher.py)
+# ---------------------------------------------------------------------------
+
+def _spec(**kw):
+    from repro.launch.launcher import JobSpec
+
+    base = dict(mode="dist_sgd", transport="tcp", barrier_timeout=1.0)
+    base.update(kw)
+    return JobSpec(2, 1, 2, "qwen3-4b", "train_4k", **base)
+
+
+def test_jobspec_rejects_restart_budget_on_loopback():
+    with pytest.raises(ValueError, match="transport='tcp'"):
+        _spec(transport="loopback", restarts=1).validate()
+    with pytest.raises(ValueError, match="SIGKILLed"):
+        _spec(transport="loopback",
+              faults="kill@2:unit=1;restart@2:unit=1").validate()
+    with pytest.raises(ValueError, match="respawn"):
+        _spec(transport="loopback",
+              server_faults="kill@1:unit=0").validate()
+
+
+def test_jobspec_server_kill_requires_checkpointing():
+    with pytest.raises(ValueError, match="checkpoint_every"):
+        _spec(server_faults="kill@1:unit=0;restart@1:unit=0").validate()
+    # with durable snapshots it validates
+    _spec(server_faults="kill@1:unit=0;restart@1:unit=0",
+          checkpoint_every=1).validate()
+
+
+def test_jobspec_recovery_fields_validate_and_thread():
+    from repro.launch.launcher import build_job
+
+    spec = _spec(restarts=2, restart_backoff=0.1, checkpoint_every=1,
+                 faults="kill@2:unit=1;restart@2:unit=1")
+    spec.validate()
+    job = build_job(spec)
+    rec = job["recovery"]
+    assert rec["restarts"] == 2 and rec["checkpoint_every"] == 1
+    with pytest.raises(ValueError, match="restarts"):
+        _spec(restarts=-1).validate()
+    with pytest.raises(ValueError, match="checkpoint_every"):
+        _spec(checkpoint_every=-1).validate()
+
+
+# ---------------------------------------------------------------------------
+# the cost model's recovery legs (core/cost_model.py)
+# ---------------------------------------------------------------------------
+
+def test_restore_leg_bytes_is_exact_f32():
+    assert cost_model.restore_leg_bytes(2048) == 8192
+    # params + momentum on the logreg8 FlatBuffer
+    assert cost_model.restore_leg_bytes(2 * 2048) == 16384
+
+
+def test_join_reshard_bytes_matches_reshard_leg():
+    n = 5_779_456
+    assert (cost_model.join_reshard_bytes(n, 4)
+            == cost_model.reshard_leg_bytes(n, 4))
+    assert (cost_model.join_reshard_bytes(n, 4, survivors=3)
+            == cost_model.reshard_leg_bytes(n, 4, survivors=3))
+
+
+def test_recovery_time_composes_delay_restore_and_reconfig():
+    net = cost_model.NetParams(alpha=1e-4, beta=1e-9, gamma=1e-10)
+    # pure restore, no membership change: delay + bytes * beta
+    t = cost_model.recovery_time(8192, 0.25, 4, 4, net)
+    assert t == pytest.approx(0.25 + 8192 * net.beta)
+    # a join (p change) adds the reconfig leg
+    t_join = cost_model.recovery_time(0.0, 0.1, 4, 5, net,
+                                      state_nbytes=1 << 20)
+    assert t_join > 0.1
+    assert t_join == pytest.approx(
+        0.1 + cost_model.reconfig_time(1 << 20, 4, 5, net))
+
+
+# ---------------------------------------------------------------------------
+# merging pre-kill partial curves with the respawn's (launch/run_local.py)
+# ---------------------------------------------------------------------------
+
+def test_merge_worker_records_later_generation_wins():
+    from repro.launch.run_local import _merge_worker_records
+
+    pre = {"gsteps": [0, 1, 2], "losses": [1.0, 0.9, 0.8],
+           "metric_epochs": [0], "metrics": [0.5]}
+    post = {"gsteps": [2, 3], "losses": [0.79, 0.7],
+            "metric_epochs": [0], "metrics": [0.6], "rank": 1}
+    out = _merge_worker_records([pre, post])
+    assert out["gsteps"] == [0, 1, 2, 3]
+    # the replayed step 2 takes the LATER generation's value
+    assert out["losses"] == [1.0, 0.9, 0.79, 0.7]
+    assert out["metrics"] == [0.6]
+    assert out["pieces"] == 2 and out["rank"] == 1
+
+
+def test_collect_worker_metrics_orders_stashes_and_skips_torn(tmp_path):
+    import json
+
+    from repro.launch.run_local import _collect_worker_metrics
+
+    d = str(tmp_path)
+    with open(os.path.join(d, "metrics_worker_0.pre0.json"), "w") as f:
+        json.dump({"gsteps": [0], "losses": [1.0], "metrics": []}, f)
+    with open(os.path.join(d, "metrics_worker_0.pre1.json"), "w") as f:
+        f.write('{"gsteps": [1], "lo')        # torn partial flush
+    with open(os.path.join(d, "metrics_worker_0.json"), "w") as f:
+        json.dump({"gsteps": [1, 2], "losses": [0.9, 0.8],
+                   "metrics": []}, f)
+    out = _collect_worker_metrics(d, num_workers=1)
+    assert out[0]["losses"] == [1.0, 0.9, 0.8]
+    assert out[0]["pieces"] == 2              # the torn piece was skipped
+
+
+# ---------------------------------------------------------------------------
+# mid-run joins on the shard driver (multi-device tier)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.multidevice
+def test_drive_join_grows_layout_and_resharding_is_exact():
+    """drive() admits a 5th device at restart@3: the stacked layout grows
+    p=4 -> 5, optimizer state is re-sharded at the new count, and the
+    moved bytes equal the cost model's join-reshard leg exactly."""
+    import jax.numpy as jnp
+
+    from repro.configs.base import get_config, reduced
+    from repro.core.hierarchy import SyncConfig
+    from repro.launch.shard_driver import drive
+    from repro.models.model import build_model
+    from repro.optim.sgd import sgd
+
+    model = build_model(reduced(get_config("qwen2-0.5b")))
+    k = jax.random.key(0)
+    toks = jax.random.randint(k, (20, 32), 0, 1024)   # divides 4 and 5
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1)}
+    state, hist = drive(model, sgd(0.1, momentum=0.9),
+                        SyncConfig(mode="mpi_sgd", num_clients=1),
+                        [batch] * 4, p=4, log_every=1,
+                        faults="restart@3:unit=4")
+    joins = [h for h in hist if h.get("event") == "join"]
+    assert len(joins) == 1
+    j = joins[0]
+    assert j["p_old"] == 4 and j["p_new"] == 5
+    assert j["joined"] == (4,) and j["survivors"] == (0, 1, 2, 3)
+    # every leaf grew a 5th stacked row
+    for leaf in jax.tree_util.tree_leaves(state["params"]):
+        assert leaf.shape[0] == 5
+    # growing is a re-shard with every old shard surviving — exact bytes
+    assert j["moved_bytes"] == pytest.approx(
+        cost_model.join_reshard_bytes(j["state_nbytes"], 4))
+    assert j["moved_bytes"] == pytest.approx(j["join_reshard_bytes"])
+    assert j["recovery_time"] > 0.0
+    # training continued through the join: all 4 steps logged a loss
+    losses = [h["loss"] for h in hist if "loss" in h]
+    assert len(losses) == 4
+    assert all(np.isfinite(l) for l in losses)
+
+
+# ---------------------------------------------------------------------------
+# tcp: real OS processes, real SIGKILLs (recovery-smoke tier)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.transport
+def test_tcp_kill_respawn_is_bit_identical(tmp_path):
+    """The tentpole acceptance gate: SIGKILL a worker mid-run with a
+    scheduled respawn and a durable parking cadence — the merged loss
+    curve is BIT-IDENTICAL to the fault-free run, with zero degraded
+    releases (the respawn made the live barrier)."""
+    from repro.launch.run_local import run_job
+
+    clean = run_job(_mini_algo(steps_per_epoch=3), transport="tcp",
+                    timeout=240.0)
+    res = run_job(
+        _mini_algo(steps_per_epoch=3,
+                   faults="kill@2:unit=1;restart@2:unit=1",
+                   checkpoint_every=1, barrier_timeout=120.0),
+        transport="tcp", outdir=str(tmp_path), timeout=300.0)
+    assert res.losses == clean.losses
+    assert res.metrics == clean.metrics
+    assert res.degraded_syncs == 0
+    assert len(res.respawns) == 1
+    assert res.respawns[0]["scheduled"]
+    assert res.exit_history["client_1"][0] == 137
+    assert res.exit_history["client_1"][-1] == 0   # the respawn finished
+
+
+@pytest.mark.transport
+def test_tcp_budget_exhaustion_raises_jobfailed(tmp_path):
+    """Two SIGKILLs against a budget of one: the job fails LOUDLY with
+    the per-unit exit-code history, never hangs."""
+    from repro.launch.run_local import run_job
+
+    with pytest.raises(JobFailed, match="client_1") as ei:
+        run_job(
+            _mini_algo(steps_per_epoch=4, restarts=1,
+                       faults="kill@1:unit=1;kill@2:unit=1",
+                       checkpoint_every=1, barrier_timeout=120.0),
+            transport="tcp", outdir=str(tmp_path), timeout=300.0)
+    assert "137" in str(ei.value)
+    res = ei.value.result
+    assert res is not None
+    assert res.exit_history["client_1"] == [137, 137]
+    assert res.exhausted == ["client_1"]
+
+
+@pytest.mark.transport
+def test_tcp_server_kill_restores_with_zero_lost_rounds(tmp_path):
+    """Kill the KV SERVER right after it durably snapshots step 1: it
+    respawns, restores the latest checkpoint, workers ride
+    connect_with_retry and re-issue their push+pull pairs — the curve is
+    bit-identical and EVERY round's loss lands."""
+    from repro.launch.run_local import run_job
+
+    clean = run_job(_mini_algo(steps_per_epoch=3), transport="tcp",
+                    timeout=240.0)
+    res = run_job(
+        _mini_algo(steps_per_epoch=3,
+                   server_faults="kill@1:unit=0;restart@1:unit=0",
+                   checkpoint_every=1, barrier_timeout=120.0),
+        transport="tcp", outdir=str(tmp_path), timeout=300.0)
+    assert res.losses == clean.losses          # zero lost rounds
+    assert res.metrics == clean.metrics
+    assert res.degraded_syncs == 0
+    assert len(res.respawns) == 1
+    assert res.respawns[0]["role"] == "server"
+    st = next(iter(res.server_stats.values()))
+    assert st["restored_from"] and st["restored_step"] >= 1
